@@ -1,0 +1,66 @@
+//! Hardware design-space exploration without the model in the loop —
+//! the Fig. 10 study as an interactive example.
+//!
+//! ```bash
+//! cargo run --release --example hw_explore [-- <rank>]
+//! ```
+//!
+//! Sweeps the MatMul engine space (Baseline / Single SVD / Cascade SVD)
+//! on the paper's 512x512x512 W4A8 workload under ZCU111 resource
+//! constraints, prints the latency-vs-bandwidth Pareto fronts, and
+//! cross-checks selected analytical design points against the
+//! cycle-level dataflow simulator.
+
+use anyhow::Result;
+use itera_llm::coordinator::figures;
+use itera_llm::dse::{best_design_for_layer, sweep_engines};
+use itera_llm::hw::{sim, EngineKind, Platform, Workload};
+
+fn main() -> Result<()> {
+    let rank: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let platform = Platform::zcu111();
+    let w = Workload::new(512, 512, 512, 4, 8);
+
+    // ---- Fig. 10 Pareto fronts ---------------------------------------
+    let t = figures::fig10(&platform);
+    print!("{}", t.render());
+
+    // ---- Design-space size + best-per-kind summary --------------------
+    println!("\nrank {rank} sweep summary (ZCU111, DSP {} / BRAM18K {}):", platform.dsp, platform.bram18k);
+    for kind in [EngineKind::Baseline, EngineKind::SingleSvd, EngineKind::CascadeSvd] {
+        let r = if kind == EngineKind::Baseline { None } else { Some(rank) };
+        let pts = sweep_engines(&w, r, &platform, &[kind]);
+        let best = pts
+            .iter()
+            .min_by(|a, b| a.effective_latency.partial_cmp(&b.effective_latency).unwrap());
+        match best {
+            Some(b) => println!(
+                "  {:<12} {:>6} feasible designs, best latency {:>9.0} cycles \
+                 ({:.1} us) @ {:>5.0} bits/cyc, DSP {} BRAM {}",
+                kind.to_string(),
+                pts.len(),
+                b.effective_latency,
+                platform.cycles_to_us(b.effective_latency),
+                b.design.bandwidth_req,
+                b.design.resources.dsp,
+                b.design.resources.bram18k,
+            ),
+            None => println!("  {:<12} no feasible design", kind.to_string()),
+        }
+    }
+
+    // ---- Analytical vs simulated for the chosen best -----------------
+    println!("\nanalytical vs cycle-level simulator (best baseline design):");
+    if let Some(b) = best_design_for_layer(&w, None, &platform) {
+        let s = sim::simulate_matmul(&w, &b.design.tile1, platform.bandwidth_bits_per_cycle);
+        println!(
+            "  tile {:?}: analytical {:.0} cyc, simulated {:.0} cyc ({:+.1}%), occupancy {:.1}%",
+            b.design.tile1,
+            b.effective_latency,
+            s.cycles,
+            (s.cycles / b.effective_latency - 1.0) * 100.0,
+            s.occupancy * 100.0
+        );
+    }
+    Ok(())
+}

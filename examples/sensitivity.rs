@@ -1,0 +1,46 @@
+//! Per-layer sensitivity analysis + SRA allocation inspection (Fig. 4
+//! companion).
+//!
+//! ```bash
+//! cargo run --release --example sensitivity [-- <pair>]
+//! ```
+//!
+//! Probes each layer group's tolerance to rank truncation (one layer at a
+//! time, FP32 elsewhere — the paper's Fig. 4 protocol), then runs a short
+//! SRA search and shows how the allocator shifts rank toward the layers
+//! the probe found sensitive.
+
+use anyhow::Result;
+use itera_llm::config::ExpConfig;
+use itera_llm::coordinator::figures;
+use itera_llm::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let pair = std::env::args().nth(1).unwrap_or_else(|| "en-de".to_string());
+    let c = Coordinator::new(ExpConfig::fast())?;
+
+    // One probe layer per structural group.
+    let layers = [
+        "enc0.self_q",
+        "enc1.ff1",
+        "dec0.self_v",
+        "dec0.cross_q",
+        "dec1.ff2",
+        "dec1.cross_o",
+    ];
+    println!("[1/2] probing per-layer rank sensitivity ({pair}) ...");
+    let t = figures::fig4(&c, &pair, &layers)?;
+    print!("{}", t.render());
+
+    println!("[2/2] SRA allocation at 40% total rank budget (W4A8) ...");
+    let caps = c.manifest.rank_caps();
+    let budget = caps.iter().sum::<usize>() * 2 / 5;
+    let (ranks, calib_bleu) = c.sra_search(&pair, 4, budget);
+    println!("calibration BLEU after search: {calib_bleu:.2}");
+    println!("{:<16} {:>5} {:>6}", "layer", "rank", "cap");
+    for (l, r) in c.manifest.linears.iter().zip(&ranks) {
+        let bar = "#".repeat((r * 24 / l.r_max.max(1)).min(24));
+        println!("{:<16} {:>5} {:>6}  {bar}", l.name, r, l.r_max);
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Batched NMT serving demo over the PJRT runtime.
+//!
+//! ```bash
+//! cargo run --release --example serve_nmt [-- <requests> <pair>]
+//! ```
+//!
+//! Spins up the request-batching loop (`coordinator::serve_demo`): a
+//! closed-loop client submits single-sentence translation requests, the
+//! server groups them into fixed-capacity batches, executes one PJRT call
+//! per batch against a W8A8-quantized model, and reports latency
+//! percentiles and throughput. Python is nowhere on this path.
+
+use anyhow::Result;
+use itera_llm::config::ExpConfig;
+use itera_llm::coordinator::{serve_demo, Coordinator};
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let pair = std::env::args().nth(2).unwrap_or_else(|| "en-de".to_string());
+    let c = Coordinator::new(ExpConfig::fast())?;
+    serve_demo(&c, &pair, requests)
+}

@@ -1,0 +1,164 @@
+"""AOT compile path: train, calibrate, lower, and write ``artifacts/``.
+
+This is the ONLY Python entry point in the deployed system; ``make
+artifacts`` runs it once and the Rust binary is self-contained afterwards.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (used by the Rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written:
+  manifest.json            — arg orders, shapes, calibration, pair registry
+  weights_<pair>.bin       — trained FP32 weights (rust: model/weights.rs)
+  corpus_<pair>.bin        — held-out test set   (rust: eval/corpus.rs)
+  calib_<pair>.bin         — calibration subset  (rust: eval/corpus.rs)
+  translate_dense.hlo.txt  — greedy decode, dense weights (quant baseline)
+  translate_svd.hlo.txt    — greedy decode, rank-padded SVD factors
+  linear512_dense.hlo.txt  — 512x512x512 quant-matmul microbench (Fig. 10)
+  linear512_svd.hlo.txt    — 512x512 cascade rank<=128 microbench
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import cascade_matmul, quant_matmul
+
+EVAL_BATCH = 16
+PAIRS = ("en-de", "fr-en")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_translate(mode: str, cfg=model_mod.CFG, batch: int = EVAL_BATCH) -> str:
+    fn, _ = model_mod.make_flat_translate(mode, cfg)
+    specs = model_mod.param_specs(mode, cfg)
+    n_lin = len(model_mod.compressed_linear_names(cfg))
+    args = [
+        jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((n_lin,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_linear512(mode: str) -> str:
+    """The Fig. 10 hardware workload (M=K=N=512, rank 128) as a runnable
+    artifact, for runtime microbenches and numerics cross-checks."""
+    if mode == "dense":
+        fn = lambda x, w: (quant_matmul(x, w, block_m=64, block_n=64, block_k=64),)
+        args = [jax.ShapeDtypeStruct((512, 512), jnp.float32)] * 2
+    else:
+        fn = lambda x, w1, w2: (cascade_matmul(x, w1, w2, block_m=64, block_n=64),)
+        args = [
+            jax.ShapeDtypeStruct((512, 512), jnp.float32),
+            jax.ShapeDtypeStruct((512, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 512), jnp.float32),
+        ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=800)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing weights/corpora, relower HLO only")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = model_mod.CFG
+    t0 = time.time()
+
+    manifest: dict = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "n_enc": cfg.n_enc, "n_dec": cfg.n_dec,
+            "seq_len": cfg.seq_len, "eval_batch": EVAL_BATCH,
+            "pad_id": data_mod.PAD_ID, "bos_id": data_mod.BOS_ID,
+            "eos_id": data_mod.EOS_ID,
+        },
+        "linears": [
+            {
+                "name": n,
+                "k": model_mod.linear_shape(n, cfg)[0],
+                "n": model_mod.linear_shape(n, cfg)[1],
+                "r_max": model_mod.r_max(n, cfg),
+            }
+            for n in model_mod.compressed_linear_names(cfg)
+        ],
+        "arg_order": {
+            mode: ["src_tokens", "act_scales", "act_levels"]
+            + [n for n, _ in model_mod.param_specs(mode, cfg)]
+            for mode in ("dense", "svd")
+        },
+        "artifacts": {
+            "translate_dense": "translate_dense.hlo.txt",
+            "translate_svd": "translate_svd.hlo.txt",
+            "linear512_dense": "linear512_dense.hlo.txt",
+            "linear512_svd": "linear512_svd.hlo.txt",
+        },
+        "pairs": {},
+    }
+
+    for pair in PAIRS:
+        wpath = os.path.join(args.out_dir, f"weights_{pair}.bin")
+        if args.skip_train and os.path.exists(wpath):
+            old = json.load(open(os.path.join(args.out_dir, "manifest.json")))
+            manifest["pairs"][pair] = old["pairs"][pair]
+            print(f"[aot] reusing trained weights for {pair}")
+            continue
+        print(f"[aot] training {pair} ...")
+        params, test_c, calib_c, maxabs = train_mod.train(
+            pair=pair, steps=args.steps, cfg=cfg
+        )
+        train_mod.save_weights(wpath, params)
+        train_mod.save_corpus(
+            os.path.join(args.out_dir, f"corpus_{pair}.bin"), test_c.src, test_c.tgt
+        )
+        train_mod.save_corpus(
+            os.path.join(args.out_dir, f"calib_{pair}.bin"), calib_c.src, calib_c.tgt
+        )
+        manifest["pairs"][pair] = {
+            "weights": f"weights_{pair}.bin",
+            "corpus": f"corpus_{pair}.bin",
+            "calib": f"calib_{pair}.bin",
+            "act_maxabs": [float(x) for x in maxabs],
+        }
+        print(f"[aot] {pair} trained in {time.time() - t0:.0f}s")
+
+    for mode in ("dense", "svd"):
+        print(f"[aot] lowering translate_{mode} ...")
+        text = lower_translate(mode, cfg)
+        with open(os.path.join(args.out_dir, f"translate_{mode}.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"[aot] lowering linear512_{mode} ...")
+        text = lower_linear512(mode)
+        with open(os.path.join(args.out_dir, f"linear512_{mode}.hlo.txt"), "w") as f:
+            f.write(text)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.0f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Synthetic language-pair corpus generator.
+
+The paper evaluates OPUS-MT on WMT2019 EN-DE and FR-EN. Neither the
+pretrained Marian checkpoints nor WMT data are available in this offline
+image, so we substitute two *deterministic synthetic language pairs* that a
+small transformer must actually learn (see DESIGN.md §Substitutions):
+
+* ``en-de``  — "verb-final" pair: every source token is remapped through a
+  bilingual dictionary, the final verb-class token of each clause moves to
+  the clause end, and noun-class tokens trigger an agreement suffix token.
+* ``fr-en``  — "adjective-swap" pair: dictionary remap plus swapping each
+  (adjective, noun) bigram, and a determiner-dropping rule.
+
+Both transformations are deterministic functions of the source sentence, so
+a converged model reaches a high BLEU score and compression-induced
+degradation is cleanly measurable — the same role WMT plays in the paper.
+
+Token id conventions (shared with the Rust side, see artifacts/manifest.json):
+  0 = PAD, 1 = BOS, 2 = EOS; source words start at 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+NUM_SPECIAL = 3
+
+# Word-class layout inside the "content" vocabulary. Each class gets a
+# contiguous id range; the grammar below keys off the class.
+N_NOUN = 40
+N_VERB = 30
+N_ADJ = 30
+N_DET = 10
+N_SUFFIX = 4  # agreement suffixes used by the en-de pair
+
+VOCAB_SIZE = NUM_SPECIAL + N_NOUN + N_VERB + N_ADJ + N_DET + N_SUFFIX + 11  # 128
+
+NOUN0 = NUM_SPECIAL
+VERB0 = NOUN0 + N_NOUN
+ADJ0 = VERB0 + N_VERB
+DET0 = ADJ0 + N_ADJ
+SUF0 = DET0 + N_DET
+
+MAX_SRC_LEN = 18  # content tokens + EOS fits in 20 with BOS
+SEQ_LEN = 20  # fixed model sequence length (padded)
+
+
+def _class_of(tok: int) -> str:
+    if NOUN0 <= tok < NOUN0 + N_NOUN:
+        return "noun"
+    if VERB0 <= tok < VERB0 + N_VERB:
+        return "verb"
+    if ADJ0 <= tok < ADJ0 + N_ADJ:
+        return "adj"
+    if DET0 <= tok < DET0 + N_DET:
+        return "det"
+    return "other"
+
+
+def _dictionary(pair: str) -> np.ndarray:
+    """Deterministic bijective token remap within each word class."""
+    rng = np.random.default_rng(0xD1C7 if pair == "en-de" else 0xF2E9)
+    table = np.arange(VOCAB_SIZE, dtype=np.int32)
+    for lo, n in ((NOUN0, N_NOUN), (VERB0, N_VERB), (ADJ0, N_ADJ), (DET0, N_DET)):
+        perm = rng.permutation(n)
+        table[lo : lo + n] = lo + perm
+    return table
+
+
+@dataclasses.dataclass
+class Corpus:
+    pair: str
+    src: np.ndarray  # [N, SEQ_LEN] int32, BOS ... EOS PAD*
+    tgt: np.ndarray  # [N, SEQ_LEN] int32
+
+
+def _gen_source_sentence(rng: np.random.Generator) -> list[int]:
+    """Clause-structured sentence: (DET? ADJ? NOUN VERB){1..3}."""
+    n_clauses = int(rng.integers(1, 4))
+    toks: list[int] = []
+    for _ in range(n_clauses):
+        if rng.random() < 0.7:
+            toks.append(DET0 + int(rng.integers(N_DET)))
+        if rng.random() < 0.6:
+            toks.append(ADJ0 + int(rng.integers(N_ADJ)))
+        toks.append(NOUN0 + int(rng.integers(N_NOUN)))
+        toks.append(VERB0 + int(rng.integers(N_VERB)))
+        if len(toks) >= MAX_SRC_LEN - 4:
+            break
+    return toks[:MAX_SRC_LEN]
+
+
+def translate_en_de(toks: list[int], table: np.ndarray) -> list[int]:
+    """Verb-final reordering + dictionary remap + noun agreement suffix."""
+    out: list[int] = []
+    clause: list[int] = []
+
+    def flush():
+        nonlocal clause
+        verbs = [t for t in clause if _class_of(t) == "verb"]
+        rest = [t for t in clause if _class_of(t) != "verb"]
+        for t in rest:
+            out.append(int(table[t]))
+            if _class_of(t) == "noun":
+                out.append(SUF0 + t % N_SUFFIX)
+        for v in verbs:
+            out.append(int(table[v]))
+        clause = []
+
+    for t in toks:
+        clause.append(t)
+        if _class_of(t) == "verb":
+            flush()
+    flush()
+    return out[: MAX_SRC_LEN]
+
+
+def translate_fr_en(toks: list[int], table: np.ndarray) -> list[int]:
+    """(adj, noun) swap + determiner dropping + dictionary remap."""
+    out: list[int] = []
+    i = 0
+    while i < len(toks):
+        t = toks[i]
+        c = _class_of(t)
+        if c == "det":
+            i += 1  # determiners are dropped in the target language
+            continue
+        if c == "adj" and i + 1 < len(toks) and _class_of(toks[i + 1]) == "noun":
+            out.append(int(table[toks[i + 1]]))
+            out.append(int(table[t]))
+            i += 2
+            continue
+        out.append(int(table[t]))
+        i += 1
+    return out[: MAX_SRC_LEN]
+
+
+def _pack(toks: list[int]) -> np.ndarray:
+    row = np.full(SEQ_LEN, PAD_ID, dtype=np.int32)
+    row[0] = BOS_ID
+    row[1 : 1 + len(toks)] = toks
+    row[1 + len(toks)] = EOS_ID
+    return row
+
+
+def make_corpus(pair: str, n: int, seed: int) -> Corpus:
+    """Generate ``n`` (source, target) sentence pairs for ``pair``."""
+    assert pair in ("en-de", "fr-en"), pair
+    rng = np.random.default_rng(seed)
+    table = _dictionary(pair)
+    xlate = translate_en_de if pair == "en-de" else translate_fr_en
+    src = np.zeros((n, SEQ_LEN), dtype=np.int32)
+    tgt = np.zeros((n, SEQ_LEN), dtype=np.int32)
+    for i in range(n):
+        s = _gen_source_sentence(rng)
+        t = xlate(s, table)
+        src[i] = _pack(s)
+        tgt[i] = _pack(t)
+    return Corpus(pair=pair, src=src, tgt=tgt)
+
+
+def batches(corpus: Corpus, batch_size: int, seed: int):
+    """Yield shuffled (src, tgt) batches forever."""
+    rng = np.random.default_rng(seed)
+    n = corpus.src.shape[0]
+    while True:
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i : i + batch_size]
+            yield corpus.src[idx], corpus.tgt[idx]

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time; lowered into the model HLO)."""
+
+from .quant_matmul import fake_quant, quant_matmul
+from .svd_matmul import cascade_matmul
+
+__all__ = ["quant_matmul", "fake_quant", "cascade_matmul"]

@@ -1,0 +1,117 @@
+"""Pallas tiled quantized-matmul kernel — the paper's baseline MatMul engine.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA engine
+(Listing 1) is an output-stationary ``M_t × N_t`` PE array with ``K_f``-wide
+dot products, fed by BRAM FIFOs that stage off-chip tiles. On a TPU-shaped
+memory hierarchy the same schedule is expressed as a Pallas grid over
+``(M/M_t, N/N_t, K/K_t)`` with BlockSpecs staging ``M_t×K_t`` / ``K_t×N_t``
+blocks into VMEM (the scratchpad playing the BRAM role) and an
+output-stationary accumulator block revisited along the K axis (the PE
+accumulator role). The MXU performs the ``M_t×K_t×N_t`` MACs that the DSP
+array performs on the FPGA.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against ``ref.py`` and FPGA
+latency/resource numbers come from the Rust analytical models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Output-stationary accumulate: one (mt, nt, kt) grid step."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (tiles must divide)."""
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def quant_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 64,
+    block_n: int = 64,
+    block_k: int = 64,
+) -> jnp.ndarray:
+    """Tiled ``y = x @ w`` through the PE-array dataflow.
+
+    ``x: [M, K]``, ``w: [K, N]`` are expected to be fake-quantized upstream
+    (weights by the Rust compression engine, activations by the in-graph
+    ``fake_quant`` kernel); the kernel itself is the exact fixed-point MAC
+    array, which in fake-quant arithmetic is a plain f32 matmul.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _fake_quant_kernel(x_ref, s_ref, l_ref, o_ref):
+    """Vector-wise symmetric fake-quant: the 'Quant' block of Fig. 3."""
+    s = s_ref[0]
+    lv = l_ref[0]
+    safe = jnp.where(s > 0, s, 1.0)
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x / safe), -lv, lv) * safe
+    o_ref[...] = jnp.where(lv > 0, q, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def fake_quant(
+    x: jnp.ndarray, scale: jnp.ndarray, levels: jnp.ndarray, *, block_m: int = 64
+) -> jnp.ndarray:
+    """Symmetric fixed-point fake-quantization of a 2-D activation tile.
+
+    ``scale`` and ``levels`` are scalar runtime arguments (shape ``[1]``)
+    so the Rust coordinator can select any A-width — or disable activation
+    quantization entirely with ``levels == 0`` — without recompiling.
+    """
+    m, n = x.shape
+    bm = _pick_block(m, block_m)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    levels = jnp.asarray(levels, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, scale, levels)

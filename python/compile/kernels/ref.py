@@ -1,0 +1,34 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float associativity)
+counterpart here; ``python/tests/test_kernels.py`` sweeps shapes and tile
+sizes with hypothesis and asserts allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Dense matmul oracle: y = x @ w, f32 accumulate."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def cascade_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """SVD cascade oracle: y = (x @ w1) @ w2 without reconstructing W."""
+    return matmul_ref(matmul_ref(x, w1), w2)
+
+
+def fake_quant_ref(x: jnp.ndarray, scale, levels) -> jnp.ndarray:
+    """Symmetric fixed-point fake-quantization oracle.
+
+    ``q = clip(round(x / scale), -levels, levels) * scale``; a ``levels``
+    of 0 disables quantization (identity), matching the runtime convention
+    the Rust coordinator uses to request an FP32 activation path.
+    """
+    scale = jnp.asarray(scale, dtype=x.dtype)
+    levels = jnp.asarray(levels, dtype=x.dtype)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -levels, levels) * safe
+    return jnp.where(levels > 0, q, x)

@@ -1,0 +1,77 @@
+"""Pallas cascade SVD-matmul kernel — the paper's Cascade SVD MatMul engine.
+
+Computes ``y = (x @ w1) @ w2`` (Eq. 3) without reconstructing ``W``. Mirrors
+the Cascade engine of Fig. 6 (right): two back-to-back matmul stages sharing
+the ``M_t`` tiling factor, with the entire ``M_t × R`` intermediate tile held
+on-chip between the stages — here a VMEM scratch buffer, on the FPGA a BRAM
+buffer. The grid walks ``(M/M_t, N/N_t)``; stage one runs once per M-row of
+the grid (``N``-index 0) and is then reused for every N-tile, which is
+exactly the reuse the on-chip intermediate buys the hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_matmul import _pick_block
+
+
+def _cascade_kernel(x_ref, w1_ref, w2_ref, o_ref, t_ref):
+    """One (mt, nt) grid step of the cascade engine.
+
+    ``t_ref`` is the VMEM scratch holding the ``M_t × R`` intermediate
+    (``X @ W1``) tile; it is produced when the N-grid index is 0 and
+    consumed by every stage-two N-tile of the same M-tile.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _stage_one():
+        t_ref[...] = jnp.dot(
+            x_ref[...], w1_ref[...], preferred_element_type=jnp.float32
+        )
+
+    o_ref[...] = jnp.dot(
+        t_ref[...], w2_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def cascade_matmul(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    block_m: int = 64,
+    block_n: int = 64,
+) -> jnp.ndarray:
+    """Cascade ``y = (x @ w1) @ w2``; ``w1: [K, R]``, ``w2: [R, N]``.
+
+    ``R`` is the *padded* decomposition rank (``r_max``): the Rust
+    coordinator zero-pads quantized rank-``r`` factors up to ``r_max`` so a
+    single compiled artifact serves every rank allocation (DESIGN.md).
+    Zero columns/rows contribute nothing to either stage, so the result
+    equals the true rank-``r`` product.
+    """
+    m, k = x.shape
+    k2, r = w1.shape
+    r2, n = w2.shape
+    assert k == k2 and r == r2, (x.shape, w1.shape, w2.shape)
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _cascade_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY(shape=(bm, r), dtype=jnp.float32)],
+        interpret=True,
+    )(x, w1, w2)

@@ -1,0 +1,369 @@
+"""Layer-2 JAX model: OPUS-MT-style transformer encoder–decoder.
+
+The paper evaluates OPUS-MT [4] (Marian architecture). We implement the
+same architecture at reduced scale (see DESIGN.md §Substitutions) with every
+attention / FFN linear routed through the Layer-1 Pallas kernels, because
+those are exactly the MatMul workloads the paper's hardware accelerates.
+
+Two compiled variants share one code path:
+
+* ``mode="dense"``  — each compressed linear is ``quant_matmul(aq(x), W)``
+  with ``W`` in its original ``[K, N]`` shape. The Rust coordinator feeds
+  fake-quantized weights for the quantization-only baseline (or raw FP32
+  weights for the reference).
+* ``mode="svd"``    — each compressed linear is ``cascade_matmul(aq(x),
+  W1, W2)`` with ``W1: [K, r_max]``, ``W2: [r_max, N]``. The coordinator
+  zero-pads rank-``r`` factors to ``r_max``, so one artifact evaluates every
+  rank allocation the SRA search visits.
+
+Weights are runtime *arguments*, never baked constants: the whole point of
+the framework is that the Rust side re-compresses weights thousands of times
+(Algorithm 1 sweeps, SRA iterations) against a single compiled graph.
+
+Activation quantization (the "A" in WxAy) happens in-graph via the
+``fake_quant`` kernel, parameterized by per-linear scales and a shared
+``levels`` scalar — ``levels == 0`` disables it (FP32 activations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .kernels import cascade_matmul, fake_quant, quant_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = data_mod.VOCAB_SIZE
+    d_model: int = 128
+    n_heads: int = 8
+    d_ff: int = 256
+    n_enc: int = 2
+    n_dec: int = 2
+    seq_len: int = data_mod.SEQ_LEN
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CFG = ModelConfig()
+
+
+# --------------------------------------------------------------------------
+# Parameter inventory
+# --------------------------------------------------------------------------
+
+def compressed_linear_names(cfg: ModelConfig = CFG) -> list[str]:
+    """Ordered names of every linear the framework compresses.
+
+    This ordering is the layer index space used everywhere: SRA rank
+    vectors, activation-scale vectors, sensitivity plots (Fig. 4), and the
+    per-layer occupancy breakdown (Fig. 12) all index into this list.
+    """
+    names = []
+    for i in range(cfg.n_enc):
+        for w in ("self_q", "self_k", "self_v", "self_o", "ff1", "ff2"):
+            names.append(f"enc{i}.{w}")
+    for i in range(cfg.n_dec):
+        for w in (
+            "self_q", "self_k", "self_v", "self_o",
+            "cross_q", "cross_k", "cross_v", "cross_o",
+            "ff1", "ff2",
+        ):
+            names.append(f"dec{i}.{w}")
+    return names
+
+
+def linear_shape(name: str, cfg: ModelConfig = CFG) -> tuple[int, int]:
+    """(K, N) shape of a compressed linear, by name."""
+    kind = name.split(".")[1]
+    if kind == "ff1":
+        return (cfg.d_model, cfg.d_ff)
+    if kind == "ff2":
+        return (cfg.d_ff, cfg.d_model)
+    return (cfg.d_model, cfg.d_model)
+
+
+def r_max(name: str, cfg: ModelConfig = CFG) -> int:
+    k, n = linear_shape(name, cfg)
+    return min(k, n)
+
+
+def other_param_specs(cfg: ModelConfig = CFG) -> list[tuple[str, tuple[int, ...]]]:
+    """Uncompressed parameters (embeddings, layer norms) in fixed order."""
+    d = cfg.d_model
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("src_emb", (cfg.vocab, d)),
+        ("tgt_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq_len, d)),
+    ]
+    for i in range(cfg.n_enc):
+        specs += [
+            (f"enc{i}.ln1_g", (d,)), (f"enc{i}.ln1_b", (d,)),
+            (f"enc{i}.ln2_g", (d,)), (f"enc{i}.ln2_b", (d,)),
+        ]
+    specs += [("enc_ln_g", (d,)), ("enc_ln_b", (d,))]
+    for i in range(cfg.n_dec):
+        specs += [
+            (f"dec{i}.ln1_g", (d,)), (f"dec{i}.ln1_b", (d,)),
+            (f"dec{i}.ln2_g", (d,)), (f"dec{i}.ln2_b", (d,)),
+            (f"dec{i}.ln3_g", (d,)), (f"dec{i}.ln3_b", (d,)),
+        ]
+    specs += [("dec_ln_g", (d,)), ("dec_ln_b", (d,))]
+    return specs
+
+
+def param_specs(mode: str, cfg: ModelConfig = CFG) -> list[tuple[str, tuple[int, ...]]]:
+    """Full ordered argument inventory for a compiled variant.
+
+    The exact order here is recorded in ``artifacts/manifest.json`` and
+    replayed by the Rust runtime when packing PJRT literals.
+    """
+    specs = other_param_specs(cfg)
+    for name in compressed_linear_names(cfg):
+        k, n = linear_shape(name, cfg)
+        if mode == "dense":
+            specs.append((name, (k, n)))
+        elif mode == "svd":
+            r = r_max(name, cfg)
+            specs.append((name + ".w1", (k, r)))
+            specs.append((name + ".w2", (r, n)))
+        else:
+            raise ValueError(mode)
+    return specs
+
+
+def init_params(cfg: ModelConfig = CFG, seed: int = 0) -> dict[str, np.ndarray]:
+    """Dense FP32 parameter init (training starts here)."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for name, shape in other_param_specs(cfg):
+        if name.endswith("_g"):
+            params[name] = np.ones(shape, dtype=np.float32)
+        elif name.endswith("_b"):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            params[name] = (rng.standard_normal(shape) * 0.02).astype(np.float32)
+    for name in compressed_linear_names(cfg):
+        k, n = linear_shape(name, cfg)
+        params[name] = (rng.standard_normal((k, n)) * (1.0 / np.sqrt(k))).astype(
+            np.float32
+        )
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+class _Ctx:
+    """Carries the weight dict + quantization args through the forward pass
+    and records per-linear activation max-abs for calibration."""
+
+    def __init__(self, params, mode, act_scales, act_levels, cfg,
+                 use_kernels=True):
+        # jnp-ify so numpy params can be indexed by traced token arrays.
+        self.params = {k: jnp.asarray(v) for k, v in params.items()}
+        self.mode = mode
+        self.act_scales = act_scales
+        self.act_levels = act_levels
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.names = compressed_linear_names(cfg)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.maxabs = {}
+
+    def linear(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        """Compressed linear: activation fake-quant + kernel matmul.
+
+        ``x`` arrives as [..., K]; flattened to 2-D for the tiled kernels
+        (the hardware sees exactly this [M, K] x [K, N] workload).
+        """
+        i = self.index[name]
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape((-1, k))
+        self.maxabs[name] = jnp.max(jnp.abs(x2))
+        if self.use_kernels:
+            xq = fake_quant(x2, self.act_scales[i], self.act_levels)
+            if self.mode == "dense":
+                y = quant_matmul(xq, self.params[name])
+            else:
+                y = cascade_matmul(
+                    xq, self.params[name + ".w1"], self.params[name + ".w2"]
+                )
+        else:
+            # Pure-jnp path (training / fast calibration): identical math
+            # via the reference oracles, differentiable and fast under jit.
+            from .kernels import ref as _ref
+
+            xq = _ref.fake_quant_ref(x2, self.act_scales[i], self.act_levels)
+            if self.mode == "dense":
+                y = _ref.matmul_ref(xq, self.params[name])
+            else:
+                y = _ref.cascade_ref(
+                    xq, self.params[name + ".w1"], self.params[name + ".w2"]
+                )
+        return y.reshape(lead + (y.shape[-1],))
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(ctx: _Ctx, prefix: str, q_in, kv_in, mask):
+    """Multi-head attention with all four projections through ctx.linear.
+
+    mask: [B, 1, Tq, Tk] additive (-inf where disallowed).
+    """
+    cfg = ctx.cfg
+    b, tq, d = q_in.shape
+    tk = kv_in.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = ctx.linear(f"{prefix}_q", q_in).reshape(b, tq, h, hd).transpose(0, 2, 1, 3)
+    k = ctx.linear(f"{prefix}_k", kv_in).reshape(b, tk, h, hd).transpose(0, 2, 1, 3)
+    v = ctx.linear(f"{prefix}_v", kv_in).reshape(b, tk, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd).astype(np.float32)
+    scores = scores + mask
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, tq, d)
+    return ctx.linear(f"{prefix}_o", out)
+
+
+def _ffn(ctx: _Ctx, prefix: str, x):
+    return ctx.linear(f"{prefix}.ff2", jax.nn.relu(ctx.linear(f"{prefix}.ff1", x)))
+
+
+_NEG = -1e9
+
+
+def _encode(ctx: _Ctx, src_tokens):
+    """Encoder stack; returns (memory [B,S,D], src_pad_mask [B,1,1,S])."""
+    p = ctx.params
+    cfg = ctx.cfg
+    x = p["src_emb"][src_tokens] + p["pos_emb"][None, : src_tokens.shape[1]]
+    pad = (src_tokens == data_mod.PAD_ID)
+    mask = jnp.where(pad[:, None, None, :], _NEG, 0.0).astype(jnp.float32)
+    for i in range(cfg.n_enc):
+        pre = f"enc{i}"
+        h = _layer_norm(x, p[f"{pre}.ln1_g"], p[f"{pre}.ln1_b"])
+        x = x + _attention(ctx, f"{pre}.self", h, h, mask)
+        h = _layer_norm(x, p[f"{pre}.ln2_g"], p[f"{pre}.ln2_b"])
+        x = x + _ffn(ctx, pre, h)
+    x = _layer_norm(x, p["enc_ln_g"], p["enc_ln_b"])
+    return x, mask
+
+
+def _decode(ctx: _Ctx, tgt_tokens, memory, src_mask):
+    """Decoder stack over a full (causally masked) target buffer.
+
+    Returns logits [B, T, V]. The greedy loop recomputes this each step —
+    with d=64, T=20 the cost is negligible and it keeps the lowered HLO
+    free of KV-cache plumbing.
+    """
+    p = ctx.params
+    cfg = ctx.cfg
+    b, t = tgt_tokens.shape
+    x = p["tgt_emb"][tgt_tokens] + p["pos_emb"][None, :t]
+    causal = jnp.triu(jnp.full((t, t), _NEG, dtype=jnp.float32), k=1)
+    tpad = (tgt_tokens == data_mod.PAD_ID)
+    self_mask = causal[None, None] + jnp.where(tpad[:, None, None, :], _NEG, 0.0)
+    for i in range(cfg.n_dec):
+        pre = f"dec{i}"
+        h = _layer_norm(x, p[f"{pre}.ln1_g"], p[f"{pre}.ln1_b"])
+        x = x + _attention(ctx, f"{pre}.self", h, h, self_mask)
+        h = _layer_norm(x, p[f"{pre}.ln2_g"], p[f"{pre}.ln2_b"])
+        x = x + _attention(ctx, f"{pre}.cross", h, memory, src_mask)
+        h = _layer_norm(x, p[f"{pre}.ln3_g"], p[f"{pre}.ln3_b"])
+        x = x + _ffn(ctx, pre, h)
+    x = _layer_norm(x, p["dec_ln_g"], p["dec_ln_b"])
+    # Tied output head (Marian ties target embedding and lm head).
+    return jnp.einsum("btd,vd->btv", x, p["tgt_emb"])
+
+
+def forward_logits(params, src_tokens, tgt_in, act_scales, act_levels,
+                   mode="dense", cfg=CFG, collect_stats=False,
+                   use_kernels=True):
+    """Teacher-forced logits; optionally also per-linear activation max-abs.
+
+    Used for training (FP32: levels=0) and for calibration (stats=True).
+    """
+    ctx = _Ctx(params, mode, act_scales, act_levels, cfg, use_kernels)
+    memory, src_mask = _encode(ctx, src_tokens)
+    logits = _decode(ctx, tgt_in, memory, src_mask)
+    if collect_stats:
+        stats = jnp.stack([ctx.maxabs[n] for n in ctx.names])
+        return logits, stats
+    return logits
+
+
+def translate(params, src_tokens, act_scales, act_levels, mode="dense", cfg=CFG,
+              use_kernels=True):
+    """Greedy decode: src tokens [B, S] -> tgt tokens [B, T].
+
+    This is THE artifact the Rust coordinator executes for every BLEU
+    evaluation. Encoder runs once; the decode loop re-runs the causally
+    masked decoder over the growing buffer and argmaxes position ``i``.
+    """
+    ctx = _Ctx(params, mode, act_scales, act_levels, cfg, use_kernels)
+    memory, src_mask = _encode(ctx, src_tokens)
+    b = src_tokens.shape[0]
+    t = cfg.seq_len
+    init = jnp.full((b, t), data_mod.PAD_ID, dtype=jnp.int32)
+    init = init.at[:, 0].set(data_mod.BOS_ID)
+
+    def step(i, buf):
+        logits = _decode(ctx, buf, memory, src_mask)
+        nxt = jnp.argmax(logits[:, i], axis=-1).astype(jnp.int32)
+        # Once EOS has been produced, keep emitting PAD.
+        done = jnp.any(buf == data_mod.EOS_ID, axis=1)
+        nxt = jnp.where(done, data_mod.PAD_ID, nxt)
+        return buf.at[:, i + 1].set(nxt)
+
+    buf = jax.lax.fori_loop(0, t - 1, step, init)
+    return buf
+
+
+# --------------------------------------------------------------------------
+# Flat-argument wrappers for AOT lowering
+# --------------------------------------------------------------------------
+
+def make_flat_translate(mode: str, cfg: ModelConfig = CFG):
+    """Return (fn, arg_names) where fn takes flat positional arrays.
+
+    Argument order: src_tokens, act_scales, act_levels, then params in
+    ``param_specs(mode)`` order — recorded in the manifest for Rust.
+    """
+    specs = param_specs(mode, cfg)
+    names = [n for n, _ in specs]
+
+    def fn(src_tokens, act_scales, act_levels, *flat):
+        params = dict(zip(names, flat))
+        return (translate(params, src_tokens, act_scales, act_levels, mode, cfg),)
+
+    return fn, ["src_tokens", "act_scales", "act_levels"] + names
+
+
+def make_flat_logits(mode: str, cfg: ModelConfig = CFG):
+    """Flat-argument teacher-forced logits fn (for perplexity-style eval)."""
+    specs = param_specs(mode, cfg)
+    names = [n for n, _ in specs]
+
+    def fn(src_tokens, tgt_in, act_scales, act_levels, *flat):
+        params = dict(zip(names, flat))
+        return (
+            forward_logits(params, src_tokens, tgt_in, act_scales, act_levels,
+                           mode, cfg),
+        )
+
+    return fn, ["src_tokens", "tgt_in", "act_scales", "act_levels"] + names

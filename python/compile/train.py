@@ -1,0 +1,141 @@
+"""Build-time training of the tiny OPUS-MT-style NMT model.
+
+The paper compresses *pretrained* OPUS-MT checkpoints; those are not
+available offline, so this script produces the converged FP32 model that the
+post-training compression pipeline (all of it in Rust) starts from. Runs
+exactly once, under ``make artifacts``.
+
+Outputs (under ``artifacts/``):
+  * ``weights.bin``       — flat binary weight store (see ``save_weights``)
+  * ``corpus_<pair>.bin`` — held-out test sentences + calibration subset
+  * calibration activation max-abs per compressed linear (into the manifest
+    assembled by ``aot.py``)
+
+Adam is implemented inline (no optax in the image); the training path uses
+the pure-jnp oracles (``use_kernels=False``) — the Pallas kernels are tied
+to that path by the pytest suite and used in the lowered artifacts.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+TRAIN_SENTENCES = 4096
+TEST_SENTENCES = 256
+CALIB_SENTENCES = 64
+BATCH = 32
+STEPS = 700
+LR = 2e-3
+SEED = 0
+
+
+def save_weights(path: str, params: dict[str, np.ndarray]) -> None:
+    """Flat binary weight store read by ``rust/src/model/weights.rs``.
+
+    Layout: magic ``ITWB`` | u32 n_entries | entries. Entry: u32 name_len |
+    name bytes | u32 ndim | u32 dims[ndim] | f32 data (LE, row-major).
+    """
+    with open(path, "wb") as f:
+        f.write(b"ITWB")
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = np.ascontiguousarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def save_corpus(path: str, src: np.ndarray, tgt: np.ndarray) -> None:
+    """Token corpus store read by ``rust/src/eval/corpus.rs``.
+
+    Layout: magic ``ITCP`` | u32 n | u32 seq_len | i32 src[n*s] | i32 tgt[n*s].
+    """
+    n, s = src.shape
+    with open(path, "wb") as f:
+        f.write(b"ITCP")
+        f.write(struct.pack("<II", n, s))
+        f.write(np.ascontiguousarray(src, dtype=np.int32).tobytes())
+        f.write(np.ascontiguousarray(tgt, dtype=np.int32).tobytes())
+
+
+def _loss_fn(params, src, tgt, scales, cfg):
+    """Teacher-forced cross-entropy (FP32 path: levels=0)."""
+    tgt_in = tgt  # buffer already starts with BOS; predict positions 1..
+    logits = model_mod.forward_logits(
+        params, src, tgt_in, scales, 0.0, mode="dense", cfg=cfg,
+        use_kernels=False,
+    )
+    # Predict token at position i+1 from logits at position i.
+    labels = tgt[:, 1:]
+    lg = logits[:, :-1]
+    mask = (labels != data_mod.PAD_ID).astype(jnp.float32)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train(pair: str = "en-de", steps: int = STEPS, seed: int = SEED,
+          cfg: model_mod.ModelConfig = model_mod.CFG, log=print):
+    """Train and return (params, test_corpus, calib_corpus, act_maxabs)."""
+    corpus = data_mod.make_corpus(pair, TRAIN_SENTENCES + TEST_SENTENCES, seed + 7)
+    train_c = data_mod.Corpus(pair, corpus.src[:TRAIN_SENTENCES],
+                              corpus.tgt[:TRAIN_SENTENCES])
+    test_c = data_mod.Corpus(pair, corpus.src[TRAIN_SENTENCES:],
+                             corpus.tgt[TRAIN_SENTENCES:])
+
+    params = model_mod.init_params(cfg, seed)
+    names = list(params)
+    scales = np.ones(len(model_mod.compressed_linear_names(cfg)), np.float32)
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(lambda p, s, t: _loss_fn(p, s, t, scales, cfg))
+    )
+
+    # Inline Adam.
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v = {k: np.zeros_like(p) for k, p in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    it = data_mod.batches(train_c, BATCH, seed + 13)
+    for step in range(1, steps + 1):
+        src, tgt = next(it)
+        loss, grads = loss_grad(params, src, tgt)
+        lr_t = LR * min(1.0, step / 50) * (1.0 - 0.5 * step / steps)
+        for k in names:
+            g = np.asarray(grads[k])
+            m[k] = b1 * m[k] + (1 - b1) * g
+            v[k] = b2 * v[k] + (1 - b2) * g * g
+            mh = m[k] / (1 - b1**step)
+            vh = v[k] / (1 - b2**step)
+            params[k] = params[k] - lr_t * mh / (np.sqrt(vh) + eps)
+        if step % 100 == 0 or step == 1:
+            log(f"[train {pair}] step {step:4d} loss {float(loss):.4f}")
+
+    calib_c = data_mod.Corpus(pair, test_c.src[:CALIB_SENTENCES],
+                              test_c.tgt[:CALIB_SENTENCES])
+
+    # Calibration: FP32 forward over the calibration set, collect the
+    # max-abs input of every compressed linear (static PTQ ranges).
+    stats_fn = jax.jit(
+        lambda p, s, t: model_mod.forward_logits(
+            p, s, t, scales, 0.0, mode="dense", cfg=cfg,
+            collect_stats=True, use_kernels=False)[1]
+    )
+    maxabs = np.zeros(len(scales), np.float32)
+    for i in range(0, CALIB_SENTENCES, BATCH):
+        st = stats_fn(params, calib_c.src[i : i + BATCH],
+                      calib_c.tgt[i : i + BATCH])
+        maxabs = np.maximum(maxabs, np.asarray(st))
+
+    return params, test_c, calib_c, maxabs

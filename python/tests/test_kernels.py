@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and tile sizes; every kernel must match its
+``ref.py`` oracle to float tolerance under interpret mode.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cascade_matmul, fake_quant, quant_matmul
+from compile.kernels.ref import cascade_ref, fake_quant_ref, matmul_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=1, max_value=48)
+blocks = st.sampled_from([1, 2, 4, 8, 16, 64])
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@given(m=dims, k=dims, n=dims, bm=blocks, bn=blocks, bk=blocks, seed=st.integers(0, 2**16))
+def test_quant_matmul_matches_oracle(m, k, n, bm, bn, bk, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1)
+    got = quant_matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@given(m=dims, k=dims, r=st.integers(1, 24), n=dims, bm=blocks, bn=blocks,
+       seed=st.integers(0, 2**16))
+def test_cascade_matmul_matches_oracle(m, k, r, n, bm, bn, seed):
+    x = rand((m, k), seed)
+    w1 = rand((k, r), seed + 1)
+    w2 = rand((r, n), seed + 2)
+    got = cascade_matmul(x, w1, w2, block_m=bm, block_n=bn)
+    want = cascade_ref(x, w1, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@given(m=dims, n=dims, scale=st.floats(1e-3, 10.0), wl=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_fake_quant_matches_oracle(m, n, scale, wl, seed):
+    x = rand((m, n), seed) * 3.0
+    levels = float(2 ** (wl - 1) - 1)
+    got = fake_quant(x, scale, levels)
+    want = fake_quant_ref(x, scale, levels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fake_quant_levels_zero_is_identity():
+    x = rand((8, 8), 0)
+    got = np.asarray(fake_quant(x, 0.5, 0.0))
+    np.testing.assert_allclose(got, x)
+
+
+def test_fake_quant_output_on_grid():
+    x = rand((16, 8), 1)
+    s, lv = 0.07, 7.0
+    q = np.asarray(fake_quant(x, s, lv))
+    ints = q / s
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+    assert np.all(np.abs(ints) <= lv + 1e-4)
+
+
+def test_cascade_zero_padding_invariant():
+    """Zero-padded ranks must not change the product (the runtime trick)."""
+    x = rand((8, 16), 2)
+    w1 = rand((16, 5), 3)
+    w2 = rand((5, 12), 4)
+    w1p = np.zeros((16, 16), np.float32)
+    w1p[:, :5] = w1
+    w2p = np.zeros((16, 12), np.float32)
+    w2p[:5] = w2
+    a = np.asarray(cascade_matmul(x, w1, w2))
+    b = np.asarray(cascade_matmul(x, w1p, w2p))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (64, 64, 64), (3, 65, 7)])
+def test_quant_matmul_shape_edges(m, k, n):
+    x = rand((m, k), 5)
+    w = rand((k, n), 6)
+    got = np.asarray(quant_matmul(x, w))
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, np.asarray(matmul_ref(x, w)), atol=1e-4, rtol=1e-4)

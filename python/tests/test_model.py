@@ -1,0 +1,114 @@
+"""L2 model tests: shapes, kernel/jnp path equivalence, training signal,
+greedy decode behaviour, calibration stats."""
+
+import numpy as np
+import jax
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+SMALL = M.ModelConfig(d_model=32, n_heads=4, d_ff=64, n_enc=1, n_dec=1)
+
+
+def scales(cfg):
+    return np.ones(len(M.compressed_linear_names(cfg)), np.float32)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    params = M.init_params(SMALL, seed=3)
+    corpus = D.make_corpus("en-de", 8, seed=11)
+    return params, corpus
+
+
+def test_param_inventory_consistency():
+    names = M.compressed_linear_names(SMALL)
+    assert len(names) == SMALL.n_enc * 6 + SMALL.n_dec * 10
+    dense = M.param_specs("dense", SMALL)
+    svd = M.param_specs("svd", SMALL)
+    # svd replaces each linear with two factors.
+    assert len(svd) == len(dense) + len(names)
+    for n in names:
+        k, nn = M.linear_shape(n, SMALL)
+        assert M.r_max(n, SMALL) == min(k, nn)
+
+
+def test_forward_logits_shape(small_setup):
+    params, corpus = small_setup
+    lg = M.forward_logits(params, corpus.src, corpus.tgt, scales(SMALL), 0.0,
+                          cfg=SMALL, use_kernels=False)
+    assert lg.shape == (8, SMALL.seq_len, SMALL.vocab)
+    assert np.all(np.isfinite(np.asarray(lg)))
+
+
+def test_kernel_and_jnp_paths_agree(small_setup):
+    """The Pallas-kernel path and the pure-jnp training path must be the
+    same function — this ties L1 kernels to the artifacts' semantics."""
+    params, corpus = small_setup
+    src, tgt = corpus.src[:2], corpus.tgt[:2]
+    a = M.forward_logits(params, src, tgt, scales(SMALL), 0.0, cfg=SMALL,
+                         use_kernels=True)
+    b = M.forward_logits(params, src, tgt, scales(SMALL), 0.0, cfg=SMALL,
+                         use_kernels=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+
+
+def test_act_quant_changes_output_and_levels0_does_not(small_setup):
+    params, corpus = small_setup
+    src, tgt = corpus.src[:2], corpus.tgt[:2]
+    base = M.forward_logits(params, src, tgt, scales(SMALL), 0.0, cfg=SMALL,
+                            use_kernels=False)
+    coarse = M.forward_logits(params, src, tgt, scales(SMALL) * 0.5, 3.0,
+                              cfg=SMALL, use_kernels=False)
+    assert not np.allclose(np.asarray(base), np.asarray(coarse))
+
+
+def test_translate_is_bos_framed_and_int(small_setup):
+    params, corpus = small_setup
+    out = np.asarray(
+        M.translate(params, corpus.src, scales(SMALL), 0.0, cfg=SMALL,
+                    use_kernels=False)
+    )
+    assert out.shape == corpus.src.shape
+    assert out.dtype == np.int32
+    assert np.all(out[:, 0] == D.BOS_ID)
+    assert np.all((out >= 0) & (out < SMALL.vocab))
+
+
+def test_collect_stats_returns_positive_maxabs(small_setup):
+    params, corpus = small_setup
+    _, stats = M.forward_logits(params, corpus.src, corpus.tgt, scales(SMALL),
+                                0.0, cfg=SMALL, collect_stats=True,
+                                use_kernels=False)
+    stats = np.asarray(stats)
+    assert stats.shape == (len(M.compressed_linear_names(SMALL)),)
+    assert np.all(stats > 0)
+
+
+def test_loss_decreases_quickly():
+    """A handful of Adam steps on the tiny config must reduce the loss —
+    the smoke version of the build-time training run."""
+    from compile import train as T
+
+    cfg = SMALL
+    corpus = D.make_corpus("en-de", 64, seed=5)
+    params = M.init_params(cfg, seed=0)
+    sc = scales(cfg)
+    loss_grad = jax.jit(
+        jax.value_and_grad(lambda p, s, t: T._loss_fn(p, s, t, sc, cfg))
+    )
+    l0, _ = loss_grad(params, corpus.src[:16], corpus.tgt[:16])
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v = {k: np.zeros_like(p) for k, p in params.items()}
+    for step in range(1, 31):
+        loss, grads = loss_grad(params, corpus.src[:16], corpus.tgt[:16])
+        for k in params:
+            g = np.asarray(grads[k])
+            m[k] = 0.9 * m[k] + 0.1 * g
+            v[k] = 0.999 * v[k] + 0.001 * g * g
+            mh = m[k] / (1 - 0.9**step)
+            vh = v[k] / (1 - 0.999**step)
+            params[k] = params[k] - 5e-3 * mh / (np.sqrt(vh) + 1e-8)
+    l1, _ = loss_grad(params, corpus.src[:16], corpus.tgt[:16])
+    assert float(l1) < float(l0) * 0.8, f"{float(l0)} -> {float(l1)}"

@@ -1,0 +1,82 @@
+//! End-to-end figure regeneration benchmarks: one entry per paper
+//! table/figure (DESIGN.md experiment index). Each bench times a full
+//! (fast-profile) regeneration of the figure's data series so regressions
+//! in any layer — compression, runtime, DSE — show up here.
+//!
+//! `cargo bench --bench figures [filter]`; figures needing artifacts are
+//! skipped when `make artifacts` has not run. SRA-bearing figures
+//! (7/8/9's search component) are exercised with the fast profile to
+//! keep the suite minutes-scale.
+
+use itera_llm::benchkit::Bench;
+use itera_llm::config::ExpConfig;
+use itera_llm::coordinator::{figures, Coordinator, Method};
+use itera_llm::hw::Platform;
+
+fn main() {
+    let mut b = Bench::new().minimal();
+
+    // Fig. 10 needs no artifacts — pure analytical DSE.
+    b.bench("fig10/engine_pareto_512", || {
+        std::hint::black_box(figures::fig10(&Platform::zcu111()));
+    });
+
+    if !itera_llm::model::Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("(artifacts not built; skipping model-dependent figure benches)");
+        b.finish();
+        return;
+    }
+    let c = Coordinator::new(ExpConfig::fast()).unwrap();
+    let pair = "en-de";
+
+    b.bench("fig1/quant_precision_sweep", || {
+        std::hint::black_box(figures::fig1(&c, pair).unwrap());
+    });
+
+    b.bench("fig4/layer_sensitivity_2probes", || {
+        std::hint::black_box(figures::fig4(&c, pair, &["enc0.self_q", "dec1.ff2"]).unwrap());
+    });
+
+    // Mini compression grid for figs 7/8/11/12 (6 points, no SRA) so each
+    // bench sample stays bounded; `itera fig 7` runs the full version.
+    let pts: Vec<_> = [
+        Method::QuantOnly { wl: 8 },
+        Method::QuantOnly { wl: 3 },
+        Method::QuantOnly { wl: 2 },
+        Method::SvdBaseline { wl: 4, rank_frac: 0.25 },
+        Method::SvdIter { wl: 4, rank_frac: 0.25 },
+        Method::SvdIter { wl: 3, rank_frac: 0.4 },
+    ]
+    .into_iter()
+    .map(|m| c.measure(pair, &m).unwrap())
+    .collect();
+
+    b.bench("fig7/pareto_ratio_table", || {
+        std::hint::black_box(figures::fig7(&c, pair, &pts));
+    });
+    b.bench("fig8/pareto_nops_table", || {
+        std::hint::black_box(figures::fig8(&c, pair, &pts));
+    });
+
+    b.bench("fig9/generality_single_point", || {
+        // One (pair, method) cell of the Fig. 9 bars.
+        std::hint::black_box(c.measure("fr-en", &Method::QuantOnly { wl: 4 }).unwrap());
+    });
+
+    let full = Platform::zcu111();
+    let quarter = Platform::zcu111_quarter_bw();
+    b.bench("fig11/codesign_full_bw", || {
+        std::hint::black_box(figures::fig11(&c, &pts, &full));
+    });
+    b.bench("fig11/codesign_quarter_bw", || {
+        std::hint::black_box(figures::fig11(&c, &pts, &quarter));
+    });
+
+    let (_, cds) = figures::fig11(&c, &pts, &full);
+    b.bench("fig12/occupancy_breakdown", || {
+        let sel = [("pt0", &cds[0])];
+        std::hint::black_box(figures::fig12(&c, &sel, &full));
+    });
+
+    b.finish();
+}

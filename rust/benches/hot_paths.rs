@@ -1,0 +1,124 @@
+//! Hot-path microbenchmarks (custom harness; no criterion in the image).
+//!
+//! Covers the compute kernels the perf pass optimizes (EXPERIMENTS.md
+//! §Perf): Algorithm 1 and its SVD building blocks, quantization, the
+//! dense matmul, the dataflow simulator, the DSE sweep, BLEU scoring, and
+//! — when artifacts are present — the PJRT translate call that dominates
+//! every figure runner.
+
+use itera_llm::benchkit::Bench;
+use itera_llm::compress::{itera, quant_only, svd_baseline};
+use itera_llm::dse;
+use itera_llm::eval::bleu_score;
+use itera_llm::hw::{sim, EngineKind, Platform, TileConfig, Workload};
+use itera_llm::linalg::{svd, svd_top1};
+use itera_llm::quant;
+use itera_llm::tensor::Matrix;
+use itera_llm::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Pcg64::new(0xBE7C);
+
+    // ---- linalg -------------------------------------------------------
+    let w64 = Matrix::randn(64, 64, &mut rng).scale(0.1);
+    let w512 = Matrix::randn(512, 512, &mut rng).scale(0.1);
+    b.bench("linalg/svd_jacobi_64x64", || {
+        std::hint::black_box(svd(&w64));
+    });
+    b.bench("linalg/svd_top1_64x64", || {
+        std::hint::black_box(svd_top1(&w64, 1));
+    });
+    b.bench("linalg/svd_top1_512x512", || {
+        std::hint::black_box(svd_top1(&w512, 1));
+    });
+
+    // ---- tensor -------------------------------------------------------
+    let a = Matrix::randn(256, 256, &mut rng);
+    let c = Matrix::randn(256, 256, &mut rng);
+    b.bench("tensor/matmul_256", || {
+        std::hint::black_box(a.matmul(&c));
+    });
+
+    // ---- compression --------------------------------------------------
+    b.bench("compress/itera_64x64_r32_w4", || {
+        std::hint::black_box(itera(&w64, 32, 4));
+    });
+    b.bench("compress/itera_512x512_r64_w4", || {
+        std::hint::black_box(itera(&w512, 64, 4));
+    });
+    b.bench("compress/svd_baseline_64x64_r32", || {
+        std::hint::black_box(svd_baseline(&w64, 32, 4));
+    });
+    b.bench("compress/quant_only_512x512", || {
+        std::hint::black_box(quant_only(&w512, 4));
+    });
+    b.bench("quant/quantize_cols_512x512", || {
+        std::hint::black_box(quant::quantize_cols(&w512, 4));
+    });
+
+    // ---- hardware models ----------------------------------------------
+    let w = Workload::new(512, 512, 512, 4, 8);
+    let platform = Platform::zcu111();
+    b.bench("hw/sim_matmul_512_t16", || {
+        std::hint::black_box(sim::simulate_matmul(&w, &TileConfig::new(16, 16, 8), 427.0));
+    });
+    b.bench("dse/sweep_single_svd_512_r128", || {
+        std::hint::black_box(dse::sweep_engines(
+            &w,
+            Some(128),
+            &platform,
+            &[EngineKind::SingleSvd],
+        ));
+    });
+    b.bench("dse/best_design_all_kinds", || {
+        std::hint::black_box(dse::best_design_for_layer(&w, Some(128), &platform));
+    });
+
+    // ---- eval -----------------------------------------------------------
+    let refs: Vec<Vec<i32>> = (0..96)
+        .map(|i| (0..16).map(|j| ((i * 17 + j * 3) % 120 + 3) as i32).collect())
+        .collect();
+    b.bench("eval/bleu_96x16", || {
+        std::hint::black_box(bleu_score(&refs, &refs));
+    });
+
+    // ---- PJRT runtime (needs artifacts) ---------------------------------
+    if itera_llm::model::Manifest::default_dir().join("manifest.json").exists() {
+        use std::collections::BTreeMap;
+        let manifest =
+            itera_llm::model::Manifest::load(itera_llm::model::Manifest::default_dir()).unwrap();
+        let engine = itera_llm::runtime::Engine::cpu().unwrap();
+        let model = itera_llm::model::PairModel::load(&manifest, "en-de").unwrap();
+        let corpus = itera_llm::eval::Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
+        let session = itera_llm::runtime::TranslateSession::new(
+            &engine,
+            &manifest,
+            itera_llm::runtime::Mode::Dense,
+        )
+        .unwrap();
+        let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
+        let src = corpus.src_batch(0, session.batch(), manifest.model.pad_id);
+        b.bench("runtime/translate_batch16", || {
+            std::hint::black_box(session.translate(&bank, &src).unwrap());
+        });
+        b.bench("runtime/build_bank_fp32", || {
+            std::hint::black_box(session.build_bank(&model, &BTreeMap::new(), None).unwrap());
+        });
+
+        // 512^3 kernel artifact (the Fig. 10 workload via Pallas-lowered HLO).
+        let exe = engine.load_hlo(&manifest.artifacts.linear512_dense).unwrap();
+        let mut r = Pcg64::new(5);
+        let x = Matrix::randn(512, 512, &mut r);
+        let wm = Matrix::randn(512, 512, &mut r);
+        let bx = engine.upload_f32(x.data(), &[512, 512]).unwrap();
+        let bw = engine.upload_f32(wm.data(), &[512, 512]).unwrap();
+        b.bench("runtime/linear512_dense_kernel", || {
+            std::hint::black_box(engine.run_tuple1(&exe, &[&bx, &bw]).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts not built; skipping runtime benches)");
+    }
+
+    b.finish();
+}

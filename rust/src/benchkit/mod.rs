@@ -1,0 +1,163 @@
+//! Criterion-style bench harness (the image vendors no criterion crate).
+//!
+//! `cargo bench` runs the `[[bench]]` targets with `harness = false`; each
+//! target builds a [`Bench`] suite, registers closures, and the harness
+//! does warmup + timed sampling and prints mean/median/stddev/throughput.
+//! Honors the standard `cargo bench <filter>` argument.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+/// Bench suite runner.
+pub struct Bench {
+    filter: Option<String>,
+    warmup_iters: usize,
+    min_samples: usize,
+    max_samples: usize,
+    target_time_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // `cargo bench foo` passes "foo" plus `--bench`; take the first
+        // non-flag arg as a substring filter.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench {
+            filter,
+            warmup_iters: 2,
+            min_samples: 5,
+            max_samples: 30,
+            target_time_s: 2.0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick profile for smoke runs (fewer samples).
+    pub fn quick(mut self) -> Bench {
+        self.warmup_iters = 1;
+        self.min_samples = 3;
+        self.max_samples = 8;
+        self.target_time_s = 0.5;
+        self
+    }
+
+    /// Minimal profile for expensive end-to-end benches (figure
+    /// regenerations run seconds-to-minutes per sample).
+    pub fn minimal(mut self) -> Bench {
+        self.warmup_iters = 0;
+        self.min_samples = 2;
+        self.max_samples = 2;
+        self.target_time_s = 0.0;
+        self
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Register and run one benchmark.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut s = Summary::new();
+        let t_suite = Instant::now();
+        while s.count() < self.min_samples
+            || (s.count() < self.max_samples
+                && t_suite.elapsed().as_secs_f64() < self.target_time_s)
+        {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            samples: s.count(),
+            mean_s: s.mean(),
+            median_s: s.median(),
+            stddev_s: s.stddev(),
+            min_s: s.min(),
+        };
+        println!(
+            "{:<44} {:>10.4} ms/iter (median {:.4}, sd {:.4}, n={})",
+            r.name,
+            r.mean_s * 1e3,
+            r.median_s * 1e3,
+            r.stddev_s * 1e3,
+            r.samples
+        );
+        self.results.push(r);
+    }
+
+    /// Benchmark with a throughput annotation (items/sec at the mean).
+    pub fn bench_throughput(&mut self, name: &str, items: u64, f: impl FnMut()) {
+        let before = self.results.len();
+        self.bench(name, f);
+        if self.results.len() > before {
+            let r = &self.results[before];
+            println!(
+                "{:<44} {:>10.1} items/s",
+                format!("  -> {}", r.name),
+                items as f64 / r.mean_s
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(&self) {
+        println!("\n{} benchmarks run.", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench::new().quick();
+        b.filter = None;
+        let mut count = 0u64;
+        b.bench("noop", || {
+            count += 1;
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].samples >= 3);
+        assert!(count >= 4); // warmup + samples
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench::new().quick();
+        b.filter = Some("match-me".to_string());
+        b.bench("other", || {});
+        assert!(b.results().is_empty());
+        b.bench("match-me-too", || {});
+        assert_eq!(b.results().len(), 1);
+    }
+}

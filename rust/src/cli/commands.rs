@@ -1,0 +1,262 @@
+//! CLI command implementations.
+
+use anyhow::{bail, Result};
+
+use crate::config::ExpConfig;
+use crate::coordinator::figures::{self, CodesignPoint, MeasuredPoint};
+use crate::coordinator::{Coordinator, Method};
+use crate::hw::{sim, Platform, TileConfig, Workload};
+use crate::model::Manifest;
+
+use super::Args;
+
+fn coordinator(args: &Args) -> Result<Coordinator> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExpConfig::load(path)?,
+        None => ExpConfig::default(),
+    };
+    if args.has("fast") {
+        cfg = ExpConfig::fast();
+    }
+    Coordinator::new(cfg)
+}
+
+pub fn cmd_info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let engine = crate::runtime::Engine::cpu()?;
+    println!("itera-llm: ITERA-LLM co-design framework");
+    println!("PJRT platform : {}", engine.platform());
+    println!(
+        "model         : {} enc + {} dec layers, d={}, vocab={}, seq={}",
+        manifest.model.n_enc,
+        manifest.model.n_dec,
+        manifest.model.d_model,
+        manifest.model.vocab,
+        manifest.model.seq_len
+    );
+    println!("compressed linears: {}", manifest.linears.len());
+    println!("pairs         : {:?}", manifest.pairs.keys().collect::<Vec<_>>());
+    println!("artifacts dir : {:?}", manifest.dir);
+    Ok(())
+}
+
+/// Run figure(s). Heavy figures share one compression sweep.
+pub fn cmd_fig(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let pair = args.flag_or("pair", "en-de");
+    run_figures(&which, &pair, args)
+}
+
+pub fn run_figures(which: &str, pair: &str, args: &Args) -> Result<()> {
+    let needs_coordinator = which != "10";
+    let c = if needs_coordinator { Some(coordinator(args)?) } else { None };
+    let with_sra = !args.has("no-sra");
+    let results = args.flag_or("results", "results");
+
+    let mut sweep_cache: Option<Vec<MeasuredPoint>> = None;
+    let mut sweep = |c: &Coordinator| -> Result<Vec<MeasuredPoint>> {
+        if let Some(s) = &sweep_cache {
+            return Ok(s.clone());
+        }
+        eprintln!("[fig] running compression sweep (pair {pair}, sra={with_sra}) ...");
+        let pts = figures::compression_sweep(c, pair, with_sra)?;
+        sweep_cache = Some(pts.clone());
+        Ok(pts)
+    };
+
+    let run_one = |tag: &str, t: crate::coordinator::report::Table| -> Result<()> {
+        print!("{}", t.render());
+        t.write_csv(&results, tag)?;
+        println!("[saved {results}/{tag}.csv]\n");
+        Ok(())
+    };
+
+    let all = which == "all";
+    if all || which == "1" {
+        run_one("fig1", figures::fig1(c.as_ref().unwrap(), pair)?)?;
+    }
+    if all || which == "4" {
+        let layers =
+            ["enc0.self_q", "enc1.ff1", "dec0.self_v", "dec0.cross_q", "dec1.ff2", "dec1.cross_o"];
+        run_one("fig4", figures::fig4(c.as_ref().unwrap(), pair, &layers)?)?;
+    }
+    if all || which == "7" {
+        let pts = sweep(c.as_ref().unwrap())?;
+        run_one("fig7", figures::fig7(c.as_ref().unwrap(), pair, &pts))?;
+    }
+    if all || which == "8" {
+        let pts = sweep(c.as_ref().unwrap())?;
+        run_one("fig8", figures::fig8(c.as_ref().unwrap(), pair, &pts))?;
+    }
+    if all || which == "9" {
+        run_one("fig9", figures::fig9(c.as_ref().unwrap())?)?;
+    }
+    if all || which == "10" {
+        run_one("fig10", figures::fig10(&Platform::zcu111()))?;
+    }
+    if all || which == "11" || which == "12" {
+        let c = c.as_ref().unwrap();
+        let pts = sweep(c)?;
+        let full = Platform::zcu111();
+        let quarter = Platform::zcu111_quarter_bw();
+        let (t_full, cds_full) = figures::fig11(c, &pts, &full);
+        let (t_quarter, cds_quarter) = figures::fig11(c, &pts, &quarter);
+        if all || which == "11" {
+            run_one("fig11_full_bw", t_full)?;
+            run_one("fig11_quarter_bw", t_quarter)?;
+            report_headline(&pts, &cds_full, &cds_quarter);
+        }
+        if all || which == "12" {
+            let sel_full = select_fig12(&pts, &cds_full);
+            let sel_quarter = select_fig12(&pts, &cds_quarter);
+            let named_full: Vec<(&str, &CodesignPoint)> =
+                sel_full.iter().map(|(s, p)| (s.as_str(), *p)).collect();
+            let named_quarter: Vec<(&str, &CodesignPoint)> =
+                sel_quarter.iter().map(|(s, p)| (s.as_str(), *p)).collect();
+            run_one("fig12_full_bw", figures::fig12(c, &named_full, &full))?;
+            run_one("fig12_quarter_bw", figures::fig12(c, &named_quarter, &quarter))?;
+        }
+    }
+    Ok(())
+}
+
+/// Pick the paper's Fig. 12 designs: best quant point and best SVD-SRA
+/// point (by BLEU-latency trade-off) in each bandwidth scenario.
+fn select_fig12<'a>(
+    pts: &[MeasuredPoint],
+    cds: &'a [CodesignPoint],
+) -> Vec<(String, &'a CodesignPoint)> {
+    let mut out = Vec::new();
+    let quant_best = pts
+        .iter()
+        .zip(cds)
+        .filter(|(p, _)| matches!(p.method, Method::QuantOnly { .. }))
+        .max_by(|a, b| a.1.bleu.partial_cmp(&b.1.bleu).unwrap());
+    if let Some((_, cd)) = quant_best {
+        out.push((format!("quant[{}]", cd.label), cd));
+    }
+    let sra_best = pts
+        .iter()
+        .zip(cds)
+        .filter(|(p, _)| matches!(p.method, Method::SvdIterRanks { .. } | Method::SvdIter { .. }))
+        .min_by(|a, b| a.1.total_latency_cycles.partial_cmp(&b.1.total_latency_cycles).unwrap());
+    if let Some((_, cd)) = sra_best {
+        out.push((format!("svd[{}]", cd.label), cd));
+    }
+    out
+}
+
+/// The paper's headline: latency reduction of the best SVD point vs the
+/// quant baseline at comparable BLEU (within 1 BLEU).
+fn report_headline(pts: &[MeasuredPoint], full: &[CodesignPoint], quarter: &[CodesignPoint]) {
+    for (tag, cds) in [("full-bw", full), ("quarter-bw", quarter)] {
+        let mut best: Option<(f64, String, String)> = None;
+        for (pi, p) in pts.iter().enumerate() {
+            if !matches!(p.method, Method::QuantOnly { .. }) {
+                continue;
+            }
+            for (qi, q) in pts.iter().enumerate() {
+                if matches!(q.method, Method::QuantOnly { .. }) {
+                    continue;
+                }
+                if q.bleu + 1.0 < p.bleu {
+                    continue; // not comparable accuracy
+                }
+                let red = figures::headline_latency_reduction(&cds[pi], &cds[qi]);
+                if best.as_ref().map(|b| red > b.0).unwrap_or(true) {
+                    best = Some((red, cds[pi].label.clone(), cds[qi].label.clone()));
+                }
+            }
+        }
+        if let Some((red, ql, sl)) = best {
+            println!(
+                "[headline {tag}] '{sl}' vs '{ql}': linear-layer latency reduction {:.1}%",
+                red * 100.0
+            );
+        }
+    }
+}
+
+pub fn cmd_compress(args: &Args) -> Result<()> {
+    let c = coordinator(args)?;
+    let pair = args.flag_or("pair", "en-de");
+    let wl = args.flag_usize("wl", 4)? as u32;
+    let frac = args.flag_f64("rank-frac", 0.5)?;
+    let method = match args.flag_or("method", "itera").as_str() {
+        "quant" => Method::QuantOnly { wl },
+        "svd" => Method::SvdBaseline { wl, rank_frac: frac },
+        "itera" => Method::SvdIter { wl, rank_frac: frac },
+        other => bail!("unknown method {other}"),
+    };
+    let (p, dt) = crate::util::timed(|| c.measure(&pair, &method));
+    let p = p?;
+    println!("method      : {}", p.label);
+    println!("pair        : {pair}");
+    println!("BLEU        : {:.2}", p.bleu);
+    println!("compression : {:.2}x vs FP32", p.ratio);
+    println!("linear MACs : {:.2} G (batch {})", p.nops as f64 / 1e9, c.cfg.nops_batch);
+    println!("wall time   : {dt:.1}s");
+    Ok(())
+}
+
+pub fn cmd_sra(args: &Args) -> Result<()> {
+    let c = coordinator(args)?;
+    let pair = args.flag_or("pair", "en-de");
+    let wl = args.flag_usize("wl", 4)? as u32;
+    let frac = args.flag_f64("budget-frac", 0.5)?;
+    let caps = c.manifest.rank_caps();
+    let total: usize = caps.iter().sum();
+    let budget = ((total as f64 * frac) as usize).max(caps.len());
+    println!("[sra] pair {pair}, W{wl}A8, rank budget {budget} (of {total})");
+    let ((ranks, calib_bleu), dt) = crate::util::timed(|| c.sra_search(&pair, wl, budget));
+    println!("[sra] calib BLEU {:.2} after search ({dt:.0}s)", calib_bleu);
+    let p = c.measure(&pair, &Method::SvdIterRanks { wl, ranks: ranks.clone() })?;
+    let uniform = c.measure(
+        &pair,
+        &Method::SvdIter { wl, rank_frac: frac },
+    )?;
+    println!("[sra] test BLEU {:.2} (uniform-rank baseline {:.2})", p.bleu, uniform.bleu);
+    println!("[sra] per-layer ranks:");
+    for (l, r) in c.manifest.linears.iter().zip(&ranks) {
+        println!("    {:<14} {r}", l.name);
+    }
+    Ok(())
+}
+
+/// Analytical model vs cycle-level simulator cross-validation table.
+pub fn cmd_validate() -> Result<()> {
+    use crate::coordinator::report::Table;
+    let mut t = Table::new(
+        "Analytical model vs dataflow simulator (512^3 W4A8)",
+        &["tile", "analytical_cycles", "simulated_cycles", "ratio", "sim_occupancy"],
+    );
+    let w = Workload::new(512, 512, 512, 4, 8);
+    for (mt, nt, kf) in [(8, 8, 8), (16, 16, 8), (16, 16, 16), (32, 16, 16), (32, 32, 8)] {
+        let tile = TileConfig::new(mt, nt, kf);
+        let ana = crate::hw::tile_latency_cycles(&w, &tile);
+        let s = sim::simulate_matmul(&w, &tile, 1e12);
+        t.row(vec![
+            format!("{mt}x{nt}x{kf}"),
+            format!("{:.0}", ana.latency_cycles),
+            format!("{:.0}", s.cycles),
+            format!("{:.3}", s.cycles / ana.latency_cycles),
+            format!("{:.1}%", s.occupancy * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Batched serving demo: random test sentences through the FP32 and a
+/// compressed model, reporting latency/throughput percentiles.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let c = coordinator(args)?;
+    let pair = args.flag_or("pair", "en-de");
+    let requests = args.flag_usize("requests", 64)?;
+    crate::coordinator::serve_demo(&c, &pair, requests)
+}

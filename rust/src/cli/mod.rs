@@ -1,0 +1,142 @@
+//! `itera` command-line interface (hand-rolled; no clap in the image).
+//!
+//! ```text
+//! itera info                         # platform + artifact summary
+//! itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de] [--fast] [--no-sra]
+//! itera compress --method quant|svd|itera --wl 4 [--rank-frac 0.5]
+//! itera sra --wl 4 --budget-frac 0.5 [--pair en-de]
+//! itera validate                     # analytical model vs simulator table
+//! itera serve [--requests 64]        # batched serving demo + latency stats
+//! ```
+
+mod commands;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub use commands::run_figures;
+
+/// Parsed command line: subcommand, flags (`--k v` / bare `--flag`), and
+/// positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        a.cmd = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // Flag with a value unless the next token is another flag
+                // or absent (then it's boolean).
+                let take = it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                let val = if take { it.next().cloned().unwrap() } else { "true".into() };
+                a.flags.insert(name.to_string(), val);
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+pub const USAGE: &str = "\
+itera — ITERA-LLM co-design framework (paper reproduction)
+
+USAGE:
+  itera info
+  itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]
+  itera compress --method <quant|svd|itera> --wl <2..8> [--rank-frac F] [--pair P]
+  itera sra --wl <2..8> --budget-frac F [--pair P] [--fast]
+  itera validate
+  itera serve [--requests N] [--pair P]
+  itera help
+";
+
+/// Entry point used by `main.rs`.
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "info" => commands::cmd_info(),
+        "fig" => commands::cmd_fig(&args),
+        "compress" => commands::cmd_compress(&args),
+        "sra" => commands::cmd_sra(&args),
+        "validate" => commands::cmd_validate(),
+        "serve" => commands::cmd_serve(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["fig", "7", "--pair", "en-de", "--fast"])).unwrap();
+        assert_eq!(a.cmd, "fig");
+        assert_eq!(a.positional, vec!["7"]);
+        assert_eq!(a.flag("pair"), Some("en-de"));
+        assert!(a.has("fast"));
+        assert_eq!(a.flag_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn numeric_flags() {
+        let a = Args::parse(&sv(&["sra", "--wl", "4", "--budget-frac", "0.5"])).unwrap();
+        assert_eq!(a.flag_usize("wl", 8).unwrap(), 4);
+        assert!((a.flag_f64("budget-frac", 1.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.flag_usize("wl", 8).is_ok());
+        let b = Args::parse(&sv(&["sra", "--wl", "x"])).unwrap();
+        assert!(b.flag_usize("wl", 8).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.cmd, "help");
+    }
+}

@@ -1,0 +1,162 @@
+//! Size and operation-count accounting for the Pareto analyses.
+//!
+//! Compression ratio is normalized to the FP32 model size (§VIII-C: ratio 4
+//! == 8-bit quantization; the paper's region of interest is ratio > 4).
+//! NOps counts multiply-accumulates of the linear layers at batch size `M`
+//! (Fig. 8 reports total fixed-point operations).
+
+use crate::quant::WordLen;
+
+use super::CompressedLinear;
+
+/// Cost summary of a compressed linear layer at batch size `m`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    /// Stored weight bits.
+    pub bits: u64,
+    /// Multiply-accumulate count for one forward pass of batch `m`.
+    pub macs: u64,
+    /// FP32 bits of the original layer.
+    pub fp32_bits: u64,
+    /// MACs of the original dense layer at the same batch.
+    pub dense_macs: u64,
+}
+
+impl LayerCost {
+    pub fn ratio(&self) -> f64 {
+        self.fp32_bits as f64 / self.bits.max(1) as f64
+    }
+}
+
+/// Stored bits of a compressed layer. Vector-wise scales are charged to the
+/// layer as one FP32 word per quantized vector (the hardware stores them in
+/// the per-rank dequant tables).
+pub fn param_bits(k: usize, n: usize, rank: Option<usize>, wl: WordLen) -> u64 {
+    match rank {
+        None => (k * n) as u64 * wl as u64 + 32 * n as u64, // per-column scales
+        Some(r) => {
+            let w1 = (k * r) as u64 * wl as u64;
+            let w2 = (r * n) as u64 * wl as u64;
+            w1 + w2 + 32 * (2 * r) as u64 // one scale per rank per side
+        }
+    }
+}
+
+/// Dense MatMul MAC count: `M x K x N`.
+pub fn nops_dense(m: usize, k: usize, n: usize) -> u64 {
+    (m as u64) * (k as u64) * (n as u64)
+}
+
+/// SVD cascade MAC count (Eq. 3): `M x K x r + M x r x N`.
+pub fn nops_svd(m: usize, k: usize, n: usize, r: usize) -> u64 {
+    (m as u64) * (r as u64) * (k as u64 + n as u64)
+}
+
+/// Full cost of a [`CompressedLinear`] at batch `m`, given the original
+/// `[K x N]` shape.
+pub fn layer_cost(c: &CompressedLinear, m: usize, k: usize, n: usize) -> LayerCost {
+    let fp32_bits = (k * n) as u64 * 32;
+    let dense_macs = nops_dense(m, k, n);
+    match c {
+        CompressedLinear::Dense { wl, .. } => LayerCost {
+            bits: param_bits(k, n, None, *wl),
+            macs: dense_macs,
+            fp32_bits,
+            dense_macs,
+        },
+        CompressedLinear::LowRank { w1, wl, .. } => {
+            let r = w1.cols();
+            LayerCost {
+                bits: param_bits(k, n, Some(r), *wl),
+                macs: nops_svd(m, k, n, r),
+                fp32_bits,
+                dense_macs,
+            }
+        }
+    }
+}
+
+/// Model-level compression ratio from per-layer costs.
+pub fn compression_ratio(costs: &[LayerCost]) -> f64 {
+    let fp32: u64 = costs.iter().map(|c| c.fp32_bits).sum();
+    let bits: u64 = costs.iter().map(|c| c.bits).sum();
+    fp32 as f64 / bits.max(1) as f64
+}
+
+/// Rank at which the SVD cascade has the same MACs as the dense layer:
+/// `r* = K*N / (K+N)`. Below this the decomposition *reduces* operations.
+pub fn breakeven_rank(k: usize, n: usize) -> usize {
+    (k * n) / (k + n)
+}
+
+/// Rank giving a target weight-bits compression `ratio` (vs FP32) at word
+/// length `wl`: solves `32*K*N / (wl * r * (K+N)) = ratio` for r.
+pub fn rank_for_ratio(k: usize, n: usize, wl: WordLen, ratio: f64) -> usize {
+    let r = (32.0 * (k * n) as f64) / (wl as f64 * ratio * (k + n) as f64);
+    (r.floor() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{quant_only, svd_baseline};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn quant8_is_ratio_near_4() {
+        // §VIII-C: "a compression ratio of 4 corresponds to 8-bit".
+        let bits = param_bits(512, 512, None, 8);
+        let ratio = (512u64 * 512 * 32) as f64 / bits as f64;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn nops_breakeven() {
+        let k = 512;
+        let n = 512;
+        let r = breakeven_rank(k, n);
+        assert_eq!(r, 256);
+        assert!(nops_svd(1, k, n, r) <= nops_dense(1, k, n));
+        assert!(nops_svd(1, k, n, r + 1) > nops_dense(1, k, n));
+    }
+
+    #[test]
+    fn rank_for_ratio_roundtrip() {
+        for &(k, n) in &[(512usize, 512usize), (64, 128)] {
+            for wl in [4u32, 6, 8] {
+                for ratio in [4.0, 6.0, 8.0, 12.0] {
+                    let r = rank_for_ratio(k, n, wl, ratio);
+                    let bits = param_bits(k, n, Some(r), wl);
+                    let actual = (k * n * 32) as f64 / bits as f64;
+                    // Achieved ratio is >= requested (floor) within scale overhead.
+                    assert!(actual > ratio * 0.8, "k={k} wl={wl} ratio={ratio} got {actual}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_cost_consistency() {
+        let mut rng = Pcg64::new(80);
+        let w = Matrix::randn(64, 128, &mut rng);
+        let q = quant_only(&w, 6);
+        let c = layer_cost(&q, 16, 64, 128);
+        assert_eq!(c.macs, c.dense_macs);
+        assert_eq!(c.bits, param_bits(64, 128, None, 6));
+
+        let s = svd_baseline(&w, 20, 6);
+        let c2 = layer_cost(&s, 16, 64, 128);
+        assert_eq!(c2.macs, nops_svd(16, 64, 128, 20));
+        assert!(c2.ratio() > c.ratio());
+    }
+
+    #[test]
+    fn model_ratio_aggregates() {
+        let costs = vec![
+            LayerCost { bits: 100, macs: 0, fp32_bits: 800, dense_macs: 0 },
+            LayerCost { bits: 300, macs: 0, fp32_bits: 800, dense_macs: 0 },
+        ];
+        assert!((compression_ratio(&costs) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Post-training compression engine (§III): the paper's contribution.
+//!
+//! Three methods over a linear layer's weight matrix `W [K x N]`:
+//!
+//! * [`quant_only`]      — the W`wl`A8 baseline: vector-wise fake-quant of
+//!   `W` itself;
+//! * [`svd_baseline`]    — plain SVD truncation to rank `r`, then
+//!   vector-wise quantization of the produced factors (§VIII-B);
+//! * [`itera`]           — **Algorithm 1**: SVD-based *iterative* tensor
+//!   decomposition with quantization inside the refinement loop, so each
+//!   rank-1 step compensates the quantization error of all previous steps.
+//!
+//! Size/NOps accounting for Pareto analysis lives in [`accounting`].
+
+mod accounting;
+mod itera;
+
+pub use accounting::{breakeven_rank, compression_ratio, layer_cost, nops_dense,
+    nops_svd, param_bits, rank_for_ratio, LayerCost};
+pub use itera::{itera, itera_opts, IteraOpts, IteraTrace};
+
+use crate::linalg;
+use crate::quant::{self, WordLen};
+use crate::tensor::Matrix;
+
+/// A compressed linear layer, ready to be fed to the runtime (dense
+/// artifact for `Dense`, rank-padded SVD artifact for `LowRank`).
+#[derive(Debug, Clone)]
+pub enum CompressedLinear {
+    /// Quantization-only: the full `[K x N]` fake-quantized matrix.
+    Dense { w: Matrix, wl: WordLen },
+    /// Factored: `w1 [K x r]`, `w2 [r x N]`, both fake-quantized.
+    LowRank { w1: Matrix, w2: Matrix, wl: WordLen },
+}
+
+impl CompressedLinear {
+    /// Effective weight matrix (reconstructed for LowRank).
+    pub fn effective(&self) -> Matrix {
+        match self {
+            CompressedLinear::Dense { w, .. } => w.clone(),
+            CompressedLinear::LowRank { w1, w2, .. } => w1.matmul(w2),
+        }
+    }
+
+    /// Decomposition rank (full rank for Dense).
+    pub fn rank(&self) -> usize {
+        match self {
+            CompressedLinear::Dense { w, .. } => w.rows().min(w.cols()),
+            CompressedLinear::LowRank { w1, .. } => w1.cols(),
+        }
+    }
+
+    pub fn word_len(&self) -> WordLen {
+        match self {
+            CompressedLinear::Dense { wl, .. } | CompressedLinear::LowRank { wl, .. } => *wl,
+        }
+    }
+
+    /// Frobenius-norm approximation error vs the original weights.
+    pub fn error(&self, w: &Matrix) -> f32 {
+        self.effective().sub(w).frob_norm()
+    }
+}
+
+/// Quantization-only baseline: vector-wise (per output column) fake-quant.
+pub fn quant_only(w: &Matrix, wl: WordLen) -> CompressedLinear {
+    let (q, _) = quant::quantize_cols(w, wl);
+    CompressedLinear::Dense { w: q, wl }
+}
+
+/// Plain SVD baseline (§VIII-B): truncate to rank `r` with a *single* SVD
+/// of the FP32 weights, then quantize the produced factors vector-wise
+/// (per rank — each singular vector gets its own scale), matching the
+/// quantization granularity of the iterative method for a fair comparison.
+pub fn svd_baseline(w: &Matrix, r: usize, wl: WordLen) -> CompressedLinear {
+    let r = r.clamp(1, w.rows().min(w.cols()));
+    let d = linalg::svd(w);
+    let (w1, w2) = linalg::factor_pair(&d, r);
+    let (q1, _) = quant::quantize_cols(&w1, wl); // per-rank scales (columns of W1)
+    let (q2, _) = quant::quantize_rows(&w2, wl); // per-rank scales (rows of W2)
+    CompressedLinear::LowRank { w1: q1, w2: q2, wl }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn weights(seed: u64, k: usize, n: usize) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::randn(k, n, &mut rng).scale(0.1)
+    }
+
+    #[test]
+    fn quant_only_error_shrinks_with_bits() {
+        let w = weights(1, 24, 24);
+        let e4 = quant_only(&w, 4).error(&w);
+        let e6 = quant_only(&w, 6).error(&w);
+        let e8 = quant_only(&w, 8).error(&w);
+        assert!(e8 < e6 && e6 < e4, "{e4} {e6} {e8}");
+    }
+
+    #[test]
+    fn svd_baseline_error_shrinks_with_rank() {
+        let w = weights(2, 20, 16);
+        let mut prev = f32::INFINITY;
+        for r in [2, 4, 8, 16] {
+            let e = svd_baseline(&w, r, 8).error(&w);
+            assert!(e <= prev + 1e-4, "rank {r}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn full_rank_high_bits_near_exact() {
+        let w = weights(3, 12, 12);
+        let c = svd_baseline(&w, 12, 12);
+        assert!(c.error(&w) < 0.02 * w.frob_norm());
+    }
+
+    #[test]
+    fn effective_shapes() {
+        let w = weights(4, 10, 14);
+        let c = svd_baseline(&w, 3, 6);
+        assert_eq!(c.rank(), 3);
+        assert_eq!(c.effective().shape(), (10, 14));
+        let q = quant_only(&w, 6);
+        assert_eq!(q.rank(), 10);
+        assert_eq!(q.effective().shape(), (10, 14));
+    }
+}

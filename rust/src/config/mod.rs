@@ -1,0 +1,136 @@
+//! Experiment configuration: evaluation budgets, SRA hyper-parameters,
+//! worker counts. Defaults are sized for the 1-core CI image; a JSON file
+//! (`--config path`) can override any field for larger machines.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::sra::SraConfig;
+use crate::util::json::Json;
+
+/// Tunables for the experiment runners.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Sentences per BLEU evaluation inside search loops (SRA oracle).
+    pub calib_sentences: usize,
+    /// Sentences per reported BLEU figure (final measurements).
+    pub eval_sentences: usize,
+    /// Worker threads for per-layer compression jobs.
+    pub workers: usize,
+    /// SRA hyper-parameters.
+    pub sra: SraConfig,
+    /// Batch size (M dim) used for NOps accounting, matching the paper's
+    /// Fig. 11 evaluation at batch 512.
+    pub nops_batch: usize,
+    /// Output directory for CSV series.
+    pub results_dir: String,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            calib_sentences: 32,
+            eval_sentences: 96,
+            workers: crate::util::pool::default_workers(8),
+            sra: SraConfig {
+                delta0: 8,
+                alpha: 0.5,
+                max_iters: 6,
+                patience: 3,
+                probe_layers: 4,
+                seed: 7,
+            },
+            nops_batch: 512,
+            results_dir: "results".to_string(),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Fast profile for smoke tests and the quickstart example.
+    pub fn fast() -> Self {
+        ExpConfig {
+            calib_sentences: 16,
+            eval_sentences: 32,
+            sra: SraConfig {
+                delta0: 8,
+                alpha: 0.5,
+                max_iters: 3,
+                patience: 2,
+                probe_layers: 2,
+                seed: 7,
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Load overrides from a JSON file; missing keys keep defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut c = ExpConfig::default();
+        if let Some(v) = j.get("calib_sentences").as_usize() {
+            c.calib_sentences = v;
+        }
+        if let Some(v) = j.get("eval_sentences").as_usize() {
+            c.eval_sentences = v;
+        }
+        if let Some(v) = j.get("workers").as_usize() {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("nops_batch").as_usize() {
+            c.nops_batch = v;
+        }
+        if let Some(v) = j.get("results_dir").as_str() {
+            c.results_dir = v.to_string();
+        }
+        let s = j.get("sra");
+        if let Some(v) = s.get("delta0").as_usize() {
+            c.sra.delta0 = v;
+        }
+        if let Some(v) = s.get("alpha").as_f64() {
+            c.sra.alpha = v;
+        }
+        if let Some(v) = s.get("max_iters").as_usize() {
+            c.sra.max_iters = v;
+        }
+        if let Some(v) = s.get("patience").as_usize() {
+            c.sra.patience = v;
+        }
+        if let Some(v) = s.get("probe_layers").as_usize() {
+            c.sra.probe_layers = v;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ExpConfig::default();
+        assert!(c.calib_sentences <= c.eval_sentences);
+        assert!(c.workers >= 1);
+        assert_eq!(c.nops_batch, 512);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let dir = std::env::temp_dir().join("itera_cfg_test.json");
+        std::fs::write(
+            &dir,
+            r#"{"calib_sentences": 8, "sra": {"max_iters": 2, "alpha": 0.9}}"#,
+        )
+        .unwrap();
+        let c = ExpConfig::load(&dir).unwrap();
+        assert_eq!(c.calib_sentences, 8);
+        assert_eq!(c.sra.max_iters, 2);
+        assert!((c.sra.alpha - 0.9).abs() < 1e-12);
+        // untouched field keeps default
+        assert_eq!(c.nops_batch, 512);
+        std::fs::remove_file(&dir).ok();
+    }
+}

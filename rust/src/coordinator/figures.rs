@@ -1,0 +1,498 @@
+//! Figure runners: one function per paper figure, regenerating the same
+//! rows/series the paper reports (DESIGN.md experiment index).
+//!
+//! Absolute numbers come from our substituted substrate (tiny OPUS-MT-like
+//! models on synthetic pairs; ZCU111 analytical models) — the *shape* of
+//! each result (who wins, crossovers, trends) is the reproduction target.
+
+use anyhow::Result;
+
+use crate::dse::{self, pareto_front, LayerWork};
+use crate::hw::{sim, EngineKind, Platform, Workload};
+use crate::sra;
+use crate::util::timed;
+
+use super::report::{cycles, f1, f2, Table};
+use super::{Coordinator, CompressedModel, Method};
+
+/// A compression design point measured on the test set.
+#[derive(Debug, Clone)]
+pub struct MeasuredPoint {
+    pub label: String,
+    pub method: Method,
+    pub bleu: f64,
+    pub ratio: f64,
+    pub nops: u64,
+    pub ranks: Vec<usize>,
+}
+
+impl Coordinator {
+    /// Measure one method end-to-end on `pair` (test-set BLEU + costs).
+    pub fn measure(&self, pair: &str, method: &Method) -> Result<MeasuredPoint> {
+        let cm = self.compress(pair, method);
+        let bleu = self.bleu_test(pair, &cm)?;
+        let (ratio, nops) = cm.cost(&self.manifest, self.cfg.nops_batch);
+        Ok(MeasuredPoint {
+            label: method.label(),
+            method: method.clone(),
+            bleu,
+            ratio,
+            nops,
+            ranks: cm.ranks(&self.manifest),
+        })
+    }
+
+    /// SRA search on the calibration set; returns the allocation and its
+    /// calibration BLEU.
+    pub fn sra_search(&self, pair: &str, wl: u32, budget: usize) -> (Vec<usize>, f64) {
+        let caps = self.manifest.rank_caps();
+        let mut oracle = |ranks: &[usize]| {
+            let method = Method::SvdIterRanks { wl, ranks: ranks.to_vec() };
+            let cm = self.compress(pair, &method);
+            self.bleu_calib(pair, &cm).unwrap_or(0.0)
+        };
+        let res = sra::run(&mut oracle, budget, &caps, &self.cfg.sra);
+        (res.ranks, res.accuracy)
+    }
+}
+
+// ------------------------------------------------------------------
+// Fig. 1 — PTQ degradation: BLEU vs precision (quant-only).
+// ------------------------------------------------------------------
+pub fn fig1(c: &Coordinator, pair: &str) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Fig.1: post-training quantization, {pair} (BLEU vs precision)"),
+        &["precision", "bleu", "delta_vs_fp32"],
+    );
+    let fp32 = c.bleu_fp32(pair)?;
+    t.row(vec!["FP32".into(), f2(fp32), f2(0.0)]);
+    // NOTE scale shift vs the paper: the tiny substituted model has far
+    // fewer weight outliers than OPUS-MT, so its PTQ knee sits one to two
+    // bits lower (W3 instead of W4). We sweep down to W2 so the figure
+    // shows the same degradation shape (see EXPERIMENTS.md).
+    for wl in [8u32, 6, 5, 4, 3, 2] {
+        let p = c.measure(pair, &Method::QuantOnly { wl })?;
+        t.row(vec![format!("W{wl}A8"), f2(p.bleu), f2(p.bleu - fp32)]);
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Fig. 4 — per-layer sensitivity to rank truncation.
+// ------------------------------------------------------------------
+pub fn fig4(c: &Coordinator, pair: &str, layer_names: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Fig.4: layer sensitivity, {pair} (BLEU drop vs % rank retained)"),
+        &["layer", "rank3%", "rank6%", "rank12%", "rank25%", "rank50%"],
+    );
+    let fp32 = c.bleu_fp32(pair)?;
+    for name in layer_names {
+        let idx = c
+            .manifest
+            .linear_index(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown layer {name}"))?;
+        let r_max = c.manifest.linears[idx].r_max;
+        let mut cells = vec![name.to_string()];
+        for frac in [0.03, 0.06, 0.12, 0.25, 0.5] {
+            let rank = ((r_max as f64 * frac).round() as usize).max(1);
+            // Truncate ONLY this layer (FP32 elsewhere, FP32 activations),
+            // exactly the paper's per-layer probe.
+            let mut layers = std::collections::BTreeMap::new();
+            layers.insert(
+                name.to_string(),
+                crate::compress::svd_baseline(c.model(pair).linear(name), rank, 16),
+            );
+            let cm = CompressedModel {
+                method: Method::SvdBaseline { wl: 16, rank_frac: frac },
+                layers: fill_identity(c, pair, layers),
+                act_wl: None,
+            };
+            let bleu = c.bleu_on_test_dense(pair, &cm)?;
+            cells.push(f2(bleu - fp32));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Fig. 4 probes run on the dense artifact: every *other* layer keeps its
+/// FP32 weights (identity compression).
+fn fill_identity(
+    c: &Coordinator,
+    pair: &str,
+    mut layers: std::collections::BTreeMap<String, crate::compress::CompressedLinear>,
+) -> std::collections::BTreeMap<String, crate::compress::CompressedLinear> {
+    for l in &c.manifest.linears {
+        layers.entry(l.name.clone()).or_insert_with(|| {
+            crate::compress::CompressedLinear::Dense {
+                w: c.model(pair).linear(&l.name).clone(),
+                wl: 16,
+            }
+        });
+    }
+    layers
+}
+
+impl Coordinator {
+    /// Test-set BLEU through the dense artifact regardless of method tag
+    /// (used by the Fig. 4 single-layer probes).
+    fn bleu_on_test_dense(&self, pair: &str, cm: &CompressedModel) -> Result<f64> {
+        use crate::eval::evaluate_bleu;
+        use crate::runtime::{Mode, TranslateSession};
+        let session = TranslateSession::new(&self.engine, &self.manifest, Mode::Dense)?;
+        let bank = session.build_bank(self.model(pair), &cm.layers, cm.act_wl)?;
+        let corpus = crate::eval::Corpus::load(&self.manifest.pairs[pair].corpus)?;
+        let d = evaluate_bleu(&session, &bank, &corpus, &self.manifest.model,
+                              self.cfg.calib_sentences)?;
+        Ok(d.score)
+    }
+}
+
+// ------------------------------------------------------------------
+// Figs. 7 + 8 — accuracy/compression and accuracy/NOps Pareto fronts.
+// ------------------------------------------------------------------
+
+/// Shared sweep for Figs. 7/8: measure every method over its grid.
+pub fn compression_sweep(
+    c: &Coordinator,
+    pair: &str,
+    with_sra: bool,
+) -> Result<Vec<MeasuredPoint>> {
+    // Word lengths one bit below the paper's (W3/W4 here play the role of
+    // W4/W6 there): the tiny substituted model's PTQ knee sits lower, see
+    // EXPERIMENTS.md §Scale-shift.
+    let mut pts = Vec::new();
+    for wl in [2u32, 3, 4, 6, 8] {
+        pts.push(c.measure(pair, &Method::QuantOnly { wl })?);
+    }
+    for wl in [3u32, 4, 6] {
+        for frac in [0.25, 0.4, 0.55, 0.75] {
+            pts.push(c.measure(pair, &Method::SvdBaseline { wl, rank_frac: frac })?);
+            pts.push(c.measure(pair, &Method::SvdIter { wl, rank_frac: frac })?);
+        }
+    }
+    if with_sra {
+        let caps = c.manifest.rank_caps();
+        let total: usize = caps.iter().sum();
+        for wl in [3u32, 4] {
+            for budget_frac in [0.4, 0.55] {
+                let budget = (total as f64 * budget_frac) as usize;
+                let (ranks, _) = c.sra_search(pair, wl, budget);
+                pts.push(c.measure(pair, &Method::SvdIterRanks { wl, ranks })?);
+            }
+        }
+    }
+    Ok(pts)
+}
+
+pub fn fig7(c: &Coordinator, pair: &str, pts: &[MeasuredPoint]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.7: BLEU vs compression ratio, {pair} (region of interest: ratio > 4)"),
+        &["method", "ratio", "bleu", "pareto"],
+    );
+    let coords: Vec<(f64, f64)> = pts.iter().map(|p| (1.0 / p.ratio, p.bleu)).collect();
+    let front = pareto_front(&coords);
+    for (i, p) in pts.iter().enumerate() {
+        t.row(vec![
+            p.label.clone(),
+            f2(p.ratio),
+            f2(p.bleu),
+            if front.contains(&i) { "*".into() } else { "".into() },
+        ]);
+    }
+    t
+}
+
+pub fn fig8(c: &Coordinator, pair: &str, pts: &[MeasuredPoint]) -> Table {
+    let _ = c;
+    let mut t = Table::new(
+        &format!("Fig.8: BLEU vs number of operations, {pair} (batch 512)"),
+        &["method", "gmacs", "bleu", "pareto"],
+    );
+    let coords: Vec<(f64, f64)> = pts.iter().map(|p| (p.nops as f64, p.bleu)).collect();
+    let front = pareto_front(&coords);
+    for (i, p) in pts.iter().enumerate() {
+        t.row(vec![
+            p.label.clone(),
+            f2(p.nops as f64 / 1e9),
+            f2(p.bleu),
+            if front.contains(&i) { "*".into() } else { "".into() },
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 9 — generality across language pairs (bar plot rows).
+// ------------------------------------------------------------------
+pub fn fig9(c: &Coordinator) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig.9: BLEU vs compression ratio across language pairs (W3/W4 A8)",
+        &["pair", "ratio", "quant", "svd_iter", "svd_iter_sra"],
+    );
+    for pair in c.pairs() {
+        for target_ratio in [10.0f64] {
+            let q = c.measure(&pair, &Method::QuantOnly { wl: 3 })?;
+            // rank fraction hitting the target weight-bits ratio at W4:
+            // ratio = 32*K*N / (wl * r * (K+N)); for square-ish layers
+            // frac ≈ 32 / (wl * ratio) * (K*N)/(r_max*(K+N)).
+            let frac = ratio_to_frac(c, 4, target_ratio);
+            let it = c.measure(&pair, &Method::SvdIter { wl: 4, rank_frac: frac })?;
+            let caps = c.manifest.rank_caps();
+            let total: usize = caps.iter().sum();
+            let budget = ((total as f64 * frac) as usize).max(caps.len());
+            let (ranks, _) = c.sra_search(&pair, 4, budget);
+            let sra_pt = c.measure(&pair, &Method::SvdIterRanks { wl: 4, ranks })?;
+            t.row(vec![
+                pair.clone(),
+                f1(target_ratio),
+                f2(q.bleu),
+                f2(it.bleu),
+                f2(sra_pt.bleu),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Uniform rank fraction whose model compression ratio approximates
+/// `target_ratio` at word length `wl`.
+pub fn ratio_to_frac(c: &Coordinator, wl: u32, target_ratio: f64) -> f64 {
+    // Solve on aggregate layer dims.
+    let mut fp32_bits = 0f64;
+    let mut per_rank_bits = 0f64;
+    let mut total_rmax = 0f64;
+    for l in &c.manifest.linears {
+        fp32_bits += (l.k * l.n * 32) as f64;
+        per_rank_bits += (wl as usize * (l.k + l.n)) as f64 * l.r_max as f64;
+        total_rmax += l.r_max as f64;
+    }
+    let _ = total_rmax;
+    (fp32_bits / (target_ratio * per_rank_bits)).clamp(0.02, 1.0)
+}
+
+// ------------------------------------------------------------------
+// Fig. 10 — engine latency vs bandwidth requirement Pareto (512^3).
+// ------------------------------------------------------------------
+pub fn fig10(platform: &Platform) -> Table {
+    let w = Workload::new(512, 512, 512, 4, 8);
+    let rank = 128;
+    let mut t = Table::new(
+        "Fig.10: MatMul engine latency vs off-chip bandwidth (512^3, W4A8, rank 128, ZCU111)",
+        &["engine", "tile", "bw_bits_per_cycle", "latency_cycles", "pareto"],
+    );
+    for kind in [EngineKind::Baseline, EngineKind::SingleSvd, EngineKind::CascadeSvd] {
+        let pts = dse::sweep_engines(&w, Some(rank), platform, &[kind]);
+        let pts = if pts.is_empty() && kind == EngineKind::Baseline {
+            dse::sweep_engines(&w, None, platform, &[kind])
+        } else {
+            pts
+        };
+        let coords: Vec<(f64, f64)> = pts
+            .iter()
+            .map(|p| (p.design.bandwidth_req, -p.design.latency_cycles))
+            .collect();
+        let front = pareto_front(&coords);
+        for &i in &front {
+            let d = &pts[i].design;
+            let tile = match d.tile2 {
+                Some(t2) => format!(
+                    "Mt{} Rt{} Nt{} Kf{}",
+                    d.tile1.mt, d.tile1.nt, t2.nt, d.tile1.kf
+                ),
+                None => format!("Mt{} Nt{} Kf{}", d.tile1.mt, d.tile1.nt, d.tile1.kf),
+            };
+            t.row(vec![
+                kind.to_string(),
+                tile,
+                f1(d.bandwidth_req),
+                cycles(d.latency_cycles),
+                "*".into(),
+            ]);
+        }
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 11 — accuracy vs latency co-design under two bandwidth budgets.
+// ------------------------------------------------------------------
+
+/// One co-designed point: a compression config mapped to its best
+/// hardware under the platform.
+#[derive(Debug, Clone)]
+pub struct CodesignPoint {
+    pub label: String,
+    pub bleu: f64,
+    pub total_latency_cycles: f64,
+    pub latency_us: f64,
+    pub picks: Vec<dse::DesignPoint>,
+    pub ranks: Vec<usize>,
+}
+
+/// Map a measured compression point onto the best hardware configuration
+/// for `platform` (per-layer best engine, paper §VIII-E).
+pub fn codesign(
+    c: &Coordinator,
+    p: &MeasuredPoint,
+    platform: &Platform,
+) -> CodesignPoint {
+    let wl = p.method.word_len();
+    let dense = matches!(p.method, Method::QuantOnly { .. });
+    let layers: Vec<LayerWork> = c
+        .manifest
+        .linears
+        .iter()
+        .zip(&p.ranks)
+        .map(|(l, &r)| LayerWork {
+            workload: Workload::new(c.cfg.nops_batch, l.k, l.n, wl, 8),
+            rank: if dense { None } else { Some(r) },
+        })
+        .collect();
+    let (total, picks) =
+        dse::best_design_for_model(&layers, platform, c.cfg.workers).expect("feasible design");
+    CodesignPoint {
+        label: p.label.clone(),
+        bleu: p.bleu,
+        total_latency_cycles: total,
+        latency_us: platform.cycles_to_us(total),
+        picks,
+        ranks: p.ranks.clone(),
+    }
+}
+
+pub fn fig11(
+    c: &Coordinator,
+    pts: &[MeasuredPoint],
+    platform: &Platform,
+) -> (Table, Vec<CodesignPoint>) {
+    let mut t = Table::new(
+        &format!(
+            "Fig.11: BLEU vs total linear-layer latency on {} (batch {})",
+            platform.name, c.cfg.nops_batch
+        ),
+        &["method", "bleu", "latency_us", "latency_cycles", "pareto"],
+    );
+    let cds: Vec<CodesignPoint> = pts.iter().map(|p| codesign(c, p, platform)).collect();
+    let coords: Vec<(f64, f64)> =
+        cds.iter().map(|d| (d.total_latency_cycles, d.bleu)).collect();
+    let front = pareto_front(&coords);
+    for (i, d) in cds.iter().enumerate() {
+        t.row(vec![
+            d.label.clone(),
+            f2(d.bleu),
+            f1(d.latency_us),
+            cycles(d.total_latency_cycles),
+            if front.contains(&i) { "*".into() } else { "".into() },
+        ]);
+    }
+    (t, cds)
+}
+
+// ------------------------------------------------------------------
+// Fig. 12 — per-layer tile occupancy of selected design points.
+// ------------------------------------------------------------------
+pub fn fig12(
+    c: &Coordinator,
+    selected: &[(&str, &CodesignPoint)],
+    platform: &Platform,
+) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.12: per-layer MatMul tile occupancy ({})", platform.name),
+        &["design", "layer", "engine", "occupancy_pct"],
+    );
+    for (tag, cd) in selected {
+        for (l, (pick, &rank)) in
+            c.manifest.linears.iter().zip(cd.picks.iter().zip(&cd.ranks))
+        {
+            let w = Workload::new(
+                c.cfg.nops_batch,
+                l.k,
+                l.n,
+                pick.design_w_bits(),
+                8,
+            );
+            let occ = match pick.design.kind {
+                EngineKind::Baseline => {
+                    sim::simulate_matmul(&w, &pick.design.tile1, platform.bandwidth_bits_per_cycle)
+                        .occupancy
+                }
+                EngineKind::SingleSvd => sim::simulate_single_svd(
+                    &w,
+                    rank,
+                    &pick.design.tile1,
+                    platform.bandwidth_bits_per_cycle,
+                )
+                .occupancy,
+                EngineKind::CascadeSvd => sim::simulate_cascade_svd(
+                    &w,
+                    rank,
+                    &pick.design.tile1,
+                    &pick.design.tile2.unwrap_or(pick.design.tile1),
+                    platform.bandwidth_bits_per_cycle,
+                )
+                .occupancy,
+            };
+            t.row(vec![
+                tag.to_string(),
+                l.name.clone(),
+                pick.design.kind.to_string(),
+                f1(occ * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+impl dse::DesignPoint {
+    /// Weight word length is not stored on the design; Fig. 12 re-derives
+    /// the workload with W4 (all selected designs are W4/W6 — occupancy is
+    /// insensitive to the word length at fixed tile).
+    fn design_w_bits(&self) -> u32 {
+        4
+    }
+}
+
+/// Convenience: run the headline comparison (best SRA vs best quant at
+/// comparable BLEU) and report the latency reduction the paper headlines
+/// (12.1%–41.1%).
+pub fn headline_latency_reduction(
+    quant: &CodesignPoint,
+    sra_pt: &CodesignPoint,
+) -> f64 {
+    1.0 - sra_pt.total_latency_cycles / quant.total_latency_cycles
+}
+
+/// Time a full figure run (used by the bench harness).
+pub fn timed_table(f: impl FnOnce() -> Result<Table>) -> Result<(Table, f64)> {
+    let (r, dt) = timed(f);
+    Ok((r?, dt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_is_static_and_nonempty() {
+        let t = fig10(&Platform::zcu111());
+        assert!(!t.is_empty());
+        let s = t.render();
+        assert!(s.contains("Baseline"));
+        assert!(s.contains("SingleSVD"));
+        assert!(s.contains("CascadeSVD"));
+    }
+
+    #[test]
+    fn ratio_frac_monotone() {
+        // Static helper check without artifacts: construct via manifest if
+        // available, else skip.
+        if !crate::model::Manifest::default_dir().join("manifest.json").exists() {
+            return;
+        }
+        let c = Coordinator::new(crate::config::ExpConfig::fast()).unwrap();
+        let f8 = ratio_to_frac(&c, 4, 8.0);
+        let f16 = ratio_to_frac(&c, 4, 16.0);
+        assert!(f16 < f8);
+    }
+}

@@ -1,0 +1,200 @@
+//! Compression method dispatch (the four contenders of §VIII-C).
+
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+
+use crate::compress::{self, CompressedLinear, LayerCost};
+use crate::model::Manifest;
+use crate::quant::WordLen;
+use crate::runtime::Mode;
+use crate::tensor::Matrix;
+use crate::util::pool::par_map;
+
+use super::Coordinator;
+
+/// A compression method applied uniformly (or, for SRA, per-layer) to all
+/// compressed linears.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// WxA8 post-training quantization of the dense weights (baseline).
+    QuantOnly { wl: WordLen },
+    /// Plain SVD truncation to a uniform rank fraction, then quantization
+    /// (§VIII-B SVD baseline). `rank_frac` in (0, 1] of each layer's r_max.
+    SvdBaseline { wl: WordLen, rank_frac: f64 },
+    /// Algorithm 1 at a uniform rank fraction.
+    SvdIter { wl: WordLen, rank_frac: f64 },
+    /// Algorithm 1 with an explicit per-layer rank vector (SRA output).
+    SvdIterRanks { wl: WordLen, ranks: Vec<usize> },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::QuantOnly { wl } => format!("Quant W{wl}A8"),
+            Method::SvdBaseline { wl, rank_frac } => {
+                format!("SVD W{wl}A8 r={rank_frac:.2}")
+            }
+            Method::SvdIter { wl, rank_frac } => {
+                format!("SVD-Iter W{wl}A8 r={rank_frac:.2}")
+            }
+            Method::SvdIterRanks { wl, .. } => format!("SVD-Iter(SRA) W{wl}A8"),
+        }
+    }
+
+    pub fn word_len(&self) -> WordLen {
+        match self {
+            Method::QuantOnly { wl }
+            | Method::SvdBaseline { wl, .. }
+            | Method::SvdIter { wl, .. }
+            | Method::SvdIterRanks { wl, .. } => *wl,
+        }
+    }
+
+    /// Which artifact variant this method's output runs on.
+    pub fn mode(&self) -> Mode {
+        match self {
+            Method::QuantOnly { .. } => Mode::Dense,
+            _ => Mode::Svd,
+        }
+    }
+}
+
+/// A fully compressed model: per-linear compressed layers + the activation
+/// word length (A8 throughout the paper's evaluation).
+#[derive(Debug, Clone)]
+pub struct CompressedModel {
+    pub method: Method,
+    pub layers: BTreeMap<String, CompressedLinear>,
+    /// Activation word length fed to the in-graph fake-quant kernel.
+    pub act_wl: Option<WordLen>,
+}
+
+impl CompressedModel {
+    pub fn mode(&self) -> Mode {
+        self.method.mode()
+    }
+
+    /// (compression ratio vs FP32, total linear-layer MACs at batch `m`).
+    pub fn cost(&self, manifest: &Manifest, m: usize) -> (f64, u64) {
+        let costs: Vec<LayerCost> = manifest
+            .linears
+            .iter()
+            .map(|l| compress::layer_cost(&self.layers[&l.name], m, l.k, l.n))
+            .collect();
+        let ratio = compress::compression_ratio(&costs);
+        let nops = costs.iter().map(|c| c.macs).sum();
+        (ratio, nops)
+    }
+
+    /// Per-layer ranks (full rank reported for dense layers).
+    pub fn ranks(&self, manifest: &Manifest) -> Vec<usize> {
+        manifest.linears.iter().map(|l| self.layers[&l.name].rank()).collect()
+    }
+
+    /// Cheap structural fingerprint for evaluation memoization.
+    pub fn fingerprint(&self, pair: &str) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        pair.hash(&mut h);
+        self.act_wl.hash(&mut h);
+        match &self.method {
+            Method::QuantOnly { wl } => (0u8, *wl, 0u64).hash(&mut h),
+            Method::SvdBaseline { wl, rank_frac } => {
+                (1u8, *wl, rank_frac.to_bits()).hash(&mut h)
+            }
+            Method::SvdIter { wl, rank_frac } => {
+                (2u8, *wl, rank_frac.to_bits()).hash(&mut h)
+            }
+            Method::SvdIterRanks { wl, ranks } => {
+                (3u8, *wl).hash(&mut h);
+                ranks.hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Apply `method` to one weight matrix at an explicit rank.
+pub fn compress_one(w: &Matrix, method: &Method, rank: usize) -> CompressedLinear {
+    match method {
+        Method::QuantOnly { wl } => compress::quant_only(w, *wl),
+        Method::SvdBaseline { wl, .. } => compress::svd_baseline(w, rank, *wl),
+        Method::SvdIter { wl, .. } | Method::SvdIterRanks { wl, .. } => {
+            compress::itera(w, rank, *wl).0
+        }
+    }
+}
+
+fn rank_of(method: &Method, idx: usize, r_max: usize) -> usize {
+    match method {
+        Method::QuantOnly { .. } => r_max,
+        Method::SvdBaseline { rank_frac, .. } | Method::SvdIter { rank_frac, .. } => {
+            ((r_max as f64 * rank_frac).round() as usize).clamp(1, r_max)
+        }
+        Method::SvdIterRanks { ranks, .. } => ranks[idx].clamp(1, r_max),
+    }
+}
+
+/// Compress all linears of `pair` in parallel on the coordinator's pool.
+pub fn compress_model(c: &Coordinator, pair: &str, method: &Method) -> CompressedModel {
+    let model = c.model(pair);
+    let linears = &c.manifest.linears;
+    let compressed = par_map(linears.len(), c.cfg.workers, |i| {
+        let l = &linears[i];
+        let rank = rank_of(method, i, l.r_max);
+        (l.name.clone(), compress_one(model.linear(&l.name), method, rank))
+    });
+    CompressedModel {
+        method: method.clone(),
+        layers: compressed.into_iter().collect(),
+        act_wl: Some(8), // the paper evaluates WxA8 throughout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_modes() {
+        assert_eq!(Method::QuantOnly { wl: 4 }.label(), "Quant W4A8");
+        assert_eq!(Method::QuantOnly { wl: 4 }.mode(), Mode::Dense);
+        assert_eq!(Method::SvdIter { wl: 6, rank_frac: 0.5 }.mode(), Mode::Svd);
+    }
+
+    #[test]
+    fn rank_of_clamps() {
+        let m = Method::SvdIter { wl: 4, rank_frac: 0.01 };
+        assert_eq!(rank_of(&m, 0, 64), 1);
+        let m = Method::SvdIter { wl: 4, rank_frac: 1.0 };
+        assert_eq!(rank_of(&m, 0, 64), 64);
+        let m = Method::SvdIterRanks { wl: 4, ranks: vec![999] };
+        assert_eq!(rank_of(&m, 0, 64), 64);
+    }
+
+    #[test]
+    fn fingerprints_distinguish_configs() {
+        let a = CompressedModel {
+            method: Method::QuantOnly { wl: 4 },
+            layers: BTreeMap::new(),
+            act_wl: Some(8),
+        };
+        let b = CompressedModel {
+            method: Method::QuantOnly { wl: 6 },
+            layers: BTreeMap::new(),
+            act_wl: Some(8),
+        };
+        assert_ne!(a.fingerprint("en-de"), b.fingerprint("en-de"));
+        assert_ne!(a.fingerprint("en-de"), a.fingerprint("fr-en"));
+        let c1 = CompressedModel {
+            method: Method::SvdIterRanks { wl: 4, ranks: vec![1, 2, 3] },
+            layers: BTreeMap::new(),
+            act_wl: Some(8),
+        };
+        let c2 = CompressedModel {
+            method: Method::SvdIterRanks { wl: 4, ranks: vec![1, 2, 4] },
+            layers: BTreeMap::new(),
+            act_wl: Some(8),
+        };
+        assert_ne!(c1.fingerprint("en-de"), c2.fingerprint("en-de"));
+    }
+}

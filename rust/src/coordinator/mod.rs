@@ -1,0 +1,168 @@
+//! Experiment coordinator: glues compression, SRA, evaluation and DSE.
+//!
+//! The coordinator owns the PJRT engine, the per-pair models and corpora,
+//! and an evaluation cache; everything the figure runners ([`figures`])
+//! and the examples do goes through it. Per-layer compression jobs fan out
+//! on the thread pool; BLEU evaluations are memoized by configuration
+//! fingerprint (the SRA search revisits allocations).
+
+pub mod figures;
+mod methods;
+pub mod report;
+mod serve;
+
+pub use methods::{CompressedModel, Method};
+pub use serve::{serve_bank, serve_demo};
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::compress::CompressedLinear;
+use crate::config::ExpConfig;
+use crate::eval::{evaluate_bleu, Corpus};
+use crate::model::{Manifest, PairModel};
+use crate::runtime::{Engine, Mode, TranslateSession};
+
+/// Orchestrates the full ITERA-LLM pipeline against the built artifacts.
+pub struct Coordinator {
+    pub manifest: Manifest,
+    pub engine: Engine,
+    pub cfg: ExpConfig,
+    models: BTreeMap<String, PairModel>,
+    corpora: BTreeMap<String, Corpus>,
+    calib: BTreeMap<String, Corpus>,
+    bleu_cache: Mutex<HashMap<u64, f64>>,
+}
+
+impl Coordinator {
+    /// Load manifest, weights and corpora for every trained pair and
+    /// create the PJRT engine.
+    pub fn new(cfg: ExpConfig) -> Result<Coordinator> {
+        let manifest = Manifest::load(Manifest::default_dir())
+            .context("loading artifacts (run `make artifacts`)")?;
+        let engine = Engine::cpu()?;
+        let mut models = BTreeMap::new();
+        let mut corpora = BTreeMap::new();
+        let mut calib = BTreeMap::new();
+        for (pair, info) in &manifest.pairs {
+            models.insert(pair.clone(), PairModel::load(&manifest, pair)?);
+            corpora.insert(pair.clone(), Corpus::load(&info.corpus)?);
+            calib.insert(pair.clone(), Corpus::load(&info.calib)?);
+        }
+        Ok(Coordinator {
+            manifest,
+            engine,
+            cfg,
+            models,
+            corpora,
+            calib,
+            bleu_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn model(&self, pair: &str) -> &PairModel {
+        &self.models[pair]
+    }
+
+    pub fn pairs(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Compress every linear of `pair` with `method` (parallel per layer).
+    pub fn compress(&self, pair: &str, method: &Method) -> CompressedModel {
+        methods::compress_model(self, pair, method)
+    }
+
+    /// BLEU of a compressed model on the held-out test set.
+    pub fn bleu_test(&self, pair: &str, cm: &CompressedModel) -> Result<f64> {
+        self.bleu_on(pair, cm, &self.corpora[pair], self.cfg.eval_sentences)
+    }
+
+    /// BLEU on the calibration subset (the SRA oracle), memoized.
+    pub fn bleu_calib(&self, pair: &str, cm: &CompressedModel) -> Result<f64> {
+        let key = cm.fingerprint(pair);
+        if let Some(&v) = self.bleu_cache.lock().unwrap().get(&key) {
+            return Ok(v);
+        }
+        let v = self.bleu_on(pair, cm, &self.calib[pair], self.cfg.calib_sentences)?;
+        self.bleu_cache.lock().unwrap().insert(key, v);
+        Ok(v)
+    }
+
+    fn bleu_on(
+        &self,
+        pair: &str,
+        cm: &CompressedModel,
+        corpus: &Corpus,
+        limit: usize,
+    ) -> Result<f64> {
+        let mode = cm.mode();
+        let session = TranslateSession::new(&self.engine, &self.manifest, mode)?;
+        let bank = session.build_bank(&self.models[pair], &cm.layers, cm.act_wl)?;
+        let d = evaluate_bleu(&session, &bank, corpus, &self.manifest.model, limit)?;
+        Ok(d.score)
+    }
+
+    /// FP32 reference BLEU (uncompressed, FP32 activations).
+    pub fn bleu_fp32(&self, pair: &str) -> Result<f64> {
+        let session = TranslateSession::new(&self.engine, &self.manifest, Mode::Dense)?;
+        let bank = session.build_bank(&self.models[pair], &BTreeMap::new(), None)?;
+        let d = evaluate_bleu(
+            &session,
+            &bank,
+            &self.corpora[pair],
+            &self.manifest.model,
+            self.cfg.eval_sentences,
+        )?;
+        Ok(d.score)
+    }
+
+    /// Compress a single layer by manifest index (SRA inner loop).
+    pub fn compress_layer(
+        &self,
+        pair: &str,
+        idx: usize,
+        method: &Method,
+        rank: usize,
+    ) -> CompressedLinear {
+        let l = &self.manifest.linears[idx];
+        methods::compress_one(self.models[pair].linear(&l.name), method, rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coordinator() -> Option<Coordinator> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Coordinator::new(ExpConfig::fast()).unwrap())
+    }
+
+    #[test]
+    fn quant_only_pipeline_end_to_end() {
+        let Some(c) = coordinator() else { return };
+        let cm = c.compress("en-de", &Method::QuantOnly { wl: 8 });
+        assert_eq!(cm.layers.len(), c.manifest.linears.len());
+        let bleu = c.bleu_test("en-de", &cm).unwrap();
+        assert!(bleu > 80.0, "W8A8 BLEU {bleu}");
+        let (ratio, _nops) = cm.cost(&c.manifest, 512);
+        assert!((ratio - 4.0).abs() < 0.3, "W8 ratio {ratio}");
+    }
+
+    #[test]
+    fn calib_cache_hits() {
+        let Some(c) = coordinator() else { return };
+        let cm = c.compress("en-de", &Method::QuantOnly { wl: 6 });
+        let a = c.bleu_calib("en-de", &cm).unwrap();
+        let t0 = std::time::Instant::now();
+        let b = c.bleu_calib("en-de", &cm).unwrap();
+        assert_eq!(a, b);
+        assert!(t0.elapsed().as_millis() < 50, "second call must be cached");
+    }
+}

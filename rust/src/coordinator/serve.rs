@@ -1,0 +1,136 @@
+//! Batched serving demo: a minimal request loop over the PJRT runtime.
+//!
+//! Demonstrates the deployment story: single-sentence translation requests
+//! arrive on a channel, a batcher groups them up to the artifact's fixed
+//! batch size (padding short batches), executes one PJRT call per batch,
+//! and reports per-request latency percentiles and aggregate throughput —
+//! all without Python anywhere on the path.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::eval::{strip_specials, Corpus};
+use crate::runtime::{Mode, TranslateSession};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+use super::{Coordinator, Method};
+
+struct Request {
+    tokens: Vec<i32>,
+    t_arrival: Instant,
+    respond: mpsc::Sender<(Vec<i32>, f64)>,
+}
+
+/// Run the serving demo: `n_requests` random test sentences, FP32 bank.
+pub fn serve_demo(c: &Coordinator, pair: &str, n_requests: usize) -> Result<()> {
+    let corpus = Corpus::load(&c.manifest.pairs[pair].corpus)?;
+    let session = TranslateSession::new(&c.engine, &c.manifest, Mode::Dense)?;
+    // Serve the W8A8 quantized model — the deployment configuration.
+    let cm = c.compress(pair, &Method::QuantOnly { wl: 8 });
+    let bank = session.build_bank(c.model(pair), &cm.layers, cm.act_wl)?;
+
+    let b = session.batch();
+    let s = session.seq_len();
+    let dims = &c.manifest.model;
+
+    let (tx, rx) = mpsc::channel::<Request>();
+
+    // Client thread: submits requests back-to-back (closed-loop).
+    let seq_len = s;
+    let n = n_requests;
+    let pad = dims.pad_id;
+    let client = std::thread::spawn(move || {
+        let mut rng = Pcg64::new(0xBEEF);
+        let mut latencies = Summary::new();
+        let mut done = Vec::new();
+        let corpus = corpus;
+        for _ in 0..n {
+            let i = rng.below(corpus.n);
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: corpus.src_row(i).to_vec(),
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .ok();
+            // Closed-loop: wait for the response before the next request
+            // (the batcher still groups concurrent stragglers via timeout).
+            if let Ok((toks, lat)) = rrx.recv() {
+                latencies.add(lat);
+                done.push(toks);
+            }
+        }
+        let _ = (seq_len, pad);
+        (latencies, done)
+    });
+
+    // Server loop: drain the channel, batch, execute.
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    while served < n_requests {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        while batch.len() < b {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        let mut src = vec![dims.pad_id; b * s];
+        for (row, req) in batch.iter().enumerate() {
+            src[row * s..row * s + req.tokens.len().min(s)]
+                .copy_from_slice(&req.tokens[..req.tokens.len().min(s)]);
+        }
+        let out = session.translate(&bank, &src)?;
+        let now = Instant::now();
+        for (row, req) in batch.iter().enumerate() {
+            let toks = strip_specials(
+                &out[row * s..(row + 1) * s],
+                dims.bos_id,
+                dims.eos_id,
+                dims.pad_id,
+            );
+            let lat = now.duration_since(req.t_arrival).as_secs_f64();
+            req.respond.send((toks, lat)).ok();
+        }
+        served += batch.len();
+        batches += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (latencies, translations) = client.join().expect("client thread");
+    println!("== serving demo ({pair}, W8A8, batch capacity {b}) ==");
+    println!("requests      : {n_requests} ({batches} batches)");
+    println!("wall time     : {wall:.2}s");
+    println!("throughput    : {:.1} sentences/s", served as f64 / wall);
+    println!(
+        "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3}",
+        latencies.quantile(0.5),
+        latencies.quantile(0.95),
+        latencies.max()
+    );
+    println!("sample output : {:?}", translations.first().map(|t| &t[..t.len().min(8)]));
+    Ok(())
+}
+
+/// Compressed-model variants available to the serving example.
+pub fn serve_bank<'a>(
+    c: &'a Coordinator,
+    session: &TranslateSession,
+    pair: &str,
+    method: &Method,
+) -> Result<crate::runtime::ArgBank> {
+    let cm = c.compress(pair, method);
+    session.build_bank(c.model(pair), &cm.layers, cm.act_wl)
+}
+
+#[allow(unused)]
+fn unused(_: BTreeMap<String, ()>) {}

@@ -1,0 +1,11 @@
+//! Design Space Exploration (§VII): hardware sweeps, Pareto extraction,
+//! and the model x hardware co-design loop of Fig. 2.
+
+mod pareto;
+mod sweep;
+
+pub use pareto::{pareto_front, ParetoPoint};
+pub use sweep::{
+    best_design_for_layer, best_design_for_model, enumerate_tiles, sweep_engines, DesignPoint,
+    LayerWork,
+};

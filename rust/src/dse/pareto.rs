@@ -1,0 +1,90 @@
+//! Pareto-front extraction over (cost, quality) points.
+
+/// A point in a 2-D trade-off space: minimize `cost`, maximize `quality`.
+pub trait ParetoPoint {
+    fn cost(&self) -> f64;
+    fn quality(&self) -> f64;
+}
+
+impl ParetoPoint for (f64, f64) {
+    fn cost(&self) -> f64 {
+        self.0
+    }
+    fn quality(&self) -> f64 {
+        self.1
+    }
+}
+
+/// Indices of the Pareto-optimal points (min cost, max quality), sorted by
+/// ascending cost. A point is dominated if another has `cost <=` and
+/// `quality >=` with at least one strict.
+pub fn pareto_front<P: ParetoPoint>(points: &[P]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .cost()
+            .partial_cmp(&points[b].cost())
+            .unwrap()
+            .then(points[b].quality().partial_cmp(&points[a].quality()).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_q = f64::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].quality() > best_q {
+            front.push(i);
+            best_q = points[i].quality();
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_staircase() {
+        let pts = vec![
+            (1.0, 1.0), // front
+            (1.0, 0.5), // dominated (same cost, lower quality)
+            (2.0, 3.0), // front
+            (3.0, 2.0), // dominated by (2,3)
+            (4.0, 4.0), // front
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn single_and_empty() {
+        assert_eq!(pareto_front(&Vec::<(f64, f64)>::new()), Vec::<usize>::new());
+        assert_eq!(pareto_front(&[(5.0, 5.0)]), vec![0]);
+    }
+
+    #[test]
+    fn front_is_monotone() {
+        // Random-ish cloud: along the returned front cost increases and
+        // quality strictly increases.
+        let pts: Vec<(f64, f64)> = (0..100)
+            .map(|i| {
+                let x = (i * 37 % 100) as f64;
+                let y = (i * 61 % 97) as f64;
+                (x, y)
+            })
+            .collect();
+        let f = pareto_front(&pts);
+        for w in f.windows(2) {
+            assert!(pts[w[1]].0 >= pts[w[0]].0);
+            assert!(pts[w[1]].1 > pts[w[0]].1);
+        }
+        // No front point is dominated by any cloud point.
+        for &i in &f {
+            for p in &pts {
+                let dominates = p.0 <= pts[i].0
+                    && p.1 >= pts[i].1
+                    && (p.0 < pts[i].0 || p.1 > pts[i].1);
+                assert!(!dominates);
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Hardware design-space sweeps (§VII: Hardware-Aware Design Space
+//! Pruning + Performance Exploration).
+
+use crate::hw::{EngineDesign, EngineKind, Platform, TileConfig, Workload};
+use crate::util::pool::par_map;
+
+/// One evaluated hardware design point for a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub design: EngineDesign,
+    /// Latency on the target platform, including bandwidth stalls.
+    pub effective_latency: f64,
+}
+
+/// A linear layer's MatMul workload plus its allocated rank (`None` for
+/// the dense / quantization-only mapping).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerWork {
+    pub workload: Workload,
+    pub rank: Option<usize>,
+}
+
+/// Power-of-two tile candidates `(M_t, N_t, K_f)` bounded by the workload
+/// dims and a PE budget. The grid matches the paper's HLS design space
+/// (spatial unroll factors are powers of two).
+pub fn enumerate_tiles(w: &Workload, max_pes: usize) -> Vec<TileConfig> {
+    let pow2 = |limit: usize| {
+        let mut v = Vec::new();
+        let mut x = 1usize;
+        while x <= limit {
+            v.push(x);
+            x *= 2;
+        }
+        v
+    };
+    let mut out = Vec::new();
+    for &mt in &pow2(w.m.min(64)) {
+        for &nt in &pow2(w.n.min(64)) {
+            if mt * nt > max_pes {
+                continue;
+            }
+            for &kf in &pow2(w.k.min(64)) {
+                out.push(TileConfig::new(mt, nt, kf));
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate every engine kind x tile combination for a workload (with
+/// optional decomposition rank), keeping only designs that fit the
+/// platform's DSP/BRAM budget.
+pub fn sweep_engines(
+    w: &Workload,
+    rank: Option<usize>,
+    platform: &Platform,
+    kinds: &[EngineKind],
+) -> Vec<DesignPoint> {
+    let tiles = enumerate_tiles(w, platform.dsp);
+    let mut designs: Vec<EngineDesign> = Vec::new();
+
+    for kind in kinds {
+        match (kind, rank) {
+            (EngineKind::Baseline, _) => {
+                designs.extend(tiles.iter().map(|&t| EngineDesign::baseline(w, t)));
+            }
+            (EngineKind::SingleSvd, Some(r)) => {
+                designs.extend(tiles.iter().map(|&t| EngineDesign::single_svd(w, r, t)));
+            }
+            (EngineKind::CascadeSvd, Some(r)) => {
+                // Cascade: stage tiles share M_t; sweep (R_t, N_t, K_f)
+                // pairs on a reduced grid to keep the space tractable.
+                let s1 = Workload::new(w.m, w.k, r, w.w_bits, w.a_bits);
+                for &t2 in &tiles {
+                    let t1_candidates = enumerate_tiles(&s1, platform.dsp);
+                    for t1 in t1_candidates.into_iter().filter(|t1| t1.mt == t2.mt) {
+                        designs.push(EngineDesign::cascade_svd(w, r, t1, t2));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    designs
+        .into_iter()
+        .filter(|d| d.fits(platform))
+        .map(|design| DesignPoint {
+            design,
+            effective_latency: design.effective_latency(platform),
+        })
+        .collect()
+}
+
+/// Lowest-latency feasible design for one layer workload.
+pub fn best_design_for_layer(
+    w: &Workload,
+    rank: Option<usize>,
+    platform: &Platform,
+) -> Option<DesignPoint> {
+    let kinds: &[EngineKind] = match rank {
+        None => &[EngineKind::Baseline],
+        Some(_) => &[EngineKind::SingleSvd, EngineKind::CascadeSvd],
+    };
+    sweep_engines(w, rank, platform, kinds)
+        .into_iter()
+        .min_by(|a, b| a.effective_latency.partial_cmp(&b.effective_latency).unwrap())
+}
+
+/// Total model latency: pick the best engine per layer (the accelerator is
+/// reconfigured per layer shape as in the paper's per-layer exploration)
+/// and sum effective latencies. Returns `(total_cycles, per-layer picks)`.
+pub fn best_design_for_model(
+    layers: &[LayerWork],
+    platform: &Platform,
+    workers: usize,
+) -> Option<(f64, Vec<DesignPoint>)> {
+    let picks = par_map(layers.len(), workers, |i| {
+        best_design_for_layer(&layers[i].workload, layers[i].rank, platform)
+    });
+    let picks: Option<Vec<DesignPoint>> = picks.into_iter().collect();
+    let picks = picks?;
+    let total = picks.iter().map(|p| p.effective_latency).sum();
+    Some((total, picks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w512(wb: u32) -> Workload {
+        Workload::new(512, 512, 512, wb, 8)
+    }
+
+    #[test]
+    fn tile_enumeration_bounds() {
+        let tiles = enumerate_tiles(&w512(4), 1024);
+        assert!(!tiles.is_empty());
+        for t in &tiles {
+            assert!(t.mt * t.nt <= 1024);
+            assert!(t.mt <= 64 && t.nt <= 64 && t.kf <= 64);
+        }
+        // Small workloads bound the tile sizes.
+        let small = Workload::new(8, 8, 8, 8, 8);
+        for t in enumerate_tiles(&small, 1024) {
+            assert!(t.mt <= 8 && t.nt <= 8 && t.kf <= 8);
+        }
+    }
+
+    #[test]
+    fn all_swept_designs_fit() {
+        let p = Platform::zcu111();
+        for d in sweep_engines(&w512(4), Some(128), &p, &[EngineKind::SingleSvd]) {
+            assert!(d.design.fits(&p));
+            assert!(d.effective_latency >= d.design.latency_cycles - 1e-9);
+        }
+    }
+
+    #[test]
+    fn best_layer_design_beats_median() {
+        let p = Platform::zcu111();
+        let pts = sweep_engines(&w512(4), None, &p, &[EngineKind::Baseline]);
+        let best = best_design_for_layer(&w512(4), None, &p).unwrap();
+        let mut lats: Vec<f64> = pts.iter().map(|d| d.effective_latency).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(best.effective_latency <= lats[0] + 1e-9);
+    }
+
+    #[test]
+    fn svd_wins_at_low_rank_on_zcu111() {
+        // The headline effect (Fig. 11): with rank 128 at W4A8, the best
+        // SVD mapping beats the best dense baseline mapping.
+        let p = Platform::zcu111();
+        let base = best_design_for_layer(&w512(4), None, &p).unwrap();
+        let svd = best_design_for_layer(&w512(4), Some(128), &p).unwrap();
+        assert!(
+            svd.effective_latency < base.effective_latency,
+            "svd {} vs base {}",
+            svd.effective_latency,
+            base.effective_latency
+        );
+    }
+
+    #[test]
+    fn model_total_is_sum_of_layers() {
+        let p = Platform::zcu111();
+        let layers = vec![
+            LayerWork { workload: w512(4), rank: Some(128) },
+            LayerWork { workload: Workload::new(512, 512, 2048, 4, 8), rank: None },
+        ];
+        let (total, picks) = best_design_for_model(&layers, &p, 1).unwrap();
+        assert_eq!(picks.len(), 2);
+        let sum: f64 = picks.iter().map(|d| d.effective_latency).sum();
+        assert!((total - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quarter_bandwidth_never_faster() {
+        let full = Platform::zcu111();
+        let quarter = Platform::zcu111_quarter_bw();
+        for rank in [None, Some(64), Some(128)] {
+            let a = best_design_for_layer(&w512(4), rank, &full).unwrap();
+            let b = best_design_for_layer(&w512(4), rank, &quarter).unwrap();
+            assert!(b.effective_latency >= a.effective_latency - 1e-9);
+        }
+    }
+}

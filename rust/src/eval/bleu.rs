@@ -1,0 +1,159 @@
+//! Corpus-level BLEU (Papineni et al. 2002), the paper's accuracy metric.
+//!
+//! Standard BLEU-4: modified n-gram precision with clipping, geometric
+//! mean over n = 1..=4, multiplied by the brevity penalty. Scores are on
+//! the 0-100 scale the paper plots. Token sequences are integer ids (the
+//! synthetic languages have no sub-word segmentation).
+
+use std::collections::HashMap;
+
+/// Per-order statistics plus the final score.
+#[derive(Debug, Clone)]
+pub struct BleuDetail {
+    /// Clipped n-gram matches / candidate n-gram counts, n = 1..=4.
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub hyp_len: usize,
+    pub ref_len: usize,
+    /// 0-100.
+    pub score: f64,
+}
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 of `hyps` against single references `refs`.
+///
+/// Uses the "add-epsilon-free" corpus formulation: match/total counts are
+/// accumulated over the whole corpus before taking precisions, so
+/// individual empty sentences do not zero the score.
+pub fn bleu_score(hyps: &[Vec<i32>], refs: &[Vec<i32>]) -> BleuDetail {
+    assert_eq!(hyps.len(), refs.len(), "hyp/ref count mismatch");
+    let mut matches = [0usize; 4];
+    let mut totals = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+
+    for (h, r) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        ref_len += r.len();
+        for n in 1..=4usize {
+            let hc = ngram_counts(h, n);
+            let rc = ngram_counts(r, n);
+            for (gram, &count) in &hc {
+                let clip = rc.get(gram).copied().unwrap_or(0);
+                matches[n - 1] += count.min(clip);
+            }
+            totals[n - 1] += h.len().saturating_sub(n - 1);
+        }
+    }
+
+    let mut precisions = [0.0f64; 4];
+    for n in 0..4 {
+        precisions[n] = if totals[n] == 0 { 0.0 } else { matches[n] as f64 / totals[n] as f64 };
+    }
+
+    let brevity_penalty = if hyp_len == 0 {
+        0.0
+    } else if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+
+    let score = if precisions.iter().any(|&p| p == 0.0) {
+        0.0
+    } else {
+        let log_mean = precisions.iter().map(|p| p.ln()).sum::<f64>() / 4.0;
+        100.0 * brevity_penalty * log_mean.exp()
+    };
+
+    BleuDetail { precisions, brevity_penalty, hyp_len, ref_len, score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5], vec![7, 8, 9, 10]];
+        let d = bleu_score(&refs, &refs);
+        assert!((d.score - 100.0).abs() < 1e-9, "{d:?}");
+        assert_eq!(d.brevity_penalty, 1.0);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let hyps = vec![vec![1, 2, 3, 4, 5]];
+        let refs = vec![vec![6, 7, 8, 9, 10]];
+        assert_eq!(bleu_score(&hyps, &refs).score, 0.0);
+    }
+
+    #[test]
+    fn brevity_penalty_kicks_in() {
+        // Hypothesis is a perfect prefix but half the length.
+        let hyps = vec![vec![1, 2, 3, 4, 5]];
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10]];
+        let d = bleu_score(&hyps, &refs);
+        assert!(d.brevity_penalty < 1.0);
+        assert!(d.score > 0.0 && d.score < 100.0);
+    }
+
+    #[test]
+    fn clipping_limits_repeats() {
+        // "the the the the" against "the cat": unigram precision clipped
+        // to 1/4, not 4/4 (the canonical BLEU clipping example).
+        let hyps = vec![vec![7, 7, 7, 7]];
+        let refs = vec![vec![7, 9]];
+        let d = bleu_score(&hyps, &refs);
+        assert!((d.precisions[0] - 0.25).abs() < 1e-12, "{:?}", d.precisions);
+    }
+
+    #[test]
+    fn single_token_error_degrades_not_destroys() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let mut hyps = refs.clone();
+        hyps[0][3] = 99;
+        let d = bleu_score(&hyps, &refs);
+        assert!(d.score > 50.0 && d.score < 100.0, "{}", d.score);
+    }
+
+    #[test]
+    fn corpus_level_tolerates_one_empty_hyp() {
+        let refs = vec![vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9, 10]];
+        let hyps = vec![vec![], vec![6, 7, 8, 9, 10]];
+        let d = bleu_score(&hyps, &refs);
+        assert!(d.score > 0.0, "corpus BLEU must survive an empty sentence");
+    }
+
+    #[test]
+    fn monotone_in_corruption() {
+        // Progressively corrupt more tokens; BLEU must not increase.
+        let base: Vec<Vec<i32>> =
+            (0..8).map(|i| (0..12).map(|j| (i * 12 + j) as i32 % 40 + 3).collect()).collect();
+        let mut prev = 100.1;
+        for frac in [0usize, 2, 4, 8] {
+            let hyps: Vec<Vec<i32>> = base
+                .iter()
+                .map(|row| {
+                    let mut r = row.clone();
+                    for k in 0..frac.min(r.len()) {
+                        r[k] = 999 + k as i32;
+                    }
+                    r
+                })
+                .collect();
+            let s = bleu_score(&hyps, &base).score;
+            assert!(s <= prev + 1e-9, "corruption {frac}: {s} > {prev}");
+            prev = s;
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! `corpus_<pair>.bin` reader — token corpora written by
+//! `python/compile/train.py::save_corpus`.
+//!
+//! Layout: magic `ITCP` | u32 n | u32 seq_len | i32 src[n*s] | i32 tgt[n*s].
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A (source, reference) token corpus with fixed sequence length.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub n: usize,
+    pub seq_len: usize,
+    /// Row-major `[n x seq_len]`.
+    src: Vec<i32>,
+    tgt: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading corpus {:?}", path.as_ref()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Corpus> {
+        if bytes.len() < 12 || &bytes[..4] != b"ITCP" {
+            bail!("not an ITCP corpus");
+        }
+        let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let s = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let want = 12 + 2 * n * s * 4;
+        if bytes.len() != want {
+            bail!("corpus size mismatch: {} != {want}", bytes.len());
+        }
+        let read = |off: usize, count: usize| -> Vec<i32> {
+            bytes[off..off + count * 4]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        Ok(Corpus { n, seq_len: s, src: read(12, n * s), tgt: read(12 + n * s * 4, n * s) })
+    }
+
+    pub fn src_row(&self, i: usize) -> &[i32] {
+        &self.src[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn tgt_row(&self, i: usize) -> &[i32] {
+        &self.tgt[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// First `k` rows as a (sub)corpus (cheap calibration subsets).
+    pub fn head(&self, k: usize) -> Corpus {
+        let k = k.min(self.n);
+        Corpus {
+            n: k,
+            seq_len: self.seq_len,
+            src: self.src[..k * self.seq_len].to_vec(),
+            tgt: self.tgt[..k * self.seq_len].to_vec(),
+        }
+    }
+
+    /// Flat source tokens for rows `[start, start+count)`, zero-padded to
+    /// `count` rows — literal packing for a fixed-batch artifact.
+    pub fn src_batch(&self, start: usize, count: usize, pad_id: i32) -> Vec<i32> {
+        let mut out = vec![pad_id; count * self.seq_len];
+        let end = (start + count).min(self.n);
+        for (bi, i) in (start..end).enumerate() {
+            out[bi * self.seq_len..(bi + 1) * self.seq_len]
+                .copy_from_slice(self.src_row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(n: usize, s: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"ITCP");
+        b.extend_from_slice(&(n as u32).to_le_bytes());
+        b.extend_from_slice(&(s as u32).to_le_bytes());
+        for k in 0..2 * n * s {
+            b.extend_from_slice(&(k as i32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_and_index() {
+        let c = Corpus::parse(&synth(3, 4)).unwrap();
+        assert_eq!((c.n, c.seq_len), (3, 4));
+        assert_eq!(c.src_row(1), &[4, 5, 6, 7]);
+        assert_eq!(c.tgt_row(0), &[12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn head_and_batches() {
+        let c = Corpus::parse(&synth(5, 3)).unwrap();
+        let h = c.head(2);
+        assert_eq!(h.n, 2);
+        assert_eq!(h.tgt_row(1), &[18, 19, 20]);
+        // Batch past the end zero-pads with pad_id.
+        let b = c.src_batch(4, 2, -7);
+        assert_eq!(&b[..3], c.src_row(4));
+        assert_eq!(&b[3..], &[-7, -7, -7]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Corpus::parse(b"ITCPxx").is_err());
+        let mut b = synth(2, 2);
+        b.pop();
+        assert!(Corpus::parse(&b).is_err());
+    }
+
+    #[test]
+    fn loads_real_corpus() {
+        let dir = crate::model::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = crate::model::Manifest::load(&dir).unwrap();
+        for (pair, info) in &m.pairs {
+            let c = Corpus::load(&info.corpus).unwrap();
+            assert_eq!(c.seq_len, m.model.seq_len, "{pair}");
+            assert!(c.n >= 64, "{pair}: test corpus too small");
+            // Every row is BOS-framed.
+            for i in 0..c.n.min(8) {
+                assert_eq!(c.src_row(i)[0], m.model.bos_id);
+                assert_eq!(c.tgt_row(i)[0], m.model.bos_id);
+            }
+        }
+    }
+}

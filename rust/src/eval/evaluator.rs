@@ -1,0 +1,54 @@
+//! Batched corpus evaluation through a translate session.
+
+use anyhow::Result;
+
+use crate::model::ModelDims;
+use crate::runtime::{ArgBank, TranslateSession};
+
+use super::{bleu_score, strip_specials, BleuDetail, Corpus};
+
+/// Greedy-translate up to `limit` sentences of `corpus` (0 = all) and
+/// return the de-framed hypothesis token sequences.
+pub fn translate_corpus(
+    session: &TranslateSession,
+    bank: &ArgBank,
+    corpus: &Corpus,
+    dims: &ModelDims,
+    limit: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let n = if limit == 0 { corpus.n } else { limit.min(corpus.n) };
+    let b = session.batch();
+    let s = session.seq_len();
+    let mut hyps = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let src = corpus.src_batch(start, b, dims.pad_id);
+        let out = session.translate(bank, &src)?;
+        let take = (n - start).min(b);
+        for r in 0..take {
+            hyps.push(strip_specials(
+                &out[r * s..(r + 1) * s],
+                dims.bos_id,
+                dims.eos_id,
+                dims.pad_id,
+            ));
+        }
+        start += b;
+    }
+    Ok(hyps)
+}
+
+/// BLEU of a configuration over (a prefix of) a corpus.
+pub fn evaluate_bleu(
+    session: &TranslateSession,
+    bank: &ArgBank,
+    corpus: &Corpus,
+    dims: &ModelDims,
+    limit: usize,
+) -> Result<BleuDetail> {
+    let hyps = translate_corpus(session, bank, corpus, dims, limit)?;
+    let refs: Vec<Vec<i32>> = (0..hyps.len())
+        .map(|i| strip_specials(corpus.tgt_row(i), dims.bos_id, dims.eos_id, dims.pad_id))
+        .collect();
+    Ok(bleu_score(&hyps, &refs))
+}

@@ -1,0 +1,41 @@
+//! Accuracy evaluation service: corpus loading + BLEU scoring.
+//!
+//! The paper reports BLEU on WMT2019 test sets; we score the synthetic
+//! held-out sets written by the Python compile path (DESIGN.md
+//! §Substitutions) with a standard corpus-level BLEU-4 (+brevity penalty)
+//! implemented in [`bleu`].
+
+pub mod bleu;
+mod corpus;
+mod evaluator;
+
+pub use bleu::{bleu_score, BleuDetail};
+pub use corpus::Corpus;
+pub use evaluator::{evaluate_bleu, translate_corpus};
+
+/// Strip BOS/EOS/PAD framing from a token row: keep tokens after the
+/// leading BOS up to (excluding) the first EOS/PAD.
+pub fn strip_specials(row: &[i32], bos: i32, eos: i32, pad: i32) -> Vec<i32> {
+    let start = usize::from(row.first() == Some(&bos));
+    let mut out = Vec::new();
+    for &t in &row[start..] {
+        if t == eos || t == pad {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_specials_basic() {
+        assert_eq!(strip_specials(&[1, 5, 6, 2, 0, 0], 1, 2, 0), vec![5, 6]);
+        assert_eq!(strip_specials(&[5, 6, 0], 1, 2, 0), vec![5, 6]);
+        assert_eq!(strip_specials(&[1, 2], 1, 2, 0), Vec::<i32>::new());
+        assert_eq!(strip_specials(&[], 1, 2, 0), Vec::<i32>::new());
+    }
+}

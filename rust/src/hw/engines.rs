@@ -1,0 +1,261 @@
+//! MatMul engine designs (§V): baseline dense, Single SVD, Cascade SVD.
+//!
+//! * **Baseline** — one tiled engine computing `X W` dense (Fig. 5).
+//! * **Single SVD** (Fig. 6 left) — one engine reused temporally for
+//!   `X W1` then `(X W1) W2`; the `N_t` tiling factor is shared between
+//!   the R- and N-parallel phases, and the whole `M_t x R` intermediate
+//!   tile is buffered on-chip between the phases.
+//! * **Cascade SVD** (Fig. 6 right) — two engines spatially unrolled, with
+//!   independent `R_t`/`N_t` tiling but a shared `M_t` (no re-buffering at
+//!   the seam); stages overlap, so latency is the slower stage's.
+//!
+//! Off-chip traffic never includes the intermediate (that is the point of
+//! both schedules); the bandwidth requirement is Eq. 19 over the full run.
+
+use super::perf::{port_words, tile_latency_cycles};
+use super::resources::{intermediate_buffer_bram, tile_resources};
+use super::{Platform, Resources, TileConfig, Workload};
+
+/// Which engine architecture a design point uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Baseline,
+    SingleSvd,
+    CascadeSvd,
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Baseline => write!(f, "Baseline"),
+            EngineKind::SingleSvd => write!(f, "SingleSVD"),
+            EngineKind::CascadeSvd => write!(f, "CascadeSVD"),
+        }
+    }
+}
+
+/// A fully evaluated hardware design point.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineDesign {
+    pub kind: EngineKind,
+    /// First (or only) engine tile.
+    pub tile1: TileConfig,
+    /// Second engine tile (Cascade only).
+    pub tile2: Option<TileConfig>,
+    /// Full-throughput latency in cycles (Eq. 15 composition).
+    pub latency_cycles: f64,
+    /// DSP + BRAM including intermediate buffers.
+    pub resources: Resources,
+    /// Off-chip bandwidth requirement to run at full throughput,
+    /// bits/cycle (Eq. 19: total traffic / latency).
+    pub bandwidth_req: f64,
+    /// Total off-chip traffic in bits (intermediates excluded for the SVD
+    /// engines — that is the point of their schedules).
+    pub offchip_bits: f64,
+}
+
+impl EngineDesign {
+    /// Dense baseline engine on workload `w`.
+    pub fn baseline(w: &Workload, t: TileConfig) -> EngineDesign {
+        let p = tile_latency_cycles(w, &t);
+        let bits = p.words.0 * w.a_bits as f64
+            + p.words.1 * w.w_bits as f64
+            + p.words.2 * w.a_bits as f64;
+        EngineDesign {
+            kind: EngineKind::Baseline,
+            tile1: t,
+            tile2: None,
+            latency_cycles: p.latency_cycles,
+            resources: tile_resources(w, &t),
+            bandwidth_req: p.bandwidth_bits_per_cycle,
+            offchip_bits: bits,
+        }
+    }
+
+    /// Single SVD engine: temporal reuse over `X W1` (`M x K x r`) then
+    /// `(X W1) W2` (`M x r x N`).
+    pub fn single_svd(w: &Workload, rank: usize, t: TileConfig) -> EngineDesign {
+        let s1 = Workload::new(w.m, w.k, rank, w.w_bits, w.a_bits);
+        let s2 = Workload::new(w.m, rank, w.n, w.w_bits, w.a_bits);
+        let p1 = tile_latency_cycles(&s1, &t);
+        let p2 = tile_latency_cycles(&s2, &t);
+        let latency = p1.latency_cycles + p2.latency_cycles;
+
+        // Off-chip traffic: stage-1 LHS + RHS, stage-2 RHS + OUT. The
+        // M_t x r intermediate stays on-chip (both directions free).
+        let w1 = port_words(&s1, &t);
+        let w2 = port_words(&s2, &t);
+        let bits = w1.0 * w.a_bits as f64
+            + w1.1 * w.w_bits as f64
+            + w2.1 * w.w_bits as f64
+            + w2.2 * w.a_bits as f64;
+
+        let mut res = tile_resources(&s1, &t);
+        // Engine is reused; resources are the max of the two phases, not
+        // the sum (same PEs, same FIFOs) ...
+        let res2 = tile_resources(&s2, &t);
+        res.dsp = res.dsp.max(res2.dsp);
+        res.bram18k = res.bram18k.max(res2.bram18k);
+        // ... plus the M_t x R intermediate buffer (activation-width).
+        res.bram18k += intermediate_buffer_bram(t.mt, rank, w.a_bits);
+
+        EngineDesign {
+            kind: EngineKind::SingleSvd,
+            tile1: t,
+            tile2: None,
+            latency_cycles: latency,
+            resources: res,
+            bandwidth_req: bits / latency,
+            offchip_bits: bits,
+        }
+    }
+
+    /// Cascade SVD engine: stage 1 tile `M_t x R_t`, stage 2 tile
+    /// `M_t x N_t` (shared `M_t`), overlapped execution.
+    pub fn cascade_svd(
+        w: &Workload,
+        rank: usize,
+        t1: TileConfig,
+        t2: TileConfig,
+    ) -> EngineDesign {
+        assert_eq!(t1.mt, t2.mt, "cascade engines must share M_t (§V-B)");
+        let s1 = Workload::new(w.m, w.k, rank, w.w_bits, w.a_bits);
+        let s2 = Workload::new(w.m, rank, w.n, w.w_bits, w.a_bits);
+        let p1 = tile_latency_cycles(&s1, &t1);
+        let p2 = tile_latency_cycles(&s2, &t2);
+        // Pipelined stages: steady-state throughput is set by the slower
+        // stage; the faster stage's first tile adds a fill bubble of one
+        // M-tile's worth of its latency.
+        let m_tiles = super::ceil_div(w.m, t1.mt) as f64;
+        let fill = p1.latency_cycles.min(p2.latency_cycles) / m_tiles;
+        let latency = p1.latency_cycles.max(p2.latency_cycles) + fill;
+
+        let w1 = port_words(&s1, &t1);
+        let w2 = port_words(&s2, &t2);
+        // Both stages stream concurrently: traffic adds over the shared
+        // wall clock.
+        let bits = w1.0 * w.a_bits as f64
+            + w1.1 * w.w_bits as f64
+            + w2.1 * w.w_bits as f64
+            + w2.2 * w.a_bits as f64;
+        let bw = bits / latency;
+
+        let res = tile_resources(&s1, &t1).add(tile_resources(&s2, &t2));
+        let res = Resources {
+            dsp: res.dsp,
+            bram18k: res.bram18k + intermediate_buffer_bram(t1.mt, rank, w.a_bits),
+        };
+
+        EngineDesign {
+            kind: EngineKind::CascadeSvd,
+            tile1: t1,
+            tile2: Some(t2),
+            latency_cycles: latency,
+            resources: res,
+            bandwidth_req: bw,
+            offchip_bits: bits,
+        }
+    }
+
+    /// Effective latency on `platform`: when the platform cannot supply
+    /// the design's full-throughput bandwidth, the engine stalls and
+    /// latency stretches proportionally.
+    pub fn effective_latency(&self, platform: &Platform) -> f64 {
+        let slowdown = (self.bandwidth_req / platform.bandwidth_bits_per_cycle).max(1.0);
+        self.latency_cycles * slowdown
+    }
+
+    /// Does this design fit the platform's DSP/BRAM budget?
+    pub fn fits(&self, platform: &Platform) -> bool {
+        self.resources.fits(platform.dsp, platform.bram18k)
+    }
+}
+
+/// Convenience constructors used by the DSE sweep.
+pub struct SingleSvdEngine;
+pub struct CascadeSvdEngine;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w() -> Workload {
+        Workload::new(512, 512, 512, 4, 8)
+    }
+
+    #[test]
+    fn svd_reduces_latency_at_low_rank() {
+        // Fig. 10's core effect: at rank 128 the SVD engines need ~half
+        // the MACs of the dense baseline, so comparable tiles run faster.
+        let t = TileConfig::new(16, 16, 8);
+        let base = EngineDesign::baseline(&w(), t);
+        let single = EngineDesign::single_svd(&w(), 128, t);
+        assert!(
+            single.latency_cycles < base.latency_cycles,
+            "single {} vs base {}",
+            single.latency_cycles,
+            base.latency_cycles
+        );
+    }
+
+    #[test]
+    fn cascade_overlaps_stages() {
+        let t1 = TileConfig::new(16, 16, 8);
+        let t2 = TileConfig::new(16, 16, 8);
+        let cas = EngineDesign::cascade_svd(&w(), 128, t1, t2);
+        let single_equiv = EngineDesign::single_svd(&w(), 128, t2);
+        // Cascade spends more resources but must beat the serialized
+        // single engine when its stages are balanced.
+        assert!(cas.latency_cycles < single_equiv.latency_cycles);
+        assert!(cas.resources.dsp > single_equiv.resources.dsp);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cascade_requires_shared_mt() {
+        let _ = EngineDesign::cascade_svd(
+            &w(),
+            128,
+            TileConfig::new(8, 8, 8),
+            TileConfig::new(16, 16, 8),
+        );
+    }
+
+    #[test]
+    fn svd_lowers_offchip_traffic() {
+        // Lower-rank weights move fewer off-chip bits in total — the
+        // mechanism behind Fig. 10's bandwidth-limited region (a design
+        // can trade the saved traffic for a smaller port at equal
+        // latency; the DSE sweep surfaces those points).
+        let t = TileConfig::new(8, 8, 4);
+        let base = EngineDesign::baseline(&w(), t);
+        let single = EngineDesign::single_svd(&w(), 64, t);
+        assert!(single.offchip_bits < 0.5 * base.offchip_bits);
+        // Under a starved platform the traffic advantage becomes a
+        // latency advantage.
+        let starved = Platform {
+            bandwidth_bits_per_cycle: 8.0,
+            ..Platform::zcu111()
+        };
+        assert!(single.effective_latency(&starved) < base.effective_latency(&starved));
+    }
+
+    #[test]
+    fn effective_latency_stretches_under_starvation() {
+        let t = TileConfig::new(32, 32, 16);
+        let base = EngineDesign::baseline(&w(), t);
+        let full = Platform::zcu111();
+        let quarter = Platform::zcu111_quarter_bw();
+        assert!(base.effective_latency(&quarter) >= base.effective_latency(&full));
+    }
+
+    #[test]
+    fn rank_full_svd_costs_more_than_dense() {
+        // At full rank the decomposition doubles the MACs — the engine
+        // must not pretend otherwise.
+        let t = TileConfig::new(16, 16, 8);
+        let base = EngineDesign::baseline(&w(), t);
+        let single = EngineDesign::single_svd(&w(), 512, t);
+        assert!(single.latency_cycles > base.latency_cycles);
+    }
+}

@@ -1,0 +1,125 @@
+//! FPGA hardware modelling (§V–§VI).
+//!
+//! The paper evaluates its MatMul engines *analytically* — rate/workload
+//! performance models (Eq. 12–15), DSP/BRAM/bandwidth resource models
+//! (Eq. 16–19) — under ZCU111 constraints with Vitis-style BRAM mapping.
+//! This module implements those models exactly, plus a cycle-level
+//! dataflow simulator ([`sim`]) that cross-validates the analytical
+//! latency and provides the per-layer occupancy of Fig. 12.
+
+mod engines;
+mod perf;
+mod resources;
+pub mod sim;
+
+pub use engines::{CascadeSvdEngine, EngineDesign, EngineKind, SingleSvdEngine};
+pub use perf::{bandwidth_bits_per_cycle, tile_latency_cycles, PortRates, TilePerf};
+pub use resources::{bram18_units, f_packing, tile_resources, Resources};
+
+/// A dense MatMul workload `Y[M x N] = X[M x K] * W[K x N]` with fixed-point
+/// word lengths (the `WxAy` scheme).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Weight word length (bits).
+    pub w_bits: u32,
+    /// Activation word length (bits).
+    pub a_bits: u32,
+}
+
+impl Workload {
+    pub fn new(m: usize, k: usize, n: usize, w_bits: u32, a_bits: u32) -> Self {
+        Workload { m, k, n, w_bits, a_bits }
+    }
+
+    /// Total MACs.
+    pub fn macs(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64)
+    }
+}
+
+/// Tile parameterization of the PE array (Fig. 5): `M_t x N_t` PEs, each a
+/// vector-dot engine with `K_f` parallel multipliers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    pub mt: usize,
+    pub nt: usize,
+    pub kf: usize,
+}
+
+impl TileConfig {
+    pub fn new(mt: usize, nt: usize, kf: usize) -> Self {
+        assert!(mt > 0 && nt > 0 && kf > 0);
+        TileConfig { mt, nt, kf }
+    }
+
+    pub fn pes(&self) -> usize {
+        self.mt * self.nt
+    }
+}
+
+/// Target platform resource budget. Defaults model the ZCU111 at 200 MHz
+/// (§VIII-A): 4272 DSP48E2, 1080 BRAM18K, and a DDR4 interface whose
+/// practical bandwidth at 200 MHz is ~`85` Gb/s ≈ 427 bits/cycle; the
+/// paper's Fig. 11 (right) also evaluates a quarter-bandwidth variant.
+#[derive(Debug, Clone, Copy)]
+pub struct Platform {
+    pub name: &'static str,
+    pub dsp: usize,
+    pub bram18k: usize,
+    /// Off-chip bits per cycle available to the accelerator.
+    pub bandwidth_bits_per_cycle: f64,
+    pub clock_mhz: f64,
+}
+
+impl Platform {
+    pub fn zcu111() -> Platform {
+        Platform {
+            name: "ZCU111",
+            dsp: 4272,
+            bram18k: 1080,
+            bandwidth_bits_per_cycle: 427.0,
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// Fig. 11 (right): a quarter of the original bandwidth, simulating an
+    /// extreme bandwidth-limited deployment.
+    pub fn zcu111_quarter_bw() -> Platform {
+        let mut p = Self::zcu111();
+        p.name = "ZCU111/4bw";
+        p.bandwidth_bits_per_cycle /= 4.0;
+        p
+    }
+
+    /// Convert cycles to microseconds at the platform clock.
+    pub fn cycles_to_us(&self, cycles: f64) -> f64 {
+        cycles / self.clock_mhz
+    }
+}
+
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_presets() {
+        let p = Platform::zcu111();
+        assert_eq!(p.dsp, 4272);
+        assert_eq!(p.bram18k, 1080);
+        let q = Platform::zcu111_quarter_bw();
+        assert!((q.bandwidth_bits_per_cycle - p.bandwidth_bits_per_cycle / 4.0).abs() < 1e-9);
+        assert!((p.cycles_to_us(200.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workload_macs() {
+        assert_eq!(Workload::new(512, 512, 512, 4, 8).macs(), 512u64.pow(3));
+    }
+}

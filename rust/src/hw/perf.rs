@@ -1,0 +1,168 @@
+//! Rate/workload performance model (§VI-A, Eq. 12–15 + Eq. 19).
+//!
+//! Each port of a MatMul tile has a *rate* (words/cycle it can sustain)
+//! and a *workload* (total words it must move); tile latency is the
+//! bottleneck port's `workload / rate`. The model generalizes the paper's
+//! equations to non-dividing tile sizes via ceiling divisions (hardware
+//! pads the edge tiles — the occupancy effect Fig. 12 quantifies).
+
+use super::{ceil_div, TileConfig, Workload};
+
+/// Input/output port rates of a MatMul tile (words per cycle), Eq. 13.
+#[derive(Debug, Clone, Copy)]
+pub struct PortRates {
+    pub lhs_in: f64,
+    pub rhs_in: f64,
+    pub out: f64,
+}
+
+/// Latency decomposition of one tiled MatMul.
+#[derive(Debug, Clone, Copy)]
+pub struct TilePerf {
+    pub rates: PortRates,
+    /// Port workloads in words (Eq. 14): LHS, RHS, OUT.
+    pub words: (f64, f64, f64),
+    /// Bottleneck latency in cycles (Eq. 15).
+    pub latency_cycles: f64,
+    /// Pure compute cycles (output-port bound) — the occupancy reference.
+    pub compute_cycles: f64,
+    /// Off-chip bandwidth requirement in bits/cycle to run at full
+    /// throughput (Eq. 19).
+    pub bandwidth_bits_per_cycle: f64,
+}
+
+/// Eq. 12–13: port rates of an `M_t x N_t x K_f` tile working on a
+/// `[M x K] * [K x N]` MatMul.
+///
+/// One deviation from the paper's text: Eq. 12 writes the PE LHS rate as
+/// `K / (ceil(K/K_f) * N)`, i.e. each LHS tile amortized over the *full* N
+/// sweep. For the tiled array of Eq. 13 the LHS tile is consumed over the
+/// `N/N_t` temporal tiles it feeds, so the tile-level rate carries an
+/// extra `N_t` factor — without it the LHS port would (incorrectly)
+/// dominate every design by `N_t`x and the model would disagree with the
+/// dataflow simulator. With the correction, LHS/RHS stream bounds
+/// coincide with the output-stationary compute bound for dividing tiles,
+/// exactly as the paper's output-stationary schedule implies.
+pub fn port_rates(w: &Workload, t: &TileConfig) -> PortRates {
+    let k_iters = ceil_div(w.k, t.kf) as f64;
+    PortRates {
+        lhs_in: t.mt as f64 * t.nt as f64 * w.k as f64 / (k_iters * w.n as f64),
+        rhs_in: t.nt as f64 * t.kf as f64,
+        out: t.mt as f64 * t.nt as f64 / k_iters,
+    }
+}
+
+/// Eq. 14: port workloads in words. The RHS matrix is re-streamed once per
+/// M-tile (`ceil(M/M_t)` times); the LHS is streamed once.
+pub fn port_words(w: &Workload, t: &TileConfig) -> (f64, f64, f64) {
+    let m_tiles = ceil_div(w.m, t.mt) as f64;
+    let lhs = (w.m * w.k) as f64;
+    let rhs = m_tiles * (w.k * w.n) as f64;
+    let out = (w.m * w.n) as f64;
+    (lhs, rhs, out)
+}
+
+/// Eq. 15 + Eq. 19 over padded tile grids.
+pub fn tile_latency_cycles(w: &Workload, t: &TileConfig) -> TilePerf {
+    let rates = port_rates(w, t);
+    let words = port_words(w, t);
+    // Padded dims: edge tiles compute on padded rows/cols.
+    let m_pad = ceil_div(w.m, t.mt) * t.mt;
+    let n_pad = ceil_div(w.n, t.nt) * t.nt;
+    let k_iters = ceil_div(w.k, t.kf) as f64;
+    let compute_cycles = (m_pad as f64 / t.mt as f64) * (n_pad as f64 / t.nt as f64) * k_iters;
+    let latency = (words.0 / rates.lhs_in)
+        .max(words.1 / rates.rhs_in)
+        .max(words.2 / rates.out)
+        .max(compute_cycles);
+    let bw = bandwidth_bits_per_cycle(w, words, latency);
+    TilePerf {
+        rates,
+        words,
+        latency_cycles: latency,
+        compute_cycles,
+        bandwidth_bits_per_cycle: bw,
+    }
+}
+
+/// Eq. 19 with per-port word lengths: LHS and OUT move activations
+/// (`a_bits`), RHS moves weights (`w_bits`).
+pub fn bandwidth_bits_per_cycle(w: &Workload, words: (f64, f64, f64), latency: f64) -> f64 {
+    if latency <= 0.0 {
+        return 0.0;
+    }
+    (words.0 * w.a_bits as f64 + words.1 * w.w_bits as f64 + words.2 * w.a_bits as f64) / latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w512() -> Workload {
+        Workload::new(512, 512, 512, 4, 8)
+    }
+
+    #[test]
+    fn compute_bound_latency_matches_loop_count() {
+        // A 16x16 tile with Kf=8 on 512^3: latency should be the temporal
+        // loop count (512/16)*(512/16)*(512/8) when compute dominates.
+        let t = TileConfig::new(16, 16, 8);
+        let p = tile_latency_cycles(&w512(), &t);
+        let loops = (512.0 / 16.0) * (512.0 / 16.0) * (512.0 / 8.0);
+        assert!((p.compute_cycles - loops).abs() < 1e-9);
+        // For dividing tiles the stream bounds coincide with the compute
+        // bound (output-stationary property), so latency == loop count.
+        assert!((p.latency_cycles - loops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn output_stationary_identity() {
+        // For dividing tiles the RHS stream bound equals the compute bound
+        // exactly: K*N_t words at N_t*K_f w/cyc == K/K_f cycles per tile.
+        for t in [TileConfig::new(64, 1, 1), TileConfig::new(8, 32, 4)] {
+            let p = tile_latency_cycles(&w512(), &t);
+            let rhs_bound = p.words.1 / p.rates.rhs_in;
+            assert!(
+                ((rhs_bound - p.compute_cycles) / p.compute_cycles).abs() < 1e-9,
+                "{t:?}: rhs {rhs_bound} vs compute {}",
+                p.compute_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_never_slower() {
+        let mut prev = f64::INFINITY;
+        for sz in [2usize, 4, 8, 16, 32] {
+            let t = TileConfig::new(sz, sz, 8);
+            let p = tile_latency_cycles(&w512(), &t);
+            assert!(p.latency_cycles <= prev + 1e-9, "tile {sz}: {}", p.latency_cycles);
+            prev = p.latency_cycles;
+        }
+    }
+
+    #[test]
+    fn nondividing_tiles_pad_up() {
+        let w = Workload::new(100, 100, 100, 8, 8);
+        let t = TileConfig::new(16, 16, 8);
+        let p = tile_latency_cycles(&w, &t);
+        // 7 tiles each dim (112 padded), 13 k-iters.
+        assert!((p.compute_cycles - 7.0 * 7.0 * 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_scales_with_word_length() {
+        let t = TileConfig::new(16, 16, 8);
+        let p4 = tile_latency_cycles(&Workload::new(512, 512, 512, 4, 8), &t);
+        let p8 = tile_latency_cycles(&Workload::new(512, 512, 512, 8, 8), &t);
+        assert!(p8.bandwidth_bits_per_cycle > p4.bandwidth_bits_per_cycle);
+    }
+
+    #[test]
+    fn faster_engine_needs_more_bandwidth() {
+        let slow = tile_latency_cycles(&w512(), &TileConfig::new(4, 4, 4));
+        let fast = tile_latency_cycles(&w512(), &TileConfig::new(32, 32, 16));
+        assert!(fast.latency_cycles < slow.latency_cycles);
+        assert!(fast.bandwidth_bits_per_cycle > slow.bandwidth_bits_per_cycle);
+    }
+}

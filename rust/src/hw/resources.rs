@@ -1,0 +1,129 @@
+//! Resource models (§VI-B, Eq. 16–18): DSP packing and BRAM18K mapping.
+
+use super::{ceil_div, TileConfig, Workload};
+
+/// Resource usage of one engine configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub dsp: usize,
+    pub bram18k: usize,
+}
+
+impl Resources {
+    pub fn add(self, other: Resources) -> Resources {
+        Resources { dsp: self.dsp + other.dsp, bram18k: self.bram18k + other.bram18k }
+    }
+
+    pub fn fits(&self, dsp_budget: usize, bram_budget: usize) -> bool {
+        self.dsp <= dsp_budget && self.bram18k <= bram_budget
+    }
+}
+
+/// DSP packing factor `f_packing` [2]: a DSP48E2 (27x18 multiplier) packs
+/// two sub-4-bit multiplies sharing one operand; 8-bit and above use one
+/// DSP per multiply. (The M4BRAM work the paper cites explores deeper
+/// packing; two-way INT4 packing is the standard Xilinx technique.)
+pub fn f_packing(w_bits: u32) -> usize {
+    if w_bits <= 4 {
+        2
+    } else {
+        1
+    }
+}
+
+/// BRAM18K units for a buffer of `depth` words x `width` bits, using the
+/// standard UltraScale aspect-ratio table (512x36 .. 16384x1). Synthesis
+/// picks the aspect ratio minimizing unit count; so do we.
+pub fn bram18_units(depth: usize, width: u32) -> usize {
+    if depth == 0 || width == 0 {
+        return 0;
+    }
+    const CONFIGS: [(usize, u32); 6] =
+        [(512, 36), (1024, 18), (2048, 9), (4096, 4), (8192, 2), (16384, 1)];
+    CONFIGS
+        .iter()
+        .map(|&(d, w)| ceil_div(depth, d) * ceil_div(width as usize, w as usize))
+        .min()
+        .unwrap()
+}
+
+/// Eq. 16–18: resources of one `M_t x N_t x K_f` tile on workload `w`.
+///
+/// Each PE owns `ceil(K_f / f_packing)` DSPs, each DSP fed by its own
+/// BRAM18-backed FIFO of depth `ceil(K/K_f)`; LHS buffers replicate per
+/// PE-row (`M_t`), RHS per PE-column (`N_t`).
+pub fn tile_resources(w: &Workload, t: &TileConfig) -> Resources {
+    let fp = f_packing(w.w_bits);
+    let dsp_pe = ceil_div(t.kf, fp);
+    let dsp = t.mt * t.nt * dsp_pe;
+
+    let buff_depth = ceil_div(w.k, t.kf);
+    // LHS FIFOs hold activations, RHS FIFOs hold weights.
+    let bram_pe_lhs = dsp_pe * bram18_units(buff_depth, w.a_bits);
+    let bram_pe_rhs = dsp_pe * bram18_units(buff_depth, w.w_bits);
+    let bram = t.mt * bram_pe_lhs + t.nt * bram_pe_rhs;
+    Resources { dsp, bram18k: bram }
+}
+
+/// BRAM18K units to hold an `rows x cols` intermediate tile of
+/// `bits`-bit words on-chip (the `M_t x R` buffer both SVD engines need).
+pub fn intermediate_buffer_bram(rows: usize, cols: usize, bits: u32) -> usize {
+    // Banked per row for parallel access by the consuming engine.
+    rows * bram18_units(cols, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_rule() {
+        assert_eq!(f_packing(4), 2);
+        assert_eq!(f_packing(3), 2);
+        assert_eq!(f_packing(6), 1);
+        assert_eq!(f_packing(8), 1);
+    }
+
+    #[test]
+    fn bram_table_hand_checks() {
+        // 512 x 36 fits exactly one unit.
+        assert_eq!(bram18_units(512, 36), 1);
+        // 1024 x 18 fits one unit via the 1024x18 aspect.
+        assert_eq!(bram18_units(1024, 18), 1);
+        // 64 x 8: one unit (well under capacity).
+        assert_eq!(bram18_units(64, 8), 1);
+        // 2048 x 36: 2048*36 = 72Kb -> 4 units via 2048x9 aspect x4.
+        assert_eq!(bram18_units(2048, 36), 4);
+        assert_eq!(bram18_units(0, 8), 0);
+    }
+
+    #[test]
+    fn dsp_scales_with_tile_and_packing() {
+        let w4 = Workload::new(512, 512, 512, 4, 8);
+        let w8 = Workload::new(512, 512, 512, 8, 8);
+        let t = TileConfig::new(8, 8, 8);
+        let r4 = tile_resources(&w4, &t);
+        let r8 = tile_resources(&w8, &t);
+        assert_eq!(r4.dsp, 8 * 8 * 4); // Kf=8 packed 2-way -> 4 DSP/PE
+        assert_eq!(r8.dsp, 8 * 8 * 8);
+        assert!(r4.dsp < r8.dsp);
+    }
+
+    #[test]
+    fn bram_scales_with_mt_nt() {
+        let w = Workload::new(512, 512, 512, 8, 8);
+        let small = tile_resources(&w, &TileConfig::new(4, 4, 8));
+        let big = tile_resources(&w, &TileConfig::new(16, 16, 8));
+        assert!(big.bram18k > small.bram18k);
+    }
+
+    #[test]
+    fn fits_budget() {
+        let r = Resources { dsp: 100, bram18k: 50 };
+        assert!(r.fits(100, 50));
+        assert!(!r.fits(99, 50));
+        assert!(!r.fits(100, 49));
+        let sum = r.add(Resources { dsp: 1, bram18k: 2 });
+        assert_eq!(sum, Resources { dsp: 101, bram18k: 52 });
+    }
+}

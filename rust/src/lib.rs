@@ -1,0 +1,37 @@
+//! # ITERA-LLM
+//!
+//! Reproduction of *ITERA-LLM: Boosting Sub-8-Bit Large Language Model
+//! Inference via Iterative Tensor Decomposition* (CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the software/hardware co-design framework:
+//!   compression engine ([`compress`], Algorithm 1), sensitivity-based rank
+//!   allocation ([`sra`]), FPGA analytical models and dataflow simulator
+//!   ([`hw`]), design-space exploration ([`dse`]), BLEU evaluation service
+//!   ([`eval`]) and the PJRT runtime ([`runtime`]) that executes the
+//!   AOT-compiled model artifacts.
+//! * **Layer 2** — JAX transformer (`python/compile/model.py`), lowered
+//!   once to HLO text under `make artifacts`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing
+//!   the paper's MatMul engines; lowered into the same HLO.
+//!
+//! Python never runs at inference time: the Rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API and drives everything else
+//! natively.
+
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod eval;
+pub mod hw;
+pub mod model;
+pub mod runtime;
+pub mod sra;
+pub mod linalg;
+pub mod quant;
+pub mod tensor;
+pub mod testkit;
+pub mod benchkit;
+pub mod util;

@@ -1,0 +1,190 @@
+//! Full SVD via one-sided Jacobi rotations.
+//!
+//! One-sided Jacobi (Demmel [21], §5.4.3) orthogonalizes the columns of `A`
+//! by plane rotations accumulated into `V`; on convergence the column norms
+//! are the singular values and the normalized columns form `U`. Chosen over
+//! Golub–Kahan bidiagonalization for robustness and simplicity: the weight
+//! matrices here are at most 512x512 and the full SVD is off the hot path
+//! (Algorithm 1 uses `svd_top1`).
+
+use crate::tensor::Matrix;
+
+/// Full singular value decomposition `A = U * diag(S) * Vt`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, `m x min(m,n)` (columns orthonormal).
+    pub u: Matrix,
+    /// Singular values, descending, length `min(m,n)`.
+    pub s: Vec<f32>,
+    /// Right singular vectors transposed, `min(m,n) x n` (rows orthonormal).
+    pub vt: Matrix,
+}
+
+const MAX_SWEEPS: usize = 60;
+const TOL: f64 = 1e-10;
+
+/// Compute the thin SVD of `a`.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // Work on the transpose and swap the factors back.
+        let t = svd(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    // Work in f64: repeated rotations on f32 accumulate error fast enough to
+    // matter for the orthogonality property tests.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect(); // m x n
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += w[i * n + p] * w[i * n + q];
+        }
+        s
+    };
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let app = col_dot(&w, p, p);
+                let aqq = col_dot(&w, q, q);
+                let apq = col_dot(&w, p, q);
+                if apq.abs() <= TOL * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    w[i * n + p] = c * wp - s * wq;
+                    w[i * n + q] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off == 0.0 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; normalize columns into U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[i * n + j] * w[i * n + j]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s = vec![0.0f32; n];
+    let mut vt = Matrix::zeros(n, n);
+    for (k, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s[k] = nj as f32;
+        if nj > 0.0 {
+            for i in 0..m {
+                u.set(i, k, (w[i * n + j] / nj) as f32);
+            }
+        }
+        for i in 0..n {
+            vt.set(k, i, v[i * n + j] as f32);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn check_orthonormal_cols(m: &Matrix, tol: f32) {
+        for p in 0..m.cols() {
+            for q in p..m.cols() {
+                let d = crate::tensor::dot(&m.col(p), &m.col(q));
+                let want = if p == q { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < tol, "col dot ({p},{q}) = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_vec(3, 3, vec![3., 0., 0., 0., 5., 0., 0., 0., 1.]);
+        let d = svd(&a);
+        assert!((d.s[0] - 5.0).abs() < 1e-5);
+        assert!((d.s[1] - 3.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn orthogonality_and_reconstruction_tall() {
+        let mut rng = Pcg64::new(20);
+        let a = Matrix::randn(12, 5, &mut rng);
+        let d = svd(&a);
+        check_orthonormal_cols(&d.u, 1e-4);
+        check_orthonormal_cols(&d.vt.transpose(), 1e-4);
+        let rec = crate::linalg::reconstruct(&d, 5);
+        assert!(rec.sub(&a).frob_norm() < 1e-4 * a.frob_norm());
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Pcg64::new(21);
+        let a = Matrix::randn(4, 9, &mut rng);
+        let d = svd(&a);
+        assert_eq!(d.u.shape(), (4, 4));
+        assert_eq!(d.vt.shape(), (4, 9));
+        let rec = crate::linalg::reconstruct(&d, 4);
+        assert!(rec.sub(&a).frob_norm() < 1e-4 * a.frob_norm());
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Pcg64::new(22);
+        let a = Matrix::randn(10, 10, &mut rng);
+        let d = svd(&a);
+        for k in 1..d.s.len() {
+            assert!(d.s[k - 1] >= d.s[k] - 1e-6);
+            assert!(d.s[k] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-2 matrix: outer products
+        let u1 = vec![1.0f32, 2.0, 3.0, 4.0];
+        let v1 = vec![1.0f32, -1.0, 0.5];
+        let mut a = crate::tensor::outer(&u1, &v1);
+        let u2 = vec![0.5f32, -0.5, 1.0, 0.0];
+        let v2 = vec![0.2f32, 0.8, -0.3];
+        a = a.add(&crate::tensor::outer(&u2, &v2));
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-4, "third sv should vanish: {:?}", d.s);
+        let rec = crate::linalg::reconstruct(&d, 2);
+        assert!(rec.sub(&a).frob_norm() < 1e-4);
+    }
+
+    #[test]
+    fn frobenius_matches_sv_norm() {
+        let mut rng = Pcg64::new(23);
+        let a = Matrix::randn(7, 7, &mut rng);
+        let d = svd(&a);
+        let sv_norm: f32 = d.s.iter().map(|s| s * s).sum::<f32>().sqrt();
+        assert!((sv_norm - a.frob_norm()).abs() < 1e-3);
+    }
+}

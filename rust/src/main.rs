@@ -1,0 +1,9 @@
+//! `itera` — CLI entry point for the ITERA-LLM co-design framework.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = itera_llm::cli::main_with_args(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

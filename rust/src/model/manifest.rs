@@ -1,0 +1,215 @@
+//! `artifacts/manifest.json` parsing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_enc: usize,
+    pub n_dec: usize,
+    pub seq_len: usize,
+    pub eval_batch: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+}
+
+/// One compressed linear layer (the unit of rank allocation).
+#[derive(Debug, Clone)]
+pub struct LinearInfo {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+    pub r_max: usize,
+}
+
+/// Per-language-pair artifact registry.
+#[derive(Debug, Clone)]
+pub struct PairInfo {
+    pub weights: PathBuf,
+    pub corpus: PathBuf,
+    pub calib: PathBuf,
+    pub act_maxabs: Vec<f32>,
+}
+
+/// Compiled HLO artifact registry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub translate_dense: PathBuf,
+    pub translate_svd: PathBuf,
+    pub linear512_dense: PathBuf,
+    pub linear512_svd: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub linears: Vec<LinearInfo>,
+    /// Positional argument names for each variant ("dense" / "svd").
+    pub arg_order: BTreeMap<String, Vec<String>>,
+    pub artifacts: ArtifactSet,
+    pub pairs: BTreeMap<String, PairInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let m = j.get("model");
+        let need = |v: &Json, what: &str| -> Result<usize> {
+            v.as_usize().with_context(|| format!("manifest: missing model.{what}"))
+        };
+        let model = ModelDims {
+            vocab: need(m.get("vocab"), "vocab")?,
+            d_model: need(m.get("d_model"), "d_model")?,
+            n_heads: need(m.get("n_heads"), "n_heads")?,
+            d_ff: need(m.get("d_ff"), "d_ff")?,
+            n_enc: need(m.get("n_enc"), "n_enc")?,
+            n_dec: need(m.get("n_dec"), "n_dec")?,
+            seq_len: need(m.get("seq_len"), "seq_len")?,
+            eval_batch: need(m.get("eval_batch"), "eval_batch")?,
+            pad_id: m.get("pad_id").as_i64().unwrap_or(0) as i32,
+            bos_id: m.get("bos_id").as_i64().unwrap_or(1) as i32,
+            eos_id: m.get("eos_id").as_i64().unwrap_or(2) as i32,
+        };
+
+        let linears = j
+            .get("linears")
+            .as_arr()
+            .context("manifest: linears missing")?
+            .iter()
+            .map(|l| {
+                Ok(LinearInfo {
+                    name: l.get("name").as_str().context("linear name")?.to_string(),
+                    k: l.get("k").as_usize().context("linear k")?,
+                    n: l.get("n").as_usize().context("linear n")?,
+                    r_max: l.get("r_max").as_usize().context("linear r_max")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if linears.is_empty() {
+            bail!("manifest: no compressed linears");
+        }
+
+        let mut arg_order = BTreeMap::new();
+        for (mode, v) in j.get("arg_order").as_obj().context("arg_order")? {
+            let names = v
+                .as_arr()
+                .context("arg_order entry")?
+                .iter()
+                .map(|s| s.as_str().map(str::to_string).context("arg name"))
+                .collect::<Result<Vec<_>>>()?;
+            arg_order.insert(mode.clone(), names);
+        }
+
+        let a = j.get("artifacts");
+        let art = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(a.get(key).as_str().with_context(|| format!("artifacts.{key}"))?))
+        };
+        let artifacts = ArtifactSet {
+            translate_dense: art("translate_dense")?,
+            translate_svd: art("translate_svd")?,
+            linear512_dense: art("linear512_dense")?,
+            linear512_svd: art("linear512_svd")?,
+        };
+
+        let mut pairs = BTreeMap::new();
+        for (pair, v) in j.get("pairs").as_obj().context("pairs")? {
+            let act_maxabs = v
+                .get("act_maxabs")
+                .as_arr()
+                .context("act_maxabs")?
+                .iter()
+                .map(|x| x.as_f64().context("act_maxabs value").map(|f| f as f32))
+                .collect::<Result<Vec<_>>>()?;
+            if act_maxabs.len() != linears.len() {
+                bail!(
+                    "manifest: pair {pair} act_maxabs len {} != linears {}",
+                    act_maxabs.len(),
+                    linears.len()
+                );
+            }
+            pairs.insert(
+                pair.clone(),
+                PairInfo {
+                    weights: dir.join(v.get("weights").as_str().context("weights")?),
+                    corpus: dir.join(v.get("corpus").as_str().context("corpus")?),
+                    calib: dir.join(v.get("calib").as_str().context("calib")?),
+                    act_maxabs,
+                },
+            );
+        }
+
+        Ok(Manifest { dir, model, linears, arg_order, artifacts, pairs })
+    }
+
+    /// Index of a compressed linear by name.
+    pub fn linear_index(&self, name: &str) -> Option<usize> {
+        self.linears.iter().position(|l| l.name == name)
+    }
+
+    /// Per-layer rank caps (`min(K, N)`), the SRA search space bounds.
+    pub fn rank_caps(&self) -> Vec<usize> {
+        self.linears.iter().map(|l| l.r_max).collect()
+    }
+
+    /// Default artifacts directory: `$ITERA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ITERA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.model.d_model >= 32 && m.model.d_model % m.model.n_heads == 0);
+        assert_eq!(m.linears.len(), m.model.n_enc * 6 + m.model.n_dec * 10);
+        assert!(m.arg_order["dense"].len() < m.arg_order["svd"].len());
+        assert!(m.pairs.contains_key("en-de"));
+        assert_eq!(m.linear_index(&m.linears[3].name), Some(3));
+        // Every compressed linear appears in the dense arg order.
+        for l in &m.linears {
+            assert!(m.arg_order["dense"].iter().any(|a| a == &l.name), "{}", l.name);
+        }
+        // ... and as a factor pair in the svd arg order.
+        for l in &m.linears {
+            assert!(m.arg_order["svd"].iter().any(|a| *a == format!("{}.w1", l.name)));
+            assert!(m.arg_order["svd"].iter().any(|a| *a == format!("{}.w2", l.name)));
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

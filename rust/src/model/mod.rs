@@ -1,0 +1,54 @@
+//! Rust-side model description: artifact manifest + weight store.
+//!
+//! `make artifacts` (the one-time Python compile path) trains the tiny
+//! OPUS-MT-style models and records everything the coordinator needs in
+//! `artifacts/manifest.json`: compressed-linear inventory (the layer index
+//! space shared with SRA and the hardware DSE), the exact positional
+//! argument order of each compiled HLO variant, and per-language-pair
+//! weight/corpus/calibration registries.
+
+mod manifest;
+mod weights;
+
+pub use manifest::{ArtifactSet, LinearInfo, Manifest, ModelDims, PairInfo};
+pub use weights::WeightStore;
+
+use crate::tensor::Matrix;
+
+/// A loaded language-pair model: weights + calibration ranges.
+pub struct PairModel {
+    pub pair: String,
+    pub weights: WeightStore,
+    /// Per compressed-linear activation max-abs from offline calibration.
+    pub act_maxabs: Vec<f32>,
+}
+
+impl PairModel {
+    /// Load the trained model for `pair` from the artifact registry.
+    pub fn load(manifest: &Manifest, pair: &str) -> anyhow::Result<PairModel> {
+        let info = manifest
+            .pairs
+            .get(pair)
+            .ok_or_else(|| anyhow::anyhow!("unknown language pair {pair}"))?;
+        let weights = WeightStore::load(&info.weights)?;
+        for l in &manifest.linears {
+            anyhow::ensure!(
+                weights.get(&l.name).map(|m| m.shape()) == Some((l.k, l.n)),
+                "weight store missing or mis-shaped linear {}",
+                l.name
+            );
+        }
+        Ok(PairModel {
+            pair: pair.to_string(),
+            weights,
+            act_maxabs: info.act_maxabs.clone(),
+        })
+    }
+
+    /// Original FP32 weight matrix of compressed linear `name`.
+    pub fn linear(&self, name: &str) -> &Matrix {
+        self.weights
+            .get(name)
+            .unwrap_or_else(|| panic!("weight {name} missing from store"))
+    }
+}

@@ -1,0 +1,195 @@
+//! `weights_<pair>.bin` reader — the flat binary weight store written by
+//! `python/compile/train.py::save_weights`.
+//!
+//! Layout: magic `ITWB` | u32 n_entries | entries, where each entry is
+//! u32 name_len | name | u32 ndim | u32 dims[ndim] | f32 data (LE).
+//! 1-D tensors (layer-norm params) are stored as `1 x n` matrices.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+/// All tensors of one trained model, by name.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    /// Matrix plus the ndim it was stored with (1-D tensors become `1 x n`
+    /// matrices but must be fed back to PJRT with 1-D dims).
+    entries: BTreeMap<String, (Matrix, usize)>,
+}
+
+impl WeightStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading weight store {:?}", path.as_ref()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightStore> {
+        let mut cur = Cursor { b: bytes, pos: 0 };
+        if cur.take(4)? != b"ITWB" {
+            bail!("bad magic: not an ITWB weight store");
+        }
+        let n = cur.u32()? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = cur.u32()? as usize;
+            let name = String::from_utf8(cur.take(name_len)?.to_vec())
+                .context("weight name not utf-8")?;
+            let ndim = cur.u32()? as usize;
+            if ndim == 0 || ndim > 2 {
+                bail!("weight {name}: unsupported ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(cur.u32()? as usize);
+            }
+            let (rows, cols) = if ndim == 1 { (1, dims[0]) } else { (dims[0], dims[1]) };
+            let count = rows * cols;
+            let raw = cur.take(count * 4)?;
+            let mut data = Vec::with_capacity(count);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            entries.insert(name, (Matrix::from_vec(rows, cols, data), ndim));
+        }
+        if cur.pos != bytes.len() {
+            bail!("trailing bytes in weight store");
+        }
+        Ok(WeightStore { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Matrix> {
+        self.entries.get(name).map(|(m, _)| m)
+    }
+
+    /// PJRT dims for a tensor: `[n]` for stored-1-D, `[rows, cols]` else.
+    pub fn dims(&self, name: &str) -> Option<Vec<usize>> {
+        self.entries.get(name).map(|(m, ndim)| {
+            if *ndim == 1 {
+                vec![m.cols()]
+            } else {
+                vec![m.rows(), m.cols()]
+            }
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated weight store at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a store in-memory in the same format train.py writes.
+    fn synth_store(entries: &[(&str, usize, usize)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ITWB");
+        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (i, (name, r, c)) in entries.iter().enumerate() {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&2u32.to_le_bytes());
+            out.extend_from_slice(&(*r as u32).to_le_bytes());
+            out.extend_from_slice(&(*c as u32).to_le_bytes());
+            for k in 0..r * c {
+                out.extend_from_slice(&((i * 1000 + k) as f32).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_synthetic() {
+        let bytes = synth_store(&[("a.w", 2, 3), ("b.w", 1, 4)]);
+        let s = WeightStore::parse(&bytes).unwrap();
+        assert_eq!(s.len(), 2);
+        let a = s.get("a.w").unwrap();
+        assert_eq!(a.shape(), (2, 3));
+        assert_eq!(a.get(1, 2), 5.0);
+        assert_eq!(s.dims("a.w").unwrap(), vec![2, 3]);
+        assert!(s.get("missing").is_none());
+    }
+
+    #[test]
+    fn one_dim_entries_keep_their_dims() {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ITWB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(4u32).to_le_bytes());
+        out.extend_from_slice(b"ln_g");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&5u32.to_le_bytes());
+        for k in 0..5 {
+            out.extend_from_slice(&(k as f32).to_le_bytes());
+        }
+        let s = WeightStore::parse(&out).unwrap();
+        assert_eq!(s.get("ln_g").unwrap().shape(), (1, 5));
+        assert_eq!(s.dims("ln_g").unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(WeightStore::parse(b"XXXX").is_err());
+        let mut bytes = synth_store(&[("a", 2, 2)]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(WeightStore::parse(&bytes).is_err());
+        bytes.push(0);
+        assert!(WeightStore::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_weights() {
+        let dir = crate::model::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = crate::model::Manifest::load(&dir).unwrap();
+        let pair = &m.pairs["en-de"];
+        let s = WeightStore::load(&pair.weights).unwrap();
+        // Every compressed linear must be present with the declared shape.
+        for l in &m.linears {
+            let w = s.get(&l.name).unwrap_or_else(|| panic!("{} missing", l.name));
+            assert_eq!(w.shape(), (l.k, l.n), "{}", l.name);
+        }
+        // Embeddings present too.
+        assert_eq!(
+            s.get("src_emb").unwrap().shape(),
+            (m.model.vocab, m.model.d_model)
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Fixed-point post-training quantization (the "WxAy" schemes of §VIII-B).
+//!
+//! Symmetric uniform quantization onto a `2^(wl-1)-1`-level grid. Two
+//! granularities:
+//!
+//! * **per-tensor** — one scale for the whole matrix (used for activations,
+//!   whose scale is calibrated offline and applied in-graph by the L1
+//!   `fake_quant` kernel);
+//! * **per-vector** — one scale per row/column (the paper applies
+//!   quantization *vector-wise in the produced matrix* so each quantized
+//!   rank-1 singular vector carries its own scale; §VIII-B).
+//!
+//! All quantization here is *fake-quant*: values are snapped onto the fixed
+//! point grid but kept in f32, which is numerically identical to integer
+//! storage + dequantization and is what both the PJRT eval path and the
+//! compression-error analysis consume. Storage accounting (bits) is handled
+//! by `compress::ratio`.
+
+use crate::tensor::Matrix;
+
+/// A weight word length (the `X` in `WXAY`), 2..=8 bits in this work.
+pub type WordLen = u32;
+
+/// Number of positive levels for a symmetric `wl`-bit grid: `2^(wl-1) - 1`.
+pub fn levels(wl: WordLen) -> f32 {
+    assert!((2..=16).contains(&wl), "word length out of range: {wl}");
+    ((1u32 << (wl - 1)) - 1) as f32
+}
+
+/// Quantize a scalar onto the grid with scale `s`.
+#[inline]
+pub fn quantize_val(x: f32, s: f32, lv: f32) -> f32 {
+    if s <= 0.0 {
+        return 0.0;
+    }
+    (x / s).round().clamp(-lv, lv) * s
+}
+
+/// Symmetric scale covering `max_abs` with `lv` levels.
+#[inline]
+pub fn scale_for(max_abs: f32, lv: f32) -> f32 {
+    if max_abs <= 0.0 {
+        0.0
+    } else {
+        max_abs / lv
+    }
+}
+
+/// Per-tensor fake-quant; returns the quantized matrix and the scale used.
+pub fn quantize_tensor(a: &Matrix, wl: WordLen) -> (Matrix, f32) {
+    let lv = levels(wl);
+    let s = scale_for(a.max_abs(), lv);
+    let q = Matrix::from_vec(
+        a.rows(),
+        a.cols(),
+        a.data().iter().map(|&x| quantize_val(x, s, lv)).collect(),
+    );
+    (q, s)
+}
+
+/// Per-row fake-quant (each row gets its own scale). For `W2 = [r x N]`
+/// factors this quantizes each rank's right singular vector independently.
+pub fn quantize_rows(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
+    let lv = levels(wl);
+    let mut out = Matrix::zeros(a.rows(), a.cols());
+    let mut scales = Vec::with_capacity(a.rows());
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        let s = scale_for(row.iter().fold(0.0f32, |m, x| m.max(x.abs())), lv);
+        scales.push(s);
+        let orow = out.row_mut(i);
+        for (o, &x) in orow.iter_mut().zip(row) {
+            *o = quantize_val(x, s, lv);
+        }
+    }
+    (out, scales)
+}
+
+/// Per-column fake-quant (each column gets its own scale). For
+/// `W1 = [K x r]` factors this quantizes each rank's left singular vector
+/// independently — together with `quantize_rows` this is the paper's
+/// "vector-wise" scheme.
+pub fn quantize_cols(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
+    let lv = levels(wl);
+    let mut out = Matrix::zeros(a.rows(), a.cols());
+    let mut scales = vec![0.0f32; a.cols()];
+    for j in 0..a.cols() {
+        let mut mx = 0.0f32;
+        for i in 0..a.rows() {
+            mx = mx.max(a.get(i, j).abs());
+        }
+        scales[j] = scale_for(mx, lv);
+    }
+    for i in 0..a.rows() {
+        let row = out.row_mut(i);
+        for (j, o) in row.iter_mut().enumerate() {
+            *o = quantize_val(a.get(i, j), scales[j], lv);
+        }
+    }
+    (out, scales)
+}
+
+/// Quantize a vector with its own scale (rank-1 factor path of Algorithm 1).
+pub fn quantize_vec(v: &[f32], wl: WordLen) -> (Vec<f32>, f32) {
+    let lv = levels(wl);
+    let s = scale_for(v.iter().fold(0.0f32, |m, x| m.max(x.abs())), lv);
+    (v.iter().map(|&x| quantize_val(x, s, lv)).collect(), s)
+}
+
+/// Mean-squared quantization error.
+pub fn mse(a: &Matrix, q: &Matrix) -> f64 {
+    assert_eq!(a.shape(), q.shape());
+    let n = a.data().len().max(1);
+    a.data()
+        .iter()
+        .zip(q.data())
+        .map(|(x, y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn levels_table() {
+        assert_eq!(levels(8), 127.0);
+        assert_eq!(levels(4), 7.0);
+        assert_eq!(levels(2), 1.0);
+    }
+
+    #[test]
+    fn grid_snapping_is_idempotent() {
+        let mut rng = Pcg64::new(40);
+        let a = Matrix::randn(6, 6, &mut rng);
+        let (q, _) = quantize_tensor(&a, 5);
+        let (q2, _) = quantize_tensor(&q, 5);
+        for (x, y) in q.data().iter().zip(q2.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Pcg64::new(41);
+        let a = Matrix::randn(10, 10, &mut rng);
+        for wl in [4u32, 6, 8] {
+            let (q, s) = quantize_tensor(&a, wl);
+            for (x, y) in a.data().iter().zip(q.data()) {
+                assert!(
+                    (x - y).abs() <= 0.5 * s + 1e-6,
+                    "wl={wl}: |{x}-{y}| > s/2={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Pcg64::new(42);
+        let a = Matrix::randn(16, 16, &mut rng);
+        let errs: Vec<f64> = [3u32, 4, 6, 8]
+            .iter()
+            .map(|&wl| mse(&a, &quantize_tensor(&a, wl).0))
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0], "mse should shrink with bits: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn per_vector_beats_per_tensor_with_outliers() {
+        // A single giant outlier entry wrecks the per-tensor scale for the
+        // whole matrix; vector-wise scales contain the damage to one column
+        // — the effect the paper leans on.
+        let mut rng = Pcg64::new(43);
+        let mut a = Matrix::randn(12, 12, &mut rng);
+        a.set(0, 0, a.get(0, 0).abs().max(1.0) * 100.0);
+        let (qt, _) = quantize_tensor(&a, 4);
+        let (qc, _) = quantize_cols(&a, 4);
+        assert!(mse(&a, &qc) < mse(&a, &qt) * 0.2, "{} vs {}", mse(&a, &qc), mse(&a, &qt));
+    }
+
+    #[test]
+    fn per_row_and_col_transpose_duality() {
+        let mut rng = Pcg64::new(44);
+        let a = Matrix::randn(5, 9, &mut rng);
+        let (qr, sr) = quantize_rows(&a, 6);
+        let (qc, sc) = quantize_cols(&a.transpose(), 6);
+        assert_eq!(sr.len(), 5);
+        assert_eq!(sc.len(), 5);
+        for (x, y) in sr.iter().zip(&sc) {
+            assert!((x - y).abs() < 1e-7);
+        }
+        let qct = qc.transpose();
+        for (x, y) in qr.data().iter().zip(qct.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantize_vec_matches_row_quant() {
+        let v = vec![0.1f32, -0.9, 0.4, 0.05];
+        let (qv, s) = quantize_vec(&v, 4);
+        let m = Matrix::from_vec(1, 4, v.clone());
+        let (qm, sm) = quantize_rows(&m, 4);
+        assert!((s - sm[0]).abs() < 1e-7);
+        for (x, y) in qv.iter().zip(qm.row(0)) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_matrix_quantizes_to_zero() {
+        let a = Matrix::zeros(3, 3);
+        let (q, s) = quantize_tensor(&a, 8);
+        assert_eq!(s, 0.0);
+        assert!(q.data().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,139 @@
+//! PJRT client + compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Wraps the PJRT CPU client and caches compiled executables by path, so
+/// the coordinator can hand out shared references while figure runners and
+/// the serving loop compile each artifact exactly once.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load HLO text from `path`, compile it, and cache the executable.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload an f32 tensor to a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload an i32 tensor to a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+
+    /// Execute with device-resident argument buffers; returns the first
+    /// output literal of the 1-tuple the AOT path lowers (return_tuple).
+    pub fn run_tuple1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        let outs = exe.execute_b(args).context("PJRT execute")?;
+        let lit = outs[0][0].to_literal_sync().context("fetching output")?;
+        lit.to_tuple1().context("unwrapping 1-tuple output")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    #[test]
+    fn linear512_artifacts_execute_and_agree() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let eng = Engine::cpu().unwrap();
+
+        // Dense 512x512x512 quant-matmul kernel vs a native Rust matmul.
+        let exe = eng.load_hlo(&m.artifacts.linear512_dense).unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(99);
+        let x = crate::tensor::Matrix::randn(512, 512, &mut rng).scale(0.05);
+        let w = crate::tensor::Matrix::randn(512, 512, &mut rng).scale(0.05);
+        let bx = eng.upload_f32(x.data(), &[512, 512]).unwrap();
+        let bw = eng.upload_f32(w.data(), &[512, 512]).unwrap();
+        let out = eng.run_tuple1(&exe, &[&bx, &bw]).unwrap();
+        let y: Vec<f32> = out.to_vec().unwrap();
+        let want = x.matmul(&w);
+        let mut max_err = 0.0f32;
+        for (a, b) in y.iter().zip(want.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-2, "kernel vs rust matmul max err {max_err}");
+
+        // Cached: second load returns the same Arc.
+        let exe2 = eng.load_hlo(&m.artifacts.linear512_dense).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&exe, &exe2));
+    }
+
+    #[test]
+    fn cascade_artifact_matches_two_step_product() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let eng = Engine::cpu().unwrap();
+        let exe = eng.load_hlo(&m.artifacts.linear512_svd).unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(100);
+        let x = crate::tensor::Matrix::randn(512, 512, &mut rng).scale(0.05);
+        let w1 = crate::tensor::Matrix::randn(512, 128, &mut rng).scale(0.05);
+        let w2 = crate::tensor::Matrix::randn(128, 512, &mut rng).scale(0.05);
+        let bx = eng.upload_f32(x.data(), &[512, 512]).unwrap();
+        let b1 = eng.upload_f32(w1.data(), &[512, 128]).unwrap();
+        let b2 = eng.upload_f32(w2.data(), &[128, 512]).unwrap();
+        let out = eng.run_tuple1(&exe, &[&bx, &b1, &b2]).unwrap();
+        let y: Vec<f32> = out.to_vec().unwrap();
+        let want = x.matmul(&w1).matmul(&w2);
+        let mut max_err = 0.0f32;
+        for (a, b) in y.iter().zip(want.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-2, "cascade vs rust max err {max_err}");
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! This is the request-path boundary of the three-layer architecture: the
+//! Python compile path ran once at build time; from here on everything is
+//! Rust + the PJRT C API (`xla` crate over xla_extension 0.5.1, CPU
+//! plugin). HLO **text** is the interchange format — `HloModuleProto::
+//! from_text_file` reassigns instruction ids, sidestepping the 64-bit-id
+//! protos jax>=0.5 emits that this XLA build rejects.
+//!
+//! Weight arguments are uploaded to device buffers **once per compression
+//! configuration** ([`ArgBank`]); each translate call then swaps only the
+//! source-token buffer — the same weights-stay-resident discipline a real
+//! accelerator deployment would use, and the single biggest perf lever on
+//! the eval loop (see EXPERIMENTS.md §Perf).
+
+mod engine;
+mod session;
+
+pub use engine::Engine;
+pub use session::{ArgBank, Mode, TranslateSession};

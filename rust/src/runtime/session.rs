@@ -1,0 +1,191 @@
+//! Translate sessions: argument packing + execution for the model
+//! artifacts, replaying the manifest's positional argument order.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::CompressedLinear;
+use crate::model::{Manifest, PairModel};
+use crate::quant;
+
+use super::Engine;
+
+/// Which compiled model variant to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// `translate_dense.hlo.txt`: each compressed linear is a `[K x N]`
+    /// argument (FP32 reference and quantization-only baseline).
+    Dense,
+    /// `translate_svd.hlo.txt`: each compressed linear is a rank-padded
+    /// `[K x r_max]`, `[r_max x N]` factor pair.
+    Svd,
+}
+
+impl Mode {
+    pub fn key(self) -> &'static str {
+        match self {
+            Mode::Dense => "dense",
+            Mode::Svd => "svd",
+        }
+    }
+}
+
+/// A compiled translate executable plus the manifest metadata needed to
+/// pack its arguments.
+pub struct TranslateSession<'e> {
+    engine: &'e Engine,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+    mode: Mode,
+}
+
+/// Device-resident argument buffers for one compression configuration —
+/// everything except the source tokens, which vary per batch.
+pub struct ArgBank {
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl<'e> TranslateSession<'e> {
+    pub fn new(engine: &'e Engine, manifest: &Manifest, mode: Mode) -> Result<Self> {
+        let path = match mode {
+            Mode::Dense => &manifest.artifacts.translate_dense,
+            Mode::Svd => &manifest.artifacts.translate_svd,
+        };
+        let exe = engine.load_hlo(path)?;
+        Ok(TranslateSession { engine, exe, manifest: manifest.clone(), mode })
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.model.eval_batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.model.seq_len
+    }
+
+    /// Upload every weight argument for one compression configuration.
+    ///
+    /// * `compressed` maps linear name -> compressed layer; linears absent
+    ///   from the map run with their original FP32 weights (Dense mode
+    ///   only — the SVD artifact needs a factor pair for every linear).
+    /// * `act_wl` is the activation word length (`A` of WxAy); `None`
+    ///   disables activation quantization (FP32 activations).
+    pub fn build_bank(
+        &self,
+        model: &PairModel,
+        compressed: &BTreeMap<String, CompressedLinear>,
+        act_wl: Option<u32>,
+    ) -> Result<ArgBank> {
+        let order = self
+            .manifest
+            .arg_order
+            .get(self.mode.key())
+            .context("manifest missing arg order")?;
+        let lv = act_wl.map(quant::levels).unwrap_or(0.0);
+        let mut buffers = Vec::with_capacity(order.len() - 1);
+
+        for name in order.iter().skip(1) {
+            // skip src_tokens (slot 0)
+            let buf = match name.as_str() {
+                "act_scales" => {
+                    let scales: Vec<f32> = self
+                        .manifest
+                        .linears
+                        .iter()
+                        .enumerate()
+                        .map(|(i, _)| {
+                            if lv > 0.0 {
+                                quant::scale_for(model.act_maxabs[i], lv)
+                            } else {
+                                1.0
+                            }
+                        })
+                        .collect();
+                    self.engine.upload_f32(&scales, &[scales.len()])?
+                }
+                "act_levels" => self.engine.upload_f32(&[lv], &[])?,
+                _ => self.upload_param(model, compressed, name)?,
+            };
+            buffers.push(buf);
+        }
+        Ok(ArgBank { buffers })
+    }
+
+    fn upload_param(
+        &self,
+        model: &PairModel,
+        compressed: &BTreeMap<String, CompressedLinear>,
+        name: &str,
+    ) -> Result<xla::PjRtBuffer> {
+        // SVD factor slots: "<linear>.w1" / "<linear>.w2".
+        if let Some(base) = name.strip_suffix(".w1") {
+            let info = self
+                .manifest
+                .linears
+                .iter()
+                .find(|l| l.name == base)
+                .with_context(|| format!("unknown linear {base}"))?;
+            let c = compressed
+                .get(base)
+                .with_context(|| format!("SVD artifact needs a factored layer for {base}"))?;
+            let CompressedLinear::LowRank { w1, .. } = c else {
+                bail!("layer {base} is not factored; SVD mode needs LowRank");
+            };
+            let padded = w1.pad_to(info.k, info.r_max);
+            return self.engine.upload_f32(padded.data(), &[info.k, info.r_max]);
+        }
+        if let Some(base) = name.strip_suffix(".w2") {
+            let info = self
+                .manifest
+                .linears
+                .iter()
+                .find(|l| l.name == base)
+                .with_context(|| format!("unknown linear {base}"))?;
+            let c = compressed.get(base).context("missing factored layer")?;
+            let CompressedLinear::LowRank { w2, .. } = c else {
+                bail!("layer {base} is not factored; SVD mode needs LowRank");
+            };
+            let padded = w2.pad_to(info.r_max, info.n);
+            return self.engine.upload_f32(padded.data(), &[info.r_max, info.n]);
+        }
+        // Dense linear slot (compressed linears appear under their bare
+        // name in dense mode).
+        if self.manifest.linear_index(name).is_some() {
+            let w = match compressed.get(name) {
+                Some(c) => c.effective(),
+                None => model.linear(name).clone(),
+            };
+            return self.engine.upload_f32(w.data(), &[w.rows(), w.cols()]);
+        }
+        // Uncompressed parameter straight from the weight store.
+        let m = model
+            .weights
+            .get(name)
+            .with_context(|| format!("weight {name} missing from store"))?;
+        let dims = model.weights.dims(name).unwrap();
+        self.engine.upload_f32(m.data(), &dims)
+    }
+
+    /// Greedy-translate one batch. `src_tokens` is `[batch * seq_len]`
+    /// (pad short batches with PAD); returns `[batch * seq_len]` output
+    /// tokens (BOS-framed, EOS/PAD-terminated).
+    pub fn translate(&self, bank: &ArgBank, src_tokens: &[i32]) -> Result<Vec<i32>> {
+        let b = self.batch();
+        let s = self.seq_len();
+        if src_tokens.len() != b * s {
+            bail!("src_tokens len {} != batch {b} x seq {s}", src_tokens.len());
+        }
+        let src = self.engine.upload_i32(src_tokens, &[b, s])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + bank.buffers.len());
+        args.push(&src);
+        args.extend(bank.buffers.iter());
+        let out = self.engine.run_tuple1(&self.exe, &args)?;
+        out.to_vec::<i32>().context("reading translate output")
+    }
+}

@@ -1,0 +1,327 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Pcg64;
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Gaussian random matrix (testing / synthetic workloads).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self (m x k) * other (k x n)`.
+    ///
+    /// i-k-j loop order: the inner loop walks both `other.row(k)` and the
+    /// output row contiguously, which is the main reason Algorithm 1's
+    /// residual updates run at memory speed (see EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // zero-padded SVD factors skip whole rows
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self -= other` (residual updates without reallocation).
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// In-place rank-1 downdate `self -= a * b^T` — the Algorithm 1 residual
+    /// step fused to avoid materializing the outer product.
+    pub fn sub_outer(&mut self, a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), self.rows);
+        assert_eq!(b.len(), self.cols);
+        for (i, &ai) in a.iter().enumerate() {
+            if ai == 0.0 {
+                continue;
+            }
+            let row = self.row_mut(i);
+            for (r, &bj) in row.iter_mut().zip(b) {
+                *r -= ai * bj;
+            }
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        let data = self.data.iter().map(|x| x * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Matrix-vector product `self (m x n) * v (n)`.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows).map(|i| super::dot(self.row(i), v)).collect()
+    }
+
+    /// `self^T * v` without materializing the transpose.
+    pub fn tr_matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            super::axpy(vi, self.row(i), &mut out);
+        }
+        out
+    }
+
+    /// Horizontal concatenation (Algorithm 1's `hstack`).
+    pub fn hstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical concatenation (Algorithm 1's `vstack`).
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Zero-pad to `(rows, cols)` (rank-padding for the SVD artifact).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Take the leading `cols` columns.
+    pub fn take_cols(&self, cols: usize) -> Matrix {
+        assert!(cols <= self.cols);
+        Matrix::from_fn(self.rows, cols, |i, j| self.get(i, j))
+    }
+
+    /// Take the leading `rows` rows.
+    pub fn take_rows(&self, rows: usize) -> Matrix {
+        assert!(rows <= self.rows);
+        Matrix::from_vec(rows, self.cols, self.data[..rows * self.cols].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_hand() {
+        let a = mat(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = mat(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(5, 5, &mut rng);
+        let i = Matrix::eye(5);
+        let prod = a.matmul(&i);
+        for (x, y) in prod.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn sub_outer_matches_explicit() {
+        let mut rng = Pcg64::new(3);
+        let mut a = Matrix::randn(6, 5, &mut rng);
+        let b = a.clone();
+        let u: Vec<f32> = (0..6).map(|i| i as f32 * 0.3).collect();
+        let v: Vec<f32> = (0..5).map(|i| 1.0 - i as f32 * 0.1).collect();
+        a.sub_outer(&u, &v);
+        let explicit = b.sub(&crate::tensor::outer(&u, &v));
+        for (x, y) in a.data().iter().zip(explicit.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn frob_norm_hand() {
+        let a = mat(2, 2, &[3., 0., 0., 4.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stack_and_pad() {
+        let a = mat(2, 2, &[1., 2., 3., 4.]);
+        let b = mat(2, 1, &[9., 9.]);
+        let h = a.hstack(&b);
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h.row(0), &[1., 2., 9.]);
+        let c = mat(1, 2, &[7., 8.]);
+        let v = a.vstack(&c);
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v.row(2), &[7., 8.]);
+        let p = a.pad_to(3, 4);
+        assert_eq!(p.shape(), (3, 4));
+        assert_eq!(p.get(0, 1), 2.0);
+        assert_eq!(p.get(2, 3), 0.0);
+        assert_eq!(p.take_cols(2).take_rows(2), a);
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let a = mat(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.matvec(&[1., 0., 1.]), vec![4., 10.]);
+        assert_eq!(a.tr_matvec(&[1., 1.]), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,90 @@
+//! Dense f32 matrix substrate.
+//!
+//! Everything the compression stack needs — matmul, transpose, slicing,
+//! norms, padding — implemented directly (no BLAS in the image). The
+//! matmul is the library's CPU hot path (Algorithm 1 recomputes residuals
+//! every iteration) and is written cache-friendly (i-k-j loop order) so the
+//! perf pass can compare against a naive baseline; see EXPERIMENTS.md §Perf.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// Outer product of two vectors: `a (m) x b (n) -> m x n`.
+pub fn outer(a: &[f32], b: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(a.len(), b.len());
+    for (i, &ai) in a.iter().enumerate() {
+        let row = out.row_mut(i);
+        for (j, &bj) in b.iter().enumerate() {
+            row[j] = ai * bj;
+        }
+    }
+    out
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: better ILP and deterministic result.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Scale a vector in place.
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a {
+        *x *= s;
+    }
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outer_shape_and_values() {
+        let m = outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.get(1, 2), 10.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.01).collect();
+        let b: Vec<f32> = (0..103).map(|i| (103 - i) as f32 * 0.02).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+}

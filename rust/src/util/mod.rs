@@ -1,0 +1,15 @@
+//! Shared utilities: PRNG, JSON, statistics, thread pool, timing.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

@@ -1,0 +1,73 @@
+//! Scoped thread pool for data-parallel compression jobs.
+//!
+//! The image vendors no rayon/tokio; the coordinator parallelizes per-layer
+//! compression (Algorithm 1 is independent across weight matrices) with
+//! `std::thread::scope` work-stealing over an atomic index. On the 1-core
+//! CI image this degrades gracefully to sequential execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (min(available_parallelism, cap)).
+pub fn default_workers(cap: usize) -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(cap).max(1)
+}
+
+/// Apply `f` to every index in `0..n`, in parallel, collecting results in
+/// index order. `f` must be `Sync`; results are written lock-free into a
+/// preallocated slot vector.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n).max(1);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker failed to fill slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = par_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(par_map(0, 4, |i| i).is_empty());
+        assert_eq!(par_map(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let a = par_map(37, 1, |i| i as f64 * 1.5);
+        let b = par_map(37, 3, |i| i as f64 * 1.5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end integration: artifacts -> PJRT -> BLEU.
+//!
+//! These tests exercise the full deployed stack: manifest + weight store +
+//! corpus loading, argument-bank upload, greedy decoding through the
+//! AOT-compiled HLO (with the Pallas kernels lowered inside), and BLEU
+//! scoring — i.e. exactly what the coordinator does during DSE, minus the
+//! search loops. Skipped when `make artifacts` has not run.
+
+use std::collections::BTreeMap;
+
+use itera_llm::compress::{itera, quant_only};
+use itera_llm::eval::{evaluate_bleu, Corpus};
+use itera_llm::model::{Manifest, PairModel};
+use itera_llm::runtime::{Engine, Mode, TranslateSession};
+
+fn setup() -> Option<(Manifest, Engine)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest loads");
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    Some((manifest, engine))
+}
+
+#[test]
+fn fp32_reference_translates_near_perfectly() {
+    let Some((manifest, engine)) = setup() else { return };
+    let model = PairModel::load(&manifest, "en-de").unwrap();
+    let corpus = Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
+    let session = TranslateSession::new(&engine, &manifest, Mode::Dense).unwrap();
+    // Empty compression map + no activation quant = FP32 reference.
+    let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
+    let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 64).unwrap();
+    assert!(
+        d.score > 95.0,
+        "FP32 reference must be near-perfect on the synthetic pair: BLEU {:.2} ({:?})",
+        d.score,
+        d.precisions
+    );
+}
+
+#[test]
+fn w8a8_quant_only_stays_close_to_fp32() {
+    let Some((manifest, engine)) = setup() else { return };
+    let model = PairModel::load(&manifest, "en-de").unwrap();
+    let corpus = Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
+    let session = TranslateSession::new(&engine, &manifest, Mode::Dense).unwrap();
+
+    let mut compressed = BTreeMap::new();
+    for l in &manifest.linears {
+        compressed.insert(l.name.clone(), quant_only(model.linear(&l.name), 8));
+    }
+    let bank = session.build_bank(&model, &compressed, Some(8)).unwrap();
+    let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 48).unwrap();
+    assert!(d.score > 85.0, "W8A8 should be nearly lossless: BLEU {:.2}", d.score);
+}
+
+#[test]
+fn svd_artifact_full_rank_matches_dense_path() {
+    let Some((manifest, engine)) = setup() else { return };
+    let model = PairModel::load(&manifest, "en-de").unwrap();
+    let corpus = Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
+
+    // Factor every layer at full rank / 8 bits through Algorithm 1; the
+    // SVD-mode artifact must land in the same accuracy regime as the
+    // dense-mode quant baseline (they share quant granularity).
+    let mut compressed = BTreeMap::new();
+    for l in &manifest.linears {
+        let (c, _) = itera(model.linear(&l.name), l.r_max, 8);
+        compressed.insert(l.name.clone(), c);
+    }
+    let svd_session = TranslateSession::new(&engine, &manifest, Mode::Svd).unwrap();
+    let bank = svd_session.build_bank(&model, &compressed, Some(8)).unwrap();
+    let d = evaluate_bleu(&svd_session, &bank, &corpus, &manifest.model, 48).unwrap();
+    assert!(
+        d.score > 85.0,
+        "full-rank W8A8 iterative decomposition should be near-lossless: {:.2}",
+        d.score
+    );
+}
+
+#[test]
+fn svd_mode_rejects_unfactored_layers() {
+    let Some((manifest, engine)) = setup() else { return };
+    let model = PairModel::load(&manifest, "en-de").unwrap();
+    let session = TranslateSession::new(&engine, &manifest, Mode::Svd).unwrap();
+    let mut compressed = BTreeMap::new();
+    for l in &manifest.linears {
+        compressed.insert(l.name.clone(), quant_only(model.linear(&l.name), 8));
+    }
+    assert!(
+        session.build_bank(&model, &compressed, Some(8)).is_err(),
+        "Dense layers must be rejected by the SVD artifact"
+    );
+}
+
+#[test]
+fn both_language_pairs_load_and_translate() {
+    let Some((manifest, engine)) = setup() else { return };
+    for pair in ["en-de", "fr-en"] {
+        let model = PairModel::load(&manifest, pair).unwrap();
+        let corpus = Corpus::load(&manifest.pairs[pair].corpus).unwrap();
+        let session = TranslateSession::new(&engine, &manifest, Mode::Dense).unwrap();
+        let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
+        let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 32).unwrap();
+        assert!(d.score > 90.0, "{pair}: FP32 BLEU {:.2}", d.score);
+    }
+}

@@ -1,0 +1,344 @@
+//! Property-based tests over the compression stack's invariants, driven
+//! by the in-tree `testkit` mini-framework (no proptest in the image).
+
+use itera_llm::compress::{self, itera, quant_only, svd_baseline, CompressedLinear};
+use itera_llm::dse::pareto_front;
+use itera_llm::eval::bleu_score;
+use itera_llm::hw::{sim, tile_latency_cycles, TileConfig, Workload};
+use itera_llm::linalg::{reconstruct, svd, svd_top1};
+use itera_llm::quant;
+use itera_llm::sra;
+use itera_llm::testkit::{check, Gen};
+
+const CASES: usize = 40;
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn prop_svd_reconstructs_and_orders() {
+    check("svd-reconstruct", CASES, |g: &mut Gen| {
+        let m = g.size(2, 24);
+        let n = g.size(2, 24);
+        let a = g.matrix(m, n, 1.0);
+        let d = svd(&a);
+        // Singular values sorted descending, non-negative.
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+        // Full-rank reconstruction recovers A.
+        let rec = reconstruct(&d, m.min(n));
+        let rel = rec.sub(&a).frob_norm() / a.frob_norm().max(1e-6);
+        assert!(rel < 1e-3, "rel err {rel} on {m}x{n}");
+    });
+}
+
+#[test]
+fn prop_top1_matches_full_svd() {
+    check("top1-vs-jacobi", CASES, |g: &mut Gen| {
+        let m = g.size(2, 20);
+        let n = g.size(2, 20);
+        let a = g.matrix(m, n, 1.0);
+        let full = svd(&a);
+        let top = svd_top1(&a, g.case_seed);
+        if full.s[0] > 1e-3 {
+            // Allow slack when sigma1 ~= sigma2 (power iteration converges
+            // slowly / may mix the pair's subspace).
+            let gap = if full.s.len() > 1 { full.s[0] - full.s[1] } else { full.s[0] };
+            let tol = if gap / full.s[0] < 0.05 { 0.05 } else { 5e-3 };
+            let rel = (top.sigma - full.s[0]).abs() / full.s[0];
+            assert!(rel < tol, "sigma rel err {rel} (gap {gap})");
+        }
+    });
+}
+
+#[test]
+fn prop_eckart_young_ordering() {
+    // Truncated SVD error decreases with rank and the rank-r error equals
+    // the tail singular values' norm.
+    check("eckart-young", CASES / 2, |g: &mut Gen| {
+        let m = g.size(3, 16);
+        let n = g.size(3, 16);
+        let a = g.matrix(m, n, 1.0);
+        let d = svd(&a);
+        let rmax = m.min(n);
+        let mut prev = f32::INFINITY;
+        for r in 1..=rmax {
+            let err = reconstruct(&d, r).sub(&a).frob_norm();
+            let tail: f32 = d.s[r..].iter().map(|s| s * s).sum::<f32>().sqrt();
+            assert!((err - tail).abs() < 1e-2 * tail.max(1.0), "r={r}: {err} vs tail {tail}");
+            assert!(err <= prev + 1e-4);
+            prev = err;
+        }
+    });
+}
+
+// ---------------------------------------------------------------- quant
+
+#[test]
+fn prop_quant_error_bounds() {
+    check("quant-bounds", CASES, |g: &mut Gen| {
+        let m = g.size(1, 24);
+        let n = g.size(1, 24);
+        let scale = g.f32_in(0.1, 10.0);
+        let a = g.matrix(m, n, scale);
+        let wl = *g.pick(&[2u32, 3, 4, 6, 8]);
+        let (q, s) = quant::quantize_tensor(&a, wl);
+        for (x, y) in a.data().iter().zip(q.data()) {
+            assert!((x - y).abs() <= 0.5 * s + 1e-5);
+            assert!(y.abs() <= a.max_abs() + 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_vector_quant_no_cross_contamination() {
+    // Scaling one column must not change the quantization of others.
+    check("col-quant-isolation", CASES, |g: &mut Gen| {
+        let m = g.size(2, 16);
+        let n = g.size(2, 16);
+        let a = g.matrix(m, n, 1.0);
+        let mut b = a.clone();
+        let col = g.usize_in(0, n - 1);
+        for i in 0..m {
+            b.set(i, col, b.get(i, col) * 50.0);
+        }
+        let (qa, _) = quant::quantize_cols(&a, 4);
+        let (qb, _) = quant::quantize_cols(&b, 4);
+        for j in 0..n {
+            if j == col {
+                continue;
+            }
+            for i in 0..m {
+                assert!((qa.get(i, j) - qb.get(i, j)).abs() < 1e-6);
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------- compress
+
+#[test]
+fn prop_itera_residual_monotone() {
+    check("itera-monotone", CASES, |g: &mut Gen| {
+        let k = g.size(2, 24);
+        let n = g.size(2, 24);
+        let a = g.matrix(k, n, 0.5);
+        let wl = *g.pick(&[3u32, 4, 6, 8]);
+        let r = g.usize_in(1, k.min(n));
+        let (c, trace) = itera(&a, r, wl);
+        for w in trace.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] + 1e-3, "{:?}", trace.residual_norms);
+        }
+        // Error consistency.
+        let err = c.error(&a);
+        let last = *trace.residual_norms.last().unwrap();
+        assert!((err - last).abs() <= 1e-2 * err.max(1.0) + 1e-4);
+    });
+}
+
+#[test]
+fn prop_itera_never_much_worse_than_svd_baseline() {
+    // Iterative refinement compensates quant error: across random cases it
+    // must win or tie (within 5%) against SVD-then-quantize at W<=4.
+    check("itera-vs-baseline", CASES / 2, |g: &mut Gen| {
+        let k = g.size(4, 24);
+        let n = g.size(4, 24);
+        let a = g.matrix(k, n, 0.5);
+        let r = g.usize_in(2, k.min(n));
+        let wl = *g.pick(&[3u32, 4]);
+        let e_it = itera(&a, r, wl).0.error(&a);
+        let e_sv = svd_baseline(&a, r, wl).error(&a);
+        assert!(e_it <= e_sv * 1.05 + 1e-4, "iter {e_it} vs baseline {e_sv}");
+    });
+}
+
+#[test]
+fn prop_accounting_consistency() {
+    check("accounting", CASES, |g: &mut Gen| {
+        let k = g.size(2, 64);
+        let n = g.size(2, 64);
+        let m = g.size(1, 64);
+        let a = g.matrix(k, n, 0.3);
+        let wl = *g.pick(&[3u32, 4, 6, 8]);
+        let r = g.usize_in(1, k.min(n));
+
+        let dense = quant_only(&a, wl);
+        let low = itera(&a, r, wl).0;
+        let cd = compress::layer_cost(&dense, m, k, n);
+        let cl = compress::layer_cost(&low, m, k, n);
+        // Dense ratio matches the exact storage formula (weights at wl
+        // bits + one FP32 scale per output column).
+        let expect = (32 * k * n) as f64 / ((k * n * wl as usize + 32 * n) as f64);
+        assert!((cd.ratio() - expect).abs() < 1e-9, "{} vs {expect}", cd.ratio());
+        // NOps formulas.
+        assert_eq!(cd.macs, (m * k * n) as u64);
+        assert_eq!(cl.macs, (m * r * (k + n)) as u64);
+        // Below the breakeven rank the factored MACs are no worse.
+        if r <= compress::breakeven_rank(k, n) {
+            assert!(cl.macs <= cd.macs);
+        }
+    });
+}
+
+// ------------------------------------------------------------------ sra
+
+#[test]
+fn prop_sra_budget_and_caps() {
+    check("sra-invariants", 15, |g: &mut Gen| {
+        let l = g.usize_in(2, 12);
+        let caps: Vec<usize> = (0..l).map(|_| g.usize_in(2, 48)).collect();
+        let total_cap: usize = caps.iter().sum();
+        let budget = g.usize_in(l, total_cap);
+        let weights: Vec<f64> = (0..l).map(|_| g.f32_in(0.1, 5.0) as f64).collect();
+        let caps2 = caps.clone();
+        let mut oracle = move |ranks: &[usize]| {
+            ranks
+                .iter()
+                .zip(&weights)
+                .zip(&caps2)
+                .map(|((&r, &w), &c)| w * (r as f64 / c as f64).sqrt())
+                .sum()
+        };
+        let res = sra::run(&mut oracle, budget, &caps, &sra::SraConfig::default());
+        let planned: usize = sra::equal_split(budget, &caps).iter().sum();
+        assert_eq!(res.ranks.iter().sum::<usize>(), planned);
+        for (r, c) in res.ranks.iter().zip(&caps) {
+            assert!((1..=*c).contains(r));
+        }
+        for w in res.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+    });
+}
+
+// ------------------------------------------------------------------ hw
+
+#[test]
+fn prop_analytical_vs_simulator() {
+    // Unconstrained-bandwidth simulation must agree with Eq. 15 within
+    // 25% across random workloads and tiles.
+    check("model-vs-sim", 30, |g: &mut Gen| {
+        let m = g.size(8, 512);
+        let k = g.size(8, 512);
+        let n = g.size(8, 512);
+        let w = Workload::new(m, k, n, *g.pick(&[3u32, 4, 6, 8]), 8);
+        let pow2 = [1usize, 2, 4, 8, 16, 32];
+        let t = TileConfig::new(*g.pick(&pow2[..5]), *g.pick(&pow2), *g.pick(&pow2));
+        let ana = tile_latency_cycles(&w, &t);
+        let s = sim::simulate_matmul(&w, &t, 1e12);
+        let ratio = s.cycles / ana.latency_cycles;
+        assert!(
+            (0.75..=1.3).contains(&ratio),
+            "{w:?} {t:?}: sim {} ana {} ratio {ratio}",
+            s.cycles,
+            ana.latency_cycles
+        );
+        assert!(s.occupancy > 0.0 && s.occupancy <= 1.0 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotone_in_cap() {
+    check("bw-monotone", 20, |g: &mut Gen| {
+        let w = Workload::new(g.size(16, 256), g.size(16, 256), g.size(16, 256), 4, 8);
+        let t = TileConfig::new(8, 8, 8);
+        let mut prev = f64::INFINITY;
+        for bw in [32.0, 64.0, 128.0, 1e9] {
+            let s = sim::simulate_matmul(&w, &t, bw);
+            assert!(s.cycles <= prev + 1e-6, "more bandwidth must not slow down");
+            prev = s.cycles;
+        }
+    });
+}
+
+// ----------------------------------------------------------------- eval
+
+#[test]
+fn prop_bleu_bounds_and_identity() {
+    check("bleu", CASES, |g: &mut Gen| {
+        let n = g.usize_in(1, 10);
+        let refs: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                let len = g.usize_in(1, 18);
+                g.tokens(len, 60)
+            })
+            .collect();
+        // Identity scores 100 when every sentence has >= 4 tokens.
+        if refs.iter().all(|r| r.len() >= 4) {
+            let d = bleu_score(&refs, &refs);
+            assert!((d.score - 100.0).abs() < 1e-6);
+        }
+        // Any hypothesis scores within [0, 100].
+        let hyps: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                let len = g.usize_in(0, 18);
+                g.tokens(len, 60)
+            })
+            .collect();
+        let d = bleu_score(&hyps, &refs);
+        assert!((0.0..=100.0 + 1e-9).contains(&d.score));
+    });
+}
+
+// --------------------------------------------------------------- pareto
+
+#[test]
+fn prop_pareto_front_sound_and_complete() {
+    check("pareto", CASES, |g: &mut Gen| {
+        let n = g.usize_in(1, 60);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (g.f32_in(0.0, 100.0) as f64, g.f32_in(0.0, 100.0) as f64))
+            .collect();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        // Soundness: no front point is dominated.
+        for &i in &front {
+            for (j, p) in pts.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dom = p.0 <= pts[i].0
+                    && p.1 >= pts[i].1
+                    && (p.0 < pts[i].0 || p.1 > pts[i].1);
+                assert!(!dom, "front point {i} dominated by {j}");
+            }
+        }
+        // Completeness: every non-front point is dominated or duplicated.
+        for (j, p) in pts.iter().enumerate() {
+            if front.contains(&j) {
+                continue;
+            }
+            let covered = front.iter().any(|&i| {
+                (pts[i].0 <= p.0 && pts[i].1 >= p.1)
+                    && (pts[i].0 < p.0 || pts[i].1 > p.1 || pts[i] == *p)
+            });
+            assert!(covered, "point {j} neither on front nor dominated");
+        }
+    });
+}
+
+// ------------------------------------------------------- representation
+
+#[test]
+fn prop_rank_padding_is_exact() {
+    // Zero-padding factors to r_max must not change the effective matrix —
+    // the invariant the single-artifact runtime trick rests on.
+    check("rank-padding", CASES, |g: &mut Gen| {
+        let k = g.size(2, 32);
+        let n = g.size(2, 32);
+        let a = g.matrix(k, n, 0.5);
+        let r = g.usize_in(1, k.min(n));
+        let (c, _) = itera(&a, r, 4);
+        if let CompressedLinear::LowRank { w1, w2, .. } = &c {
+            let rmax = k.min(n);
+            let p1 = w1.pad_to(k, rmax);
+            let p2 = w2.pad_to(rmax, n);
+            let full = p1.matmul(&p2);
+            let trunc = w1.matmul(w2);
+            for (x, y) in full.data().iter().zip(trunc.data()) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    });
+}
