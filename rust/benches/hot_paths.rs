@@ -1,19 +1,28 @@
 //! Hot-path microbenchmarks (custom harness; no criterion in the image).
 //!
 //! Covers the compute kernels the perf pass optimizes (EXPERIMENTS.md
-//! §Perf): Algorithm 1 and its SVD building blocks, quantization, the
-//! dense matmul, the dataflow simulator, the DSE sweep, BLEU scoring, and
-//! — when artifacts are present — the PJRT translate call that dominates
+//! §Perf): Algorithm 1 and its SVD building blocks, the incremental
+//! compression cache behind the SRA/DSE search loops, quantization, the
+//! dense matmul (serial + blocked + pool-parallel), the dataflow
+//! simulator, the DSE sweep, BLEU scoring, and — when built with `pjrt`
+//! and artifacts are present — the PJRT translate call that dominates
 //! every figure runner.
+//!
+//! Every run merges its results into `BENCH_hot_paths.json` at the repo
+//! root — the machine-readable trajectory EXPERIMENTS.md tracks. Partial
+//! runs (a `cargo bench` filter, or a build without `pjrt`/artifacts)
+//! refresh only the entries they executed.
 
 use itera_llm::benchkit::Bench;
-use itera_llm::compress::{itera, quant_only, svd_baseline};
+use itera_llm::compress::{itera, quant_only, svd_baseline, IncrementalItera};
 use itera_llm::dse;
 use itera_llm::eval::bleu_score;
 use itera_llm::hw::{sim, EngineKind, Platform, TileConfig, Workload};
 use itera_llm::linalg::{svd, svd_top1};
 use itera_llm::quant;
+use itera_llm::sra;
 use itera_llm::tensor::Matrix;
+use itera_llm::util::pool::default_workers;
 use itera_llm::util::rng::Pcg64;
 
 fn main() {
@@ -22,6 +31,7 @@ fn main() {
 
     // ---- linalg -------------------------------------------------------
     let w64 = Matrix::randn(64, 64, &mut rng).scale(0.1);
+    let w128 = Matrix::randn(128, 128, &mut rng).scale(0.1);
     let w512 = Matrix::randn(512, 512, &mut rng).scale(0.1);
     b.bench("linalg/svd_jacobi_64x64", || {
         std::hint::black_box(svd(&w64));
@@ -38,6 +48,15 @@ fn main() {
     let c = Matrix::randn(256, 256, &mut rng);
     b.bench("tensor/matmul_256", || {
         std::hint::black_box(a.matmul(&c));
+    });
+    let a512 = Matrix::randn(512, 512, &mut rng);
+    let c512 = Matrix::randn(512, 512, &mut rng);
+    b.bench("tensor/matmul_512", || {
+        std::hint::black_box(a512.matmul(&c512));
+    });
+    let workers = default_workers(8);
+    b.bench("tensor/matmul_512_par", || {
+        std::hint::black_box(a512.matmul_par(&c512, workers));
     });
 
     // ---- compression --------------------------------------------------
@@ -56,6 +75,53 @@ fn main() {
     b.bench("quant/quantize_cols_512x512", || {
         std::hint::black_box(quant::quantize_cols(&w512, 4));
     });
+
+    // ---- incremental cache (the SRA/DSE hot loop) ---------------------
+    b.bench("compress/incremental_fill_128x128_w4", || {
+        std::hint::black_box(IncrementalItera::compress(&w128, 4));
+    });
+    if b.enabled("compress/incremental_query_128_r32") {
+        let inc128 = IncrementalItera::compress(&w128, 4);
+        b.bench("compress/incremental_query_128_r32", || {
+            std::hint::black_box(inc128.query(32));
+        });
+    }
+
+    // One SRA round on an 8-layer synthetic model, cached vs recompute:
+    // the end-to-end effect the cache exists for. The whole block (setup
+    // included) is skipped when the filter hides it.
+    if b.enabled("sra/search_cached_8x32_w4")
+        || b.enabled("sra/search_recompute_8x32_w4")
+        || b.enabled("sra/cost_comparison")
+    {
+        let sra_layers: Vec<Matrix> = (0..8u64)
+            .map(|i| Matrix::randn(32, 32, &mut Pcg64::new(0x5A + i)).scale(0.1))
+            .collect();
+        let budget: usize =
+            sra_layers.iter().map(|w| w.rows().min(w.cols())).sum::<usize>() / 2;
+        let sra_cfg = sra::SraConfig { max_iters: 4, patience: 2, ..Default::default() };
+        b.bench("sra/search_cached_8x32_w4", || {
+            let (res, _) = sra::run_cached_proxy(&sra_layers, 4, budget, &sra_cfg, workers);
+            std::hint::black_box(res);
+        });
+        b.bench("sra/search_recompute_8x32_w4", || {
+            let mut oracle = sra::ProxyOracle::recompute(&sra_layers, 4);
+            std::hint::black_box(oracle.run_search(budget, &sra_cfg));
+        });
+        if b.enabled("sra/cost_comparison") {
+            // Deterministic cost comparison for EXPERIMENTS.md (not timed).
+            let (_, cached) = sra::run_cached_proxy(&sra_layers, 4, budget, &sra_cfg, workers);
+            let mut oracle = sra::ProxyOracle::recompute(&sra_layers, 4);
+            let _ = oracle.run_search(budget, &sra_cfg);
+            eprintln!(
+                "[sra cost] matvec-equivalents: cached {} vs recompute {} ({:.1}x fewer)",
+                cached.matvec_equivalents(),
+                oracle.matvec_equivalents(),
+                oracle.matvec_equivalents() as f64
+                    / cached.matvec_equivalents().max(1) as f64
+            );
+        }
+    }
 
     // ---- hardware models ----------------------------------------------
     let w = Workload::new(512, 512, 512, 4, 8);
@@ -83,42 +149,63 @@ fn main() {
         std::hint::black_box(bleu_score(&refs, &refs));
     });
 
-    // ---- PJRT runtime (needs artifacts) ---------------------------------
-    if itera_llm::model::Manifest::default_dir().join("manifest.json").exists() {
-        use std::collections::BTreeMap;
-        let manifest =
-            itera_llm::model::Manifest::load(itera_llm::model::Manifest::default_dir()).unwrap();
-        let engine = itera_llm::runtime::Engine::cpu().unwrap();
-        let model = itera_llm::model::PairModel::load(&manifest, "en-de").unwrap();
-        let corpus = itera_llm::eval::Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
-        let session = itera_llm::runtime::TranslateSession::new(
-            &engine,
-            &manifest,
-            itera_llm::runtime::Mode::Dense,
-        )
-        .unwrap();
-        let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
-        let src = corpus.src_batch(0, session.batch(), manifest.model.pad_id);
-        b.bench("runtime/translate_batch16", || {
-            std::hint::black_box(session.translate(&bank, &src).unwrap());
-        });
-        b.bench("runtime/build_bank_fp32", || {
-            std::hint::black_box(session.build_bank(&model, &BTreeMap::new(), None).unwrap());
-        });
+    // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
+    runtime_benches(&mut b);
 
-        // 512^3 kernel artifact (the Fig. 10 workload via Pallas-lowered HLO).
-        let exe = engine.load_hlo(&manifest.artifacts.linear512_dense).unwrap();
-        let mut r = Pcg64::new(5);
-        let x = Matrix::randn(512, 512, &mut r);
-        let wm = Matrix::randn(512, 512, &mut r);
-        let bx = engine.upload_f32(x.data(), &[512, 512]).unwrap();
-        let bw = engine.upload_f32(wm.data(), &[512, 512]).unwrap();
-        b.bench("runtime/linear512_dense_kernel", || {
-            std::hint::black_box(engine.run_tuple1(&exe, &[&bx, &bw]).unwrap());
-        });
-    } else {
-        eprintln!("(artifacts not built; skipping runtime benches)");
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hot_paths.json");
+    match b.write_json(&out) {
+        Ok(()) => eprintln!(
+            "[bench] {} result(s) merged into {}",
+            b.results().len(),
+            out.display()
+        ),
+        Err(e) => eprintln!("[bench] could not write {}: {e}", out.display()),
     }
-
     b.finish();
+}
+
+#[cfg(feature = "pjrt")]
+fn runtime_benches(b: &mut Bench) {
+    if !itera_llm::model::Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("(artifacts not built; skipping runtime benches)");
+        return;
+    }
+    use std::collections::BTreeMap;
+    let manifest =
+        itera_llm::model::Manifest::load(itera_llm::model::Manifest::default_dir()).unwrap();
+    let engine = itera_llm::runtime::Engine::cpu().unwrap();
+    let model = itera_llm::model::PairModel::load(&manifest, "en-de").unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs["en-de"].corpus).unwrap();
+    let session = itera_llm::runtime::TranslateSession::new(
+        &engine,
+        &manifest,
+        itera_llm::runtime::Mode::Dense,
+    )
+    .unwrap();
+    let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
+    let src = corpus.src_batch(0, session.batch(), manifest.model.pad_id);
+    b.bench("runtime/translate_batch16", || {
+        std::hint::black_box(session.translate(&bank, &src).unwrap());
+    });
+    b.bench("runtime/build_bank_fp32", || {
+        std::hint::black_box(session.build_bank(&model, &BTreeMap::new(), None).unwrap());
+    });
+
+    // 512^3 kernel artifact (the Fig. 10 workload via Pallas-lowered HLO).
+    let exe = engine.load_hlo(&manifest.artifacts.linear512_dense).unwrap();
+    let mut r = Pcg64::new(5);
+    let x = Matrix::randn(512, 512, &mut r);
+    let wm = Matrix::randn(512, 512, &mut r);
+    let bx = engine.upload_f32(x.data(), &[512, 512]).unwrap();
+    let bw = engine.upload_f32(wm.data(), &[512, 512]).unwrap();
+    b.bench("runtime/linear512_dense_kernel", || {
+        std::hint::black_box(engine.run_tuple1(&exe, &[&bx, &bw]).unwrap());
+    });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn runtime_benches(_b: &mut Bench) {
+    eprintln!("(built without `pjrt`; skipping runtime benches)");
 }

@@ -70,7 +70,9 @@ impl Bench {
         self
     }
 
-    fn enabled(&self, name: &str) -> bool {
+    /// Whether `name` passes the active `cargo bench <filter>` (suites use
+    /// this to skip expensive setup whose benches are filtered out).
+    pub fn enabled(&self, name: &str) -> bool {
         self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
     }
 
@@ -129,6 +131,66 @@ impl Bench {
         &self.results
     }
 
+    /// Write the recorded results as machine-readable JSON (the
+    /// `BENCH_<suite>.json` trajectory files; see EXPERIMENTS.md §Perf).
+    ///
+    /// Merges into an existing trajectory: only the entries this run
+    /// actually executed are updated, so a filtered run — or a build
+    /// missing optional benches (no `pjrt`, no artifacts) — refreshes its
+    /// own entries without clobbering the rest.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        let path = path.as_ref();
+        let mut benches = std::collections::BTreeMap::new();
+        match std::fs::read_to_string(path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(j) => {
+                    if let Some(m) = j.get("benches").as_obj() {
+                        benches = m.clone();
+                    }
+                }
+                Err(e) => {
+                    // Never silently drop history: preserve the unreadable
+                    // file next to the new one and say so.
+                    let backup = path.with_extension("json.corrupt");
+                    let moved = std::fs::rename(path, &backup).is_ok();
+                    eprintln!(
+                        "[bench] existing trajectory {path:?} is unparseable ({e}); {}",
+                        if moved {
+                            format!("preserved as {backup:?}")
+                        } else {
+                            "could not preserve it".to_string()
+                        }
+                    );
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            // Unreadable-but-present (permissions, I/O error): abort rather
+            // than overwrite history we could not merge with.
+            Err(e) => return Err(e),
+        }
+        for r in &self.results {
+            benches.insert(
+                r.name.clone(),
+                Json::obj(vec![
+                    ("mean_s", Json::Num(r.mean_s)),
+                    ("median_s", Json::Num(r.median_s)),
+                    ("stddev_s", Json::Num(r.stddev_s)),
+                    ("min_s", Json::Num(r.min_s)),
+                    ("samples", Json::Num(r.samples as f64)),
+                ]),
+            );
+        }
+        let doc = Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("benches", Json::Obj(benches)),
+        ]);
+        // Write-then-rename so an interrupted run can't truncate the file.
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string_pretty())?;
+        std::fs::rename(&tmp, path)
+    }
+
     pub fn finish(&self) {
         println!("\n{} benchmarks run.", self.results.len());
     }
@@ -159,5 +221,28 @@ mod tests {
         assert!(b.results().is_empty());
         b.bench("match-me-too", || {});
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_trajectory_roundtrips_and_merges() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("itera_benchkit_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut b = Bench::new().quick();
+        b.filter = None;
+        b.bench("suite/alpha", || {});
+        b.bench("suite/beta", || {});
+        b.write_json(&path).unwrap();
+        // A later partial run must update its own entries and keep the rest.
+        let mut b2 = Bench::new().quick();
+        b2.filter = None;
+        b2.bench("suite/gamma", || {});
+        b2.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = j.get("benches");
+        assert!(benches.get("suite/alpha").get("mean_s").as_f64().is_some());
+        assert!(benches.get("suite/beta").get("samples").as_usize().unwrap() >= 3);
+        assert!(benches.get("suite/gamma").get("mean_s").as_f64().is_some());
+        std::fs::remove_file(&path).ok();
     }
 }

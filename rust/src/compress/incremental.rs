@@ -1,0 +1,238 @@
+//! Incremental compression: run Algorithm 1 **once** per `(layer, wl)`
+//! at the maximum rank, answer every lower-rank query by truncation.
+//!
+//! Algorithm 1 is greedy: step `k` depends only on the residual left by
+//! steps `0..k`, never on the target rank, so the rank-`r` factors of a
+//! run are *exactly* the first `r` columns of `W'1` / rows of `W'2` of a
+//! rank-`r_max` run (and the recorded residual-norm trace gives the
+//! approximation error at every intermediate rank for free). The SRA
+//! search and the DSE sweep probe many ranks of the same layer — two
+//! oracle calls per probed layer per iteration — which previously meant
+//! recompressing from scratch each time. With [`IncrementalItera`] the
+//! whole search costs one full-rank decomposition per layer, and every
+//! probe is an O(K*r + r*N) copy.
+//!
+//! `prop_truncation_invariant` in `tests/proptests.rs` pins the
+//! truncation property bit-exactly against a fresh `itera` run.
+
+use std::collections::HashMap;
+
+use crate::quant::WordLen;
+use crate::tensor::Matrix;
+use crate::util::pool::par_map;
+
+use super::itera::{itera_opts, IteraOpts, IteraTrace};
+use super::CompressedLinear;
+
+/// One layer's full-rank Algorithm 1 run, queryable at any rank.
+#[derive(Debug, Clone)]
+pub struct IncrementalItera {
+    /// `W'1 [K x r_max]` — quantized left factors, rank-major columns.
+    w1: Matrix,
+    /// `W'2 [r_max x N]` — quantized right factors, rank-major rows.
+    w2: Matrix,
+    wl: WordLen,
+    trace: IteraTrace,
+}
+
+impl IncrementalItera {
+    /// Run Algorithm 1 to the layer's maximum rank (`min(K, N)`) with the
+    /// default options and record the full factor sequence.
+    pub fn compress(w: &Matrix, wl: WordLen) -> IncrementalItera {
+        Self::compress_opts(w, wl, &IteraOpts::default())
+    }
+
+    /// As [`Self::compress`] with explicit Algorithm 1 ablation switches.
+    pub fn compress_opts(w: &Matrix, wl: WordLen, opts: &IteraOpts) -> IncrementalItera {
+        let r_max = w.rows().min(w.cols()).max(1);
+        let (c, trace) = itera_opts(w, r_max, wl, opts);
+        let CompressedLinear::LowRank { w1, w2, .. } = c else {
+            unreachable!("itera always returns LowRank");
+        };
+        IncrementalItera { w1, w2, wl, trace }
+    }
+
+    /// Maximum (recorded) rank.
+    pub fn r_max(&self) -> usize {
+        self.w1.cols()
+    }
+
+    pub fn word_len(&self) -> WordLen {
+        self.wl
+    }
+
+    /// The full-rank run's trace (residual norms index 0..=r_max).
+    pub fn trace(&self) -> &IteraTrace {
+        &self.trace
+    }
+
+    /// Matvec-equivalent cost of the one-time fill.
+    pub fn fill_cost(&self) -> u64 {
+        self.trace.matvec_equivalents
+    }
+
+    /// Rank-`r` factors, bit-identical to `itera(w, r, wl)` (clamped to
+    /// `1..=r_max`). Costs one `K*r + r*N` copy — no recompression.
+    pub fn query(&self, r: usize) -> CompressedLinear {
+        let r = r.clamp(1, self.r_max());
+        CompressedLinear::LowRank {
+            w1: self.w1.take_cols(r),
+            w2: self.w2.take_rows(r),
+            wl: self.wl,
+        }
+    }
+
+    /// `||W - W'1[:, :r] W'2[:r, :]||_F` at any rank, straight from the
+    /// recorded residual trace (what a fresh rank-`r` run would report).
+    pub fn error_at(&self, r: usize) -> f32 {
+        let r = r.clamp(1, self.r_max());
+        self.trace.residual_norms[r.min(self.trace.residual_norms.len() - 1)]
+    }
+}
+
+/// Cache of [`IncrementalItera`] runs keyed by `(layer index, wl)`.
+///
+/// The index space is the caller's layer inventory (manifest order for the
+/// coordinator, vector order for synthetic models). `fills` counts actual
+/// decompositions, which the "each (layer, wl) compressed at most once"
+/// regression test asserts on.
+#[derive(Debug, Default)]
+pub struct CompressionCache {
+    entries: HashMap<(usize, WordLen), IncrementalItera>,
+    fills: u64,
+}
+
+impl CompressionCache {
+    pub fn new() -> CompressionCache {
+        CompressionCache::default()
+    }
+
+    /// Number of full-rank decompositions performed so far.
+    pub fn fills(&self) -> u64 {
+        self.fills
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total matvec-equivalent cost of every fill so far.
+    pub fn fill_cost(&self) -> u64 {
+        self.entries.values().map(|e| e.fill_cost()).sum()
+    }
+
+    pub fn get(&self, layer: usize, wl: WordLen) -> Option<&IncrementalItera> {
+        self.entries.get(&(layer, wl))
+    }
+
+    /// Fill (if missing) and return the entry for `(layer, wl)`.
+    pub fn get_or_fill(&mut self, layer: usize, wl: WordLen, w: &Matrix) -> &IncrementalItera {
+        if !self.entries.contains_key(&(layer, wl)) {
+            self.entries.insert((layer, wl), IncrementalItera::compress(w, wl));
+            self.fills += 1;
+        }
+        &self.entries[&(layer, wl)]
+    }
+
+    /// Fill every missing `(i, wl)` entry for `weights[i]`, fanning the
+    /// full-rank decompositions out on the shared thread pool.
+    pub fn fill_all(&mut self, weights: &[&Matrix], wl: WordLen, workers: usize) {
+        let missing: Vec<usize> = (0..weights.len())
+            .filter(|&i| !self.entries.contains_key(&(i, wl)))
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        let filled = par_map(missing.len(), workers, |j| {
+            IncrementalItera::compress(weights[missing[j]], wl)
+        });
+        for (j, entry) in filled.into_iter().enumerate() {
+            self.entries.insert((missing[j], wl), entry);
+            self.fills += 1;
+        }
+    }
+
+    /// Rank-`r` factors for layer `i` (must be filled).
+    pub fn query(&self, layer: usize, wl: WordLen, r: usize) -> Option<CompressedLinear> {
+        self.entries.get(&(layer, wl)).map(|e| e.query(r))
+    }
+
+    /// Approximation error of layer `i` truncated to rank `r`.
+    pub fn error_at(&self, layer: usize, wl: WordLen, r: usize) -> Option<f32> {
+        self.entries.get(&(layer, wl)).map(|e| e.error_at(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::itera;
+    use crate::util::rng::Pcg64;
+
+    fn weights(seed: u64, k: usize, n: usize) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::randn(k, n, &mut rng).scale(0.1)
+    }
+
+    #[test]
+    fn query_matches_fresh_run_bitwise() {
+        let w = weights(100, 18, 14);
+        let inc = IncrementalItera::compress(&w, 4);
+        assert_eq!(inc.r_max(), 14);
+        for r in [1usize, 3, 7, 14] {
+            let cached = inc.query(r);
+            let (fresh, _) = itera(&w, r, 4);
+            let (CompressedLinear::LowRank { w1: cw1, w2: cw2, .. },
+                 CompressedLinear::LowRank { w1: fw1, w2: fw2, .. }) = (&cached, &fresh)
+            else {
+                panic!("both must be LowRank");
+            };
+            assert_eq!(cw1.data(), fw1.data(), "w1 at r={r}");
+            assert_eq!(cw2.data(), fw2.data(), "w2 at r={r}");
+        }
+    }
+
+    #[test]
+    fn error_at_matches_fresh_trace() {
+        let w = weights(101, 16, 16);
+        let inc = IncrementalItera::compress(&w, 6);
+        for r in [2usize, 5, 9, 16] {
+            let (_, trace) = itera(&w, r, 6);
+            let fresh = *trace.residual_norms.last().unwrap();
+            assert_eq!(inc.error_at(r), fresh, "r={r}");
+        }
+    }
+
+    #[test]
+    fn query_clamps_rank() {
+        let w = weights(102, 8, 10);
+        let inc = IncrementalItera::compress(&w, 4);
+        assert_eq!(inc.query(0).rank(), 1);
+        assert_eq!(inc.query(999).rank(), 8);
+    }
+
+    #[test]
+    fn cache_fills_each_layer_once() {
+        let ws: Vec<Matrix> = (0..4).map(|i| weights(110 + i, 12, 12)).collect();
+        let refs: Vec<&Matrix> = ws.iter().collect();
+        let mut cache = CompressionCache::new();
+        cache.fill_all(&refs, 4, 2);
+        assert_eq!(cache.fills(), 4);
+        assert_eq!(cache.len(), 4);
+        // Re-filling and point lookups must not recompress.
+        cache.fill_all(&refs, 4, 2);
+        for i in 0..4 {
+            let _ = cache.get_or_fill(i, 4, &ws[i]);
+            assert!(cache.query(i, 4, 5).is_some());
+        }
+        assert_eq!(cache.fills(), 4);
+        // A different word length is a distinct compression.
+        let _ = cache.get_or_fill(0, 6, &ws[0]);
+        assert_eq!(cache.fills(), 5);
+        assert!(cache.fill_cost() > 0);
+    }
+}

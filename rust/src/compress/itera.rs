@@ -8,7 +8,7 @@
 //! iterations compensate it; outliers dominate the residual norm and get
 //! approximated first.
 
-use crate::linalg::svd_top1;
+use crate::linalg::{svd_top1_ws, PowerWorkspace};
 use crate::quant::{self, WordLen};
 use crate::tensor::Matrix;
 
@@ -20,6 +20,12 @@ use super::CompressedLinear;
 pub struct IteraTrace {
     /// `||R_k||_F` after each iteration, starting with `||W||_F` at k=0.
     pub residual_norms: Vec<f32>,
+    /// Matvec-equivalent work this run performed: one unit per O(K*N)
+    /// pass over the residual (power sweeps, the fused alpha bilinear,
+    /// the rank-1 downdate). The incremental-compression cache and the
+    /// SRA cost regression tests use this as a deterministic, wall-clock
+    /// independent cost metric.
+    pub matvec_equivalents: u64,
 }
 
 /// Run Algorithm 1 on `w` with target rank `r` and weight word length `wl`.
@@ -62,13 +68,19 @@ pub fn itera_opts(
     let (k_dim, n_dim) = w.shape();
     let r = r.clamp(1, k_dim.min(n_dim));
     let mut residual = w.clone();
-    let mut trace = IteraTrace { residual_norms: vec![residual.frob_norm()] };
+    let mut trace = IteraTrace {
+        residual_norms: vec![residual.frob_norm()],
+        ..Default::default()
+    };
 
     let mut w1 = Matrix::zeros(k_dim, r);
     let mut w2 = Matrix::zeros(r, n_dim);
+    // One workspace for all r truncated SVDs: the power sweeps — the
+    // dominant cost of the whole engine — run allocation-free.
+    let mut ws = PowerWorkspace::new();
 
     for k in 0..r {
-        let top = svd_top1(&residual, k as u64);
+        let top = svd_top1_ws(&residual, k as u64, &mut ws);
         if top.sigma <= 0.0 {
             // Residual exhausted (exactly representable) — remaining ranks
             // stay zero, which the zero-padded runtime path treats as free.
@@ -94,9 +106,10 @@ pub fn itera_opts(
             let nv = crate::tensor::dot(&qv, &qv) as f64;
             let denom = nu * nv;
             if denom > 0.0 {
-                // num = qu^T R qv, computed as dot(qu, R qv).
-                let rqv = residual.matvec(&qv);
-                let num = crate::tensor::dot(&qu, &rqv) as f64;
+                // num = qu^T R qv, fused into one pass over the residual
+                // (no K-length temporary, R read once instead of twice).
+                let num = residual.bilinear(&qu, &qv) as f64;
+                trace.matvec_equivalents += 1;
                 let alpha = (num / denom) as f32;
                 if alpha.is_finite() && alpha > 0.0 {
                     for x in qv.iter_mut() {
@@ -115,6 +128,7 @@ pub fn itera_opts(
             // factors stay quantized but their error is never compensated.
             residual.sub_outer(&u_col, &v_row);
         }
+        trace.matvec_equivalents += 1;
         trace.residual_norms.push(residual.frob_norm());
 
         for i in 0..k_dim {
@@ -122,6 +136,7 @@ pub fn itera_opts(
         }
         w2.row_mut(k).copy_from_slice(&qv);
     }
+    trace.matvec_equivalents += ws.matvecs;
 
     (CompressedLinear::LowRank { w1, w2, wl }, trace)
 }
@@ -283,5 +298,19 @@ mod tests {
         let (a, _) = itera(&w, 7, 5);
         let (b, _) = itera(&w, 7, 5);
         assert_eq!(a.effective().data(), b.effective().data());
+    }
+
+    #[test]
+    fn trace_counts_matvec_work() {
+        let w = weights(55, 16, 16);
+        let (_, t4) = itera(&w, 4, 4);
+        let (_, t8) = itera(&w, 8, 4);
+        assert!(t4.matvec_equivalents > 0, "work must be tallied");
+        assert!(
+            t8.matvec_equivalents > t4.matvec_equivalents,
+            "more ranks, more work: {} vs {}",
+            t8.matvec_equivalents,
+            t4.matvec_equivalents
+        );
     }
 }

@@ -10,13 +10,17 @@
 //!   decomposition with quantization inside the refinement loop, so each
 //!   rank-1 step compensates the quantization error of all previous steps.
 //!
-//! Size/NOps accounting for Pareto analysis lives in [`accounting`].
+//! Size/NOps accounting for Pareto analysis lives in [`accounting`];
+//! the run-once-query-any-rank engine behind the SRA/DSE search loops
+//! lives in [`incremental`].
 
 mod accounting;
+pub mod incremental;
 mod itera;
 
 pub use accounting::{breakeven_rank, compression_ratio, layer_cost, nops_dense,
     nops_svd, param_bits, rank_for_ratio, LayerCost};
+pub use incremental::{CompressionCache, IncrementalItera};
 pub use itera::{itera, itera_opts, IteraOpts, IteraTrace};
 
 use crate::linalg;

@@ -1,31 +1,52 @@
 //! Experiment coordinator: glues compression, SRA, evaluation and DSE.
 //!
 //! The coordinator owns the PJRT engine, the per-pair models and corpora,
-//! and an evaluation cache; everything the figure runners ([`figures`])
-//! and the examples do goes through it. Per-layer compression jobs fan out
-//! on the thread pool; BLEU evaluations are memoized by configuration
-//! fingerprint (the SRA search revisits allocations).
+//! and two caches; everything the figure runners ([`figures`]) and the
+//! examples do goes through it. Per-layer compression jobs fan out on the
+//! thread pool; BLEU evaluations are memoized by configuration fingerprint
+//! (the SRA search revisits allocations); Algorithm 1 runs are memoized
+//! per `(pair, wl)` by the incremental compression cache
+//! (`compress::incremental`), so every SvdIter/SvdIterRanks configuration
+//! after the first is a rank-truncation query instead of a recompression.
+//!
+//! Everything touching the PJRT runtime (the coordinator itself, figures,
+//! serving) needs the `pjrt` feature; the method/dispatch layer
+//! ([`methods`]) and report emission stay in the default build.
 
+#[cfg(feature = "pjrt")]
 pub mod figures;
 mod methods;
 pub mod report;
+#[cfg(feature = "pjrt")]
 mod serve;
 
-pub use methods::{CompressedModel, Method};
+pub use methods::{compress_model_from, CompressedModel, Method};
+#[cfg(feature = "pjrt")]
 pub use serve::{serve_bank, serve_demo};
 
+#[cfg(feature = "pjrt")]
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+use std::sync::{Arc, Mutex};
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
-use crate::compress::CompressedLinear;
+#[cfg(feature = "pjrt")]
+use crate::compress::{CompressedLinear, IncrementalItera};
+#[cfg(feature = "pjrt")]
 use crate::config::ExpConfig;
+#[cfg(feature = "pjrt")]
 use crate::eval::{evaluate_bleu, Corpus};
+#[cfg(feature = "pjrt")]
 use crate::model::{Manifest, PairModel};
+#[cfg(feature = "pjrt")]
+use crate::quant::WordLen;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Mode, TranslateSession};
 
 /// Orchestrates the full ITERA-LLM pipeline against the built artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Coordinator {
     pub manifest: Manifest,
     pub engine: Engine,
@@ -34,8 +55,16 @@ pub struct Coordinator {
     corpora: BTreeMap<String, Corpus>,
     calib: BTreeMap<String, Corpus>,
     bleu_cache: Mutex<HashMap<u64, f64>>,
+    /// Incremental Algorithm 1 cache: one full-rank run per
+    /// `(pair, wl, layer)`, truncation queries afterwards.
+    itera_caches: Mutex<HashMap<(String, WordLen), Arc<Vec<IncrementalItera>>>>,
+    /// Itera-family compression requests per `(pair, wl)` — the cache is
+    /// only built from the second request on, so a one-shot compression
+    /// never pays the full-rank fill.
+    itera_uses: Mutex<HashMap<(String, WordLen), u32>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Coordinator {
     /// Load manifest, weights and corpora for every trained pair and
     /// create the PJRT engine.
@@ -59,6 +88,8 @@ impl Coordinator {
             corpora,
             calib,
             bleu_cache: Mutex::new(HashMap::new()),
+            itera_caches: Mutex::new(HashMap::new()),
+            itera_uses: Mutex::new(HashMap::new()),
         })
     }
 
@@ -70,7 +101,70 @@ impl Coordinator {
         self.models.keys().cloned().collect()
     }
 
-    /// Compress every linear of `pair` with `method` (parallel per layer).
+    /// Opportunistic cache lookup: returns the `(pair, wl)` cache when it
+    /// already exists, or — from the *second* itera-family request for
+    /// that key on — builds it. The first request returns `None` so a
+    /// one-shot compression keeps the cheap direct rank-`r` path instead
+    /// of paying L full-rank decompositions; every search/sweep pattern
+    /// (SRA oracle, fig 7/8/11 grids) hits the key repeatedly and gets
+    /// the cache from its second configuration onward.
+    fn itera_cache_opportunistic(
+        &self,
+        pair: &str,
+        wl: WordLen,
+    ) -> Option<Arc<Vec<IncrementalItera>>> {
+        let key = (pair.to_string(), wl);
+        if let Some(c) = self.itera_caches.lock().unwrap().get(&key) {
+            return Some(c.clone());
+        }
+        let uses = {
+            let mut map = self.itera_uses.lock().unwrap();
+            let n = map.entry(key).or_insert(0);
+            *n += 1;
+            *n
+        };
+        if uses >= 2 {
+            Some(self.itera_cache(pair, wl))
+        } else {
+            None
+        }
+    }
+
+    /// Drop all incremental compression caches (and their use counters),
+    /// releasing the retained full-rank factors. Long-lived coordinators
+    /// can call this between sweeps over different word lengths.
+    pub fn drop_itera_caches(&self) {
+        self.itera_caches.lock().unwrap().clear();
+        self.itera_uses.lock().unwrap().clear();
+    }
+
+    /// The incremental Algorithm 1 cache for `(pair, wl)`, filling it (in
+    /// parallel, one full-rank decomposition per layer) on first use.
+    pub fn itera_cache(&self, pair: &str, wl: WordLen) -> Arc<Vec<IncrementalItera>> {
+        let key = (pair.to_string(), wl);
+        if let Some(c) = self.itera_caches.lock().unwrap().get(&key) {
+            return c.clone();
+        }
+        // Fill outside the lock: decompositions are slow and deterministic,
+        // so a racing duplicate fill is wasteful but harmless (first insert
+        // wins).
+        let model = self.model(pair);
+        let linears = &self.manifest.linears;
+        let built: Vec<IncrementalItera> =
+            crate::util::pool::par_map(linears.len(), self.cfg.workers, |i| {
+                IncrementalItera::compress(model.linear(&linears[i].name), wl)
+            });
+        let built = Arc::new(built);
+        self.itera_caches
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| built.clone())
+            .clone()
+    }
+
+    /// Compress every linear of `pair` with `method` (cache-backed for the
+    /// Algorithm 1 family, parallel per layer otherwise).
     pub fn compress(&self, pair: &str, method: &Method) -> CompressedModel {
         methods::compress_model(self, pair, method)
     }
@@ -119,7 +213,9 @@ impl Coordinator {
         Ok(d.score)
     }
 
-    /// Compress a single layer by manifest index (SRA inner loop).
+    /// Compress a single layer by manifest index (SRA inner loop). For the
+    /// Algorithm 1 family this is a truncation query against the
+    /// incremental cache once the `(pair, wl)` key has warmed up.
     pub fn compress_layer(
         &self,
         pair: &str,
@@ -127,12 +223,17 @@ impl Coordinator {
         method: &Method,
         rank: usize,
     ) -> CompressedLinear {
+        if let Method::SvdIter { wl, .. } | Method::SvdIterRanks { wl, .. } = method {
+            if let Some(cache) = self.itera_cache_opportunistic(pair, *wl) {
+                return cache[idx].query(rank);
+            }
+        }
         let l = &self.manifest.linears[idx];
         methods::compress_one(self.models[pair].linear(&l.name), method, rank)
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -164,5 +265,18 @@ mod tests {
         let b = c.bleu_calib("en-de", &cm).unwrap();
         assert_eq!(a, b);
         assert!(t0.elapsed().as_millis() < 50, "second call must be cached");
+    }
+
+    #[test]
+    fn itera_cache_fills_once_per_pair_wl() {
+        let Some(c) = coordinator() else { return };
+        let first = c.itera_cache("en-de", 4);
+        let again = c.itera_cache("en-de", 4);
+        assert!(Arc::ptr_eq(&first, &again), "same Arc on repeat lookup");
+        // Two different uniform fractions share the same cache fill.
+        let a = c.compress("en-de", &Method::SvdIter { wl: 4, rank_frac: 0.25 });
+        let b = c.compress("en-de", &Method::SvdIter { wl: 4, rank_frac: 0.5 });
+        assert!(a.ranks(&c.manifest).iter().sum::<usize>()
+            < b.ranks(&c.manifest).iter().sum::<usize>());
     }
 }

@@ -19,6 +19,7 @@
 //! `artifacts/*.hlo.txt` through the PJRT C API and drives everything else
 //! natively.
 
+#[cfg(feature = "pjrt")]
 pub mod cli;
 pub mod compress;
 pub mod config;

@@ -11,7 +11,7 @@ mod jacobi;
 mod power;
 
 pub use jacobi::{svd, Svd};
-pub use power::{svd_top1, TopTriplet};
+pub use power::{svd_top1, svd_top1_ws, PowerWorkspace, TopTriplet};
 
 use crate::tensor::Matrix;
 

@@ -20,17 +20,51 @@ pub struct TopTriplet {
 const MAX_ITERS: usize = 300;
 const REL_TOL: f64 = 1e-9;
 
+/// Reusable buffers for the alternating power sweeps.
+///
+/// One workspace serves any matrix shape: the `u`/`v` buffers grow to the
+/// largest shape seen and are then reused allocation-free, which is what
+/// lets Algorithm 1 run `r` truncated SVDs without a single per-sweep
+/// allocation. Also tallies the matvec-equivalent operations executed
+/// through it (one unit per `A*v` / `A^T*u`), the cost metric
+/// EXPERIMENTS.md §Perf and the compression-cache accounting use.
+#[derive(Debug, Default)]
+pub struct PowerWorkspace {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    /// matvec-equivalents executed through this workspace.
+    pub matvecs: u64,
+}
+
+impl PowerWorkspace {
+    pub fn new() -> PowerWorkspace {
+        PowerWorkspace::default()
+    }
+}
+
 /// Compute the leading singular triplet of `a`.
+///
+/// Convenience wrapper over [`svd_top1_ws`] with a throwaway workspace;
+/// hot loops (Algorithm 1) should hold a [`PowerWorkspace`] and call
+/// [`svd_top1_ws`] directly.
+pub fn svd_top1(a: &Matrix, seed: u64) -> TopTriplet {
+    let mut ws = PowerWorkspace::new();
+    svd_top1_ws(a, seed, &mut ws)
+}
+
+/// Compute the leading singular triplet of `a`, reusing `ws`'s buffers so
+/// the power sweep itself performs no allocations.
 ///
 /// Deterministic: the start vector is seeded from `seed` so compression
 /// runs reproduce bit-identically. Falls back to a zero triplet for an
 /// all-zero matrix (residual fully consumed).
-pub fn svd_top1(a: &Matrix, seed: u64) -> TopTriplet {
+pub fn svd_top1_ws(a: &Matrix, seed: u64, ws: &mut PowerWorkspace) -> TopTriplet {
     let (m, n) = a.shape();
     let mut rng = Pcg64::seeded(seed, 0x5eed);
     // Start from the largest-norm row's direction when available — cheap
     // spectral hint that shaves iterations on outlier-heavy weights.
-    let mut v: Vec<f32> = {
+    ws.v.clear();
+    {
         let mut best = 0usize;
         let mut best_n = -1.0f32;
         for i in 0..m {
@@ -43,41 +77,42 @@ pub fn svd_top1(a: &Matrix, seed: u64) -> TopTriplet {
         if best_n <= 0.0 {
             return TopTriplet { sigma: 0.0, u: vec![0.0; m], v: vec![0.0; n] };
         }
-        a.row(best).to_vec()
-    };
-    let nv = crate::tensor::norm2(&v);
+        ws.v.extend_from_slice(a.row(best));
+    }
+    let nv = crate::tensor::norm2(&ws.v);
     if nv == 0.0 {
-        for x in v.iter_mut() {
+        for x in ws.v.iter_mut() {
             *x = rng.normal();
         }
     }
-    normalize(&mut v);
+    normalize(&mut ws.v);
 
-    let mut u = vec![0.0f32; m];
     let mut sigma_prev = 0.0f64;
     let mut sigma = 0.0f64;
     for _ in 0..MAX_ITERS {
         // u <- A v
-        u = a.matvec(&v);
-        let un = crate::tensor::norm2(&u);
+        a.matvec_into(&ws.v, &mut ws.u);
+        ws.matvecs += 1;
+        let un = crate::tensor::norm2(&ws.u);
         if un == 0.0 {
-            return TopTriplet { sigma: 0.0, u: vec![0.0; m], v };
+            return TopTriplet { sigma: 0.0, u: vec![0.0; m], v: ws.v.clone() };
         }
-        crate::tensor::scale(&mut u, 1.0 / un);
+        crate::tensor::scale(&mut ws.u, 1.0 / un);
         // v <- A^T u
-        v = a.tr_matvec(&u);
-        let vn = crate::tensor::norm2(&v);
+        a.tr_matvec_into(&ws.u, &mut ws.v);
+        ws.matvecs += 1;
+        let vn = crate::tensor::norm2(&ws.v);
         if vn == 0.0 {
-            return TopTriplet { sigma: 0.0, u, v: vec![0.0; n] };
+            return TopTriplet { sigma: 0.0, u: ws.u.clone(), v: vec![0.0; n] };
         }
-        crate::tensor::scale(&mut v, 1.0 / vn);
+        crate::tensor::scale(&mut ws.v, 1.0 / vn);
         sigma = vn as f64;
         if (sigma - sigma_prev).abs() <= REL_TOL * sigma.max(1e-30) {
             break;
         }
         sigma_prev = sigma;
     }
-    TopTriplet { sigma: sigma as f32, u, v }
+    TopTriplet { sigma: sigma as f32, u: ws.u.clone(), v: ws.v.clone() }
 }
 
 fn normalize(x: &mut [f32]) {
@@ -146,5 +181,20 @@ mod tests {
         let t2 = svd_top1(&a, 9);
         assert_eq!(t1.sigma, t2.sigma);
         assert_eq!(t1.u, t2.u);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_across_shapes() {
+        let mut rng = Pcg64::new(33);
+        let mut ws = PowerWorkspace::new();
+        for trial in 0..4u64 {
+            let a = Matrix::randn(6 + trial as usize, 9 - trial as usize, &mut rng);
+            let fresh = svd_top1(&a, trial);
+            let reused = svd_top1_ws(&a, trial, &mut ws);
+            assert_eq!(fresh.sigma, reused.sigma);
+            assert_eq!(fresh.u, reused.u);
+            assert_eq!(fresh.v, reused.v);
+        }
+        assert!(ws.matvecs > 0, "workspace must tally its matvecs");
     }
 }

@@ -83,18 +83,28 @@ pub fn quantize_rows(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
 pub fn quantize_cols(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
     let lv = levels(wl);
     let mut out = Matrix::zeros(a.rows(), a.cols());
+    // Per-column max-abs in ONE row-major pass: the matrix is stored
+    // row-major, so scanning it column-by-column strides by `cols` floats
+    // per access and misses cache on every load for wide matrices.
+    // Accumulating all column maxes while streaming rows touches each
+    // cache line exactly once (max is order-independent, so the scales
+    // are bit-identical to the column-order scan).
     let mut scales = vec![0.0f32; a.cols()];
-    for j in 0..a.cols() {
-        let mut mx = 0.0f32;
-        for i in 0..a.rows() {
-            mx = mx.max(a.get(i, j).abs());
+    for i in 0..a.rows() {
+        for (mx, &x) in scales.iter_mut().zip(a.row(i)) {
+            let ax = x.abs();
+            if ax > *mx {
+                *mx = ax;
+            }
         }
-        scales[j] = scale_for(mx, lv);
+    }
+    for s in scales.iter_mut() {
+        *s = scale_for(*s, lv);
     }
     for i in 0..a.rows() {
         let row = out.row_mut(i);
-        for (j, o) in row.iter_mut().enumerate() {
-            *o = quantize_val(a.get(i, j), scales[j], lv);
+        for ((o, &x), &s) in row.iter_mut().zip(a.row(i)).zip(&scales) {
+            *o = quantize_val(x, s, lv);
         }
     }
     (out, scales)

@@ -12,9 +12,49 @@
 //! source-token buffer — the same weights-stay-resident discipline a real
 //! accelerator deployment would use, and the single biggest perf lever on
 //! the eval loop (see EXPERIMENTS.md §Perf).
+//!
+//! The engine/session code needs the external `xla` crate and is gated
+//! behind the `pjrt` feature; [`Mode`] is plain metadata shared with the
+//! (always-built) compression/coordinator method plumbing, so it lives
+//! here unconditionally.
 
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(feature = "pjrt")]
 mod session;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use session::{ArgBank, Mode, TranslateSession};
+#[cfg(feature = "pjrt")]
+pub use session::{ArgBank, TranslateSession};
+
+/// Which compiled model variant to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// `translate_dense.hlo.txt`: each compressed linear is a `[K x N]`
+    /// argument (FP32 reference and quantization-only baseline).
+    Dense,
+    /// `translate_svd.hlo.txt`: each compressed linear is a rank-padded
+    /// `[K x r_max]`, `[r_max x N]` factor pair.
+    Svd,
+}
+
+impl Mode {
+    pub fn key(self) -> &'static str {
+        match self {
+            Mode::Dense => "dense",
+            Mode::Svd => "svd",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_keys() {
+        assert_eq!(Mode::Dense.key(), "dense");
+        assert_eq!(Mode::Svd.key(), "svd");
+    }
+}

@@ -10,27 +10,7 @@ use crate::compress::CompressedLinear;
 use crate::model::{Manifest, PairModel};
 use crate::quant;
 
-use super::Engine;
-
-/// Which compiled model variant to execute.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mode {
-    /// `translate_dense.hlo.txt`: each compressed linear is a `[K x N]`
-    /// argument (FP32 reference and quantization-only baseline).
-    Dense,
-    /// `translate_svd.hlo.txt`: each compressed linear is a rank-padded
-    /// `[K x r_max]`, `[r_max x N]` factor pair.
-    Svd,
-}
-
-impl Mode {
-    pub fn key(self) -> &'static str {
-        match self {
-            Mode::Dense => "dense",
-            Mode::Svd => "svd",
-        }
-    }
-}
+use super::{Engine, Mode};
 
 /// A compiled translate executable plus the manifest metadata needed to
 /// pack its arguments.

@@ -9,6 +9,15 @@
 //! Workflow per the paper: equal-split init → finite-difference sensitivity
 //! (Eq. 8) → move `δ` ranks from the least- to the most-sensitive layer
 //! (Eq. 9–10) → decay `δ` (Eq. 11) → stop on convergence or max iters.
+//!
+//! Compression-backed oracles live in [`oracle`]: the cache-backed proxy
+//! answers every rank probe from one up-front full-rank decomposition per
+//! layer (see `compress::incremental`), so a full SRA round costs L
+//! compressions instead of O(evals * L).
+
+pub mod oracle;
+
+pub use oracle::{run_cached_proxy, ProxyOracle};
 
 use crate::util::rng::Pcg64;
 

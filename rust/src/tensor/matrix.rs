@@ -108,23 +108,51 @@ impl Matrix {
     /// i-k-j loop order: the inner loop walks both `other.row(k)` and the
     /// output row contiguously, which is the main reason Algorithm 1's
     /// residual updates run at memory speed (see EXPERIMENTS.md §Perf).
+    /// Shapes whose B panel outgrows the cache take a blocked path with
+    /// identical (bit-exact) accumulation order.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue; // zero-padded SVD factors skip whole rows
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
+        if m * k * n >= MM_BLOCK_MIN_MACS && k > MM_BK && n > MM_BJ {
+            matmul_rows_blocked(self, other, 0, m, &mut out.data);
+        } else {
+            matmul_rows_simple(self, other, 0, m, &mut out.data);
         }
+        out
+    }
+
+    /// Row-parallel matrix product on the shared thread pool.
+    ///
+    /// Splits the output rows into one contiguous chunk per worker and runs
+    /// the cache-blocked kernel per chunk. Falls back to [`Self::matmul`]
+    /// when a single worker (or a small shape) would not amortize the
+    /// thread handoff. Bit-identical to the serial product: each output
+    /// element's accumulation order is unchanged.
+    pub fn matmul_par(&self, other: &Matrix, workers: usize) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let workers = workers.min(m).max(1);
+        if workers == 1 || m * k * n < MM_PAR_MIN_MACS {
+            return self.matmul(other);
+        }
+        let chunk = (m + workers - 1) / workers;
+        let mut out = Matrix::zeros(m, n);
+        // Each worker owns a disjoint row range of the single output
+        // buffer — no per-chunk buffers, every element written once.
+        std::thread::scope(|scope| {
+            for (c, out_rows) in out.data.chunks_mut(chunk * n).enumerate() {
+                let i0 = c * chunk;
+                let i1 = i0 + out_rows.len() / n;
+                scope.spawn(move || {
+                    if k > MM_BK && n > MM_BJ {
+                        matmul_rows_blocked(self, other, i0, i1, out_rows);
+                    } else {
+                        matmul_rows_simple(self, other, i0, i1, out_rows);
+                    }
+                });
+            }
+        });
         out
     }
 
@@ -179,21 +207,61 @@ impl Matrix {
 
     /// Matrix-vector product `self (m x n) * v (n)`.
     pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// `out = self * v` without allocating once `out` has capacity — the
+    /// power-iteration hot loop reuses one buffer across all sweeps.
+    pub fn matvec_into(&self, v: &[f32], out: &mut Vec<f32>) {
         assert_eq!(v.len(), self.cols);
-        (0..self.rows).map(|i| super::dot(self.row(i), v)).collect()
+        out.clear();
+        out.extend((0..self.rows).map(|i| super::dot(self.row(i), v)));
     }
 
     /// `self^T * v` without materializing the transpose.
     pub fn tr_matvec(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.tr_matvec_into(v, &mut out);
+        out
+    }
+
+    /// `out = self^T * v`, allocation-free on reuse (see [`Self::matvec_into`]).
+    pub fn tr_matvec_into(&self, v: &[f32], out: &mut Vec<f32>) {
         assert_eq!(v.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        out.clear();
+        out.resize(self.cols, 0.0);
         for (i, &vi) in v.iter().enumerate() {
             if vi == 0.0 {
                 continue;
             }
-            super::axpy(vi, self.row(i), &mut out);
+            super::axpy(vi, self.row(i), out);
         }
-        out
+    }
+
+    /// Bilinear form `u^T * self * v` in a single pass over the matrix —
+    /// the fused version of the `matvec` + `dot` pair in Algorithm 1's
+    /// alpha-rescale step: no m-length temporary, and the matrix is read
+    /// exactly once. Zero entries of `u` skip whole rows, mirroring
+    /// [`Self::sub_outer`]'s sparsity shortcut on quantized factors.
+    ///
+    /// Note: the outer reduction uses a 4-lane accumulator, which
+    /// reassociates the f32 sum relative to the two-pass form — results
+    /// agree to rounding (last-ulp) but are not bit-identical to it. The
+    /// function itself is deterministic, which is what the compression
+    /// reproducibility and truncation-invariant tests rely on.
+    pub fn bilinear(&self, u: &[f32], v: &[f32]) -> f32 {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        let mut acc = [0.0f32; 4];
+        for (i, &ui) in u.iter().enumerate() {
+            if ui == 0.0 {
+                continue;
+            }
+            acc[i & 3] += ui * super::dot(self.row(i), v);
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
     }
 
     /// Horizontal concatenation (Algorithm 1's `hstack`).
@@ -225,16 +293,87 @@ impl Matrix {
         out
     }
 
-    /// Take the leading `cols` columns.
+    /// Take the leading `cols` columns (per-row memcpy — this sits on the
+    /// incremental-cache query path).
     pub fn take_cols(&self, cols: usize) -> Matrix {
         assert!(cols <= self.cols);
-        Matrix::from_fn(self.rows, cols, |i, j| self.get(i, j))
+        let mut out = Matrix::zeros(self.rows, cols);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
+        }
+        out
     }
 
     /// Take the leading `rows` rows.
     pub fn take_rows(&self, rows: usize) -> Matrix {
         assert!(rows <= self.rows);
         Matrix::from_vec(rows, self.cols, self.data[..rows * self.cols].to_vec())
+    }
+}
+
+/// Cache-block edges for the large-shape matmul path: one `MM_BK x MM_BJ`
+/// panel of B (32 KiB of f32) stays cache-resident while every A row of
+/// the row range streams over it.
+const MM_BK: usize = 64;
+const MM_BJ: usize = 128;
+/// Below this many MACs the plain i-k-j loop wins: B still fits in L2
+/// (256x256 f32 = 256 KiB) and blocking is pure bookkeeping. 512^3 and up
+/// (B >= 1 MiB) take the blocked path.
+const MM_BLOCK_MIN_MACS: usize = 1 << 25;
+/// Threads pay off earlier than blocking does: per-row work is O(k*n) and
+/// the scoped-pool handoff is microseconds.
+const MM_PAR_MIN_MACS: usize = 1 << 22;
+
+/// i-k-j product of rows `i0..i1` of `a` with `b`, written to `out`
+/// (`(i1-i0) x n`, row-major). Zero A entries skip whole B rows — the
+/// zero-padded SVD factors rely on this.
+fn matmul_rows_simple(a: &Matrix, b: &Matrix, i0: usize, i1: usize, out: &mut [f32]) {
+    let n = b.cols;
+    for i in i0..i1 {
+        let a_row = a.row(i);
+        let o_row = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Cache-blocked variant of [`matmul_rows_simple`]: j and k are tiled so
+/// the touched B panel fits in cache across the whole row range. The k
+/// blocks are visited in ascending order, so every output element
+/// accumulates in exactly the same order as the simple loop (bit-equal
+/// results).
+fn matmul_rows_blocked(a: &Matrix, b: &Matrix, i0: usize, i1: usize, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + MM_BJ).min(n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + MM_BK).min(k);
+            for i in i0..i1 {
+                let a_row = a.row(i);
+                let o_row = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
+                for kk in k0..k1 {
+                    let av = a_row[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b.data[kk * n + j0..kk * n + j1];
+                    for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        j0 = j1;
     }
 }
 
@@ -323,5 +462,54 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_simple_bitwise() {
+        // Shapes straddling the block edges, including non-multiples.
+        let mut rng = Pcg64::new(21);
+        for &(m, k, n) in &[(3usize, 200usize, 150usize), (17, 130, 257), (40, 64, 129)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let mut simple = vec![0.0f32; m * n];
+            matmul_rows_simple(&a, &b, 0, m, &mut simple);
+            let mut blocked = vec![0.0f32; m * n];
+            matmul_rows_blocked(&a, &b, 0, m, &mut blocked);
+            assert_eq!(simple, blocked, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        let mut rng = Pcg64::new(22);
+        let a = Matrix::randn(170, 180, &mut rng);
+        let b = Matrix::randn(180, 190, &mut rng);
+        let serial = a.matmul(&b);
+        for workers in [1usize, 2, 3, 7] {
+            let par = a.matmul_par(&b, workers);
+            assert_eq!(serial.data(), par.data(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn matvec_into_reuses_buffer() {
+        let a = mat(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let mut buf = Vec::new();
+        a.matvec_into(&[1., 0., 1.], &mut buf);
+        assert_eq!(buf, vec![4., 10.]);
+        a.tr_matvec_into(&[1., 1.], &mut buf);
+        assert_eq!(buf, vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn bilinear_matches_matvec_dot() {
+        let mut rng = Pcg64::new(23);
+        let a = Matrix::randn(9, 7, &mut rng);
+        let mut u: Vec<f32> = (0..9).map(|i| (i as f32 * 0.37).sin()).collect();
+        u[4] = 0.0; // exercise the zero-row skip
+        let v: Vec<f32> = (0..7).map(|i| (i as f32 * 0.11).cos()).collect();
+        let via_matvec = crate::tensor::dot(&u, &a.matvec(&v));
+        let fused = a.bilinear(&u, &v);
+        assert!((via_matvec - fused).abs() < 1e-4, "{via_matvec} vs {fused}");
     }
 }

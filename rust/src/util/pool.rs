@@ -4,18 +4,28 @@
 //! compression (Algorithm 1 is independent across weight matrices) with
 //! `std::thread::scope` work-stealing over an atomic index. On the 1-core
 //! CI image this degrades gracefully to sequential execution.
+//!
+//! Result slots are written lock-free: the atomic work-distribution index
+//! hands every slot index to exactly one worker, so each `Option<T>` slot
+//! has a single writer and needs no mutex — the scope join publishes the
+//! writes before the collection pass reads them.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use (min(available_parallelism, cap)).
 pub fn default_workers(cap: usize) -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(cap).max(1)
 }
 
+/// Shared pointer into the slot vector. Safety rests on the caller handing
+/// each index to at most one writer (the atomic counter guarantees that).
+struct SlotPtr<T>(*mut Option<T>);
+
+unsafe impl<T: Send> Sync for SlotPtr<T> {}
+
 /// Apply `f` to every index in `0..n`, in parallel, collecting results in
 /// index order. `f` must be `Sync`; results are written lock-free into a
-/// preallocated slot vector.
+/// preallocated slot vector (one writer per slot, no per-item mutex).
 pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -29,23 +39,29 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let slot_ptr = SlotPtr(slots.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
+            let next = &next;
+            let f = &f;
+            let slot_ptr = &slot_ptr;
+            scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
+                // SAFETY: `fetch_add` yields each `i < n` exactly once, so
+                // this thread is the only writer of slot `i`; the slot was
+                // initialized to `None` before the scope started, and the
+                // scope's join synchronizes the write with the read below.
+                unsafe { *slot_ptr.0.add(i) = Some(v) };
             });
         }
     });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("worker failed to fill slot"))
-        .collect()
+    slots.into_iter().map(|s| s.expect("worker failed to fill slot")).collect()
 }
 
 #[cfg(test)]
@@ -69,5 +85,21 @@ mod tests {
         let a = par_map(37, 1, |i| i as f64 * 1.5);
         let b = par_map(37, 3, |i| i as f64 * 1.5);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heap_results_survive_lock_free_slots() {
+        // Non-Copy results with drops exercise slot write + move-out.
+        let out = par_map(64, 4, |i| vec![i; i % 5 + 1]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.len(), i % 5 + 1);
+            assert!(v.iter().all(|&x| x == i));
+        }
+    }
+
+    #[test]
+    fn many_more_items_than_workers() {
+        let out = par_map(1000, 7, |i| i as u64 + 1);
+        assert_eq!(out.iter().sum::<u64>(), 500_500);
     }
 }

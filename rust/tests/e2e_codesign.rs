@@ -1,5 +1,10 @@
 //! End-to-end co-design integration tests: the paper's qualitative claims
 //! must hold on the substituted substrate (shape, not absolute numbers).
+//!
+//! Needs the PJRT runtime (BLEU through the compiled artifacts), so it
+//! only builds with the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use itera_llm::config::ExpConfig;
 use itera_llm::coordinator::{figures, Coordinator, Method};

@@ -5,6 +5,11 @@
 //! AOT-compiled HLO (with the Pallas kernels lowered inside), and BLEU
 //! scoring — i.e. exactly what the coordinator does during DSE, minus the
 //! search loops. Skipped when `make artifacts` has not run.
+//!
+//! The whole suite needs the PJRT runtime, so it only builds with the
+//! `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,85 @@
+//! Integration: the incremental compression cache against the recompute
+//! path on a synthetic multi-layer model.
+//!
+//! Pins the PR's acceptance criteria: an SRA run backed by real
+//! compression performs each `(layer, wl)` compression **at most once**,
+//! follows the exact same search trajectory as the recompute oracle, and
+//! spends >= 5x fewer itera matvec-equivalents with every layer probed
+//! each iteration (`probe_layers = 0`).
+
+use itera_llm::compress::{itera, CompressionCache};
+use itera_llm::sra::{self, ProxyOracle, SraConfig};
+use itera_llm::tensor::Matrix;
+use itera_llm::util::rng::Pcg64;
+
+/// Synthetic multi-layer model with per-layer outlier structure so the
+/// sensitivity search has a real gradient to follow.
+fn synthetic_model(layers: usize, dim: usize) -> Vec<Matrix> {
+    let mut rng = Pcg64::new(0xCAFE);
+    (0..layers)
+        .map(|i| {
+            let mut w = Matrix::randn(dim, dim, &mut rng).scale(0.1);
+            let col = i % dim;
+            for r in 0..dim {
+                w.set(r, col, w.get(r, col) * (2.0 + i as f32));
+            }
+            w
+        })
+        .collect()
+}
+
+#[test]
+fn cached_factors_match_fresh_compression() {
+    let layers = synthetic_model(3, 16);
+    let refs: Vec<&Matrix> = layers.iter().collect();
+    let mut cache = CompressionCache::new();
+    cache.fill_all(&refs, 4, 2);
+    for (i, w) in layers.iter().enumerate() {
+        for r in [1usize, 5, 16] {
+            let fresh = itera(w, r, 4).0.effective();
+            let cached = cache.query(i, 4, r).unwrap().effective();
+            assert_eq!(fresh.data(), cached.data(), "layer {i} rank {r}");
+        }
+    }
+    assert_eq!(cache.fills(), 3, "three layers, three decompositions, ever");
+}
+
+#[test]
+fn sra_with_cache_compresses_each_layer_once_and_is_5x_cheaper() {
+    let layers = synthetic_model(6, 24);
+    // Budget at 3/4 of total capacity: the search probes ranks near r_max,
+    // so a recompute-backed probe costs nearly as much as one cache fill —
+    // the >=5x bound below then holds with a wide margin regardless of how
+    // the power-iteration sweep counts distribute across ranks.
+    let budget: usize =
+        layers.iter().map(|w| w.rows().min(w.cols())).sum::<usize>() * 3 / 4;
+    // probe_layers = 0 probes every layer each iteration — the most
+    // oracle-hungry configuration (2 evals per layer per iteration).
+    let cfg = SraConfig { probe_layers: 0, max_iters: 6, patience: 3, ..Default::default() };
+
+    let (res_cached, cached) = sra::run_cached_proxy(&layers, 4, budget, &cfg, 2);
+    assert_eq!(
+        cached.compressions(),
+        layers.len() as u64,
+        "each (layer, wl) compressed at most once"
+    );
+
+    let mut recompute = ProxyOracle::recompute(&layers, 4);
+    let res_recompute = recompute.run_search(budget, &cfg);
+
+    // Identical search trajectory: same scores, allocation and eval count.
+    assert_eq!(res_cached.ranks, res_recompute.ranks);
+    assert_eq!(res_cached.accuracy, res_recompute.accuracy);
+    assert_eq!(res_cached.trace, res_recompute.trace);
+    assert_eq!(res_cached.evals, res_recompute.evals);
+    assert_eq!(res_cached.ranks.iter().sum::<usize>(), budget, "budget conserved");
+
+    // The headline: >= 5x fewer itera matvec-equivalents.
+    let cheap = cached.matvec_equivalents();
+    let costly = recompute.matvec_equivalents();
+    assert!(cheap > 0 && costly > 0);
+    assert!(
+        costly >= 5 * cheap,
+        "cache must be >=5x cheaper in matvec-equivalents: recompute {costly} vs cached {cheap}"
+    );
+}

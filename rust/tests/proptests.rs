@@ -1,7 +1,8 @@
 //! Property-based tests over the compression stack's invariants, driven
 //! by the in-tree `testkit` mini-framework (no proptest in the image).
 
-use itera_llm::compress::{self, itera, quant_only, svd_baseline, CompressedLinear};
+use itera_llm::compress::{self, itera, quant_only, svd_baseline, CompressedLinear,
+    IncrementalItera};
 use itera_llm::dse::pareto_front;
 use itera_llm::eval::bleu_score;
 use itera_llm::hw::{sim, tile_latency_cycles, TileConfig, Workload};
@@ -150,6 +151,33 @@ fn prop_itera_never_much_worse_than_svd_baseline() {
         let e_it = itera(&a, r, wl).0.error(&a);
         let e_sv = svd_baseline(&a, r, wl).error(&a);
         assert!(e_it <= e_sv * 1.05 + 1e-4, "iter {e_it} vs baseline {e_sv}");
+    });
+}
+
+#[test]
+fn prop_truncation_invariant() {
+    // The contract the incremental compression cache rests on: Algorithm 1
+    // is greedy (step k depends only on the residual left by steps 0..k,
+    // never on the target rank), so the rank-r factors equal the rank-r
+    // prefix of a rank-r_max run — bit for bit, for every (r, r_max, wl).
+    check("itera-truncation-prefix", CASES / 2, |g: &mut Gen| {
+        let k = g.size(2, 20);
+        let n = g.size(2, 20);
+        let a = g.matrix(k, n, 0.5);
+        let wl = *g.pick(&[3u32, 4, 6, 8]);
+        let inc = IncrementalItera::compress(&a, wl);
+        let r = g.usize_in(1, k.min(n));
+        let (fresh, trace) = itera(&a, r, wl);
+        let cached = inc.query(r);
+        let (CompressedLinear::LowRank { w1: fw1, w2: fw2, .. },
+             CompressedLinear::LowRank { w1: cw1, w2: cw2, .. }) = (&fresh, &cached)
+        else {
+            panic!("itera returns LowRank");
+        };
+        assert_eq!(fw1.data(), cw1.data(), "w1 prefix at r={r} of {k}x{n} W{wl}");
+        assert_eq!(fw2.data(), cw2.data(), "w2 prefix at r={r} of {k}x{n} W{wl}");
+        // The recorded residual trace doubles as the per-rank error table.
+        assert_eq!(inc.error_at(r), *trace.residual_norms.last().unwrap());
     });
 }
 
