@@ -16,7 +16,7 @@ use anyhow::Result;
 use itera_llm::compress::{self, itera, quant_only, svd_baseline};
 use itera_llm::eval::evaluate_bleu;
 use itera_llm::model::{Manifest, PairModel};
-use itera_llm::runtime::{Engine, Mode, TranslateSession};
+use itera_llm::runtime::{Engine, Mode, PjrtBackend, TranslateSession};
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -60,8 +60,9 @@ fn main() -> Result<()> {
         layers.insert(l.name.clone(), itera(model.linear(&l.name), l.r_max / 2, 4).0);
     }
     let bank = session.build_bank(&model, &layers, Some(8))?;
+    let backend = PjrtBackend::new(session, bank);
     let corpus = itera_llm::eval::Corpus::load(&manifest.pairs["en-de"].corpus)?;
-    let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 32)?;
+    let d = evaluate_bleu(&backend, &corpus, &manifest.model, 32)?;
     println!(
         "\nW4A8 Algorithm-1 model at half rank: BLEU {:.2} on 32 held-out sentences",
         d.score

@@ -1,25 +1,40 @@
-//! Batched NMT serving demo over the PJRT runtime.
+//! Batched NMT serving demo over the native runtime.
 //!
 //! ```bash
 //! cargo run --release --example serve_nmt [-- <requests> <pair>]
 //! ```
 //!
-//! Spins up the request-batching loop (`coordinator::serve_demo`): a
-//! closed-loop client submits single-sentence translation requests, the
-//! server groups them into fixed-capacity batches, executes one PJRT call
-//! per batch against a W8A8-quantized model, and reports latency
-//! percentiles and throughput. Python is nowhere on this path.
+//! Spins up the request-batching loop (`coordinator::serve_demo_native`):
+//! a closed-loop client submits single-sentence translation requests, the
+//! server groups them into fixed-capacity batches, executes one translate
+//! call per batch against a W8A8-quantized model on the pure-Rust engine,
+//! and reports latency percentiles and throughput. Works in the default
+//! build — no PJRT, no Python, no compiled artifacts (point
+//! `ITERA_ARTIFACTS` at any directory holding a manifest + weight store,
+//! e.g. one written by `testkit::tinymodel::generate`). A `pjrt` build
+//! can run the same loop against the AOT artifacts via
+//! `itera serve --backend pjrt`.
 
 use anyhow::Result;
-use itera_llm::config::ExpConfig;
-use itera_llm::coordinator::{serve_demo, Coordinator};
+use itera_llm::coordinator::serve_demo_native;
+use itera_llm::model::Manifest;
+use itera_llm::util::pool::default_workers;
 
 fn main() -> Result<()> {
     let requests: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
-    let pair = std::env::args().nth(2).unwrap_or_else(|| "en-de".to_string());
-    let c = Coordinator::new(ExpConfig::fast())?;
-    serve_demo(&c, &pair, requests)
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let pair = match std::env::args().nth(2) {
+        Some(p) => p,
+        None => manifest
+            .pairs
+            .keys()
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("manifest registers no language pairs"))?,
+    };
+    serve_demo_native(&manifest, &pair, requests, default_workers(8))?;
+    Ok(())
 }

@@ -149,6 +149,34 @@ fn main() {
         std::hint::black_box(bleu_score(&refs, &refs));
     });
 
+    // ---- native runtime (always built, hermetic tiny model) -------------
+    // Tokens/sec of one greedy translate batch on the pure-Rust engine;
+    // `bench_throughput` merges the rate into BENCH_hot_paths.json as
+    // `items_per_s`.
+    if b.enabled("runtime/native_decode_tiny") {
+        use itera_llm::runtime::{NativeBackend, TranslateBackend};
+        use itera_llm::testkit::tinymodel;
+        match tinymodel::generate_in_temp("bench", 0xB17) {
+            Ok((dir, manifest)) => {
+                let model =
+                    itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+                let backend = NativeBackend::fp32(&manifest, &model, workers).unwrap();
+                let corpus = itera_llm::eval::Corpus::load(
+                    &manifest.pairs[tinymodel::PAIR].corpus,
+                )
+                .unwrap();
+                let src = corpus.src_batch(0, backend.batch(), manifest.model.pad_id);
+                // One call emits batch * (seq_len - 1) greedy tokens.
+                let tokens = (backend.batch() * (backend.seq_len() - 1)) as u64;
+                b.bench_throughput("runtime/native_decode_tiny", tokens, || {
+                    std::hint::black_box(backend.translate(&src).unwrap());
+                });
+                std::fs::remove_dir_all(&dir).ok();
+            }
+            Err(e) => eprintln!("(tiny-model generation failed: {e}; skipping native bench)"),
+        }
+    }
+
     // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
     runtime_benches(&mut b);
 

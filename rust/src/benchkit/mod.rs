@@ -18,6 +18,9 @@ pub struct BenchResult {
     pub median_s: f64,
     pub stddev_s: f64,
     pub min_s: f64,
+    /// Items processed per iteration (set by [`Bench::bench_throughput`]);
+    /// serialized as `items_per_s` in the JSON trajectory.
+    pub items: Option<u64>,
 }
 
 /// Bench suite runner.
@@ -101,6 +104,7 @@ impl Bench {
             median_s: s.median(),
             stddev_s: s.stddev(),
             min_s: s.min(),
+            items: None,
         };
         println!(
             "{:<44} {:>10.4} ms/iter (median {:.4}, sd {:.4}, n={})",
@@ -113,12 +117,14 @@ impl Bench {
         self.results.push(r);
     }
 
-    /// Benchmark with a throughput annotation (items/sec at the mean).
+    /// Benchmark with a throughput annotation (items/sec at the mean,
+    /// also merged into the JSON trajectory as `items_per_s`).
     pub fn bench_throughput(&mut self, name: &str, items: u64, f: impl FnMut()) {
         let before = self.results.len();
         self.bench(name, f);
         if self.results.len() > before {
-            let r = &self.results[before];
+            let r = &mut self.results[before];
+            r.items = Some(items);
             println!(
                 "{:<44} {:>10.1} items/s",
                 format!("  -> {}", r.name),
@@ -170,16 +176,17 @@ impl Bench {
             Err(e) => return Err(e),
         }
         for r in &self.results {
-            benches.insert(
-                r.name.clone(),
-                Json::obj(vec![
-                    ("mean_s", Json::Num(r.mean_s)),
-                    ("median_s", Json::Num(r.median_s)),
-                    ("stddev_s", Json::Num(r.stddev_s)),
-                    ("min_s", Json::Num(r.min_s)),
-                    ("samples", Json::Num(r.samples as f64)),
-                ]),
-            );
+            let mut fields = vec![
+                ("mean_s", Json::Num(r.mean_s)),
+                ("median_s", Json::Num(r.median_s)),
+                ("stddev_s", Json::Num(r.stddev_s)),
+                ("min_s", Json::Num(r.min_s)),
+                ("samples", Json::Num(r.samples as f64)),
+            ];
+            if let Some(items) = r.items {
+                fields.push(("items_per_s", Json::Num(items as f64 / r.mean_s)));
+            }
+            benches.insert(r.name.clone(), Json::obj(fields));
         }
         let doc = Json::obj(vec![
             ("schema", Json::Num(1.0)),
@@ -221,6 +228,25 @@ mod tests {
         assert!(b.results().is_empty());
         b.bench("match-me-too", || {});
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_lands_in_json() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("itera_benchkit_tput_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut b = Bench::new().quick();
+        b.filter = None;
+        b.bench_throughput("suite/tokens", 1000, || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        b.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let e = j.get("benches").get("suite/tokens");
+        let ips = e.get("items_per_s").as_f64().expect("items_per_s present");
+        let mean = e.get("mean_s").as_f64().unwrap();
+        assert!((ips - 1000.0 / mean).abs() / ips < 1e-9);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

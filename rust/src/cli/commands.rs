@@ -1,15 +1,33 @@
 //! CLI command implementations.
+//!
+//! Always-built commands (`info`, `eval`, `serve`, `validate`) run on the
+//! native runtime and the analytical hardware models; the figure runners
+//! and search commands measure through the PJRT artifacts and need the
+//! `pjrt` feature.
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::{compress_model_from, serve_demo_native, Method};
+use crate::eval::{evaluate_bleu, Corpus};
+#[cfg(feature = "pjrt")]
+use crate::hw::Platform;
+use crate::hw::{sim, TileConfig, Workload};
+use crate::model::{Manifest, PairModel};
+use crate::runtime::NativeBackend;
+use crate::tensor::Matrix;
+use crate::util::pool::default_workers;
+use crate::util::timed;
+
+#[cfg(feature = "pjrt")]
 use crate::config::ExpConfig;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::figures::{self, CodesignPoint, MeasuredPoint};
-use crate::coordinator::{Coordinator, Method};
-use crate::hw::{sim, Platform, TileConfig, Workload};
-use crate::model::Manifest;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::Coordinator;
 
 use super::Args;
 
+#[cfg(feature = "pjrt")]
 fn coordinator(args: &Args) -> Result<Coordinator> {
     let mut cfg = match args.flag("config") {
         Some(path) => ExpConfig::load(path)?,
@@ -21,11 +39,27 @@ fn coordinator(args: &Args) -> Result<Coordinator> {
     Coordinator::new(cfg)
 }
 
+/// First registered language pair (the default for `--pair`).
+fn default_pair(manifest: &Manifest) -> Result<String> {
+    manifest
+        .pairs
+        .keys()
+        .next()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("manifest registers no language pairs"))
+}
+
 pub fn cmd_info() -> Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
-    let engine = crate::runtime::Engine::cpu()?;
     println!("itera-llm: ITERA-LLM co-design framework");
-    println!("PJRT platform : {}", engine.platform());
+    println!("runtime       : native (always built)");
+    #[cfg(feature = "pjrt")]
+    {
+        let engine = crate::runtime::Engine::cpu()?;
+        println!("PJRT platform : {}", engine.platform());
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT platform : (not compiled; build with --features pjrt)");
     println!(
         "model         : {} enc + {} dec layers, d={}, vocab={}, seq={}",
         manifest.model.n_enc,
@@ -40,7 +74,60 @@ pub fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// BLEU evaluation on the native runtime (works in every build): compress
+/// with the requested method, execute greedily, score against the
+/// references.
+pub fn cmd_eval(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let pair = match args.flag("pair") {
+        Some(p) => p.to_string(),
+        None => default_pair(&manifest)?,
+    };
+    let model = PairModel::load(&manifest, &pair)?;
+    let info = manifest
+        .pairs
+        .get(&pair)
+        .ok_or_else(|| anyhow::anyhow!("unknown language pair {pair}"))?;
+    let corpus = Corpus::load(&info.corpus)?;
+    let limit = args.flag_usize("limit", 32)?;
+    let workers = default_workers(8);
+
+    let method_name = args.flag_or("method", "fp32");
+    let (backend, label) = if method_name == "fp32" {
+        (NativeBackend::fp32(&manifest, &model, workers)?, "FP32 reference".to_string())
+    } else {
+        let wl = args.flag_usize("wl", 8)? as u32;
+        if !(2..=8).contains(&wl) {
+            bail!("--wl {wl} out of range (weight word length must be 2..=8)");
+        }
+        let frac = args.flag_f64("rank-frac", 0.5)?;
+        let method = match method_name.as_str() {
+            "quant" => Method::QuantOnly { wl },
+            "svd" => Method::SvdBaseline { wl, rank_frac: frac },
+            "itera" => Method::SvdIter { wl, rank_frac: frac },
+            other => bail!("unknown method {other} (expected fp32|quant|svd|itera)"),
+        };
+        let weights: Vec<&Matrix> =
+            manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+        let (cm, dt) =
+            timed(|| compress_model_from(&manifest.linears, &weights, &method, None, workers));
+        println!("compressed {} linears in {dt:.1}s", manifest.linears.len());
+        (cm.native_backend(&manifest, &model, workers)?, method.label())
+    };
+
+    let (d, dt) = timed(|| evaluate_bleu(&backend, &corpus, &manifest.model, limit));
+    let d = d?;
+    println!("method      : {label}");
+    println!("pair        : {pair}");
+    println!("backend     : native");
+    println!("sentences   : {}", if limit == 0 { corpus.n } else { limit.min(corpus.n) });
+    println!("BLEU        : {:.2}", d.score);
+    println!("wall time   : {dt:.1}s");
+    Ok(())
+}
+
 /// Run figure(s). Heavy figures share one compression sweep.
+#[cfg(feature = "pjrt")]
 pub fn cmd_fig(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -52,6 +139,12 @@ pub fn cmd_fig(args: &Args) -> Result<()> {
     run_figures(&which, &pair, args)
 }
 
+#[cfg(not(feature = "pjrt"))]
+pub fn cmd_fig(_args: &Args) -> Result<()> {
+    bail!("`itera fig` measures through the PJRT artifacts; build with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
 pub fn run_figures(which: &str, pair: &str, args: &Args) -> Result<()> {
     let needs_coordinator = which != "10";
     let c = if needs_coordinator { Some(coordinator(args)?) } else { None };
@@ -127,6 +220,7 @@ pub fn run_figures(which: &str, pair: &str, args: &Args) -> Result<()> {
 
 /// Pick the paper's Fig. 12 designs: best quant point and best SVD-SRA
 /// point (by BLEU-latency trade-off) in each bandwidth scenario.
+#[cfg(feature = "pjrt")]
 fn select_fig12<'a>(
     pts: &[MeasuredPoint],
     cds: &'a [CodesignPoint],
@@ -153,6 +247,7 @@ fn select_fig12<'a>(
 
 /// The paper's headline: latency reduction of the best SVD point vs the
 /// quant baseline at comparable BLEU (within 1 BLEU).
+#[cfg(feature = "pjrt")]
 fn report_headline(pts: &[MeasuredPoint], full: &[CodesignPoint], quarter: &[CodesignPoint]) {
     for (tag, cds) in [("full-bw", full), ("quarter-bw", quarter)] {
         let mut best: Option<(f64, String, String)> = None;
@@ -182,6 +277,7 @@ fn report_headline(pts: &[MeasuredPoint], full: &[CodesignPoint], quarter: &[Cod
     }
 }
 
+#[cfg(feature = "pjrt")]
 pub fn cmd_compress(args: &Args) -> Result<()> {
     let c = coordinator(args)?;
     let pair = args.flag_or("pair", "en-de");
@@ -193,7 +289,7 @@ pub fn cmd_compress(args: &Args) -> Result<()> {
         "itera" => Method::SvdIter { wl, rank_frac: frac },
         other => bail!("unknown method {other}"),
     };
-    let (p, dt) = crate::util::timed(|| c.measure(&pair, &method));
+    let (p, dt) = timed(|| c.measure(&pair, &method));
     let p = p?;
     println!("method      : {}", p.label);
     println!("pair        : {pair}");
@@ -204,6 +300,15 @@ pub fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+pub fn cmd_compress(_args: &Args) -> Result<()> {
+    bail!(
+        "`itera compress` measures through the PJRT artifacts; build with \
+         --features pjrt (or use `itera eval` for the native runtime)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 pub fn cmd_sra(args: &Args) -> Result<()> {
     let c = coordinator(args)?;
     let pair = args.flag_or("pair", "en-de");
@@ -213,7 +318,7 @@ pub fn cmd_sra(args: &Args) -> Result<()> {
     let total: usize = caps.iter().sum();
     let budget = ((total as f64 * frac) as usize).max(caps.len());
     println!("[sra] pair {pair}, W{wl}A8, rank budget {budget} (of {total})");
-    let ((ranks, calib_bleu), dt) = crate::util::timed(|| c.sra_search(&pair, wl, budget));
+    let ((ranks, calib_bleu), dt) = timed(|| c.sra_search(&pair, wl, budget));
     println!("[sra] calib BLEU {:.2} after search ({dt:.0}s)", calib_bleu);
     let p = c.measure(&pair, &Method::SvdIterRanks { wl, ranks: ranks.clone() })?;
     let uniform = c.measure(
@@ -226,6 +331,11 @@ pub fn cmd_sra(args: &Args) -> Result<()> {
         println!("    {:<14} {r}", l.name);
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn cmd_sra(_args: &Args) -> Result<()> {
+    bail!("`itera sra` needs the coordinator's PJRT oracle; build with --features pjrt")
 }
 
 /// Analytical model vs cycle-level simulator cross-validation table.
@@ -252,11 +362,30 @@ pub fn cmd_validate() -> Result<()> {
     Ok(())
 }
 
-/// Batched serving demo: random test sentences through the FP32 and a
-/// compressed model, reporting latency/throughput percentiles.
+/// Batched serving demo: random test sentences through a compressed
+/// model, reporting latency/throughput percentiles. Native by default;
+/// `--backend pjrt` uses the AOT artifacts (pjrt builds only).
 pub fn cmd_serve(args: &Args) -> Result<()> {
-    let c = coordinator(args)?;
-    let pair = args.flag_or("pair", "en-de");
     let requests = args.flag_usize("requests", 64)?;
-    crate::coordinator::serve_demo(&c, &pair, requests)
+    match args.flag_or("backend", "native").as_str() {
+        "native" => {
+            let manifest = Manifest::load(Manifest::default_dir())?;
+            let pair = match args.flag("pair") {
+                Some(p) => p.to_string(),
+                None => default_pair(&manifest)?,
+            };
+            serve_demo_native(&manifest, &pair, requests, default_workers(8))?;
+            Ok(())
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let c = coordinator(args)?;
+            let pair = args.flag_or("pair", "en-de");
+            crate::coordinator::serve_demo(&c, &pair, requests)?;
+            Ok(())
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this binary was built without the `pjrt` feature"),
+        other => bail!("unknown backend {other} (expected native|pjrt)"),
+    }
 }

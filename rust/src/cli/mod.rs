@@ -1,12 +1,21 @@
 //! `itera` command-line interface (hand-rolled; no clap in the image).
 //!
+//! Always available (native runtime + analytical models):
+//!
 //! ```text
-//! itera info                         # platform + artifact summary
+//! itera info                         # runtime + artifact summary
+//! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
+//! itera serve [--requests 64]        # batched serving demo + latency stats
+//! itera validate                     # analytical model vs simulator table
+//! ```
+//!
+//! PJRT-artifact measurement (needs `--features pjrt`):
+//!
+//! ```text
 //! itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de] [--fast] [--no-sra]
 //! itera compress --method quant|svd|itera --wl 4 [--rank-frac 0.5]
 //! itera sra --wl 4 --budget-frac 0.5 [--pair en-de]
-//! itera validate                     # analytical model vs simulator table
-//! itera serve [--requests 64]        # batched serving demo + latency stats
+//! itera serve --backend pjrt [--requests 64]
 //! ```
 
 mod commands;
@@ -15,6 +24,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+#[cfg(feature = "pjrt")]
 pub use commands::run_figures;
 
 /// Parsed command line: subcommand, flags (`--k v` / bare `--flag`), and
@@ -78,14 +88,18 @@ impl Args {
 pub const USAGE: &str = "\
 itera — ITERA-LLM co-design framework (paper reproduction)
 
-USAGE:
+USAGE (native runtime, every build):
   itera info
+  itera eval [--method <fp32|quant|svd|itera>] [--wl <2..8>] [--rank-frac F]
+             [--pair P] [--limit N]
+  itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
+  itera validate
+  itera help
+
+USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]
   itera compress --method <quant|svd|itera> --wl <2..8> [--rank-frac F] [--pair P]
   itera sra --wl <2..8> --budget-frac F [--pair P] [--fast]
-  itera validate
-  itera serve [--requests N] [--pair P]
-  itera help
 ";
 
 /// Entry point used by `main.rs`.
@@ -97,6 +111,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "info" => commands::cmd_info(),
+        "eval" => commands::cmd_eval(&args),
         "fig" => commands::cmd_fig(&args),
         "compress" => commands::cmd_compress(&args),
         "sra" => commands::cmd_sra(&args),

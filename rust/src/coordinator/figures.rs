@@ -138,12 +138,12 @@ impl Coordinator {
     /// (used by the Fig. 4 single-layer probes).
     fn bleu_on_test_dense(&self, pair: &str, cm: &CompressedModel) -> Result<f64> {
         use crate::eval::evaluate_bleu;
-        use crate::runtime::{Mode, TranslateSession};
+        use crate::runtime::{Mode, PjrtBackend, TranslateSession};
         let session = TranslateSession::new(&self.engine, &self.manifest, Mode::Dense)?;
         let bank = session.build_bank(self.model(pair), &cm.layers, cm.act_wl)?;
+        let backend = PjrtBackend::new(session, bank);
         let corpus = crate::eval::Corpus::load(&self.manifest.pairs[pair].corpus)?;
-        let d = evaluate_bleu(&session, &bank, &corpus, &self.manifest.model,
-                              self.cfg.calib_sentences)?;
+        let d = evaluate_bleu(&backend, &corpus, &self.manifest.model, self.cfg.calib_sentences)?;
         Ok(d.score)
     }
 }

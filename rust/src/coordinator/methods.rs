@@ -4,9 +4,9 @@ use std::collections::BTreeMap;
 use std::hash::{Hash, Hasher};
 
 use crate::compress::{self, CompressedLinear, IncrementalItera, LayerCost};
-use crate::model::{LinearInfo, Manifest};
+use crate::model::{LinearInfo, Manifest, PairModel};
 use crate::quant::WordLen;
-use crate::runtime::Mode;
+use crate::runtime::{Mode, NativeBackend};
 use crate::tensor::Matrix;
 use crate::util::pool::par_map;
 
@@ -90,6 +90,20 @@ impl CompressedModel {
     /// Per-layer ranks (full rank reported for dense layers).
     pub fn ranks(&self, manifest: &Manifest) -> Vec<usize> {
         manifest.linears.iter().map(|l| self.layers[&l.name].rank()).collect()
+    }
+
+    /// Build the always-available native execution backend for this
+    /// compressed model: the dense path for `Mode::Dense` methods, the
+    /// two-skinny-matmul factored path for the SVD family — so every
+    /// compression configuration can be evaluated end-to-end without
+    /// PJRT or compiled artifacts.
+    pub fn native_backend(
+        &self,
+        manifest: &Manifest,
+        model: &PairModel,
+        workers: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        NativeBackend::new(manifest, model, &self.layers, self.act_wl, self.mode(), workers)
     }
 
     /// Cheap structural fingerprint for evaluation memoization.

@@ -9,20 +9,24 @@
 //! (`compress::incremental`), so every SvdIter/SvdIterRanks configuration
 //! after the first is a rank-truncation query instead of a recompression.
 //!
-//! Everything touching the PJRT runtime (the coordinator itself, figures,
-//! serving) needs the `pjrt` feature; the method/dispatch layer
-//! ([`methods`]) and report emission stay in the default build.
+//! Everything touching the PJRT runtime (the coordinator itself, figures)
+//! needs the `pjrt` feature; the method/dispatch layer ([`methods`]),
+//! report emission and the backend-agnostic serving loop ([`serve`]) stay
+//! in the default build — `serve_demo_native` runs the full request path
+//! on the pure-Rust engine.
 
 #[cfg(feature = "pjrt")]
 pub mod figures;
 mod methods;
 pub mod report;
-#[cfg(feature = "pjrt")]
 mod serve;
 
 pub use methods::{compress_model_from, CompressedModel, Method};
 #[cfg(feature = "pjrt")]
-pub use serve::{serve_bank, serve_demo};
+pub use serve::serve_bank;
+#[cfg(feature = "pjrt")]
+pub use serve::serve_demo;
+pub use serve::{pack_rows, run_demo, serve_demo_native, serve_loop, Request, ServeStats};
 
 #[cfg(feature = "pjrt")]
 use std::collections::{BTreeMap, HashMap};
@@ -43,7 +47,7 @@ use crate::model::{Manifest, PairModel};
 #[cfg(feature = "pjrt")]
 use crate::quant::WordLen;
 #[cfg(feature = "pjrt")]
-use crate::runtime::{Engine, Mode, TranslateSession};
+use crate::runtime::{Engine, Mode, PjrtBackend, TranslateSession};
 
 /// Orchestrates the full ITERA-LLM pipeline against the built artifacts.
 #[cfg(feature = "pjrt")]
@@ -195,7 +199,8 @@ impl Coordinator {
         let mode = cm.mode();
         let session = TranslateSession::new(&self.engine, &self.manifest, mode)?;
         let bank = session.build_bank(&self.models[pair], &cm.layers, cm.act_wl)?;
-        let d = evaluate_bleu(&session, &bank, corpus, &self.manifest.model, limit)?;
+        let backend = PjrtBackend::new(session, bank);
+        let d = evaluate_bleu(&backend, corpus, &self.manifest.model, limit)?;
         Ok(d.score)
     }
 
@@ -203,9 +208,9 @@ impl Coordinator {
     pub fn bleu_fp32(&self, pair: &str) -> Result<f64> {
         let session = TranslateSession::new(&self.engine, &self.manifest, Mode::Dense)?;
         let bank = session.build_bank(&self.models[pair], &BTreeMap::new(), None)?;
+        let backend = PjrtBackend::new(session, bank);
         let d = evaluate_bleu(
-            &session,
-            &bank,
+            &backend,
             &self.corpora[pair],
             &self.manifest.model,
             self.cfg.eval_sentences,

@@ -1,95 +1,102 @@
-//! Batched serving demo: a minimal request loop over the PJRT runtime.
+//! Batched serving demo: a minimal request loop over any translate
+//! backend.
 //!
 //! Demonstrates the deployment story: single-sentence translation requests
-//! arrive on a channel, a batcher groups them up to the artifact's fixed
-//! batch size (padding short batches), executes one PJRT call per batch,
-//! and reports per-request latency percentiles and aggregate throughput —
-//! all without Python anywhere on the path.
+//! arrive on a channel, a batcher groups them up to the backend's batch
+//! capacity (padding short batches), executes one translate call per
+//! batch, and reports per-request latency percentiles and aggregate
+//! throughput. The loop is backend-agnostic ([`TranslateBackend`]), so
+//! the same code path serves the always-built native engine and — with
+//! the `pjrt` feature — the AOT-compiled PJRT session; Python is nowhere
+//! on either path.
+//!
+//! The batcher itself ([`pack_rows`], [`serve_loop`]) is split out of the
+//! demo driver so it can be unit-tested against a mock backend without
+//! threads, models or artifacts.
 
-use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::eval::{strip_specials, Corpus};
-use crate::runtime::{Mode, TranslateSession};
+use crate::model::ModelDims;
+use crate::runtime::TranslateBackend;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
-use super::{Coordinator, Method};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Mode, PjrtBackend, TranslateSession};
 
-struct Request {
-    tokens: Vec<i32>,
-    t_arrival: Instant,
-    respond: mpsc::Sender<(Vec<i32>, f64)>,
+#[cfg(feature = "pjrt")]
+use super::Coordinator;
+use super::Method;
+
+/// One translation request: source tokens in, (tokens, latency_s) out.
+pub struct Request {
+    pub tokens: Vec<i32>,
+    pub t_arrival: Instant,
+    pub respond: mpsc::Sender<(Vec<i32>, f64)>,
 }
 
-/// Run the serving demo: `n_requests` random test sentences, FP32 bank.
-pub fn serve_demo(c: &Coordinator, pair: &str, n_requests: usize) -> Result<()> {
-    let corpus = Corpus::load(&c.manifest.pairs[pair].corpus)?;
-    let session = TranslateSession::new(&c.engine, &c.manifest, Mode::Dense)?;
-    // Serve the W8A8 quantized model — the deployment configuration.
-    let cm = c.compress(pair, &Method::QuantOnly { wl: 8 });
-    let bank = session.build_bank(c.model(pair), &cm.layers, cm.act_wl)?;
+/// Aggregate outcome of one [`serve_loop`] run.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub wall_s: f64,
+}
 
-    let b = session.batch();
-    let s = session.seq_len();
-    let dims = &c.manifest.model;
+/// Pack up to `batch` token rows into a fixed `[batch * seq]` buffer:
+/// rows are truncated to `seq` and the remainder is PAD-filled (both the
+/// tail of short rows and the unused batch slots).
+pub fn pack_rows(rows: &[&[i32]], batch: usize, seq: usize, pad: i32) -> Vec<i32> {
+    assert!(rows.len() <= batch, "{} rows exceed batch capacity {batch}", rows.len());
+    let mut src = vec![pad; batch * seq];
+    for (row, tokens) in rows.iter().enumerate() {
+        let take = tokens.len().min(seq);
+        src[row * seq..row * seq + take].copy_from_slice(&tokens[..take]);
+    }
+    src
+}
 
-    let (tx, rx) = mpsc::channel::<Request>();
-
-    // Client thread: submits requests back-to-back (closed-loop).
-    let seq_len = s;
-    let n = n_requests;
-    let pad = dims.pad_id;
-    let client = std::thread::spawn(move || {
-        let mut rng = Pcg64::new(0xBEEF);
-        let mut latencies = Summary::new();
-        let mut done = Vec::new();
-        let corpus = corpus;
-        for _ in 0..n {
-            let i = rng.below(corpus.n);
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: corpus.src_row(i).to_vec(),
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .ok();
-            // Closed-loop: wait for the response before the next request
-            // (the batcher still groups concurrent stragglers via timeout).
-            if let Ok((toks, lat)) = rrx.recv() {
-                latencies.add(lat);
-                done.push(toks);
-            }
+/// Drain one batch from the request channel: block for the first request,
+/// then opportunistically take whatever else is already queued, up to
+/// `capacity`. `None` when the channel has disconnected.
+fn next_batch(rx: &mpsc::Receiver<Request>, capacity: usize) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    while batch.len() < capacity {
+        match rx.try_recv() {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
         }
-        let _ = (seq_len, pad);
-        (latencies, done)
-    });
+    }
+    Some(batch)
+}
 
-    // Server loop: drain the channel, batch, execute.
+/// The server loop: batch requests off `rx`, execute them on `backend`,
+/// respond with de-framed tokens + latency, until `n_requests` have been
+/// served or the channel disconnects.
+pub fn serve_loop(
+    backend: &dyn TranslateBackend,
+    rx: &mpsc::Receiver<Request>,
+    dims: &ModelDims,
+    n_requests: usize,
+) -> Result<ServeStats> {
+    let b = backend.batch();
+    let s = backend.seq_len();
     let t0 = Instant::now();
     let mut served = 0usize;
     let mut batches = 0usize;
     while served < n_requests {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        let mut batch = vec![first];
-        while batch.len() < b {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        let mut src = vec![dims.pad_id; b * s];
-        for (row, req) in batch.iter().enumerate() {
-            src[row * s..row * s + req.tokens.len().min(s)]
-                .copy_from_slice(&req.tokens[..req.tokens.len().min(s)]);
-        }
-        let out = session.translate(&bank, &src)?;
+        let Some(batch) = next_batch(rx, b) else { break };
+        let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        // Fixed-shape backends (AOT artifacts) need the full compiled
+        // batch; variable-shape ones only pay for the rows they got.
+        let pack_to = if backend.fixed_shape() { b } else { rows.len() };
+        let src = pack_rows(&rows, pack_to, s, dims.pad_id);
+        let out = backend.translate(&src)?;
         let now = Instant::now();
         for (row, req) in batch.iter().enumerate() {
             let toks = strip_specials(
@@ -104,24 +111,110 @@ pub fn serve_demo(c: &Coordinator, pair: &str, n_requests: usize) -> Result<()> 
         served += batch.len();
         batches += 1;
     }
-    let wall = t0.elapsed().as_secs_f64();
+    Ok(ServeStats { served, batches, wall_s: t0.elapsed().as_secs_f64() })
+}
 
+/// Closed-loop demo driver: a client thread submits `n_requests` random
+/// test sentences back-to-back, [`serve_loop`] batches and executes them,
+/// and the latency/throughput summary is printed.
+pub fn run_demo(
+    backend: &dyn TranslateBackend,
+    corpus: Corpus,
+    dims: &ModelDims,
+    n_requests: usize,
+    label: &str,
+) -> Result<ServeStats> {
+    let (tx, rx) = mpsc::channel::<Request>();
+
+    // Client thread: submits requests back-to-back (closed-loop).
+    let client = std::thread::spawn(move || {
+        let mut rng = Pcg64::new(0xBEEF);
+        let mut latencies = Summary::new();
+        let mut done = Vec::new();
+        for _ in 0..n_requests {
+            let i = rng.below(corpus.n);
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: corpus.src_row(i).to_vec(),
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .ok();
+            // Closed-loop: wait for the response before the next request
+            // (the batcher still groups concurrent stragglers).
+            if let Ok((toks, lat)) = rrx.recv() {
+                latencies.add(lat);
+                done.push(toks);
+            }
+        }
+        (latencies, done)
+    });
+
+    let stats = serve_loop(backend, &rx, dims, n_requests)?;
     let (latencies, translations) = client.join().expect("client thread");
-    println!("== serving demo ({pair}, W8A8, batch capacity {b}) ==");
-    println!("requests      : {n_requests} ({batches} batches)");
-    println!("wall time     : {wall:.2}s");
-    println!("throughput    : {:.1} sentences/s", served as f64 / wall);
+
+    println!(
+        "== serving demo ({label}, backend {}, batch capacity {}) ==",
+        backend.kind(),
+        backend.batch()
+    );
+    println!("requests      : {n_requests} ({} batches)", stats.batches);
+    println!("wall time     : {:.2}s", stats.wall_s);
+    println!("throughput    : {:.1} sentences/s", stats.served as f64 / stats.wall_s);
     println!(
         "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3}",
         latencies.quantile(0.5),
         latencies.quantile(0.95),
         latencies.max()
     );
-    println!("sample output : {:?}", translations.first().map(|t| &t[..t.len().min(8)]));
-    Ok(())
+    println!(
+        "sample output : {:?}",
+        translations.first().map(|t| &t[..t.len().min(8)])
+    );
+    Ok(stats)
+}
+
+/// Serving demo on the native runtime: W8A8-quantized model (the
+/// deployment configuration), no PJRT anywhere. Works in every build.
+pub fn serve_demo_native(
+    manifest: &crate::model::Manifest,
+    pair: &str,
+    n_requests: usize,
+    workers: usize,
+) -> Result<ServeStats> {
+    let info = manifest
+        .pairs
+        .get(pair)
+        .ok_or_else(|| anyhow::anyhow!("unknown language pair {pair}"))?;
+    let corpus = Corpus::load(&info.corpus)?;
+    let model = crate::model::PairModel::load(manifest, pair)?;
+    let weights: Vec<&crate::tensor::Matrix> =
+        manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = super::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm.native_backend(manifest, &model, workers)?;
+    run_demo(&backend, corpus, &manifest.model, n_requests, &format!("{pair}, W8A8"))
+}
+
+/// Serving demo over the PJRT runtime (kept for artifact parity runs).
+#[cfg(feature = "pjrt")]
+pub fn serve_demo(c: &Coordinator, pair: &str, n_requests: usize) -> Result<ServeStats> {
+    let corpus = Corpus::load(&c.manifest.pairs[pair].corpus)?;
+    let session = TranslateSession::new(&c.engine, &c.manifest, Mode::Dense)?;
+    // Serve the W8A8 quantized model — the deployment configuration.
+    let cm = c.compress(pair, &Method::QuantOnly { wl: 8 });
+    let bank = session.build_bank(c.model(pair), &cm.layers, cm.act_wl)?;
+    let backend = PjrtBackend::new(session, bank);
+    run_demo(&backend, corpus, &c.manifest.model, n_requests, &format!("{pair}, W8A8"))
 }
 
 /// Compressed-model variants available to the serving example.
+#[cfg(feature = "pjrt")]
 pub fn serve_bank<'a>(
     c: &'a Coordinator,
     session: &TranslateSession,
@@ -132,5 +225,147 @@ pub fn serve_bank<'a>(
     session.build_bank(c.model(pair), &cm.layers, cm.act_wl)
 }
 
-#[allow(unused)]
-fn unused(_: BTreeMap<String, ()>) {}
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::cell::Cell;
+
+    /// Echo backend: "translates" by returning the source buffer and
+    /// records the size of the last call for shape assertions.
+    struct Echo {
+        batch: usize,
+        seq: usize,
+        fixed: bool,
+        last_len: Cell<usize>,
+    }
+
+    impl Echo {
+        fn new(batch: usize, seq: usize, fixed: bool) -> Echo {
+            Echo { batch, seq, fixed, last_len: Cell::new(0) }
+        }
+    }
+
+    impl TranslateBackend for Echo {
+        fn kind(&self) -> &'static str {
+            "echo"
+        }
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+        fn fixed_shape(&self) -> bool {
+            self.fixed
+        }
+        fn translate(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
+            if self.fixed {
+                assert_eq!(src_tokens.len(), self.batch * self.seq, "fixed-shape call");
+            } else {
+                assert!(
+                    !src_tokens.is_empty() && src_tokens.len() % self.seq == 0,
+                    "variable-shape call must still be row-aligned"
+                );
+            }
+            self.last_len.set(src_tokens.len());
+            Ok(src_tokens.to_vec())
+        }
+    }
+
+    fn dims(seq_len: usize, eval_batch: usize) -> ModelDims {
+        ModelDims {
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            n_enc: 1,
+            n_dec: 1,
+            seq_len,
+            eval_batch,
+            pad_id: 0,
+            bos_id: 1,
+            eos_id: 2,
+        }
+    }
+
+    #[test]
+    fn pack_rows_pads_and_truncates() {
+        let rows: Vec<&[i32]> = vec![&[1, 5, 6, 2], &[1, 9, 2, 7, 7, 7]];
+        let src = pack_rows(&rows, 3, 5, 0);
+        assert_eq!(src.len(), 15);
+        assert_eq!(&src[..5], &[1, 5, 6, 2, 0]); // padded
+        assert_eq!(&src[5..10], &[1, 9, 2, 7, 7]); // truncated at seq
+        assert_eq!(&src[10..], &[0; 5]); // empty slot stays PAD
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed batch capacity")]
+    fn pack_rows_rejects_overfull() {
+        let rows: Vec<&[i32]> = vec![&[1], &[2], &[3]];
+        pack_rows(&rows, 2, 4, 0);
+    }
+
+    #[test]
+    fn serve_loop_batches_and_responds() {
+        let backend = Echo::new(4, 6, true);
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        // Queue 5 requests up-front: expect one full batch + one single.
+        let mut receivers = Vec::new();
+        for i in 0..5 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: vec![1, 10 + i, 2],
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        let stats = serve_loop(&backend, &rx, &d, 5).unwrap();
+        assert_eq!(stats.served, 5);
+        assert_eq!(stats.batches, 2, "4-capacity batcher must split 5 into 4+1");
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let (toks, lat) = rrx.recv().unwrap();
+            // Echo + strip_specials leaves exactly the content token.
+            assert_eq!(toks, vec![10 + i as i32]);
+            assert!(lat >= 0.0);
+        }
+    }
+
+    #[test]
+    fn serve_loop_stops_on_disconnect() {
+        let backend = Echo::new(2, 4, true);
+        let d = dims(4, 2);
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let stats = serve_loop(&backend, &rx, &d, 10).unwrap();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.batches, 0);
+    }
+
+    #[test]
+    fn serve_loop_packs_partial_batches_for_variable_shape_backends() {
+        let backend = Echo::new(4, 6, false);
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        // A single queued request: the variable-shape path must translate
+        // exactly one row (Echo asserts the buffer never exceeds what was
+        // packed; a full-capacity pad would be 4 rows).
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            tokens: vec![1, 42, 2],
+            t_arrival: Instant::now(),
+            respond: rtx,
+        })
+        .unwrap();
+        drop(tx);
+        let stats = serve_loop(&backend, &rx, &d, 1).unwrap();
+        assert_eq!(stats.served, 1);
+        assert_eq!(backend.last_len.get(), 6, "one row packed, not the full capacity");
+        let (toks, _) = rrx.recv().unwrap();
+        assert_eq!(toks, vec![42]);
+    }
+}

@@ -1,30 +1,36 @@
-//! Batched corpus evaluation through a translate session.
+//! Batched corpus evaluation through any [`TranslateBackend`].
+//!
+//! Backend-agnostic since the native runtime landed: the same loop scores
+//! the pure-Rust engine (every build) and the PJRT session (`pjrt`
+//! feature), so BLEU numbers are comparable across backends by
+//! construction.
 
 use anyhow::Result;
 
 use crate::model::ModelDims;
-use crate::runtime::{ArgBank, TranslateSession};
+use crate::runtime::TranslateBackend;
 
 use super::{bleu_score, strip_specials, BleuDetail, Corpus};
 
 /// Greedy-translate up to `limit` sentences of `corpus` (0 = all) and
 /// return the de-framed hypothesis token sequences.
 pub fn translate_corpus(
-    session: &TranslateSession,
-    bank: &ArgBank,
+    backend: &dyn TranslateBackend,
     corpus: &Corpus,
     dims: &ModelDims,
     limit: usize,
 ) -> Result<Vec<Vec<i32>>> {
     let n = if limit == 0 { corpus.n } else { limit.min(corpus.n) };
-    let b = session.batch();
-    let s = session.seq_len();
+    let b = backend.batch();
+    let s = backend.seq_len();
     let mut hyps = Vec::with_capacity(n);
     let mut start = 0;
     while start < n {
-        let src = corpus.src_batch(start, b, dims.pad_id);
-        let out = session.translate(bank, &src)?;
         let take = (n - start).min(b);
+        // Variable-shape backends skip the padding rows of the tail batch.
+        let rows = if backend.fixed_shape() { b } else { take };
+        let src = corpus.src_batch(start, rows, dims.pad_id);
+        let out = backend.translate(&src)?;
         for r in 0..take {
             hyps.push(strip_specials(
                 &out[r * s..(r + 1) * s],
@@ -40,13 +46,12 @@ pub fn translate_corpus(
 
 /// BLEU of a configuration over (a prefix of) a corpus.
 pub fn evaluate_bleu(
-    session: &TranslateSession,
-    bank: &ArgBank,
+    backend: &dyn TranslateBackend,
     corpus: &Corpus,
     dims: &ModelDims,
     limit: usize,
 ) -> Result<BleuDetail> {
-    let hyps = translate_corpus(session, bank, corpus, dims, limit)?;
+    let hyps = translate_corpus(backend, corpus, dims, limit)?;
     let refs: Vec<Vec<i32>> = (0..hyps.len())
         .map(|i| strip_specials(corpus.tgt_row(i), dims.bos_id, dims.eos_id, dims.pad_id))
         .collect();

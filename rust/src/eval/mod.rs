@@ -7,12 +7,10 @@
 
 pub mod bleu;
 mod corpus;
-#[cfg(feature = "pjrt")]
 mod evaluator;
 
 pub use bleu::{bleu_score, BleuDetail};
 pub use corpus::Corpus;
-#[cfg(feature = "pjrt")]
 pub use evaluator::{evaluate_bleu, translate_corpus};
 
 /// Strip BOS/EOS/PAD framing from a token row: keep tokens after the

@@ -2,24 +2,28 @@
 //!
 //! Reproduction of *ITERA-LLM: Boosting Sub-8-Bit Large Language Model
 //! Inference via Iterative Tensor Decomposition* (CS.AR 2025) as a
-//! three-layer Rust + JAX + Pallas system:
+//! four-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the software/hardware co-design framework:
-//!   compression engine ([`compress`], Algorithm 1), sensitivity-based rank
-//!   allocation ([`sra`]), FPGA analytical models and dataflow simulator
-//!   ([`hw`]), design-space exploration ([`dse`]), BLEU evaluation service
-//!   ([`eval`]) and the PJRT runtime ([`runtime`]) that executes the
-//!   AOT-compiled model artifacts.
+//! * **Layer 4 ([`runtime`])** — model execution. Two interchangeable
+//!   backends behind [`runtime::TranslateBackend`]: the always-built
+//!   pure-Rust native engine ([`runtime::native`], dense and factored
+//!   low-rank execution on [`tensor::Matrix`]) and the optional PJRT
+//!   session (`pjrt` feature) that executes the AOT-compiled artifacts.
+//! * **Layer 3 (the rest of this crate)** — the software/hardware
+//!   co-design framework: compression engine ([`compress`], Algorithm 1),
+//!   sensitivity-based rank allocation ([`sra`]), FPGA analytical models
+//!   and dataflow simulator ([`hw`]), design-space exploration ([`dse`]),
+//!   BLEU evaluation service ([`eval`]) and the serving/experiment
+//!   coordinator ([`coordinator`]).
 //! * **Layer 2** — JAX transformer (`python/compile/model.py`), lowered
 //!   once to HLO text under `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing
 //!   the paper's MatMul engines; lowered into the same HLO.
 //!
-//! Python never runs at inference time: the Rust binary loads
-//! `artifacts/*.hlo.txt` through the PJRT C API and drives everything else
-//! natively.
+//! Python never runs at inference time: the default build executes models
+//! natively from the weight store, and a `pjrt` build can additionally
+//! load `artifacts/*.hlo.txt` through the PJRT C API.
 
-#[cfg(feature = "pjrt")]
 pub mod cli;
 pub mod compress;
 pub mod config;

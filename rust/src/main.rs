@@ -1,27 +1,15 @@
 //! `itera` — CLI entry point for the ITERA-LLM co-design framework.
 //!
-//! The full CLI drives the PJRT runtime and therefore needs the `pjrt`
-//! feature (which in turn needs the external `xla` crate). The default
-//! build still produces the binary so `cargo build --release` stays green,
-//! but it only explains how to get the full tool.
+//! Every build ships the full native-runtime CLI (`info`, `eval`,
+//! `serve`, `validate`); the PJRT-artifact commands (`fig`, `compress`,
+//! `sra`, `serve --backend pjrt`) additionally need `--features pjrt`
+//! with the `xla` crate vendored, and explain as much when invoked
+//! without it.
 
-#[cfg(feature = "pjrt")]
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = itera_llm::cli::main_with_args(&argv) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn main() {
-    eprintln!(
-        "itera: built without the `pjrt` feature.\n\
-         The compression engine, SRA, hardware models and DSE are available \
-         as a library;\nthe CLI (figures, serving, BLEU evaluation) needs \
-         `cargo build --features pjrt`\nwith the `xla` crate vendored. See \
-         rust/Cargo.toml."
-    );
-    std::process::exit(2);
 }

@@ -21,10 +21,56 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Empty store; fill with [`Self::insert`] / [`Self::insert_vec`]
+    /// (the testkit tiny-model generator and round-trip tests build
+    /// stores in-process instead of shelling out to Python).
+    pub fn new() -> WeightStore {
+        WeightStore { entries: BTreeMap::new() }
+    }
+
+    /// Insert a 2-D tensor (replaces any previous entry of that name).
+    pub fn insert(&mut self, name: &str, m: Matrix) {
+        self.entries.insert(name.to_string(), (m, 2));
+    }
+
+    /// Insert a 1-D tensor (stored as a `1 x n` matrix, like the reader).
+    pub fn insert_vec(&mut self, name: &str, v: Vec<f32>) {
+        let n = v.len();
+        self.entries.insert(name.to_string(), (Matrix::from_vec(1, n, v), 1));
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
         let bytes = std::fs::read(path.as_ref())
             .with_context(|| format!("reading weight store {:?}", path.as_ref()))?;
         Self::parse(&bytes)
+    }
+
+    /// Serialize in the exact ITWB layout `train.py::save_weights` emits
+    /// (entries in sorted-name order, which the `BTreeMap` gives for free).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ITWB");
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, (m, ndim)) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(*ndim as u32).to_le_bytes());
+            if *ndim == 1 {
+                out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+            } else {
+                out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+                out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+            }
+            for &x in m.data() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .with_context(|| format!("writing weight store {:?}", path.as_ref()))
     }
 
     pub fn parse(bytes: &[u8]) -> Result<WeightStore> {
@@ -86,6 +132,12 @@ impl WeightStore {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+}
+
+impl Default for WeightStore {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -169,6 +221,70 @@ mod tests {
         assert!(WeightStore::parse(&bytes).is_err());
         bytes.push(0);
         assert!(WeightStore::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn round_trips_through_writer() {
+        let mut s = WeightStore::new();
+        s.insert("enc0.self_q", Matrix::from_vec(2, 3, vec![1., -2., 3., 4., 5., -6.]));
+        s.insert_vec("enc0.ln1_g", vec![0.5, 1.5, 2.5]);
+        s.insert("zz.last", Matrix::from_vec(1, 1, vec![9.0]));
+        let bytes = s.to_bytes();
+        let r = WeightStore::parse(&bytes).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.get("enc0.self_q").unwrap().data(), s.get("enc0.self_q").unwrap().data());
+        // 1-D entries keep 1-D dims through the round trip.
+        assert_eq!(r.dims("enc0.ln1_g").unwrap(), vec![3]);
+        assert_eq!(r.get("enc0.ln1_g").unwrap().shape(), (1, 3));
+        // Byte-stable: serializing the reparse reproduces the bytes.
+        assert_eq!(r.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn save_and_load_file_round_trip() {
+        let path = std::env::temp_dir().join("itera_weights_roundtrip.bin");
+        let mut s = WeightStore::new();
+        s.insert("w", Matrix::from_vec(3, 2, (0..6).map(|i| i as f32).collect()));
+        s.save(&path).unwrap();
+        let r = WeightStore::load(&path).unwrap();
+        assert_eq!(r.get("w").unwrap().shape(), (3, 2));
+        assert_eq!(r.get("w").unwrap().get(2, 1), 5.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_non_utf8_name() {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ITWB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&[0xFF, 0xFE]); // invalid utf-8 name bytes
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1.0f32.to_le_bytes());
+        let err = WeightStore::parse(&out).unwrap_err();
+        assert!(format!("{err:#}").contains("utf-8"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_truncated_entry_and_bad_ndim() {
+        // Entry header declares a name longer than the remaining bytes.
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ITWB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&100u32.to_le_bytes());
+        out.extend_from_slice(b"ab");
+        assert!(WeightStore::parse(&out).is_err());
+        // ndim outside 1..=2 is rejected, not misparsed.
+        for ndim in [0u32, 3] {
+            let mut out = Vec::new();
+            out.extend_from_slice(b"ITWB");
+            out.extend_from_slice(&1u32.to_le_bytes());
+            out.extend_from_slice(&1u32.to_le_bytes());
+            out.extend_from_slice(b"x");
+            out.extend_from_slice(&ndim.to_le_bytes());
+            assert!(WeightStore::parse(&out).is_err(), "ndim {ndim}");
+        }
     }
 
     #[test]

@@ -1,32 +1,48 @@
-//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//! Model execution runtimes: the request-path boundary of the (now
+//! four-layer) architecture.
 //!
-//! This is the request-path boundary of the three-layer architecture: the
-//! Python compile path ran once at build time; from here on everything is
-//! Rust + the PJRT C API (`xla` crate over xla_extension 0.5.1, CPU
-//! plugin). HLO **text** is the interchange format — `HloModuleProto::
-//! from_text_file` reassigns instruction ids, sidestepping the 64-bit-id
-//! protos jax>=0.5 emits that this XLA build rejects.
+//! Two interchangeable backends implement [`TranslateBackend`], the
+//! greedy-translation contract everything downstream (BLEU evaluation,
+//! the serving batcher, the CLI, the e2e suites) is written against:
 //!
-//! Weight arguments are uploaded to device buffers **once per compression
-//! configuration** ([`ArgBank`]); each translate call then swaps only the
-//! source-token buffer — the same weights-stay-resident discipline a real
-//! accelerator deployment would use, and the single biggest perf lever on
-//! the eval loop (see EXPERIMENTS.md §Perf).
+//! * **[`native`]** — a dependency-free pure-Rust transformer engine that
+//!   executes the encoder–decoder forward pass (embeddings + positional
+//!   encoding, multi-head attention, layer-norm, FFN, greedy decode)
+//!   directly on [`crate::tensor::Matrix`], consuming the manifest +
+//!   weight store + compressed layer banks. It is compiled in **every**
+//!   build, so the default `cargo build` can run a model end-to-end. Both
+//!   execution modes are supported natively: the dense path multiplies the
+//!   full `[K x N]` (fake-quantized) weights; the factored path runs each
+//!   compressed linear as two skinny matmuls `[M x K]·[K x r]` then
+//!   `[M x r]·[r x N]` at the layer's *actual* rank — realizing the
+//!   paper's FLOP savings at inference time instead of padding up to
+//!   `r_max` like the AOT artifact must.
+//! * **PJRT** (`pjrt` feature) — loads AOT-compiled HLO text (the Python
+//!   compile path ran once at build time), compiles through the PJRT C API
+//!   (`xla` crate over xla_extension 0.5.1, CPU plugin) and executes the
+//!   Pallas-kernel-lowered graphs. HLO **text** is the interchange format —
+//!   `HloModuleProto::from_text_file` reassigns instruction ids,
+//!   sidestepping the 64-bit-id protos jax>=0.5 emits that this XLA build
+//!   rejects. Weight arguments are uploaded to device buffers once per
+//!   compression configuration ([`ArgBank`]); each translate call swaps
+//!   only the source-token buffer. [`PjrtBackend`] bundles a compiled
+//!   session with its resident bank to satisfy the trait.
 //!
-//! The engine/session code needs the external `xla` crate and is gated
-//! behind the `pjrt` feature; [`Mode`] is plain metadata shared with the
-//! (always-built) compression/coordinator method plumbing, so it lives
-//! here unconditionally.
+//! [`Mode`] is plain metadata shared with the (always-built)
+//! compression/coordinator method plumbing, so it lives here
+//! unconditionally.
 
 #[cfg(feature = "pjrt")]
 mod engine;
+pub mod native;
 #[cfg(feature = "pjrt")]
 mod session;
 
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
+pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
-pub use session::{ArgBank, TranslateSession};
+pub use session::{ArgBank, PjrtBackend, TranslateSession};
 
 /// Which compiled model variant to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,7 +51,8 @@ pub enum Mode {
     /// argument (FP32 reference and quantization-only baseline).
     Dense,
     /// `translate_svd.hlo.txt`: each compressed linear is a rank-padded
-    /// `[K x r_max]`, `[r_max x N]` factor pair.
+    /// `[K x r_max]`, `[r_max x N]` factor pair (the native backend skips
+    /// the padding and runs the true-rank factors).
     Svd,
 }
 
@@ -46,6 +63,38 @@ impl Mode {
             Mode::Svd => "svd",
         }
     }
+}
+
+/// A model execution backend that can greedy-translate token batches.
+///
+/// `src_tokens` is a row-major `[rows * seq_len()]` buffer of BOS-framed,
+/// EOS-terminated, PAD-padded source rows; the returned buffer has the
+/// same layout for the hypotheses. `batch()` is the backend's preferred
+/// batch size (fixed for the AOT artifacts; a packing hint for the native
+/// engine). Implementations must be deterministic: the same tokens and
+/// the same weights produce bit-identical output on every call.
+pub trait TranslateBackend {
+    /// Short backend tag for logs/reports ("native", "pjrt").
+    fn kind(&self) -> &'static str;
+
+    /// Preferred (for PJRT: required) number of rows per translate call.
+    fn batch(&self) -> usize;
+
+    /// Fixed sequence length of every token row.
+    fn seq_len(&self) -> usize;
+
+    /// Whether `translate` requires exactly `batch() * seq_len()` tokens
+    /// (the AOT artifacts' compiled shape). Variable-shape backends (the
+    /// native engine) return `false`, letting callers pack only the rows
+    /// they actually have instead of padding to full batch capacity.
+    fn fixed_shape(&self) -> bool {
+        true
+    }
+
+    /// Greedy-translate one batch of `batch() * seq_len()` source tokens
+    /// (or any positive multiple of `seq_len()` when `fixed_shape()` is
+    /// false).
+    fn translate(&self, src_tokens: &[i32]) -> anyhow::Result<Vec<i32>>;
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ use crate::compress::CompressedLinear;
 use crate::model::{Manifest, PairModel};
 use crate::quant;
 
-use super::{Engine, Mode};
+use super::{Engine, Mode, TranslateBackend};
 
 /// A compiled translate executable plus the manifest metadata needed to
 /// pack its arguments.
@@ -167,5 +167,41 @@ impl<'e> TranslateSession<'e> {
         args.extend(bank.buffers.iter());
         let out = self.engine.run_tuple1(&self.exe, &args)?;
         out.to_vec::<i32>().context("reading translate output")
+    }
+}
+
+/// A [`TranslateSession`] bundled with its device-resident [`ArgBank`] —
+/// the PJRT implementation of the backend trait the evaluator, serving
+/// loop and CLI are written against.
+pub struct PjrtBackend<'e> {
+    session: TranslateSession<'e>,
+    bank: ArgBank,
+}
+
+impl<'e> PjrtBackend<'e> {
+    pub fn new(session: TranslateSession<'e>, bank: ArgBank) -> PjrtBackend<'e> {
+        PjrtBackend { session, bank }
+    }
+
+    pub fn session(&self) -> &TranslateSession<'e> {
+        &self.session
+    }
+}
+
+impl TranslateBackend for PjrtBackend<'_> {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        self.session.batch()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.session.seq_len()
+    }
+
+    fn translate(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
+        self.session.translate(&self.bank, src_tokens)
     }
 }

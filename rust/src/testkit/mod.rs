@@ -1,10 +1,17 @@
-//! Property-testing mini-framework (the image vendors no proptest).
+//! Property-testing mini-framework (the image vendors no proptest) and
+//! hermetic test fixtures.
 //!
 //! A [`Gen`] wraps the PCG PRNG with convenience samplers; [`check`] runs a
 //! property over N generated cases and reports the seed of the first
 //! failing case so it can be replayed deterministically. No shrinking —
 //! generators are kept small-biased instead (sizes are sampled
 //! log-uniformly, so small counterexamples are common).
+//!
+//! [`tinymodel`] synthesizes a complete on-disk model artifact set
+//! (ITWB weight store + manifest + corpus) so the native-runtime e2e
+//! suites run without any Python-built artifacts.
+
+pub mod tinymodel;
 
 use crate::util::rng::Pcg64;
 

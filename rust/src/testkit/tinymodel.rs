@@ -1,0 +1,305 @@
+//! Deterministic tiny-model artifact generator.
+//!
+//! Synthesizes everything `Manifest::load` + `PairModel::load` +
+//! `Corpus::load` expect — an ITWB weight store, a `manifest.json` with
+//! the full linear inventory and argument orders, and an 8-sentence ITCP
+//! corpus — in a directory of the caller's choosing. The weights are
+//! seeded PCG noise (not a trained model): the native-runtime e2e tests
+//! assert *mechanics* (dense/factored parity, decode determinism, the
+//! serve loop), which don't need a model that translates well, only one
+//! that is fully deterministic and architecturally faithful (1 encoder +
+//! 1 decoder block, multi-head attention, tied embeddings).
+//!
+//! No Python anywhere: this is what makes the always-built e2e suite
+//! hermetic.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::{Manifest, WeightStore};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// The synthetic language pair the generator registers.
+pub const PAIR: &str = "xx-yy";
+
+/// Tiny-but-real dimensions: every architectural feature of the full
+/// model (heads, FFN expansion, separate encoder/decoder stacks) at the
+/// smallest size where attention still has two heads to merge.
+pub const VOCAB: usize = 48;
+pub const D_MODEL: usize = 16;
+pub const N_HEADS: usize = 2;
+pub const D_FF: usize = 32;
+pub const N_ENC: usize = 1;
+pub const N_DEC: usize = 1;
+pub const SEQ_LEN: usize = 10;
+pub const EVAL_BATCH: usize = 4;
+pub const SENTENCES: usize = 8;
+
+const PAD: i32 = 0;
+const BOS: i32 = 1;
+const EOS: i32 = 2;
+
+/// Ordered names of every compressed linear (mirrors
+/// `model.py::compressed_linear_names` at the tiny configuration).
+pub fn linear_names() -> Vec<String> {
+    let mut names = Vec::new();
+    for i in 0..N_ENC {
+        for w in ["self_q", "self_k", "self_v", "self_o", "ff1", "ff2"] {
+            names.push(format!("enc{i}.{w}"));
+        }
+    }
+    for i in 0..N_DEC {
+        for w in [
+            "self_q", "self_k", "self_v", "self_o", "cross_q", "cross_k", "cross_v",
+            "cross_o", "ff1", "ff2",
+        ] {
+            names.push(format!("dec{i}.{w}"));
+        }
+    }
+    names
+}
+
+fn linear_shape(name: &str) -> (usize, usize) {
+    if name.ends_with(".ff1") {
+        (D_MODEL, D_FF)
+    } else if name.ends_with(".ff2") {
+        (D_FF, D_MODEL)
+    } else {
+        (D_MODEL, D_MODEL)
+    }
+}
+
+/// Uncompressed parameters (embeddings, layer norms) in the artifact's
+/// fixed argument order.
+fn other_param_names() -> Vec<String> {
+    let mut names = vec!["src_emb".to_string(), "tgt_emb".to_string(), "pos_emb".to_string()];
+    for i in 0..N_ENC {
+        for p in ["ln1_g", "ln1_b", "ln2_g", "ln2_b"] {
+            names.push(format!("enc{i}.{p}"));
+        }
+    }
+    names.push("enc_ln_g".to_string());
+    names.push("enc_ln_b".to_string());
+    for i in 0..N_DEC {
+        for p in ["ln1_g", "ln1_b", "ln2_g", "ln2_b", "ln3_g", "ln3_b"] {
+            names.push(format!("dec{i}.{p}"));
+        }
+    }
+    names.push("dec_ln_g".to_string());
+    names.push("dec_ln_b".to_string());
+    names
+}
+
+/// Generate the full artifact set under `dir` and return the loaded
+/// manifest. Deterministic in `seed`: the same seed writes byte-identical
+/// stores on every call.
+pub fn generate(dir: impl AsRef<Path>, seed: u64) -> Result<Manifest> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let mut rng = Pcg64::new(seed);
+
+    // ---- weight store -------------------------------------------------
+    let mut store = WeightStore::new();
+    store.insert("src_emb", Matrix::randn(VOCAB, D_MODEL, &mut rng).scale(0.3));
+    store.insert("tgt_emb", Matrix::randn(VOCAB, D_MODEL, &mut rng).scale(0.3));
+    store.insert("pos_emb", Matrix::randn(SEQ_LEN, D_MODEL, &mut rng).scale(0.1));
+    for name in other_param_names() {
+        if name.ends_with("_g") {
+            store.insert_vec(&name, vec![1.0; D_MODEL]);
+        } else if name.ends_with("_b") {
+            store.insert_vec(&name, vec![0.0; D_MODEL]);
+        }
+    }
+    for name in linear_names() {
+        let (k, n) = linear_shape(&name);
+        let scale = 1.0 / (k as f32).sqrt();
+        store.insert(&name, Matrix::randn(k, n, &mut rng).scale(scale));
+    }
+    store.save(dir.join(format!("weights_{PAIR}.bin")))?;
+
+    // ---- corpus (identity pair: target copies the source tokens) ------
+    let corpus = make_corpus(&mut rng);
+    std::fs::write(dir.join(format!("corpus_{PAIR}.bin")), &corpus)?;
+    std::fs::write(dir.join(format!("calib_{PAIR}.bin")), &corpus)?;
+
+    // ---- manifest -----------------------------------------------------
+    let names = linear_names();
+    let linears = Json::Arr(
+        names
+            .iter()
+            .map(|name| {
+                let (k, n) = linear_shape(name);
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("k", Json::Num(k as f64)),
+                    ("n", Json::Num(n as f64)),
+                    ("r_max", Json::Num(k.min(n) as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let mut dense_order =
+        vec!["src_tokens".to_string(), "act_scales".to_string(), "act_levels".to_string()];
+    dense_order.extend(other_param_names());
+    let mut svd_order = dense_order.clone();
+    for name in &names {
+        dense_order.push(name.clone());
+        svd_order.push(format!("{name}.w1"));
+        svd_order.push(format!("{name}.w2"));
+    }
+    let arr_string = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect());
+    // Plausible static calibration range; the LN-normalized activations
+    // of the random model sit well inside ±4.
+    let act_maxabs = vec![4.0f64; names.len()];
+
+    let manifest = Json::obj(vec![
+        (
+            "model",
+            Json::obj(vec![
+                ("vocab", Json::Num(VOCAB as f64)),
+                ("d_model", Json::Num(D_MODEL as f64)),
+                ("n_heads", Json::Num(N_HEADS as f64)),
+                ("d_ff", Json::Num(D_FF as f64)),
+                ("n_enc", Json::Num(N_ENC as f64)),
+                ("n_dec", Json::Num(N_DEC as f64)),
+                ("seq_len", Json::Num(SEQ_LEN as f64)),
+                ("eval_batch", Json::Num(EVAL_BATCH as f64)),
+                ("pad_id", Json::Num(PAD as f64)),
+                ("bos_id", Json::Num(BOS as f64)),
+                ("eos_id", Json::Num(EOS as f64)),
+            ]),
+        ),
+        ("linears", linears),
+        (
+            "arg_order",
+            Json::obj(vec![
+                ("dense", arr_string(&dense_order)),
+                ("svd", arr_string(&svd_order)),
+            ]),
+        ),
+        (
+            "artifacts",
+            Json::obj(vec![
+                // The tiny set carries no compiled HLO; these names only
+                // resolve if a PJRT build tries to execute them.
+                ("translate_dense", Json::Str("translate_dense.hlo.txt".into())),
+                ("translate_svd", Json::Str("translate_svd.hlo.txt".into())),
+                ("linear512_dense", Json::Str("linear512_dense.hlo.txt".into())),
+                ("linear512_svd", Json::Str("linear512_svd.hlo.txt".into())),
+            ]),
+        ),
+        (
+            "pairs",
+            Json::obj(vec![(
+                PAIR,
+                Json::obj(vec![
+                    ("weights", Json::Str(format!("weights_{PAIR}.bin"))),
+                    ("corpus", Json::Str(format!("corpus_{PAIR}.bin"))),
+                    ("calib", Json::Str(format!("calib_{PAIR}.bin"))),
+                    ("act_maxabs", Json::arr_f64(&act_maxabs)),
+                ]),
+            )]),
+        ),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
+
+    Manifest::load(dir)
+}
+
+/// Generate under a process-unique temp dir (`tag` keeps concurrent test
+/// binaries apart); returns the directory and the loaded manifest.
+pub fn generate_in_temp(tag: &str, seed: u64) -> Result<(PathBuf, Manifest)> {
+    let dir = std::env::temp_dir().join(format!("itera_tiny_{tag}_{}", std::process::id()));
+    let manifest = generate(&dir, seed)?;
+    Ok((dir, manifest))
+}
+
+/// ITCP corpus bytes: BOS-framed, EOS-terminated, PAD-padded rows where
+/// the target equals the source (a copy pair — deterministic and enough
+/// for pipeline mechanics).
+fn make_corpus(rng: &mut Pcg64) -> Vec<u8> {
+    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(SENTENCES);
+    for _ in 0..SENTENCES {
+        let len = 3 + rng.below(5); // 3..=7 content tokens
+        let mut row = vec![PAD; SEQ_LEN];
+        row[0] = BOS;
+        for slot in row.iter_mut().skip(1).take(len) {
+            *slot = 3 + rng.below(VOCAB - 3) as i32;
+        }
+        row[1 + len] = EOS;
+        rows.push(row);
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(b"ITCP");
+    out.extend_from_slice(&(SENTENCES as u32).to_le_bytes());
+    out.extend_from_slice(&(SEQ_LEN as u32).to_le_bytes());
+    for row in &rows {
+        for &t in row {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    for row in &rows {
+        for &t in row {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Corpus;
+    use crate::model::PairModel;
+
+    #[test]
+    fn generates_loadable_artifacts() {
+        let (dir, m) = generate_in_temp("unit_load", 7).unwrap();
+        assert_eq!(m.model.d_model, D_MODEL);
+        assert_eq!(m.linears.len(), N_ENC * 6 + N_DEC * 10);
+        let model = PairModel::load(&m, PAIR).unwrap();
+        assert_eq!(model.act_maxabs.len(), m.linears.len());
+        let corpus = Corpus::load(&m.pairs[PAIR].corpus).unwrap();
+        assert_eq!(corpus.n, SENTENCES);
+        assert_eq!(corpus.seq_len, SEQ_LEN);
+        for i in 0..corpus.n {
+            assert_eq!(corpus.src_row(i)[0], BOS);
+            assert_eq!(corpus.src_row(i), corpus.tgt_row(i), "copy pair");
+            assert!(corpus.src_row(i).contains(&EOS));
+        }
+        // Every manifest linear is present with the declared shape.
+        for l in &m.linears {
+            assert_eq!(model.linear(&l.name).shape(), (l.k, l.n), "{}", l.name);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn same_seed_is_byte_deterministic() {
+        let base = std::env::temp_dir().join(format!("itera_tiny_det_{}", std::process::id()));
+        let d1 = base.join("a");
+        let d2 = base.join("b");
+        generate(&d1, 42).unwrap();
+        generate(&d2, 42).unwrap();
+        for f in [
+            format!("weights_{PAIR}.bin"),
+            format!("corpus_{PAIR}.bin"),
+            "manifest.json".to_string(),
+        ] {
+            let a = std::fs::read(d1.join(&f)).unwrap();
+            let b = std::fs::read(d2.join(&f)).unwrap();
+            assert_eq!(a, b, "{f} differs between same-seed runs");
+        }
+        let d3 = base.join("c");
+        generate(&d3, 43).unwrap();
+        assert_ne!(
+            std::fs::read(d1.join(format!("weights_{PAIR}.bin"))).unwrap(),
+            std::fs::read(d3.join(format!("weights_{PAIR}.bin"))).unwrap(),
+            "different seeds must differ"
+        );
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

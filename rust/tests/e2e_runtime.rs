@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 use itera_llm::compress::{itera, quant_only};
 use itera_llm::eval::{evaluate_bleu, Corpus};
 use itera_llm::model::{Manifest, PairModel};
-use itera_llm::runtime::{Engine, Mode, TranslateSession};
+use itera_llm::runtime::{Engine, Mode, PjrtBackend, TranslateSession};
 
 fn setup() -> Option<(Manifest, Engine)> {
     let dir = Manifest::default_dir();
@@ -37,7 +37,8 @@ fn fp32_reference_translates_near_perfectly() {
     let session = TranslateSession::new(&engine, &manifest, Mode::Dense).unwrap();
     // Empty compression map + no activation quant = FP32 reference.
     let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
-    let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 64).unwrap();
+    let backend = PjrtBackend::new(session, bank);
+    let d = evaluate_bleu(&backend, &corpus, &manifest.model, 64).unwrap();
     assert!(
         d.score > 95.0,
         "FP32 reference must be near-perfect on the synthetic pair: BLEU {:.2} ({:?})",
@@ -58,7 +59,8 @@ fn w8a8_quant_only_stays_close_to_fp32() {
         compressed.insert(l.name.clone(), quant_only(model.linear(&l.name), 8));
     }
     let bank = session.build_bank(&model, &compressed, Some(8)).unwrap();
-    let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 48).unwrap();
+    let backend = PjrtBackend::new(session, bank);
+    let d = evaluate_bleu(&backend, &corpus, &manifest.model, 48).unwrap();
     assert!(d.score > 85.0, "W8A8 should be nearly lossless: BLEU {:.2}", d.score);
 }
 
@@ -78,7 +80,8 @@ fn svd_artifact_full_rank_matches_dense_path() {
     }
     let svd_session = TranslateSession::new(&engine, &manifest, Mode::Svd).unwrap();
     let bank = svd_session.build_bank(&model, &compressed, Some(8)).unwrap();
-    let d = evaluate_bleu(&svd_session, &bank, &corpus, &manifest.model, 48).unwrap();
+    let backend = PjrtBackend::new(svd_session, bank);
+    let d = evaluate_bleu(&backend, &corpus, &manifest.model, 48).unwrap();
     assert!(
         d.score > 85.0,
         "full-rank W8A8 iterative decomposition should be near-lossless: {:.2}",
@@ -109,7 +112,8 @@ fn both_language_pairs_load_and_translate() {
         let corpus = Corpus::load(&manifest.pairs[pair].corpus).unwrap();
         let session = TranslateSession::new(&engine, &manifest, Mode::Dense).unwrap();
         let bank = session.build_bank(&model, &BTreeMap::new(), None).unwrap();
-        let d = evaluate_bleu(&session, &bank, &corpus, &manifest.model, 32).unwrap();
+        let backend = PjrtBackend::new(session, bank);
+        let d = evaluate_bleu(&backend, &corpus, &manifest.model, 32).unwrap();
         assert!(d.score > 90.0, "{pair}: FP32 BLEU {:.2}", d.score);
     }
 }
