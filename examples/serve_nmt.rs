@@ -1,8 +1,12 @@
 //! Batched NMT serving demo over the native runtime.
 //!
 //! ```bash
-//! cargo run --release --example serve_nmt [-- <requests> <pair>]
+//! cargo run --release --example serve_nmt [-- <requests> <pair> <mode>]
 //! ```
+//!
+//! `<mode>` is `dense` (fake-quant f32, the default) or `quantized`
+//! (bit-packed weights — same tokens bit for bit, ~4x fewer weight bytes
+//! resident at W8).
 //!
 //! Spins up the request-batching loop (`coordinator::serve_demo_native`):
 //! a closed-loop client submits single-sentence translation requests, the
@@ -18,6 +22,7 @@
 use anyhow::Result;
 use itera_llm::coordinator::serve_demo_native;
 use itera_llm::model::Manifest;
+use itera_llm::runtime::Mode;
 use itera_llm::util::pool::default_workers;
 
 fn main() -> Result<()> {
@@ -35,6 +40,13 @@ fn main() -> Result<()> {
             .cloned()
             .ok_or_else(|| anyhow::anyhow!("manifest registers no language pairs"))?,
     };
-    serve_demo_native(&manifest, &pair, requests, default_workers(8))?;
+    // Quant-only compression produces Dense layers, so only the dense
+    // and bit-packed execution forms apply here.
+    let mode = match std::env::args().nth(3).as_deref() {
+        None | Some("dense") => Mode::Dense,
+        Some("quantized") => Mode::Quantized,
+        Some(m) => anyhow::bail!("unknown mode {m} (expected dense|quantized)"),
+    };
+    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode)?;
     Ok(())
 }

@@ -21,6 +21,10 @@ pub struct BenchResult {
     /// Items processed per iteration (set by [`Bench::bench_throughput`]);
     /// serialized as `items_per_s` in the JSON trajectory.
     pub items: Option<u64>,
+    /// Non-timed scalar metric (set by [`Bench::gauge`]); entries carrying
+    /// a value serialize as `{value: v}` instead of timing fields — used
+    /// for deterministic accounting like packed weight bytes.
+    pub value: Option<f64>,
 }
 
 /// Bench suite runner.
@@ -105,6 +109,7 @@ impl Bench {
             stddev_s: s.stddev(),
             min_s: s.min(),
             items: None,
+            value: None,
         };
         println!(
             "{:<44} {:>10.4} ms/iter (median {:.4}, sd {:.4}, n={})",
@@ -131,6 +136,27 @@ impl Bench {
                 items as f64 / r.mean_s
             );
         }
+    }
+
+    /// Record a non-timed scalar metric (bytes, ratios, counts) into the
+    /// trajectory — deterministic accounting entries that live alongside
+    /// the timings (e.g. `qkernel/packed_bytes_*`). Honors the active
+    /// filter like any bench.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("{:<44} {:>14.1} (gauge)", name, value);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: 0,
+            mean_s: 0.0,
+            median_s: 0.0,
+            stddev_s: 0.0,
+            min_s: 0.0,
+            items: None,
+            value: Some(value),
+        });
     }
 
     pub fn results(&self) -> &[BenchResult] {
@@ -176,6 +202,10 @@ impl Bench {
             Err(e) => return Err(e),
         }
         for r in &self.results {
+            if let Some(v) = r.value {
+                benches.insert(r.name.clone(), Json::obj(vec![("value", Json::Num(v))]));
+                continue;
+            }
             let mut fields = vec![
                 ("mean_s", Json::Num(r.mean_s)),
                 ("median_s", Json::Num(r.median_s)),
@@ -246,6 +276,24 @@ mod tests {
         let ips = e.get("items_per_s").as_f64().expect("items_per_s present");
         let mean = e.get("mean_s").as_f64().unwrap();
         assert!((ips - 1000.0 / mean).abs() / ips < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gauges_land_in_json_and_honor_filter() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("itera_benchkit_gauge_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut b = Bench::new().quick();
+        b.filter = Some("keep".to_string());
+        b.gauge("suite/keep_bytes", 133120.0);
+        b.gauge("suite/dropped", 1.0);
+        assert_eq!(b.results().len(), 1, "filter must apply to gauges");
+        b.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let v = j.get("benches").get("suite/keep_bytes").get("value");
+        assert_eq!(v.as_f64(), Some(133120.0));
+        assert!(j.get("benches").get("suite/dropped").get("value").as_f64().is_none());
         std::fs::remove_file(&path).ok();
     }
 

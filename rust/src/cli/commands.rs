@@ -13,7 +13,8 @@ use crate::eval::{evaluate_bleu, Corpus};
 use crate::hw::Platform;
 use crate::hw::{sim, TileConfig, Workload};
 use crate::model::{Manifest, PairModel};
-use crate::runtime::NativeBackend;
+use crate::qkernel;
+use crate::runtime::{Mode, NativeBackend};
 use crate::tensor::Matrix;
 use crate::util::pool::default_workers;
 use crate::util::timed;
@@ -49,7 +50,7 @@ fn default_pair(manifest: &Manifest) -> Result<String> {
         .ok_or_else(|| anyhow::anyhow!("manifest registers no language pairs"))
 }
 
-pub fn cmd_info() -> Result<()> {
+pub fn cmd_info(args: &Args) -> Result<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
     println!("itera-llm: ITERA-LLM co-design framework");
     println!("runtime       : native (always built)");
@@ -71,6 +72,48 @@ pub fn cmd_info() -> Result<()> {
     println!("compressed linears: {}", manifest.linears.len());
     println!("pairs         : {:?}", manifest.pairs.keys().collect::<Vec<_>>());
     println!("artifacts dir : {:?}", manifest.dir);
+
+    // Memory accounting: dense f32 vs the W<wl> bit-packed layout the
+    // quantized execution mode would keep resident for each linear.
+    // Analytic projection from manifest shapes (`packed_bytes_for` is
+    // exact for the dense layout: packed words + one f32 scale per
+    // column); the actual bank of a factored compression is reported by
+    // `eval --mode quantized`.
+    let wl = args.flag_usize("wl", 4)? as u32;
+    if !(2..=8).contains(&wl) {
+        bail!("--wl {wl} out of range (packable word lengths are 2..=8)");
+    }
+    println!("\nper-layer weight bytes, dense layout (f32 vs W{wl} bit-packed):");
+    let mut tot_f32 = 0usize;
+    let mut tot_packed = 0usize;
+    for l in &manifest.linears {
+        let f32b = qkernel::fp32_bytes(l.k, l.n);
+        let packed = qkernel::packed_bytes_for(l.k, l.n, wl);
+        tot_f32 += f32b;
+        tot_packed += packed;
+        println!(
+            "  {:<16} {:>4}x{:<4} {:>12} B {:>12} B  {:>6.2}x",
+            l.name,
+            l.k,
+            l.n,
+            f32b,
+            packed,
+            f32b as f64 / packed as f64
+        );
+    }
+    println!(
+        "  {:<16} {:>9} {:>12} B {:>12} B  {:>6.2}x  (dense-packing projection)",
+        "total",
+        "",
+        tot_f32,
+        tot_packed,
+        tot_f32 as f64 / tot_packed.max(1) as f64
+    );
+    println!(
+        "  (analytic, from manifest shapes; factored layers pack their factor \
+         pair instead — `itera eval --mode quantized` reports the actual \
+         resident bank)"
+    );
     Ok(())
 }
 
@@ -94,6 +137,11 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
 
     let method_name = args.flag_or("method", "fp32");
     let (backend, label) = if method_name == "fp32" {
+        if let Some(m) = args.flag("mode") {
+            if m != "dense" {
+                bail!("--mode {m} needs a quantized method; the FP32 reference runs dense");
+            }
+        }
         (NativeBackend::fp32(&manifest, &model, workers)?, "FP32 reference".to_string())
     } else {
         let wl = args.flag_usize("wl", 8)? as u32;
@@ -112,7 +160,16 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
         let (cm, dt) =
             timed(|| compress_model_from(&manifest.linears, &weights, &method, None, workers));
         println!("compressed {} linears in {dt:.1}s", manifest.linears.len());
-        (cm.native_backend(&manifest, &model, workers)?, method.label())
+        // --mode quantized executes the same compression bit-packed
+        // (token-for-token identical to its fake-quant default mode);
+        // without the flag the method's own mode runs.
+        let mode = match args.flag("mode") {
+            None => cm.mode(),
+            Some(m) => Mode::parse(m)
+                .ok_or_else(|| anyhow::anyhow!("--mode expects dense|svd|quantized"))?,
+        };
+        let backend = cm.native_backend_mode(&manifest, &model, mode, workers)?;
+        (backend, format!("{} [{} exec]", method.label(), mode.key()))
     };
 
     let (d, dt) = timed(|| evaluate_bleu(&backend, &corpus, &manifest.model, limit));
@@ -120,6 +177,7 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
     println!("method      : {label}");
     println!("pair        : {pair}");
     println!("backend     : native");
+    println!("resident    : {} weight bytes", backend.weight_bytes());
     println!("sentences   : {}", if limit == 0 { corpus.n } else { limit.min(corpus.n) });
     println!("BLEU        : {:.2}", d.score);
     println!("wall time   : {dt:.1}s");
@@ -338,9 +396,15 @@ pub fn cmd_sra(_args: &Args) -> Result<()> {
     bail!("`itera sra` needs the coordinator's PJRT oracle; build with --features pjrt")
 }
 
-/// Analytical model vs cycle-level simulator cross-validation table.
-pub fn cmd_validate() -> Result<()> {
+/// Analytical model vs cycle-level simulator cross-validation table —
+/// or, with `--mode quantized`, the packed-kernel cross-validation:
+/// pack/unpack exactness, GEMM bit-parity vs the fake-quant f32 kernel,
+/// and the byte accounting per word length.
+pub fn cmd_validate(args: &Args) -> Result<()> {
     use crate::coordinator::report::Table;
+    if args.flag("mode") == Some("quantized") {
+        return validate_quantized();
+    }
     let mut t = Table::new(
         "Analytical model vs dataflow simulator (512^3 W4A8)",
         &["tile", "analytical_cycles", "simulated_cycles", "ratio", "sim_occupancy"],
@@ -362,9 +426,56 @@ pub fn cmd_validate() -> Result<()> {
     Ok(())
 }
 
+/// `validate --mode quantized`: cross-validate the qkernel packed storage
+/// and integer GEMM against the fake-quant f32 reference on random
+/// weights, per word length. "exact" columns must all read `yes` — the
+/// same bit-parity contract `tests/e2e_native.rs` pins end-to-end.
+fn validate_quantized() -> Result<()> {
+    use crate::coordinator::report::Table;
+    use crate::qkernel::{packed_bytes_for, QMatrix, ScaleAxis};
+    use crate::util::rng::Pcg64;
+
+    let mut t = Table::new(
+        "qkernel cross-validation (96x80 weights, 24-row activations)",
+        &["wl", "unpack_exact", "gemm_bit_exact", "packed_B", "fp32_B", "ratio"],
+    );
+    let (k, n) = (96usize, 80usize);
+    let mut rng = Pcg64::new(0x9C0DE);
+    let w = Matrix::randn(k, n, &mut rng).scale(0.2);
+    let x = Matrix::randn(24, k, &mut rng);
+    let yes_no = |ok: bool| if ok { "yes".to_string() } else { "NO".to_string() };
+    let mut all_ok = true;
+    for wl in 2..=8u32 {
+        let (q, scales) = crate::quant::quantize_cols(&w, wl);
+        let qm = QMatrix::from_fake_quant(&q, &scales, wl, ScaleAxis::Col)?;
+        let unpack_ok = qm.to_matrix().data() == q.data();
+        let gemm_ok = qm.qmatmul(&x).data() == x.matmul(&q).data();
+        let packed = qm.packed_bytes();
+        let bytes_ok = packed == packed_bytes_for(k, n, wl);
+        all_ok &= unpack_ok && gemm_ok && bytes_ok;
+        let f32b = qm.fp32_bytes();
+        t.row(vec![
+            format!("W{wl}"),
+            yes_no(unpack_ok),
+            yes_no(gemm_ok),
+            format!("{packed}{}", if bytes_ok { "" } else { " (MISMATCH)" }),
+            format!("{f32b}"),
+            format!("{:.2}x", f32b as f64 / packed as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    // Fail the command (non-zero exit) on any parity/accounting break, so
+    // scripts and CI can gate on it.
+    if !all_ok {
+        bail!("qkernel cross-validation FAILED — see table above");
+    }
+    Ok(())
+}
+
 /// Batched serving demo: random test sentences through a compressed
 /// model, reporting latency/throughput percentiles. Native by default;
-/// `--backend pjrt` uses the AOT artifacts (pjrt builds only).
+/// `--backend pjrt` uses the AOT artifacts (pjrt builds only). For the
+/// native backend, `--mode quantized` serves the bit-packed weight bank.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.flag_usize("requests", 64)?;
     match args.flag_or("backend", "native").as_str() {
@@ -374,11 +485,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 Some(p) => p.to_string(),
                 None => default_pair(&manifest)?,
             };
-            serve_demo_native(&manifest, &pair, requests, default_workers(8))?;
+            // The serving demo compresses quant-only (Dense layers), so
+            // the factored `svd` execution form has nothing to run on.
+            let mode = match args.flag("mode") {
+                None | Some("dense") => Mode::Dense,
+                Some("quantized") => Mode::Quantized,
+                Some(m) => bail!("serve --mode expects dense|quantized, got {m}"),
+            };
+            serve_demo_native(&manifest, &pair, requests, default_workers(8), mode)?;
             Ok(())
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
+            if let Some(m) = args.flag("mode") {
+                bail!("--mode {m} applies to the native backend; the PJRT demo runs dense");
+            }
             let c = coordinator(args)?;
             let pair = args.flag_or("pair", "en-de");
             crate::coordinator::serve_demo(&c, &pair, requests)?;

@@ -3,10 +3,11 @@
 //! Always available (native runtime + analytical models):
 //!
 //! ```text
-//! itera info                         # runtime + artifact summary
+//! itera info [--wl 4]                # runtime summary + packed-bytes accounting
 //! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
-//! itera serve [--requests 64]        # batched serving demo + latency stats
-//! itera validate                     # analytical model vs simulator table
+//!            [--mode dense|svd|quantized]
+//! itera serve [--requests 64] [--mode quantized]  # batched serving demo
+//! itera validate [--mode quantized]  # model-vs-sim / qkernel parity table
 //! ```
 //!
 //! PJRT-artifact measurement (needs `--features pjrt`):
@@ -89,12 +90,16 @@ pub const USAGE: &str = "\
 itera — ITERA-LLM co-design framework (paper reproduction)
 
 USAGE (native runtime, every build):
-  itera info
+  itera info [--wl <2..8>]
   itera eval [--method <fp32|quant|svd|itera>] [--wl <2..8>] [--rank-frac F]
-             [--pair P] [--limit N]
+             [--pair P] [--limit N] [--mode <dense|svd|quantized>]
   itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
-  itera validate
+              [--mode <dense|quantized>]
+  itera validate [--mode quantized]
   itera help
+
+  --mode quantized executes the compressed model from bit-packed sub-8-bit
+  storage (qkernel) — bit-identical tokens, up to 16x fewer weight bytes.
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]
@@ -110,12 +115,12 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
             print!("{USAGE}");
             Ok(())
         }
-        "info" => commands::cmd_info(),
+        "info" => commands::cmd_info(&args),
         "eval" => commands::cmd_eval(&args),
         "fig" => commands::cmd_fig(&args),
         "compress" => commands::cmd_compress(&args),
         "sra" => commands::cmd_sra(&args),
-        "validate" => commands::cmd_validate(),
+        "validate" => commands::cmd_validate(&args),
         "serve" => commands::cmd_serve(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }

@@ -31,6 +31,11 @@ pub struct IncrementalItera {
     w1: Matrix,
     /// `W'2 [r_max x N]` — quantized right factors, rank-major rows.
     w2: Matrix,
+    /// Per-rank dequant scales of the factor columns/rows (truncate with
+    /// the factors — scales are per rank, so a rank prefix keeps exactly
+    /// its own prefix of scales).
+    s1: Vec<f32>,
+    s2: Vec<f32>,
     wl: WordLen,
     trace: IteraTrace,
 }
@@ -46,10 +51,10 @@ impl IncrementalItera {
     pub fn compress_opts(w: &Matrix, wl: WordLen, opts: &IteraOpts) -> IncrementalItera {
         let r_max = w.rows().min(w.cols()).max(1);
         let (c, trace) = itera_opts(w, r_max, wl, opts);
-        let CompressedLinear::LowRank { w1, w2, .. } = c else {
+        let CompressedLinear::LowRank { w1, w2, s1, s2, .. } = c else {
             unreachable!("itera always returns LowRank");
         };
-        IncrementalItera { w1, w2, wl, trace }
+        IncrementalItera { w1, w2, s1, s2, wl, trace }
     }
 
     /// Maximum (recorded) rank.
@@ -79,6 +84,8 @@ impl IncrementalItera {
             w1: self.w1.take_cols(r),
             w2: self.w2.take_rows(r),
             wl: self.wl,
+            s1: self.s1[..r].to_vec(),
+            s2: self.s2[..r].to_vec(),
         }
     }
 

@@ -75,6 +75,10 @@ pub fn itera_opts(
 
     let mut w1 = Matrix::zeros(k_dim, r);
     let mut w2 = Matrix::zeros(r, n_dim);
+    // Per-rank dequant scales (0.0 for exhausted-residual ranks, whose
+    // factor vectors stay zero).
+    let mut s1 = vec![0.0f32; r];
+    let mut s2 = vec![0.0f32; r];
     // One workspace for all r truncated SVDs: the power sweeps — the
     // dominant cost of the whole engine — run allocation-free.
     let mut ws = PowerWorkspace::new();
@@ -93,31 +97,37 @@ pub fn itera_opts(
         let v_row: Vec<f32> = top.v.iter().map(|x| x * s_sqrt).collect();
         // ... then Quant(): each singular vector quantized with its own
         // scale (vector-wise), exactly the granularity the hardware stores.
-        let (qu, _) = quant::quantize_vec(&u_col, wl);
-        let (mut qv, _) = quant::quantize_vec(&v_row, wl);
+        // Grid points and scale are kept apart so every emitted factor
+        // value is exactly `grid_int * scale` — the invariant qkernel's
+        // packed integer storage re-grids without losing a bit.
+        let (qu_int, su) = quant::quantize_vec_parts(&u_col, wl);
+        let qu: Vec<f32> = qu_int.iter().map(|&q| quant::dequantize_val(q, su)).collect();
+        let (qv_int, sv0) = quant::quantize_vec_parts(&v_row, wl);
+        let mut sv = sv0;
 
         // Optimal step size: rescale the quantized rank-1 direction by the
         // least-squares alpha = <R, qu qv^T> / |qu qv^T|_F^2. The per-rank
-        // dequant scale absorbs alpha, so qv stays exactly representable
-        // on its wl-bit grid — free accuracy the greedy step would leave
-        // on the table once quantization bends the direction.
+        // dequant scale absorbs alpha (`sv = sv0 * alpha`), so qv stays
+        // exactly representable on its wl-bit grid — free accuracy the
+        // greedy step would leave on the table once quantization bends the
+        // direction.
         if opts.alpha_rescale {
+            let qv0: Vec<f32> = qv_int.iter().map(|&q| quant::dequantize_val(q, sv0)).collect();
             let nu = crate::tensor::dot(&qu, &qu) as f64;
-            let nv = crate::tensor::dot(&qv, &qv) as f64;
+            let nv = crate::tensor::dot(&qv0, &qv0) as f64;
             let denom = nu * nv;
             if denom > 0.0 {
                 // num = qu^T R qv, fused into one pass over the residual
                 // (no K-length temporary, R read once instead of twice).
-                let num = residual.bilinear(&qu, &qv) as f64;
+                let num = residual.bilinear(&qu, &qv0) as f64;
                 trace.matvec_equivalents += 1;
                 let alpha = (num / denom) as f32;
                 if alpha.is_finite() && alpha > 0.0 {
-                    for x in qv.iter_mut() {
-                        *x *= alpha;
-                    }
+                    sv = sv0 * alpha;
                 }
             }
         }
+        let qv: Vec<f32> = qv_int.iter().map(|&q| quant::dequantize_val(q, sv)).collect();
 
         // Residual update with the *quantized* rank-1 product, so the next
         // iteration sees (and can compensate) this step's quant error.
@@ -135,10 +145,12 @@ pub fn itera_opts(
             w1.set(i, k, qu[i]);
         }
         w2.row_mut(k).copy_from_slice(&qv);
+        s1[k] = su;
+        s2[k] = sv;
     }
     trace.matvec_equivalents += ws.matvecs;
 
-    (CompressedLinear::LowRank { w1, w2, wl }, trace)
+    (CompressedLinear::LowRank { w1, w2, wl, s1, s2 }, trace)
 }
 
 #[cfg(test)]

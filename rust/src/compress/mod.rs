@@ -29,12 +29,35 @@ use crate::tensor::Matrix;
 
 /// A compressed linear layer, ready to be fed to the runtime (dense
 /// artifact for `Dense`, rank-padded SVD artifact for `LowRank`).
+///
+/// The matrices are fake-quant f32, but every quantized vector's dequant
+/// scale is carried alongside, so each stored value is *exactly*
+/// `grid_int * scale` — the invariant that lets [`crate::qkernel`]
+/// re-grid the fake-quant values into bit-packed integer storage without
+/// losing a single bit (re-deriving a scale from the quantized values
+/// alone is only ulp-accurate, which would break the quantized runtime's
+/// bit-exactness contract).
 #[derive(Debug, Clone)]
 pub enum CompressedLinear {
     /// Quantization-only: the full `[K x N]` fake-quantized matrix.
-    Dense { w: Matrix, wl: WordLen },
+    Dense {
+        w: Matrix,
+        wl: WordLen,
+        /// Per-column dequant scales of the `wl`-bit grid `w` lies on.
+        /// Empty for FP-identity probe layers that bypass quantization
+        /// (such layers cannot be bit-packed).
+        scales: Vec<f32>,
+    },
     /// Factored: `w1 [K x r]`, `w2 [r x N]`, both fake-quantized.
-    LowRank { w1: Matrix, w2: Matrix, wl: WordLen },
+    LowRank {
+        w1: Matrix,
+        w2: Matrix,
+        wl: WordLen,
+        /// Per-rank scales: `s1[j]` dequantizes column `j` of `w1`.
+        s1: Vec<f32>,
+        /// Per-rank scales: `s2[i]` dequantizes row `i` of `w2`.
+        s2: Vec<f32>,
+    },
 }
 
 impl CompressedLinear {
@@ -68,8 +91,8 @@ impl CompressedLinear {
 
 /// Quantization-only baseline: vector-wise (per output column) fake-quant.
 pub fn quant_only(w: &Matrix, wl: WordLen) -> CompressedLinear {
-    let (q, _) = quant::quantize_cols(w, wl);
-    CompressedLinear::Dense { w: q, wl }
+    let (q, scales) = quant::quantize_cols(w, wl);
+    CompressedLinear::Dense { w: q, wl, scales }
 }
 
 /// Plain SVD baseline (§VIII-B): truncate to rank `r` with a *single* SVD
@@ -80,9 +103,9 @@ pub fn svd_baseline(w: &Matrix, r: usize, wl: WordLen) -> CompressedLinear {
     let r = r.clamp(1, w.rows().min(w.cols()));
     let d = linalg::svd(w);
     let (w1, w2) = linalg::factor_pair(&d, r);
-    let (q1, _) = quant::quantize_cols(&w1, wl); // per-rank scales (columns of W1)
-    let (q2, _) = quant::quantize_rows(&w2, wl); // per-rank scales (rows of W2)
-    CompressedLinear::LowRank { w1: q1, w2: q2, wl }
+    let (q1, s1) = quant::quantize_cols(&w1, wl); // per-rank scales (columns of W1)
+    let (q2, s2) = quant::quantize_rows(&w2, wl); // per-rank scales (rows of W2)
+    CompressedLinear::LowRank { w1: q1, w2: q2, wl, s1, s2 }
 }
 
 #[cfg(test)]

@@ -127,6 +127,9 @@ fn fill_identity(
             crate::compress::CompressedLinear::Dense {
                 w: c.model(pair).linear(&l.name).clone(),
                 wl: 16,
+                // FP-identity probe: the weights bypass quantization, so
+                // there is no grid and nothing to dequantize (or pack).
+                scales: Vec::new(),
             }
         });
     }

@@ -103,7 +103,40 @@ impl CompressedModel {
         model: &PairModel,
         workers: usize,
     ) -> anyhow::Result<NativeBackend> {
-        NativeBackend::new(manifest, model, &self.layers, self.act_wl, self.mode(), workers)
+        self.native_backend_mode(manifest, model, self.mode(), workers)
+    }
+
+    /// As [`Self::native_backend`] with an explicit execution mode —
+    /// `Mode::Quantized` executes this compression bit-packed (and
+    /// bit-identically to the fake-quant mode the method defaults to).
+    pub fn native_backend_mode(
+        &self,
+        manifest: &Manifest,
+        model: &PairModel,
+        mode: Mode,
+        workers: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        NativeBackend::new(manifest, model, &self.layers, self.act_wl, mode, workers)
+    }
+
+    /// Materialize the bit-packed weight bank of this compressed model in
+    /// manifest order — the resident form `Mode::Quantized` executes,
+    /// exposed directly for byte accounting and packed-artifact tooling.
+    pub fn packed_bank(
+        &self,
+        manifest: &Manifest,
+    ) -> anyhow::Result<BTreeMap<String, crate::qkernel::PackedLinear>> {
+        let mut bank = BTreeMap::new();
+        for l in &manifest.linears {
+            let c = self
+                .layers
+                .get(&l.name)
+                .ok_or_else(|| anyhow::anyhow!("no compressed layer for {}", l.name))?;
+            let p = crate::qkernel::PackedLinear::from_compressed(c)
+                .map_err(|e| anyhow::anyhow!("packing layer {}: {e}", l.name))?;
+            bank.insert(l.name.clone(), p);
+        }
+        Ok(bank)
     }
 
     /// Cheap structural fingerprint for evaluation memoization.

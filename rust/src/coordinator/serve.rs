@@ -21,12 +21,12 @@ use anyhow::Result;
 
 use crate::eval::{strip_specials, Corpus};
 use crate::model::ModelDims;
-use crate::runtime::TranslateBackend;
+use crate::runtime::{Mode, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
 #[cfg(feature = "pjrt")]
-use crate::runtime::{Mode, PjrtBackend, TranslateSession};
+use crate::runtime::{PjrtBackend, TranslateSession};
 
 #[cfg(feature = "pjrt")]
 use super::Coordinator;
@@ -176,11 +176,17 @@ pub fn run_demo(
 
 /// Serving demo on the native runtime: W8A8-quantized model (the
 /// deployment configuration), no PJRT anywhere. Works in every build.
+///
+/// `mode` picks the execution form of the quantized weights:
+/// `Mode::Dense` serves fake-quant f32, `Mode::Quantized` serves the
+/// bit-packed bank (same tokens bit for bit, ~4x fewer weight bytes
+/// resident at W8).
 pub fn serve_demo_native(
     manifest: &crate::model::Manifest,
     pair: &str,
     n_requests: usize,
     workers: usize,
+    mode: Mode,
 ) -> Result<ServeStats> {
     let info = manifest
         .pairs
@@ -197,8 +203,14 @@ pub fn serve_demo_native(
         None,
         workers,
     );
-    let backend = cm.native_backend(manifest, &model, workers)?;
-    run_demo(&backend, corpus, &manifest.model, n_requests, &format!("{pair}, W8A8"))
+    let backend = cm.native_backend_mode(manifest, &model, mode, workers)?;
+    run_demo(
+        &backend,
+        corpus,
+        &manifest.model,
+        n_requests,
+        &format!("{pair}, W8A8, {} exec", mode.key()),
+    )
 }
 
 /// Serving demo over the PJRT runtime (kept for artifact parity runs).

@@ -2,13 +2,21 @@
 //!
 //! Reproduction of *ITERA-LLM: Boosting Sub-8-Bit Large Language Model
 //! Inference via Iterative Tensor Decomposition* (CS.AR 2025) as a
-//! four-layer Rust + JAX + Pallas system:
+//! five-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 4 ([`runtime`])** — model execution. Two interchangeable
+//! * **Layer 5 ([`runtime`])** — model execution. Two interchangeable
 //!   backends behind [`runtime::TranslateBackend`]: the always-built
-//!   pure-Rust native engine ([`runtime::native`], dense and factored
-//!   low-rank execution on [`tensor::Matrix`]) and the optional PJRT
-//!   session (`pjrt` feature) that executes the AOT-compiled artifacts.
+//!   pure-Rust native engine ([`runtime::native`], dense, factored
+//!   low-rank and bit-packed quantized execution on [`tensor::Matrix`])
+//!   and the optional PJRT session (`pjrt` feature) that executes the
+//!   AOT-compiled artifacts.
+//! * **Layer 4 ([`qkernel`])** — sub-8-bit execution kernels: bit-packed
+//!   [`qkernel::QMatrix`] storage (2..=8-bit grids in `u32` words,
+//!   per-vector dequant scales, an `i8` fast path at W8) plus the
+//!   integer GEMM/GEMV the native engine's `Mode::Quantized` runs on.
+//!   Packed execution is bit-exact against the fake-quant f32 reference,
+//!   so the runtime's sub-8-bit memory footprint comes at zero numerical
+//!   cost — the paper's bandwidth story made real (and testable).
 //! * **Layer 3 (the rest of this crate)** — the software/hardware
 //!   co-design framework: compression engine ([`compress`], Algorithm 1),
 //!   sensitivity-based rank allocation ([`sra`]), FPGA analytical models
@@ -35,6 +43,7 @@ pub mod model;
 pub mod runtime;
 pub mod sra;
 pub mod linalg;
+pub mod qkernel;
 pub mod quant;
 pub mod tensor;
 pub mod testkit;

@@ -1,0 +1,710 @@
+//! Sub-8-bit integer weight storage + integer GEMM — the quantized
+//! execution kernels behind `runtime::Mode::Quantized`.
+//!
+//! Everywhere else in the stack, quantized weights are *fake-quant* f32:
+//! grid values `q * s` stored as full 32-bit floats, so none of the
+//! paper's sub-8-bit memory/bandwidth win is realized at runtime. This
+//! module stores the grid points themselves — 2..=8-bit two's-complement
+//! integers bit-packed into `u32` words ([`pack`]), one f32 dequant scale
+//! per quantized vector — cutting resident weight bytes by up to 16x
+//! (W2) while reproducing the fake-quant math **bit-exactly**:
+//!
+//! * [`QMatrix`] — packed `[K x N]` weights with per-column scales
+//!   (dense layers, `W1 [K x r]` factors) or per-row scales (`W2 [r x N]`
+//!   factors, one scale per rank), plus a flat `i8` fast path for W8;
+//! * [`QMatrix::qmatmul`] / [`QMatrix::qmatmul_par`] — cache-blocked,
+//!   pool-parallel `x · W` against the packed weights. Each weight panel
+//!   is dequantized once per block (`q as f32 * s` — bit-identical to the
+//!   fake-quant value, see `quant::dequantize_val`) and accumulated in
+//!   exactly `Matrix::matmul`'s per-element order, so the result equals
+//!   `x.matmul(&self.to_matrix())` bit for bit — which is what makes the
+//!   whole quantized runtime verifiable against the PR 2 deterministic
+//!   e2e harness;
+//! * [`QMatrix::qmatvec_i32`] — the pure-integer path: an already
+//!   integer-quantized activation vector against the packed weights with
+//!   **i32 accumulation** and a single `(s_x * s_w[n]) * acc` dequant-
+//!   rescale per output, the arithmetic shape the paper's fixed-point
+//!   MatMul engines implement (per-vector scales live in the dequant
+//!   stage, exactly like the hardware's per-rank tables);
+//! * [`PackedLinear`] — a compressed layer ([`CompressedLinear`])
+//!   re-gridded into packed form, possible losslessly because the
+//!   compression engine carries every vector's true dequant scale.
+//!
+//! Byte accounting ([`packed_bytes_for`], [`QMatrix::packed_bytes`]) is
+//! exact: `rows * ceil(cols*wl/32)` words (or `rows*cols` bytes at W8)
+//! plus one f32 scale per quantized vector.
+
+pub mod pack;
+
+use anyhow::{ensure, Result};
+
+use crate::compress::CompressedLinear;
+use crate::quant::{self, WordLen};
+use crate::tensor::Matrix;
+
+/// Which axis the dequant scales run along.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAxis {
+    /// One scale per column (dense weights, `W1 [K x r]` factors).
+    Col,
+    /// One scale per row (`W2 [r x N]` factors — one scale per rank).
+    Row,
+}
+
+/// Integer payload of a [`QMatrix`].
+#[derive(Debug, Clone)]
+enum Payload {
+    /// W8 fast path: one byte per element, row-major.
+    I8(Vec<i8>),
+    /// 2..=7 bits: row-major bit-packed; each row starts on a fresh word.
+    Packed { words: Vec<u32>, words_per_row: usize },
+}
+
+/// A `[rows x cols]` weight matrix stored as bit-packed `wl`-bit grid
+/// points plus per-vector f32 dequant scales.
+#[derive(Debug, Clone)]
+pub struct QMatrix {
+    rows: usize,
+    cols: usize,
+    wl: WordLen,
+    axis: ScaleAxis,
+    scales: Vec<f32>,
+    payload: Payload,
+}
+
+/// Cache-block edges for the packed GEMM: one dequantized
+/// `QK_BK x QK_BJ` weight panel (32 KiB of f32, same footprint as the
+/// f32 kernel's B panel) stays resident while the activation rows of the
+/// range stream over it — the dequant cost is paid once per panel, not
+/// once per activation row.
+const QK_BK: usize = 64;
+const QK_BJ: usize = 128;
+/// Below this many MACs a thread handoff costs more than it saves
+/// (mirrors the f32 kernel's threshold).
+const QK_PAR_MIN_MACS: usize = 1 << 22;
+
+impl QMatrix {
+    /// Quantize FP32 weights onto the per-column `wl`-bit grid (the
+    /// vector-wise scheme of `quant::quantize_cols`) and pack them.
+    pub fn quantize_cols(w: &Matrix, wl: WordLen) -> QMatrix {
+        let (q, scales) = quant::quantize_cols(w, wl);
+        Self::from_fake_quant(&q, &scales, wl, ScaleAxis::Col)
+            .expect("fresh fake-quant output is always grid-aligned")
+    }
+
+    /// Re-grid an already fake-quantized matrix into packed storage.
+    ///
+    /// Lossless by construction: every stored value must be exactly
+    /// `q * scale` for a grid point `|q| <= 2^(wl-1) - 1`; the recovered
+    /// integers are validated to dequantize back to the input bit for
+    /// bit, so `to_matrix()` (and every kernel) reproduces the fake-quant
+    /// f32 matrix exactly. Errors on off-grid values, unpackable word
+    /// lengths (`wl` outside 2..=8) or a scale-count mismatch.
+    pub fn from_fake_quant(
+        w: &Matrix,
+        scales: &[f32],
+        wl: WordLen,
+        axis: ScaleAxis,
+    ) -> Result<QMatrix> {
+        ensure!(
+            (2..=8).contains(&wl),
+            "qkernel packs 2..=8-bit grids, got W{wl} (wider grids are \
+             fake-quant diagnostics only)"
+        );
+        let (rows, cols) = w.shape();
+        let want = match axis {
+            ScaleAxis::Col => cols,
+            ScaleAxis::Row => rows,
+        };
+        ensure!(
+            scales.len() == want,
+            "{rows}x{cols} matrix with {:?}-axis scales needs {want} scales, got {}",
+            axis,
+            scales.len()
+        );
+        let lv = quant::levels(wl);
+        let mut ints: Vec<i8> = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for (j, &x) in w.row(i).iter().enumerate() {
+                let s = match axis {
+                    ScaleAxis::Col => scales[j],
+                    ScaleAxis::Row => scales[i],
+                };
+                let q = quant::quantize_int(x, s, lv);
+                ensure!(
+                    quant::dequantize_val(q, s) == x,
+                    "value {x} at ({i},{j}) is not on the W{wl} grid with scale {s}"
+                );
+                ints.push(q as i8);
+            }
+        }
+        let payload = if wl == 8 {
+            Payload::I8(ints)
+        } else {
+            let wpr = pack::words_per_row(cols, wl);
+            let mut words = vec![0u32; rows * wpr];
+            for (i, chunk) in words.chunks_mut(wpr).enumerate() {
+                pack::pack_row(&ints[i * cols..(i + 1) * cols], wl, chunk);
+            }
+            Payload::Packed { words, words_per_row: wpr }
+        };
+        Ok(QMatrix { rows, cols, wl, axis, scales: scales.to_vec(), payload })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn word_len(&self) -> WordLen {
+        self.wl
+    }
+
+    pub fn scale_axis(&self) -> ScaleAxis {
+        self.axis
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Grid point at `(i, j)` (sign-extended).
+    pub fn get_int(&self, i: usize, j: usize) -> i32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        match &self.payload {
+            Payload::I8(v) => v[i * self.cols + j] as i32,
+            Payload::Packed { words, words_per_row } => {
+                pack::unpack_one(&words[i * words_per_row..(i + 1) * words_per_row], j, self.wl)
+            }
+        }
+    }
+
+    /// Dequantized value at `(i, j)` — bit-identical to the fake-quant
+    /// matrix this was built from.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        quant::dequantize_val(self.get_int(i, j), self.scale_of(i, j))
+    }
+
+    #[inline]
+    fn scale_of(&self, i: usize, j: usize) -> f32 {
+        match self.axis {
+            ScaleAxis::Col => self.scales[j],
+            ScaleAxis::Row => self.scales[i],
+        }
+    }
+
+    /// Unpack grid points `j0..j1` of row `k` into `out` (`j1 - j0` ints).
+    fn int_range_into(&self, k: usize, j0: usize, j1: usize, out: &mut [i32]) {
+        match &self.payload {
+            Payload::I8(v) => {
+                for (o, &b) in out.iter_mut().zip(&v[k * self.cols + j0..k * self.cols + j1]) {
+                    *o = b as i32;
+                }
+            }
+            Payload::Packed { words, words_per_row } => {
+                let row = &words[k * words_per_row..(k + 1) * words_per_row];
+                pack::unpack_range_into(row, j0, j1, self.wl, out);
+            }
+        }
+    }
+
+    /// Dequantize values `j0..j1` of row `k` into `out`, via `ibuf`
+    /// (`j1 - j0` scratch ints). Every produced f32 is bit-identical to
+    /// the source fake-quant matrix entry.
+    fn dequant_range_into(
+        &self,
+        k: usize,
+        j0: usize,
+        j1: usize,
+        ibuf: &mut [i32],
+        out: &mut [f32],
+    ) {
+        self.int_range_into(k, j0, j1, ibuf);
+        match self.axis {
+            ScaleAxis::Col => {
+                for ((o, &q), &s) in out.iter_mut().zip(ibuf.iter()).zip(&self.scales[j0..j1]) {
+                    *o = quant::dequantize_val(q, s);
+                }
+            }
+            ScaleAxis::Row => {
+                let s = self.scales[k];
+                for (o, &q) in out.iter_mut().zip(ibuf.iter()) {
+                    *o = quant::dequantize_val(q, s);
+                }
+            }
+        }
+    }
+
+    /// Full dequantization back to a dense f32 matrix — bit-identical to
+    /// the fake-quant matrix this `QMatrix` was built from.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let mut ibuf = vec![0i32; self.cols];
+        for i in 0..self.rows {
+            self.dequant_range_into(i, 0, self.cols, &mut ibuf, out.row_mut(i));
+        }
+        out
+    }
+
+    /// Resident bytes of this matrix: packed payload + f32 scales.
+    pub fn packed_bytes(&self) -> usize {
+        let payload = match &self.payload {
+            Payload::I8(v) => v.len(),
+            Payload::Packed { words, .. } => words.len() * 4,
+        };
+        payload + self.scales.len() * 4
+    }
+
+    /// Bytes the same matrix occupies as dense f32.
+    pub fn fp32_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// `x [M x K] · self [K x N]` — bit-identical to
+    /// `x.matmul(&self.to_matrix())`: panels are dequantized into a
+    /// cache-resident scratch block and accumulated in exactly the f32
+    /// kernel's per-element order (k ascending, zero activations skipped).
+    pub fn qmatmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.rows, "qmatmul shape mismatch");
+        let mut out = Matrix::zeros(x.rows(), self.cols);
+        self.qmatmul_rows(x, 0, x.rows(), out.data_mut());
+        out
+    }
+
+    /// Row-parallel [`Self::qmatmul`] on the shared thread pool —
+    /// bit-identical to the serial product (each output element's
+    /// accumulation order is unchanged), mirroring `Matrix::matmul_par`.
+    pub fn qmatmul_par(&self, x: &Matrix, workers: usize) -> Matrix {
+        assert_eq!(x.cols(), self.rows, "qmatmul shape mismatch");
+        let (m, k, n) = (x.rows(), self.rows, self.cols);
+        let workers = workers.min(m).max(1);
+        if workers == 1 || m * k * n < QK_PAR_MIN_MACS {
+            return self.qmatmul(x);
+        }
+        let mut out = Matrix::zeros(m, n);
+        crate::tensor::par_row_chunks(out.data_mut(), m, n, workers, |i0, i1, out_rows| {
+            self.qmatmul_rows(x, i0, i1, out_rows)
+        });
+        out
+    }
+
+    /// `x^T · self` for one K-length activation vector: the `[1 x K]` row
+    /// case of [`Self::qmatmul`], bit-identical to
+    /// `self.to_matrix().tr_matvec(x)` (both accumulate each output in
+    /// ascending-k order and skip zero activations).
+    pub fn qmatvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "qmatvec shape mismatch");
+        let xm = Matrix::from_vec(1, x.len(), x.to_vec());
+        self.qmatmul(&xm).into_vec()
+    }
+
+    /// Pure-integer matvec: `out[n] = (sx * scale[n]) * sum_k qx[k] *
+    /// q[k][n]` with **i32 accumulation** and one dequant-rescale per
+    /// output — the fixed-point arithmetic the paper's hardware engines
+    /// run, fed by an integer-quantized activation vector
+    /// (`quant::quantize_vec_parts` at A8 or narrower; asserted, since
+    /// wider activation grids could wrap the i32 accumulator). Both
+    /// bounds that keep the accumulator exact are enforced: `|qx| <= 127`
+    /// and `K <= i32::MAX / 127^2` (133,144 rows — far above any layer
+    /// here; the checks make an out-of-envelope call fail loudly instead
+    /// of wrapping in release builds). Column-scaled matrices only: a
+    /// row-scaled factor needs a per-k rescale, which is no longer an
+    /// integer dot product.
+    pub fn qmatvec_i32(&self, qx: &[i32], sx: f32) -> Vec<f32> {
+        assert_eq!(qx.len(), self.rows, "qmatvec_i32 shape mismatch");
+        assert!(
+            qx.iter().all(|&q| (-127..=127).contains(&q)),
+            "qmatvec_i32 expects A8-or-narrower activations (|q| <= 127)"
+        );
+        assert!(
+            self.rows <= (i32::MAX / (127 * 127)) as usize,
+            "qmatvec_i32 i32 accumulator is exact only up to K = {} at A8/W8",
+            i32::MAX / (127 * 127)
+        );
+        assert_eq!(
+            self.axis,
+            ScaleAxis::Col,
+            "integer matvec needs per-column scales (row-scaled factors \
+             dequantize per rank instead)"
+        );
+        let mut acc = vec![0i32; self.cols];
+        match &self.payload {
+            Payload::I8(v) => {
+                for (k, &xq) in qx.iter().enumerate() {
+                    if xq == 0 {
+                        continue;
+                    }
+                    let row = &v[k * self.cols..(k + 1) * self.cols];
+                    for (a, &w) in acc.iter_mut().zip(row) {
+                        *a += xq * w as i32;
+                    }
+                }
+            }
+            Payload::Packed { words, words_per_row } => {
+                let mut ibuf = vec![0i32; self.cols];
+                for (k, &xq) in qx.iter().enumerate() {
+                    if xq == 0 {
+                        continue;
+                    }
+                    let row = &words[k * words_per_row..(k + 1) * words_per_row];
+                    pack::unpack_range_into(row, 0, self.cols, self.wl, &mut ibuf);
+                    for (a, &w) in acc.iter_mut().zip(&ibuf) {
+                        *a += xq * w;
+                    }
+                }
+            }
+        }
+        acc.iter().zip(&self.scales).map(|(&a, &s)| (sx * s) * a as f32).collect()
+    }
+
+    /// Product of rows `i0..i1` of `x` with the packed weights, written
+    /// to `out` (`(i1-i0) x cols`, row-major). Same j/k tiling as the f32
+    /// kernel's blocked path; the dequantized panel is shared by every
+    /// activation row of the range.
+    fn qmatmul_rows(&self, x: &Matrix, i0: usize, i1: usize, out: &mut [f32]) {
+        let n = self.cols;
+        let k_dim = self.rows;
+        let bj = QK_BJ.min(n.max(1));
+        let bk = QK_BK.min(k_dim.max(1));
+        let mut ibuf = vec![0i32; bj];
+        let mut panel = vec![0.0f32; bk * bj];
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + QK_BJ).min(n);
+            let w = j1 - j0;
+            let mut k0 = 0;
+            while k0 < k_dim {
+                let k1 = (k0 + QK_BK).min(k_dim);
+                for kk in k0..k1 {
+                    let dst = &mut panel[(kk - k0) * bj..(kk - k0) * bj + w];
+                    self.dequant_range_into(kk, j0, j1, &mut ibuf[..w], dst);
+                }
+                for i in i0..i1 {
+                    let x_row = x.row(i);
+                    let o_row = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
+                    for kk in k0..k1 {
+                        let av = x_row[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let w_row = &panel[(kk - k0) * bj..(kk - k0) * bj + w];
+                        for (o, &bv) in o_row.iter_mut().zip(w_row) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                k0 = k1;
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// Analytic packed size in bytes of a `[rows x cols]` col-scaled W`wl`
+/// matrix: `ceil(cols*wl/32)` words per row (flat bytes at W8) plus one
+/// f32 scale per column. Matches [`QMatrix::packed_bytes`] exactly.
+pub fn packed_bytes_for(rows: usize, cols: usize, wl: WordLen) -> usize {
+    let payload = if wl == 8 { rows * cols } else { rows * pack::words_per_row(cols, wl) * 4 };
+    payload + cols * 4
+}
+
+/// Dense f32 bytes of the same matrix.
+pub fn fp32_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols * 4
+}
+
+/// One compressed linear in packed executable form — what
+/// `Mode::Quantized` keeps resident instead of fake-quant f32.
+#[derive(Debug, Clone)]
+pub enum PackedLinear {
+    /// Packed full `[K x N]` weights (quant-only layers).
+    Dense(QMatrix),
+    /// Packed factor cascade `w1 [K x r]` (per-rank column scales),
+    /// `w2 [r x N]` (per-rank row scales).
+    Factored(QMatrix, QMatrix),
+}
+
+impl PackedLinear {
+    /// Materialize the packed form of a compressed layer. Errors when the
+    /// layer cannot be packed: FP-identity probes (no scales), word
+    /// lengths outside 2..=8, or off-grid values.
+    pub fn from_compressed(c: &CompressedLinear) -> Result<PackedLinear> {
+        match c {
+            CompressedLinear::Dense { w, wl, scales } => {
+                ensure!(
+                    !scales.is_empty(),
+                    "dense layer carries no quant scales (FP-identity probe?); \
+                     nothing to pack"
+                );
+                Ok(PackedLinear::Dense(QMatrix::from_fake_quant(
+                    w,
+                    scales,
+                    *wl,
+                    ScaleAxis::Col,
+                )?))
+            }
+            CompressedLinear::LowRank { w1, w2, wl, s1, s2 } => Ok(PackedLinear::Factored(
+                QMatrix::from_fake_quant(w1, s1, *wl, ScaleAxis::Col)?,
+                QMatrix::from_fake_quant(w2, s2, *wl, ScaleAxis::Row)?,
+            )),
+        }
+    }
+
+    /// Resident bytes of the packed representation.
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            PackedLinear::Dense(w) => w.packed_bytes(),
+            PackedLinear::Factored(w1, w2) => w1.packed_bytes() + w2.packed_bytes(),
+        }
+    }
+
+    /// Bytes the same representation occupies as fake-quant f32 (the
+    /// dense matrix, or the factor pair, at 4 bytes per element).
+    pub fn fp32_bytes(&self) -> usize {
+        match self {
+            PackedLinear::Dense(w) => w.fp32_bytes(),
+            PackedLinear::Factored(w1, w2) => w1.fp32_bytes() + w2.fp32_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{itera, quant_only};
+    use crate::util::rng::Pcg64;
+
+    fn randn(seed: u64, r: usize, c: usize, s: f32) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::randn(r, c, &mut rng).scale(s)
+    }
+
+    #[test]
+    fn roundtrip_matches_fake_quant_grid_all_widths() {
+        // Pack -> unpack reproduces the fake-quant matrix exactly, for
+        // every packable width and non-word-aligned row lengths.
+        for wl in 2..=8u32 {
+            for (r, c) in [(7usize, 11usize), (16, 16), (5, 33), (1, 1), (3, 64)] {
+                let a = randn(1000 + wl as u64, r, c, 0.4);
+                let (q, s) = quant::quantize_cols(&a, wl);
+                let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+                assert_eq!(qm.to_matrix().data(), q.data(), "col W{wl} {r}x{c}");
+                assert_eq!(qm.packed_bytes(), packed_bytes_for(r, c, wl), "{r}x{c} W{wl}");
+
+                let (qr, sr) = quant::quantize_rows(&a, wl);
+                let qmr = QMatrix::from_fake_quant(&qr, &sr, wl, ScaleAxis::Row).unwrap();
+                assert_eq!(qmr.to_matrix().data(), qr.data(), "row W{wl} {r}x{c}");
+
+                // Point accessors agree with the dense reconstruction.
+                assert_eq!(qm.get(r - 1, c - 1), q.get(r - 1, c - 1));
+                assert_eq!(
+                    quant::dequantize_val(qm.get_int(0, c - 1), qm.scales()[c - 1]),
+                    q.get(0, c - 1)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_cols_constructor_matches_quant_module() {
+        let a = randn(2, 12, 18, 0.3);
+        let qm = QMatrix::quantize_cols(&a, 5);
+        let (q, s) = quant::quantize_cols(&a, 5);
+        assert_eq!(qm.to_matrix().data(), q.data());
+        assert_eq!(qm.scales(), &s[..]);
+        assert_eq!(qm.word_len(), 5);
+        assert_eq!(qm.scale_axis(), ScaleAxis::Col);
+    }
+
+    #[test]
+    fn rejects_off_grid_and_bad_metadata() {
+        let a = Matrix::from_vec(2, 2, vec![0.03, 0.1, -0.1, 0.0]);
+        let bad = QMatrix::from_fake_quant(&a, &[0.1, 0.1], 4, ScaleAxis::Col);
+        assert!(bad.is_err(), "0.03 is not on the 0.1 grid");
+        let grid = Matrix::from_vec(2, 2, vec![0.1, 0.2, -0.1, 0.0]);
+        assert!(QMatrix::from_fake_quant(&grid, &[0.1, 0.1], 4, ScaleAxis::Col).is_ok());
+        // Wrong scale count.
+        assert!(QMatrix::from_fake_quant(&grid, &[0.1], 4, ScaleAxis::Col).is_err());
+        // Unpackable word lengths.
+        assert!(QMatrix::from_fake_quant(&grid, &[0.1, 0.1], 16, ScaleAxis::Col).is_err());
+        assert!(QMatrix::from_fake_quant(&grid, &[0.1, 0.1], 1, ScaleAxis::Col).is_err());
+    }
+
+    #[test]
+    fn qmatmul_bit_exact_vs_f32_kernel() {
+        // Shapes straddling the block edges, mixed widths (8 hits the i8
+        // fast path), both scale axes.
+        let cases: &[(usize, usize, usize, u32)] =
+            &[(3, 200, 150, 4), (17, 130, 257, 3), (9, 64, 129, 8), (5, 20, 12, 2)];
+        for &(m, k, n, wl) in cases {
+            let w = randn(10 + wl as u64, k, n, 0.2);
+            let x = randn(20 + m as u64, m, k, 1.0);
+            for axis in [ScaleAxis::Col, ScaleAxis::Row] {
+                let (q, s) = match axis {
+                    ScaleAxis::Col => quant::quantize_cols(&w, wl),
+                    ScaleAxis::Row => quant::quantize_rows(&w, wl),
+                };
+                let qm = QMatrix::from_fake_quant(&q, &s, wl, axis).unwrap();
+                let want = x.matmul(&q);
+                let got = qm.qmatmul(&x);
+                assert_eq!(want.data(), got.data(), "{m}x{k}x{n} W{wl} {axis:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn qmatmul_handles_zero_activations_like_f32() {
+        // The zero-skip must mirror the f32 kernel (it skips on the same
+        // predicate, so sparse quantized factors stay cheap and exact).
+        let w = randn(30, 24, 40, 0.2);
+        let (q, s) = quant::quantize_cols(&w, 4);
+        let qm = QMatrix::from_fake_quant(&q, &s, 4, ScaleAxis::Col).unwrap();
+        let mut x = randn(31, 6, 24, 1.0);
+        for i in 0..x.rows() {
+            for j in (0..x.cols()).step_by(3) {
+                x.set(i, j, 0.0);
+            }
+        }
+        assert_eq!(x.matmul(&q).data(), qm.qmatmul(&x).data());
+    }
+
+    #[test]
+    fn qmatmul_par_matches_serial() {
+        let w = randn(40, 96, 80, 0.2);
+        let (q, s) = quant::quantize_cols(&w, 6);
+        let qm = QMatrix::from_fake_quant(&q, &s, 6, ScaleAxis::Col).unwrap();
+        let x = randn(41, 70, 96, 1.0);
+        let serial = qm.qmatmul(&x);
+        assert_eq!(serial.data(), x.matmul(&q).data());
+        for workers in [1usize, 2, 3, 7] {
+            assert_eq!(serial.data(), qm.qmatmul_par(&x, workers).data(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn qmatvec_bit_exact_vs_fake_quant_matvec() {
+        let w = randn(50, 33, 21, 0.3);
+        for wl in [2u32, 5, 8] {
+            let (q, s) = quant::quantize_cols(&w, wl);
+            let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+            let mut x: Vec<f32> = (0..33).map(|i| ((i * 13) as f32 * 0.07).sin()).collect();
+            x[4] = 0.0; // exercise the skip
+            let via_f32 = q.tr_matvec(&x);
+            let via_row = Matrix::from_vec(1, 33, x.clone()).matmul(&q);
+            let got = qm.qmatvec(&x);
+            assert_eq!(got, via_f32, "W{wl} vs tr_matvec");
+            assert_eq!(got, via_row.into_vec(), "W{wl} vs 1-row matmul");
+        }
+    }
+
+    #[test]
+    fn qmatvec_i32_matches_integer_reference() {
+        let w = randn(60, 48, 37, 0.25);
+        for wl in [3u32, 4, 8] {
+            let (q, s) = quant::quantize_cols(&w, wl);
+            let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+            let x: Vec<f32> = (0..48).map(|i| ((i * 7) as f32 * 0.11).cos()).collect();
+            let (qx, sx) = quant::quantize_vec_parts(&x, 8);
+            let got = qm.qmatvec_i32(&qx, sx);
+            // Exact reference from the unpacked grid points.
+            for (n, &g) in got.iter().enumerate() {
+                let mut acc = 0i64;
+                for (k, &xq) in qx.iter().enumerate() {
+                    acc += xq as i64 * qm.get_int(k, n) as i64;
+                }
+                assert!(acc.unsigned_abs() < (1 << 24), "stays exact in f32");
+                let want = (sx * qm.scales()[n]) * acc as f32;
+                assert_eq!(g.to_bits(), want.to_bits(), "W{wl} col {n}");
+            }
+            // And it approximates the fake-quant f32 matvec: same math up
+            // to float association, so the relative gap is tiny.
+            let xq_f32: Vec<f32> = qx.iter().map(|&v| quant::dequantize_val(v, sx)).collect();
+            let f32_path = q.tr_matvec(&xq_f32);
+            for (a, b) in got.iter().zip(&f32_path) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "W{wl}: i32 path {a} vs f32 path {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting_hits_paper_ratios() {
+        // The acceptance numbers: packed bytes ~= ceil(wl*K*N/8) + scales,
+        // >= 3.5x smaller than f32 at W8 and >= 7x at W4 (512^2 layer).
+        let f32b = fp32_bytes(512, 512) as f64;
+        let w8 = packed_bytes_for(512, 512, 8) as f64;
+        let w4 = packed_bytes_for(512, 512, 4) as f64;
+        let w2 = packed_bytes_for(512, 512, 2) as f64;
+        assert!(f32b / w8 >= 3.5, "W8 ratio {}", f32b / w8);
+        assert!(f32b / w4 >= 7.0, "W4 ratio {}", f32b / w4);
+        assert!(f32b / w2 >= 14.0, "W2 ratio {}", f32b / w2);
+        for wl in 2..=8u32 {
+            let ideal = (wl as usize * 512 * 512).div_ceil(8) + 512 * 4;
+            let actual = packed_bytes_for(512, 512, wl);
+            assert!(
+                actual >= ideal && (actual as f64) < ideal as f64 * 1.01,
+                "W{wl}: {actual} vs ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_linear_from_compressed_layers() {
+        let w = randn(70, 20, 28, 0.3);
+        // Quant-only -> packed dense, byte-exact accounting.
+        let dense = quant_only(&w, 4);
+        let p = PackedLinear::from_compressed(&dense).unwrap();
+        match &p {
+            PackedLinear::Dense(qm) => {
+                let CompressedLinear::Dense { w: fq, .. } = &dense else { unreachable!() };
+                assert_eq!(qm.to_matrix().data(), fq.data());
+            }
+            _ => panic!("quant_only must pack Dense"),
+        }
+        assert_eq!(p.packed_bytes(), packed_bytes_for(20, 28, 4));
+        assert_eq!(p.fp32_bytes(), fp32_bytes(20, 28));
+
+        // Algorithm 1 factors -> packed cascade, both sides exact.
+        let (low, _) = itera(&w, 9, 4);
+        let p = PackedLinear::from_compressed(&low).unwrap();
+        let CompressedLinear::LowRank { w1, w2, .. } = &low else { unreachable!() };
+        match &p {
+            PackedLinear::Factored(q1, q2) => {
+                assert_eq!(q1.to_matrix().data(), w1.data(), "w1 exact");
+                assert_eq!(q2.to_matrix().data(), w2.data(), "w2 exact");
+                assert_eq!(q1.scale_axis(), ScaleAxis::Col);
+                assert_eq!(q2.scale_axis(), ScaleAxis::Row);
+            }
+            _ => panic!("itera must pack Factored"),
+        }
+        assert!(p.packed_bytes() < p.fp32_bytes());
+
+        // FP-identity probes are rejected, not mispacked.
+        let probe = CompressedLinear::Dense { w: w.clone(), wl: 16, scales: Vec::new() };
+        assert!(PackedLinear::from_compressed(&probe).is_err());
+    }
+
+    #[test]
+    fn factored_cascade_bit_exact_vs_f32_factors() {
+        // The exact execution shape Mode::Quantized runs: x·W1 then ·W2,
+        // compared against the fake-quant f32 cascade.
+        let w = randn(80, 26, 22, 0.3);
+        let (low, _) = itera(&w, 8, 5);
+        let CompressedLinear::LowRank { w1, w2, .. } = &low else { unreachable!() };
+        let PackedLinear::Factored(q1, q2) = PackedLinear::from_compressed(&low).unwrap()
+        else {
+            panic!("factored")
+        };
+        let x = randn(81, 10, 26, 1.0);
+        let f32_out = x.matmul(w1).matmul(w2);
+        let q_out = q2.qmatmul(&q1.qmatmul(&x));
+        assert_eq!(f32_out.data(), q_out.data());
+    }
+}

@@ -1,0 +1,150 @@
+//! Bit-packing primitives for sub-8-bit integer rows.
+//!
+//! Layout: within one logical row, `wl`-bit two's-complement values are
+//! laid down LSB-first into consecutive `u32` words — value `j` occupies
+//! bits `[j*wl, (j+1)*wl)` of the row's bit stream, crossing word
+//! boundaries when `wl` does not divide 32 (true bit-packing, no per-word
+//! padding). Every row starts on a fresh word, so rows are independent
+//! slices of `words_per_row` words and can be packed/unpacked (and
+//! streamed by the GEMM panel loop) without touching their neighbours.
+
+/// `u32` words needed for one bit-packed row of `cols` `wl`-bit values.
+pub fn words_per_row(cols: usize, wl: u32) -> usize {
+    (cols * wl as usize).div_ceil(32)
+}
+
+/// Pack one row of grid values into `out` (`words_per_row(vals.len(), wl)`
+/// words, zeroed and filled). Values must fit `wl`-bit two's complement;
+/// the symmetric grids stored here (`|q| <= 2^(wl-1) - 1`) always do.
+pub fn pack_row(vals: &[i8], wl: u32, out: &mut [u32]) {
+    debug_assert_eq!(out.len(), words_per_row(vals.len(), wl));
+    debug_assert!((2..=8).contains(&wl));
+    for w in out.iter_mut() {
+        *w = 0;
+    }
+    let mask = (1u32 << wl) - 1;
+    let mut word = 0usize;
+    let mut shift = 0u32;
+    for &v in vals {
+        let bits = (v as u32) & mask;
+        out[word] |= bits << shift;
+        let room = 32 - shift;
+        if wl > room {
+            // Value straddles the word edge; `room` is in 1..=31 here.
+            out[word + 1] |= bits >> room;
+        }
+        shift += wl;
+        if shift >= 32 {
+            shift -= 32;
+            word += 1;
+        }
+    }
+}
+
+/// Unpack (sign-extend) values `j0..j1` of a packed row into `out`
+/// (`j1 - j0` entries). `row` is the row's full word slice.
+pub fn unpack_range_into(row: &[u32], j0: usize, j1: usize, wl: u32, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), j1 - j0);
+    debug_assert!((2..=8).contains(&wl));
+    let sh = 32 - wl;
+    let off = j0 * wl as usize;
+    let mut word = off / 32;
+    let mut shift = (off % 32) as u32;
+    for o in out.iter_mut() {
+        let mut bits = row[word] >> shift;
+        let room = 32 - shift;
+        if wl > room {
+            bits |= row[word + 1] << room;
+        }
+        *o = ((bits << sh) as i32) >> sh;
+        shift += wl;
+        if shift >= 32 {
+            shift -= 32;
+            word += 1;
+        }
+    }
+}
+
+/// Single packed value at position `j` of a row (sign-extended).
+pub fn unpack_one(row: &[u32], j: usize, wl: u32) -> i32 {
+    let off = j * wl as usize;
+    let word = off / 32;
+    let shift = (off % 32) as u32;
+    let mut bits = row[word] >> shift;
+    let room = 32 - shift;
+    if wl > room {
+        bits |= row[word + 1] << room;
+    }
+    let sh = 32 - wl;
+    ((bits << sh) as i32) >> sh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(vals: &[i8], wl: u32) {
+        let mut words = vec![0u32; words_per_row(vals.len(), wl)];
+        pack_row(vals, wl, &mut words);
+        let mut back = vec![0i32; vals.len()];
+        unpack_range_into(&words, 0, vals.len(), wl, &mut back);
+        for (j, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+            assert_eq!(v as i32, b, "wl={wl} j={j} of {} vals", vals.len());
+            assert_eq!(unpack_one(&words, j, wl), v as i32, "unpack_one wl={wl} j={j}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_widths_and_awkward_lengths() {
+        // Lengths chosen to hit word-aligned, straddling and tail cases
+        // for every width (e.g. 3-bit values cross a word edge every
+        // 32/gcd(3,32) values; length 11 leaves a 1-bit tail).
+        for wl in 2..=8u32 {
+            let lv = (1i32 << (wl - 1)) - 1;
+            for len in [1usize, 2, 3, 5, 7, 8, 10, 11, 16, 31, 32, 33, 65] {
+                let vals: Vec<i8> = (0..len)
+                    .map(|j| {
+                        let span = 2 * lv + 1;
+                        ((j as i32 * 7 + 3) % span - lv) as i8
+                    })
+                    .collect();
+                roundtrip(&vals, wl);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_extremes() {
+        for wl in 2..=8u32 {
+            let lv = ((1i32 << (wl - 1)) - 1) as i8;
+            roundtrip(&vec![lv; 40], wl);
+            roundtrip(&vec![-lv; 40], wl);
+            roundtrip(&vec![0i8; 40], wl);
+        }
+    }
+
+    #[test]
+    fn range_unpack_matches_full_unpack() {
+        let wl = 5u32;
+        let vals: Vec<i8> = (0..50).map(|j| ((j * 11 + 1) % 31 - 15) as i8).collect();
+        let mut words = vec![0u32; words_per_row(vals.len(), wl)];
+        pack_row(&vals, wl, &mut words);
+        for (j0, j1) in [(0usize, 50usize), (3, 17), (31, 32), (13, 50), (49, 50)] {
+            let mut out = vec![0i32; j1 - j0];
+            unpack_range_into(&words, j0, j1, wl, &mut out);
+            for (o, &v) in out.iter().zip(&vals[j0..j1]) {
+                assert_eq!(*o, v as i32, "range {j0}..{j1}");
+            }
+        }
+    }
+
+    #[test]
+    fn word_counts() {
+        assert_eq!(words_per_row(8, 4), 1); // exactly one word
+        assert_eq!(words_per_row(9, 4), 2);
+        assert_eq!(words_per_row(10, 3), 1); // 30 bits
+        assert_eq!(words_per_row(11, 3), 2); // 33 bits
+        assert_eq!(words_per_row(1, 2), 1);
+        assert_eq!(words_per_row(0, 7), 0);
+    }
+}

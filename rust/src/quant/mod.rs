@@ -18,10 +18,21 @@
 
 use crate::tensor::Matrix;
 
-/// A weight word length (the `X` in `WXAY`), 2..=8 bits in this work.
+/// A word length (the `X`/`Y` in `WXAY`).
+///
+/// Contract: the fake-quant engine accepts `2..=16` bits — the paper's
+/// weight/activation schemes use `2..=8`, and the extra headroom up to 16
+/// exists only for FP-identity diagnostics (the Fig. 4 probes quantize at
+/// W16 to isolate decomposition error from quantization error). The
+/// bit-packed [`crate::qkernel`] storage is restricted to the `2..=8`
+/// range the paper (and the hardware) actually uses; feeding it a wider
+/// grid is a construction error there, not here.
 pub type WordLen = u32;
 
 /// Number of positive levels for a symmetric `wl`-bit grid: `2^(wl-1) - 1`.
+///
+/// Accepts the full `2..=16` [`WordLen`] contract (see its docs); panics
+/// outside it — `levels_boundary_contract` pins both edges.
 pub fn levels(wl: WordLen) -> f32 {
     assert!((2..=16).contains(&wl), "word length out of range: {wl}");
     ((1u32 << (wl - 1)) - 1) as f32
@@ -33,12 +44,50 @@ pub fn quantize_val(x: f32, s: f32, lv: f32) -> f32 {
     if s <= 0.0 {
         return 0.0;
     }
-    (x / s).round().clamp(-lv, lv) * s
+    dequantize_val(quantize_int(x, s, lv), s)
+}
+
+/// Integer grid point of `x` on the `lv`-level grid with scale `s`:
+/// `clamp(round(x/s), -lv, lv)` (0 when `s <= 0`, so a 0-scale vector
+/// quantizes to all zeros). [`quantize_val`] is exactly
+/// `dequantize_val(quantize_int(..), s)` — grid points are integers
+/// `|q| <= 32767`, exactly representable in f32, so the int round-trip
+/// loses nothing.
+#[inline]
+pub fn quantize_int(x: f32, s: f32, lv: f32) -> i32 {
+    if s <= 0.0 {
+        return 0;
+    }
+    // A NaN input would otherwise ride `round`/`clamp` through to the
+    // saturating `as i32` cast (-> 0); make the fallback explicit.
+    if x.is_nan() {
+        debug_assert!(false, "NaN fed to quantize_int");
+        return 0;
+    }
+    (x / s).round().clamp(-lv, lv) as i32
+}
+
+/// Dequantize grid point `q` at scale `s` — bit-identical to the
+/// fake-quant f32 value [`quantize_val`] produced for any `x` rounding to
+/// `q`. This equivalence is the contract [`crate::qkernel`]'s packed
+/// integer storage rests on.
+#[inline]
+pub fn dequantize_val(q: i32, s: f32) -> f32 {
+    q as f32 * s
 }
 
 /// Symmetric scale covering `max_abs` with `lv` levels.
+///
+/// Hardened against non-finite inputs: a NaN/inf `max_abs` (upstream
+/// weight corruption) yields scale 0 — quantizing everything to zero
+/// instead of silently poisoning every value in the vector — and trips a
+/// `debug_assert` so debug builds surface the corruption at its source.
 #[inline]
 pub fn scale_for(max_abs: f32, lv: f32) -> f32 {
+    if !max_abs.is_finite() {
+        debug_assert!(false, "non-finite max_abs {max_abs} fed to scale_for");
+        return 0.0;
+    }
     if max_abs <= 0.0 {
         0.0
     } else {
@@ -112,9 +161,19 @@ pub fn quantize_cols(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
 
 /// Quantize a vector with its own scale (rank-1 factor path of Algorithm 1).
 pub fn quantize_vec(v: &[f32], wl: WordLen) -> (Vec<f32>, f32) {
+    let (q, s) = quantize_vec_parts(v, wl);
+    (q.iter().map(|&qi| dequantize_val(qi, s)).collect(), s)
+}
+
+/// Integer-grid quantization of a vector with its own scale: the grid
+/// points plus the scale that dequantizes them. [`quantize_vec`] is the
+/// `dequantize_val` image of this — callers that need the integers
+/// themselves (packed storage, integer kernels, the scale-absorbing
+/// alpha-rescale in Algorithm 1) use this form.
+pub fn quantize_vec_parts(v: &[f32], wl: WordLen) -> (Vec<i32>, f32) {
     let lv = levels(wl);
     let s = scale_for(v.iter().fold(0.0f32, |m, x| m.max(x.abs())), lv);
-    (v.iter().map(|&x| quantize_val(x, s, lv)).collect(), s)
+    (v.iter().map(|&x| quantize_int(x, s, lv)).collect(), s)
 }
 
 /// Mean-squared quantization error.
@@ -228,5 +287,78 @@ mod tests {
         let (q, s) = quantize_tensor(&a, 8);
         assert_eq!(s, 0.0);
         assert!(q.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn levels_boundary_contract() {
+        // The documented WordLen contract: 2..=16 accepted, edges exact.
+        assert_eq!(levels(2), 1.0);
+        assert_eq!(levels(8), 127.0);
+        assert_eq!(levels(16), 32767.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "word length out of range")]
+    fn levels_rejects_below_contract() {
+        levels(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "word length out of range")]
+    fn levels_rejects_above_contract() {
+        levels(17);
+    }
+
+    #[test]
+    fn non_finite_max_abs_yields_zero_scale() {
+        // Hardened contract: NaN/inf calibration never poisons a scale —
+        // debug builds trip the assert, release builds fall back to 0.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let r = std::panic::catch_unwind(|| scale_for(bad, 127.0));
+            if cfg!(debug_assertions) {
+                assert!(r.is_err(), "debug build must flag max_abs {bad}");
+            } else {
+                assert_eq!(r.unwrap(), 0.0, "release build must 0-scale {bad}");
+            }
+        }
+        // Finite inputs are untouched by the hardening.
+        assert!((scale_for(12.7, 127.0) - 0.1).abs() < 1e-6);
+        assert_eq!(scale_for(0.0, 127.0), 0.0);
+        assert_eq!(scale_for(-3.0, 127.0), 0.0);
+    }
+
+    #[test]
+    fn int_grid_matches_fake_quant_bitwise() {
+        // quantize_val == dequantize_val(quantize_int) — the exactness
+        // contract qkernel's packed storage is built on.
+        let mut rng = Pcg64::new(45);
+        for wl in [2u32, 3, 5, 8] {
+            let lv = levels(wl);
+            let bound = lv as i32;
+            for _ in 0..200 {
+                let x = rng.normal() * 3.0;
+                let s = scale_for(2.5, lv);
+                let q = quantize_int(x, s, lv);
+                assert!((-bound..=bound).contains(&q), "wl={wl} q={q}");
+                let fq = quantize_val(x, s, lv);
+                assert_eq!(dequantize_val(q, s).to_bits(), fq.to_bits(), "wl={wl} x={x}");
+            }
+        }
+        // 0-scale convention.
+        assert_eq!(quantize_int(5.0, 0.0, 127.0), 0);
+        assert_eq!(quantize_val(5.0, 0.0, 127.0), 0.0);
+    }
+
+    #[test]
+    fn quantize_vec_parts_matches_quantize_vec() {
+        let v = vec![0.31f32, -0.9, 0.44, 0.05, -0.002];
+        for wl in [2u32, 4, 8] {
+            let (qf, sf) = quantize_vec(&v, wl);
+            let (qi, si) = quantize_vec_parts(&v, wl);
+            assert_eq!(sf.to_bits(), si.to_bits());
+            for (f, &i) in qf.iter().zip(&qi) {
+                assert_eq!(f.to_bits(), dequantize_val(i, si).to_bits());
+            }
+        }
     }
 }

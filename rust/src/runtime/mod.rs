@@ -10,13 +10,16 @@
 //!   encoding, multi-head attention, layer-norm, FFN, greedy decode)
 //!   directly on [`crate::tensor::Matrix`], consuming the manifest +
 //!   weight store + compressed layer banks. It is compiled in **every**
-//!   build, so the default `cargo build` can run a model end-to-end. Both
-//!   execution modes are supported natively: the dense path multiplies the
-//!   full `[K x N]` (fake-quantized) weights; the factored path runs each
-//!   compressed linear as two skinny matmuls `[M x K]·[K x r]` then
-//!   `[M x r]·[r x N]` at the layer's *actual* rank — realizing the
-//!   paper's FLOP savings at inference time instead of padding up to
-//!   `r_max` like the AOT artifact must.
+//!   build, so the default `cargo build` can run a model end-to-end. All
+//!   three execution modes are supported natively: the dense path
+//!   multiplies the full `[K x N]` (fake-quantized) weights; the factored
+//!   path runs each compressed linear as two skinny matmuls
+//!   `[M x K]·[K x r]` then `[M x r]·[r x N]` at the layer's *actual*
+//!   rank — realizing the paper's FLOP savings at inference time instead
+//!   of padding up to `r_max` like the AOT artifact must; the quantized
+//!   path keeps every linear bit-packed (`crate::qkernel`) and runs the
+//!   integer GEMM, realizing the paper's sub-8-bit memory footprint
+//!   bit-exactly against the fake-quant reference.
 //! * **PJRT** (`pjrt` feature) — loads AOT-compiled HLO text (the Python
 //!   compile path ran once at build time), compiles through the PJRT C API
 //!   (`xla` crate over xla_extension 0.5.1, CPU plugin) and executes the
@@ -44,7 +47,7 @@ pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use session::{ArgBank, PjrtBackend, TranslateSession};
 
-/// Which compiled model variant to execute.
+/// Which model execution variant to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// `translate_dense.hlo.txt`: each compressed linear is a `[K x N]`
@@ -54,6 +57,14 @@ pub enum Mode {
     /// `[K x r_max]`, `[r_max x N]` factor pair (the native backend skips
     /// the padding and runs the true-rank factors).
     Svd,
+    /// Native-only third mode: every compressed linear lives **bit-packed**
+    /// (`qkernel::QMatrix` — 2..=8-bit integers + per-vector scales) and
+    /// executes through the integer GEMM, in whatever structure the
+    /// compression produced (packed dense for quant-only layers, packed
+    /// factor cascades for the SVD family). Bit-identical to the
+    /// fake-quant f32 paths above while holding up to 16x fewer weight
+    /// bytes resident. There is no AOT artifact for this mode.
+    Quantized,
 }
 
 impl Mode {
@@ -61,6 +72,17 @@ impl Mode {
         match self {
             Mode::Dense => "dense",
             Mode::Svd => "svd",
+            Mode::Quantized => "quantized",
+        }
+    }
+
+    /// Parse a CLI `--mode` value.
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "dense" => Some(Mode::Dense),
+            "svd" => Some(Mode::Svd),
+            "quantized" => Some(Mode::Quantized),
+            _ => None,
         }
     }
 }
@@ -105,5 +127,10 @@ mod tests {
     fn mode_keys() {
         assert_eq!(Mode::Dense.key(), "dense");
         assert_eq!(Mode::Svd.key(), "svd");
+        assert_eq!(Mode::Quantized.key(), "quantized");
+        for m in [Mode::Dense, Mode::Svd, Mode::Quantized] {
+            assert_eq!(Mode::parse(m.key()), Some(m));
+        }
+        assert_eq!(Mode::parse("fp32"), None);
     }
 }

@@ -18,20 +18,29 @@
 //!   the growing buffer and emits PAD once a row has produced EOS —
 //!   token-for-token the `translate` loop the HLO artifacts encode.
 //!
-//! Every compressed linear executes in one of two forms, matching the two
-//! artifact variants:
+//! Every compressed linear executes in one of three forms:
 //!
 //! * **dense** (`Mode::Dense`) — one `[M x K]·[K x N]` product against the
 //!   fake-quantized (or original FP32) weights;
 //! * **factored** (`Mode::Svd`) — two skinny products
 //!   `([M x K]·[K x r])·[r x N]` against the low-rank pair at its *actual*
 //!   rank, so the paper's FLOP savings are realized at runtime (the AOT
-//!   path must zero-pad to `r_max`; the native path doesn't).
+//!   path must zero-pad to `r_max`; the native path doesn't);
+//! * **quantized** (`Mode::Quantized`, native-only) — every linear lives
+//!   **bit-packed** ([`crate::qkernel::QMatrix`]: 2..=8-bit integers in
+//!   `u32` words + per-vector scales, up to 16x fewer resident weight
+//!   bytes) and executes through the packed GEMM in whatever structure
+//!   the compression produced — packed dense for quant-only layers,
+//!   packed factor cascades for the SVD family. Because packed execution
+//!   dequantizes to the *same* f32 grid values and accumulates in the
+//!   same per-element order, it is **bit-identical** to the corresponding
+//!   fake-quant f32 mode above.
 //!
 //! Matmuls ride the cache-blocked, pool-parallel [`Matrix::matmul_par`]
-//! kernel, which is bit-identical to the serial product — together with
-//! the deterministic PRNG-free forward pass this makes greedy decode
-//! bit-reproducible across runs and worker counts (pinned by
+//! kernel (and its packed twin `QMatrix::qmatmul_par`), which is
+//! bit-identical to the serial product — together with the deterministic
+//! PRNG-free forward pass this makes greedy decode bit-reproducible
+//! across runs, worker counts and execution modes (pinned by
 //! `tests/e2e_native.rs`).
 
 use std::collections::BTreeMap;
@@ -40,6 +49,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::CompressedLinear;
 use crate::model::{Manifest, ModelDims, PairModel};
+use crate::qkernel::PackedLinear;
 use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
@@ -55,6 +65,9 @@ enum LinearOp {
     Dense(Matrix),
     /// Low-rank pair `w1 [K x r]`, `w2 [r x N]`, executed as a cascade.
     Factored(Matrix, Matrix),
+    /// Bit-packed weights (`Mode::Quantized`): packed dense or packed
+    /// factor cascade, holding integers + scales instead of f32.
+    Packed(PackedLinear),
 }
 
 /// Layer-norm gain/bias pair.
@@ -222,6 +235,38 @@ impl NativeBackend {
                 (Mode::Svd, None) => {
                     bail!("SVD mode needs a factored layer for {}", info.name)
                 }
+                (Mode::Quantized, Some(c)) => {
+                    let p = PackedLinear::from_compressed(c)
+                        .with_context(|| format!("packing layer {}", info.name))?;
+                    match &p {
+                        PackedLinear::Dense(w) => ensure!(
+                            w.rows() == info.k && w.cols() == info.n,
+                            "{}: packed shape {}x{}, manifest says ({}, {})",
+                            info.name,
+                            w.rows(),
+                            w.cols(),
+                            info.k,
+                            info.n
+                        ),
+                        PackedLinear::Factored(w1, w2) => ensure!(
+                            w1.rows() == info.k
+                                && w2.cols() == info.n
+                                && w1.cols() == w2.rows(),
+                            "{}: packed factor shapes {}x{}/{}x{} inconsistent with ({}, {})",
+                            info.name,
+                            w1.rows(),
+                            w1.cols(),
+                            w2.rows(),
+                            w2.cols(),
+                            info.k,
+                            info.n
+                        ),
+                    }
+                    LinearOp::Packed(p)
+                }
+                (Mode::Quantized, None) => {
+                    bail!("quantized mode needs a compressed layer for {}", info.name)
+                }
             };
             ops.push(op);
         }
@@ -324,6 +369,12 @@ impl NativeBackend {
                 LinearOp::Factored(w1, w2) => {
                     m * w1.cols() as u64 * (w1.rows() as u64 + w2.cols() as u64)
                 }
+                LinearOp::Packed(PackedLinear::Dense(w)) => {
+                    m * w.rows() as u64 * w.cols() as u64
+                }
+                LinearOp::Packed(PackedLinear::Factored(w1, w2)) => {
+                    m * w1.cols() as u64 * (w1.rows() as u64 + w2.cols() as u64)
+                }
             }
         };
         let mut macs = 0u64;
@@ -345,6 +396,21 @@ impl NativeBackend {
         macs
     }
 
+    /// Resident bytes of the compressed-linear weights this backend
+    /// actually holds: f32 buffers for dense/factored execution, packed
+    /// integers + scales for quantized execution — what the CLI's memory
+    /// accounting and the byte-savings tests report.
+    pub fn weight_bytes(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                LinearOp::Dense(w) => w.data().len() * 4,
+                LinearOp::Factored(w1, w2) => (w1.data().len() + w2.data().len()) * 4,
+                LinearOp::Packed(p) => p.packed_bytes(),
+            })
+            .sum()
+    }
+
     /// Activation fake-quant + compressed-linear product (the `ctx.linear`
     /// of the JAX model): `x` is the flattened `[rows x K]` activation.
     fn linear(&self, idx: usize, x: &Matrix) -> Matrix {
@@ -353,6 +419,11 @@ impl NativeBackend {
             LinearOp::Dense(w) => xq.matmul_par(w, self.workers),
             LinearOp::Factored(w1, w2) => {
                 xq.matmul_par(w1, self.workers).matmul_par(w2, self.workers)
+            }
+            LinearOp::Packed(PackedLinear::Dense(w)) => w.qmatmul_par(&xq, self.workers),
+            LinearOp::Packed(PackedLinear::Factored(w1, w2)) => {
+                let h = w1.qmatmul_par(&xq, self.workers);
+                w2.qmatmul_par(&h, self.workers)
             }
         }
     }

@@ -32,6 +32,10 @@ impl<'e> TranslateSession<'e> {
         let path = match mode {
             Mode::Dense => &manifest.artifacts.translate_dense,
             Mode::Svd => &manifest.artifacts.translate_svd,
+            Mode::Quantized => bail!(
+                "no AOT artifact exists for quantized (bit-packed) execution; \
+                 use the native backend"
+            ),
         };
         let exe = engine.load_hlo(path)?;
         Ok(TranslateSession { engine, exe, manifest: manifest.clone(), mode })

@@ -136,21 +136,14 @@ impl Matrix {
         if workers == 1 || m * k * n < MM_PAR_MIN_MACS {
             return self.matmul(other);
         }
-        let chunk = (m + workers - 1) / workers;
         let mut out = Matrix::zeros(m, n);
         // Each worker owns a disjoint row range of the single output
         // buffer — no per-chunk buffers, every element written once.
-        std::thread::scope(|scope| {
-            for (c, out_rows) in out.data.chunks_mut(chunk * n).enumerate() {
-                let i0 = c * chunk;
-                let i1 = i0 + out_rows.len() / n;
-                scope.spawn(move || {
-                    if k > MM_BK && n > MM_BJ {
-                        matmul_rows_blocked(self, other, i0, i1, out_rows);
-                    } else {
-                        matmul_rows_simple(self, other, i0, i1, out_rows);
-                    }
-                });
+        super::par_row_chunks(&mut out.data, m, n, workers, |i0, i1, out_rows| {
+            if k > MM_BK && n > MM_BJ {
+                matmul_rows_blocked(self, other, i0, i1, out_rows);
+            } else {
+                matmul_rows_simple(self, other, i0, i1, out_rows);
             }
         });
         out

@@ -62,6 +62,32 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Split the `[m x n]` row-major buffer `out` into one contiguous row
+/// chunk per worker and run `kernel(i0, i1, rows)` on each from a scoped
+/// thread pool — the shared scaffolding under `Matrix::matmul_par` and
+/// `qkernel::QMatrix::qmatmul_par`. Each element of `out` is handed to
+/// exactly one kernel invocation (disjoint row ranges), so results are
+/// bit-identical to running `kernel(0, m, out)` serially whenever the
+/// kernel itself is row-independent.
+pub(crate) fn par_row_chunks<F>(out: &mut [f32], m: usize, n: usize, workers: usize, kernel: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return; // nothing to write; chunks_mut(0) would panic below
+    }
+    let chunk = m.div_ceil(workers.max(1));
+    std::thread::scope(|scope| {
+        for (c, rows) in out.chunks_mut(chunk * n).enumerate() {
+            let i0 = c * chunk;
+            let i1 = i0 + rows.len() / n;
+            let kernel = &kernel;
+            scope.spawn(move || kernel(i0, i1, rows));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -45,15 +45,24 @@ fn fixture(tag: &str) -> Fixture {
     Fixture { dir, manifest, model, corpus }
 }
 
-/// Factor every linear through Algorithm 1 at `rank_frac` of r_max, W8.
-fn factor_all(f: &Fixture, rank_frac: f64) -> BTreeMap<String, CompressedLinear> {
+/// Factor every linear through Algorithm 1 at `rank_frac` of r_max, W`wl`.
+fn factor_all(f: &Fixture, rank_frac: f64, wl: u32) -> BTreeMap<String, CompressedLinear> {
     let mut layers = BTreeMap::new();
     for l in &f.manifest.linears {
         let r = ((l.r_max as f64 * rank_frac).round() as usize).clamp(1, l.r_max);
-        let (c, _) = itera(f.model.linear(&l.name), r, 8);
+        let (c, _) = itera(f.model.linear(&l.name), r, wl);
         layers.insert(l.name.clone(), c);
     }
     layers
+}
+
+/// Quantization-only compression of every linear at W`wl`.
+fn quant_all(f: &Fixture, wl: u32) -> BTreeMap<String, CompressedLinear> {
+    f.manifest
+        .linears
+        .iter()
+        .map(|l| (l.name.clone(), quant_only(f.model.linear(&l.name), wl)))
+        .collect()
 }
 
 #[test]
@@ -175,7 +184,7 @@ fn factored_path_matches_dense_reconstruction() {
     // Full-rank Algorithm-1 factors, FP32 activations: the dense backend
     // executes the reconstructed product w1·w2, the factored backend the
     // two skinny matmuls — same math, different float association.
-    let layers = factor_all(&f, 1.0);
+    let layers = factor_all(&f, 1.0, 8);
     let dense = NativeBackend::new(&f.manifest, &f.model, &layers, None, Mode::Dense, 2).unwrap();
     let fact = NativeBackend::new(&f.manifest, &f.model, &layers, None, Mode::Svd, 2).unwrap();
 
@@ -208,7 +217,7 @@ fn factored_path_matches_dense_reconstruction() {
 fn truncated_factored_path_saves_macs_and_runs() {
     let f = fixture("flops");
     let dims = &f.manifest.model;
-    let layers = factor_all(&f, 0.25); // quarter rank: r=4 on 16x16
+    let layers = factor_all(&f, 0.25, 8); // quarter rank: r=4 on 16x16
     let dense =
         NativeBackend::new(&f.manifest, &f.model, &layers, Some(8), Mode::Dense, 2).unwrap();
     let fact =
@@ -241,11 +250,150 @@ fn svd_mode_rejects_unfactored_layers() {
 #[test]
 fn serve_demo_runs_on_the_native_backend() {
     let f = fixture("serve");
-    let stats = itera_llm::coordinator::serve_demo_native(&f.manifest, tinymodel::PAIR, 10, 2)
-        .unwrap();
+    let stats = itera_llm::coordinator::serve_demo_native(
+        &f.manifest,
+        tinymodel::PAIR,
+        10,
+        2,
+        Mode::Dense,
+    )
+    .unwrap();
     assert_eq!(stats.served, 10, "every request must be answered");
     assert!(stats.batches >= 1 && stats.batches <= 10);
     assert!(stats.wall_s > 0.0);
+}
+
+#[test]
+fn serve_demo_runs_quantized() {
+    // The serving loop end-to-end on the bit-packed W8 bank.
+    let f = fixture("serve_q");
+    let stats = itera_llm::coordinator::serve_demo_native(
+        &f.manifest,
+        tinymodel::PAIR,
+        6,
+        2,
+        Mode::Quantized,
+    )
+    .unwrap();
+    assert_eq!(stats.served, 6, "every request must be answered");
+}
+
+/// Backend over `layers` at A8 with the given execution mode.
+fn backend(
+    f: &Fixture,
+    layers: &BTreeMap<String, CompressedLinear>,
+    mode: Mode,
+    workers: usize,
+) -> NativeBackend {
+    NativeBackend::new(&f.manifest, &f.model, layers, Some(8), mode, workers).unwrap()
+}
+
+/// The quantized vs fake-quant bit-parity check shared by the dense and
+/// factored acceptance tests: same greedy tokens, bit-identical
+/// teacher-forced logits, across worker counts.
+fn assert_quantized_parity(
+    f: &Fixture,
+    layers: &BTreeMap<String, CompressedLinear>,
+    reference_mode: Mode,
+    tag: &str,
+) {
+    let dims = &f.manifest.model;
+    let src = f.corpus.src_batch(0, dims.eval_batch, dims.pad_id);
+    let fq = backend(f, layers, reference_mode, 2);
+    let want_tokens = fq.translate(&src).unwrap();
+    let want_logits = fq.forward_logits(&src, &src).unwrap();
+    for workers in [1usize, 3] {
+        let qb = backend(f, layers, Mode::Quantized, workers);
+        assert_eq!(
+            want_tokens,
+            qb.translate(&src).unwrap(),
+            "{tag}, workers={workers}: greedy tokens diverged"
+        );
+        let got_logits = qb.forward_logits(&src, &src).unwrap();
+        assert_eq!(
+            want_logits.data(),
+            got_logits.data(),
+            "{tag}, workers={workers}: teacher-forced logits diverged"
+        );
+    }
+}
+
+/// THE quantized-runtime acceptance bar: greedy decode from bit-packed
+/// sub-8-bit storage is **bit-identical** to the fake-quant f32 native
+/// path — for every word length in {4, 6, 8}, in dense form, across
+/// worker counts. Fake-quant f32 is numerically identical to integer
+/// storage + dequantization, so any token (or logit-bit) divergence here
+/// is a real packing/kernel bug, not float noise.
+#[test]
+fn quantized_dense_decode_bit_identical_to_fake_quant() {
+    let f = fixture("qdense");
+    for wl in [4u32, 6, 8] {
+        let layers = quant_all(&f, wl);
+        assert_quantized_parity(&f, &layers, Mode::Dense, &format!("W{wl} dense"));
+    }
+}
+
+/// Same bar for the factored form: Algorithm 1 factor pairs executed as
+/// packed cascades (per-rank column scales on W1, per-rank row scales on
+/// W2) must reproduce the factored f32 path bit for bit.
+#[test]
+fn quantized_factored_decode_bit_identical_to_fake_quant() {
+    let f = fixture("qfact");
+    for wl in [4u32, 6, 8] {
+        let layers = factor_all(&f, 0.5, wl);
+        assert_quantized_parity(&f, &layers, Mode::Svd, &format!("W{wl} factored"));
+    }
+}
+
+#[test]
+fn quantized_mode_rejects_unpackable_banks() {
+    let f = fixture("qreject");
+    // A missing layer is rejected.
+    let err =
+        NativeBackend::new(&f.manifest, &f.model, &BTreeMap::new(), Some(8), Mode::Quantized, 1);
+    assert!(err.is_err(), "quantized mode requires every linear to be compressed");
+    // FP-identity probe layers (no quant grid, no scales) cannot pack.
+    let probes: BTreeMap<String, CompressedLinear> = f
+        .manifest
+        .linears
+        .iter()
+        .map(|l| {
+            let c = CompressedLinear::Dense {
+                w: f.model.linear(&l.name).clone(),
+                wl: 16,
+                scales: Vec::new(),
+            };
+            (l.name.clone(), c)
+        })
+        .collect();
+    let err = NativeBackend::new(&f.manifest, &f.model, &probes, Some(8), Mode::Quantized, 1);
+    assert!(err.is_err(), "FP-identity probes must be rejected, not mispacked");
+}
+
+#[test]
+fn quantized_mode_cuts_resident_weight_bytes() {
+    let f = fixture("qbytes");
+    let layers = quant_all(&f, 4);
+    let fq = NativeBackend::new(&f.manifest, &f.model, &layers, Some(8), Mode::Dense, 1).unwrap();
+    let qb =
+        NativeBackend::new(&f.manifest, &f.model, &layers, Some(8), Mode::Quantized, 1).unwrap();
+    // W4 on the tiny 16-wide layers: > 4x fewer bytes even with the
+    // per-column scale overhead (the 512-wide bench shapes reach ~7.9x).
+    assert!(
+        qb.weight_bytes() * 4 <= fq.weight_bytes(),
+        "packed bank {} B vs f32 {} B",
+        qb.weight_bytes(),
+        fq.weight_bytes()
+    );
+    // And the packed bank's accounting agrees with the backend's.
+    use itera_llm::coordinator::{compress_model_from, Method};
+    let weights: Vec<&itera_llm::tensor::Matrix> =
+        f.manifest.linears.iter().map(|l| f.model.linear(&l.name)).collect();
+    let cm =
+        compress_model_from(&f.manifest.linears, &weights, &Method::QuantOnly { wl: 4 }, None, 1);
+    let bank = cm.packed_bank(&f.manifest).unwrap();
+    let bank_bytes: usize = bank.values().map(|p| p.packed_bytes()).sum();
+    assert_eq!(bank_bytes, qb.weight_bytes(), "bank vs backend byte accounting");
 }
 
 #[test]
@@ -277,4 +425,10 @@ fn compressed_model_native_backend_bridge() {
     let backend = cm.native_backend(&f.manifest, &f.model, 2).unwrap();
     let d = evaluate_bleu(&backend, &f.corpus, &f.manifest.model, 4).unwrap();
     assert!((0.0..=100.0).contains(&d.score));
+    // Explicit-mode bridge: the same compression executes bit-packed and
+    // reproduces the factored path's BLEU exactly (same tokens).
+    let qbackend = cm.native_backend_mode(&f.manifest, &f.model, Mode::Quantized, 2).unwrap();
+    let dq = evaluate_bleu(&qbackend, &f.corpus, &f.manifest.model, 4).unwrap();
+    assert_eq!(d.score, dq.score, "quantized bridge must score identically");
+    assert!(qbackend.weight_bytes() < backend.weight_bytes());
 }

@@ -7,6 +7,7 @@ use itera_llm::dse::pareto_front;
 use itera_llm::eval::bleu_score;
 use itera_llm::hw::{sim, tile_latency_cycles, TileConfig, Workload};
 use itera_llm::linalg::{reconstruct, svd, svd_top1};
+use itera_llm::qkernel::{packed_bytes_for, PackedLinear, QMatrix, ScaleAxis};
 use itera_llm::quant;
 use itera_llm::sra;
 use itera_llm::testkit::{check, Gen};
@@ -342,6 +343,134 @@ fn prop_pareto_front_sound_and_complete() {
                     && (pts[i].0 < p.0 || pts[i].1 > p.1 || pts[i] == *p)
             });
             assert!(covered, "point {j} neither on front nor dominated");
+        }
+    });
+}
+
+// -------------------------------------------------------------- qkernel
+
+/// Two f32 slices agree bit for bit, modulo the sign of zero (packing
+/// canonicalizes -0.0 grid hits to +0.0, which every downstream
+/// accumulation treats identically).
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let same = x.to_bits() == y.to_bits() || (*x == 0.0 && *y == 0.0);
+        assert!(same, "{what}: index {i}: {x} ({:#x}) vs {y} ({:#x})", x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn prop_qmatrix_roundtrip_is_the_fake_quant_grid() {
+    // Pack -> unpack == the fake-quant matrix, bit for bit, for every
+    // packable word length and arbitrary (word-misaligned) row lengths,
+    // on both scale axes; packed bytes match the analytic formula.
+    check("qmatrix-roundtrip", CASES, |g: &mut Gen| {
+        let m = g.size(1, 40);
+        let n = g.size(1, 40);
+        let sc = g.f32_in(0.05, 3.0);
+        let a = g.matrix(m, n, sc);
+        let wl = g.usize_in(2, 8) as u32;
+
+        let (q, s) = quant::quantize_cols(&a, wl);
+        let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).expect("on-grid");
+        assert_bits_eq(qm.to_matrix().data(), q.data(), "col-scaled");
+        assert_eq!(qm.packed_bytes(), packed_bytes_for(m, n, wl));
+
+        let (qr, sr) = quant::quantize_rows(&a, wl);
+        let qmr = QMatrix::from_fake_quant(&qr, &sr, wl, ScaleAxis::Row).expect("on-grid");
+        assert_bits_eq(qmr.to_matrix().data(), qr.data(), "row-scaled");
+    });
+}
+
+#[test]
+fn prop_qmatvec_and_qmatmul_bit_exact() {
+    // The packed kernels reproduce the f32 fake-quant kernels bit for
+    // bit: qmatvec vs tr_matvec, qmatmul(_par) vs matmul — including
+    // zero activations (the skip predicate must match).
+    check("qkernel-bitexact", CASES, |g: &mut Gen| {
+        let k = g.size(1, 32);
+        let n = g.size(1, 32);
+        let a = g.matrix(k, n, 0.5);
+        let wl = g.usize_in(2, 8) as u32;
+        let (q, s) = quant::quantize_cols(&a, wl);
+        let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+
+        let mut x: Vec<f32> = (0..k).map(|_| g.normal()).collect();
+        if k > 1 {
+            let z = g.usize_in(0, k - 1);
+            x[z] = 0.0;
+        }
+        assert_bits_eq(&qm.qmatvec(&x), &q.tr_matvec(&x), "qmatvec vs tr_matvec");
+
+        let m = g.size(1, 8);
+        let xm = g.matrix(m, k, 1.0);
+        let want = xm.matmul(&q);
+        assert_bits_eq(qm.qmatmul(&xm).data(), want.data(), "qmatmul vs matmul");
+        let workers = g.usize_in(1, 4);
+        assert_bits_eq(qm.qmatmul_par(&xm, workers).data(), want.data(), "qmatmul_par");
+    });
+}
+
+#[test]
+fn prop_packed_compressed_layers_roundtrip() {
+    // Every compression method's output packs losslessly (the carried
+    // scales are the true grid scales — including alpha-absorbed W2
+    // scales from Algorithm 1).
+    check("packed-linear-roundtrip", CASES / 2, |g: &mut Gen| {
+        let k = g.size(2, 20);
+        let n = g.size(2, 20);
+        let a = g.matrix(k, n, 0.5);
+        let wl = *g.pick(&[2u32, 3, 4, 6, 8]);
+        let r = g.usize_in(1, k.min(n));
+
+        let dense = quant_only(&a, wl);
+        let CompressedLinear::Dense { w: fq, .. } = &dense else { panic!() };
+        let PackedLinear::Dense(qm) = PackedLinear::from_compressed(&dense).unwrap() else {
+            panic!("quant_only packs Dense")
+        };
+        assert_bits_eq(qm.to_matrix().data(), fq.data(), "packed quant_only");
+
+        for low in [itera(&a, r, wl).0, svd_baseline(&a, r, wl)] {
+            let CompressedLinear::LowRank { w1, w2, .. } = &low else { panic!() };
+            let PackedLinear::Factored(q1, q2) = PackedLinear::from_compressed(&low).unwrap()
+            else {
+                panic!("factored methods pack Factored")
+            };
+            assert_bits_eq(q1.to_matrix().data(), w1.data(), "packed w1");
+            assert_bits_eq(q2.to_matrix().data(), w2.data(), "packed w2");
+        }
+    });
+}
+
+#[test]
+fn prop_qmatvec_i32_exact_and_close_to_f32() {
+    // The integer kernel (i32 accumulation, one dequant-rescale per
+    // output) matches its exact integer reference bit for bit and stays
+    // within float-association distance of the f32 fake-quant path.
+    check("qmatvec-i32", CASES / 2, |g: &mut Gen| {
+        let k = g.size(1, 40);
+        let n = g.size(1, 40);
+        let a = g.matrix(k, n, 0.4);
+        let wl = g.usize_in(2, 8) as u32;
+        let (q, s) = quant::quantize_cols(&a, wl);
+        let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+        let x: Vec<f32> = (0..k).map(|_| g.normal()).collect();
+        let (qx, sx) = quant::quantize_vec_parts(&x, 8);
+        let got = qm.qmatvec_i32(&qx, sx);
+        for (col, &gv) in got.iter().enumerate() {
+            let mut acc = 0i64;
+            for (row, &xq) in qx.iter().enumerate() {
+                acc += xq as i64 * qm.get_int(row, col) as i64;
+            }
+            let want = (sx * qm.scales()[col]) * acc as f32;
+            assert_eq!(gv.to_bits(), want.to_bits(), "col {col}");
+        }
+        // Distance to the f32 path is bounded by association error.
+        let xq_f32: Vec<f32> = qx.iter().map(|&v| quant::dequantize_val(v, sx)).collect();
+        let f32_path = q.tr_matvec(&xq_f32);
+        for (a, b) in got.iter().zip(&f32_path) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
         }
     });
 }
