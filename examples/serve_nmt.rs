@@ -1,12 +1,14 @@
 //! Batched NMT serving demo over the native runtime.
 //!
 //! ```bash
-//! cargo run --release --example serve_nmt [-- <requests> <pair> <mode>]
+//! cargo run --release --example serve_nmt [-- <requests> <pair> <mode> <decode>]
 //! ```
 //!
 //! `<mode>` is `dense` (fake-quant f32, the default) or `quantized`
 //! (bit-packed weights — same tokens bit for bit, ~4x fewer weight bytes
-//! resident at W8).
+//! resident at W8). `<decode>` is `cached` (KV-cached single-token decode
+//! steps, the default) or `replay` (the full-buffer reference loop) —
+//! same tokens bit for bit, a seq_len-factor fewer decoder MACs cached.
 //!
 //! Spins up the request-batching loop (`coordinator::serve_demo_native`):
 //! a closed-loop client submits single-sentence translation requests, the
@@ -22,7 +24,7 @@
 use anyhow::Result;
 use itera_llm::coordinator::serve_demo_native;
 use itera_llm::model::Manifest;
-use itera_llm::runtime::Mode;
+use itera_llm::runtime::{DecodePolicy, Mode};
 use itera_llm::util::pool::default_workers;
 
 fn main() -> Result<()> {
@@ -47,6 +49,11 @@ fn main() -> Result<()> {
         Some("quantized") => Mode::Quantized,
         Some(m) => anyhow::bail!("unknown mode {m} (expected dense|quantized)"),
     };
-    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode)?;
+    let decode = match std::env::args().nth(4).as_deref() {
+        None => DecodePolicy::default(),
+        Some(d) => DecodePolicy::parse(d)
+            .ok_or_else(|| anyhow::anyhow!("unknown decode policy {d} (expected replay|cached)"))?,
+    };
+    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode)?;
     Ok(())
 }

@@ -231,6 +231,9 @@ fn main() {
         }
     }
 
+    // ---- decode policies: full-buffer replay vs KV-cached steps --------
+    decode_benches(&mut b, workers);
+
     // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
     runtime_benches(&mut b);
 
@@ -246,6 +249,92 @@ fn main() {
         Err(e) => eprintln!("[bench] could not write {}: {e}", out.display()),
     }
     b.finish();
+}
+
+/// Tokens/sec of one greedy translate under both decode policies
+/// (`runtime/native_decode_{replay,cached}_{dense,svd,quantized}`), plus
+/// the modeled per-translate linear-MAC reduction as a deterministic
+/// gauge (`runtime/decode_macs_ratio`). The outputs are bit-identical
+/// (pinned by e2e/proptests); these lanes record how much cheaper the
+/// KV-cached loop serves them. Hermetic: runs on the testkit tiny model.
+fn decode_benches(b: &mut Bench, workers: usize) {
+    use std::collections::BTreeMap;
+
+    use itera_llm::compress::CompressedLinear;
+    use itera_llm::runtime::{DecodePolicy, Mode, NativeBackend, TranslateBackend};
+    use itera_llm::testkit::tinymodel;
+
+    let modes = [("dense", Mode::Dense), ("svd", Mode::Svd), ("quantized", Mode::Quantized)];
+    let policies = [("replay", DecodePolicy::Replay), ("cached", DecodePolicy::Cached)];
+    let mut lanes: Vec<String> = Vec::new();
+    for (mk, _) in &modes {
+        for (pk, _) in &policies {
+            lanes.push(format!("runtime/native_decode_{pk}_{mk}"));
+        }
+    }
+    lanes.push("runtime/decode_macs_ratio".to_string());
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        return;
+    }
+
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_decode", 0xDEC) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping decode benches)");
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let rows = manifest.model.eval_batch;
+    let src = corpus.src_batch(0, rows, manifest.model.pad_id);
+    // One call decides rows * (seq_len - 1) output tokens.
+    let tokens = (rows * (manifest.model.seq_len - 1)) as u64;
+    let quant_bank: BTreeMap<String, CompressedLinear> = manifest
+        .linears
+        .iter()
+        .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), 8)))
+        .collect();
+    let factored_bank: BTreeMap<String, CompressedLinear> = manifest
+        .linears
+        .iter()
+        .map(|l| {
+            let r = (l.r_max / 2).max(1);
+            (l.name.clone(), itera(model.linear(&l.name), r, 8).0)
+        })
+        .collect();
+
+    for (mk, mode) in &modes {
+        let bank = match mode {
+            Mode::Svd => &factored_bank,
+            _ => &quant_bank,
+        };
+        for (pk, policy) in &policies {
+            let name = format!("runtime/native_decode_{pk}_{mk}");
+            if !b.enabled(&name) {
+                continue;
+            }
+            let backend = NativeBackend::new(&manifest, &model, bank, Some(8), *mode, workers)
+                .unwrap()
+                .with_decode(*policy);
+            b.bench_throughput(&name, tokens, || {
+                std::hint::black_box(backend.translate(&src).unwrap());
+            });
+        }
+    }
+
+    // Modeled per-translate linear MACs, replay / cached — the (~seq_len
+    // on the decoder stack) reduction the cache realizes, as a gauge.
+    if b.enabled("runtime/decode_macs_ratio") {
+        let be =
+            NativeBackend::new(&manifest, &model, &quant_bank, Some(8), Mode::Dense, 1).unwrap();
+        b.gauge(
+            "runtime/decode_macs_ratio",
+            be.linear_macs_for(rows, DecodePolicy::Replay) as f64
+                / be.linear_macs_for(rows, DecodePolicy::Cached) as f64,
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[cfg(feature = "pjrt")]

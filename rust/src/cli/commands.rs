@@ -14,7 +14,7 @@ use crate::hw::Platform;
 use crate::hw::{sim, TileConfig, Workload};
 use crate::model::{Manifest, PairModel};
 use crate::qkernel;
-use crate::runtime::{Mode, NativeBackend};
+use crate::runtime::{DecodePolicy, Mode, NativeBackend};
 use crate::tensor::Matrix;
 use crate::util::pool::default_workers;
 use crate::util::timed;
@@ -38,6 +38,15 @@ fn coordinator(args: &Args) -> Result<Coordinator> {
         cfg = ExpConfig::fast();
     }
     Coordinator::new(cfg)
+}
+
+/// Parse the `--decode` flag (greedy-decode policy; cached by default).
+fn decode_flag(args: &Args) -> Result<DecodePolicy> {
+    match args.flag("decode") {
+        None => Ok(DecodePolicy::default()),
+        Some(d) => DecodePolicy::parse(d)
+            .ok_or_else(|| anyhow::anyhow!("--decode expects replay|cached, got {d}")),
+    }
 }
 
 /// First registered language pair (the default for `--pair`).
@@ -172,11 +181,13 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
         (backend, format!("{} [{} exec]", method.label(), mode.key()))
     };
 
+    let backend = backend.with_decode(decode_flag(args)?);
     let (d, dt) = timed(|| evaluate_bleu(&backend, &corpus, &manifest.model, limit));
     let d = d?;
     println!("method      : {label}");
     println!("pair        : {pair}");
     println!("backend     : native");
+    println!("decode      : {}", backend.decode_policy().key());
     println!("resident    : {} weight bytes", backend.weight_bytes());
     println!("sentences   : {}", if limit == 0 { corpus.n } else { limit.min(corpus.n) });
     println!("BLEU        : {:.2}", d.score);
@@ -399,9 +410,14 @@ pub fn cmd_sra(_args: &Args) -> Result<()> {
 /// Analytical model vs cycle-level simulator cross-validation table —
 /// or, with `--mode quantized`, the packed-kernel cross-validation:
 /// pack/unpack exactness, GEMM bit-parity vs the fake-quant f32 kernel,
-/// and the byte accounting per word length.
+/// and the byte accounting per word length. With `--decode cached`, the
+/// KV-cached decode is cross-validated against the full-buffer replay
+/// reference instead (optionally restricted to one `--mode`).
 pub fn cmd_validate(args: &Args) -> Result<()> {
     use crate::coordinator::report::Table;
+    if args.has("decode") {
+        return validate_decode(args);
+    }
     if args.flag("mode") == Some("quantized") {
         return validate_quantized();
     }
@@ -472,6 +488,99 @@ fn validate_quantized() -> Result<()> {
     Ok(())
 }
 
+/// `validate --decode cached [--mode <m>]`: cross-validate the KV-cached
+/// incremental decode against the full-buffer replay reference on the
+/// hermetic tiny model — greedy tokens must match **bit for bit** per
+/// execution mode — and report the modeled linear-MAC reduction. Fails
+/// (non-zero exit) on any divergence, so CI can gate on it.
+fn validate_decode(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+
+    use crate::compress::{itera, quant_only, CompressedLinear};
+    use crate::coordinator::report::Table;
+    use crate::runtime::TranslateBackend;
+    use crate::testkit::tinymodel;
+
+    if decode_flag(args)? != DecodePolicy::Cached {
+        bail!("--decode replay IS the reference; pass --decode cached to cross-validate");
+    }
+    let only_mode = match args.flag("mode") {
+        None => None,
+        Some(m) => Some(
+            Mode::parse(m).ok_or_else(|| anyhow::anyhow!("--mode expects dense|svd|quantized"))?,
+        ),
+    };
+
+    let (dir, manifest) = tinymodel::generate_in_temp("validate_decode", 0xD0C5)?;
+    let model = PairModel::load(&manifest, tinymodel::PAIR)?;
+    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
+    let rows = corpus.n;
+    let src = corpus.src_batch(0, rows, manifest.model.pad_id);
+
+    let factor_bank = |wl: u32| -> BTreeMap<String, CompressedLinear> {
+        manifest
+            .linears
+            .iter()
+            .map(|l| {
+                let r = (l.r_max / 2).max(1);
+                (l.name.clone(), itera(model.linear(&l.name), r, wl).0)
+            })
+            .collect()
+    };
+    let quant_bank = |wl: u32| -> BTreeMap<String, CompressedLinear> {
+        manifest
+            .linears
+            .iter()
+            .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), wl)))
+            .collect()
+    };
+    let cases = [
+        ("quant W8", Mode::Dense, quant_bank(8)),
+        ("itera W8 r/2", Mode::Svd, factor_bank(8)),
+        ("quant W6 packed", Mode::Quantized, quant_bank(6)),
+        ("itera W4 packed cascade", Mode::Quantized, factor_bank(4)),
+    ];
+
+    let mut t = Table::new(
+        "KV-cached decode vs full-buffer replay (hermetic tiny model)",
+        &["mode", "bank", "tokens_exact", "replay_MACs", "cached_MACs", "reduction"],
+    );
+    let mut all_ok = true;
+    let mut ran = 0usize;
+    for (bank, mode, layers) in &cases {
+        if let Some(m) = only_mode {
+            if m != *mode {
+                continue;
+            }
+        }
+        ran += 1;
+        let replay = NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?
+            .with_decode(DecodePolicy::Replay);
+        let cached = NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?;
+        let ok = replay.translate(&src)? == cached.translate(&src)?;
+        all_ok &= ok;
+        let rm = cached.linear_macs_for(rows, DecodePolicy::Replay);
+        let cm = cached.linear_macs_for(rows, DecodePolicy::Cached);
+        t.row(vec![
+            mode.key().to_string(),
+            bank.to_string(),
+            if ok { "yes" } else { "NO" }.to_string(),
+            format!("{rm}"),
+            format!("{cm}"),
+            format!("{:.2}x", rm as f64 / cm.max(1) as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    std::fs::remove_dir_all(&dir).ok();
+    if ran == 0 {
+        bail!("no decode-parity case matches --mode {:?}", args.flag("mode"));
+    }
+    if !all_ok {
+        bail!("cached decode DIVERGED from the replay reference — see table above");
+    }
+    Ok(())
+}
+
 /// Batched serving demo: random test sentences through a compressed
 /// model, reporting latency/throughput percentiles. Native by default;
 /// `--backend pjrt` uses the AOT artifacts (pjrt builds only). For the
@@ -492,7 +601,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 Some("quantized") => Mode::Quantized,
                 Some(m) => bail!("serve --mode expects dense|quantized, got {m}"),
             };
-            serve_demo_native(&manifest, &pair, requests, default_workers(8), mode)?;
+            let decode = decode_flag(args)?;
+            serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode)?;
             Ok(())
         }
         #[cfg(feature = "pjrt")]

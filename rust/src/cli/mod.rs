@@ -5,9 +5,10 @@
 //! ```text
 //! itera info [--wl 4]                # runtime summary + packed-bytes accounting
 //! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
-//!            [--mode dense|svd|quantized]
-//! itera serve [--requests 64] [--mode quantized]  # batched serving demo
-//! itera validate [--mode quantized]  # model-vs-sim / qkernel parity table
+//!            [--mode dense|svd|quantized] [--decode replay|cached]
+//! itera serve [--requests 64] [--mode quantized] [--decode replay|cached]
+//! itera validate [--mode quantized] [--decode cached]
+//!                                    # model-vs-sim / qkernel / decode parity
 //! ```
 //!
 //! PJRT-artifact measurement (needs `--features pjrt`):
@@ -93,13 +94,18 @@ USAGE (native runtime, every build):
   itera info [--wl <2..8>]
   itera eval [--method <fp32|quant|svd|itera>] [--wl <2..8>] [--rank-frac F]
              [--pair P] [--limit N] [--mode <dense|svd|quantized>]
+             [--decode <replay|cached>]
   itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
-              [--mode <dense|quantized>]
-  itera validate [--mode quantized]
+              [--mode <dense|quantized>] [--decode <replay|cached>]
+  itera validate [--mode quantized] [--decode cached]
   itera help
 
   --mode quantized executes the compressed model from bit-packed sub-8-bit
   storage (qkernel) — bit-identical tokens, up to 16x fewer weight bytes.
+  --decode picks the greedy loop: KV-cached single-token steps (default)
+  or the AOT graph's full-buffer replay — bit-identical tokens, a
+  seq_len-factor fewer decoder MACs cached. `validate --decode cached`
+  cross-checks the parity on a hermetic tiny model.
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]

@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use crate::eval::{strip_specials, Corpus};
 use crate::model::ModelDims;
-use crate::runtime::{Mode, TranslateBackend};
+use crate::runtime::{DecodePolicy, Mode, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
@@ -45,6 +45,19 @@ pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
     pub wall_s: f64,
+    /// Generated (de-framed) output tokens across all responses — the
+    /// numerator of the serving throughput number.
+    pub tokens: usize,
+    /// Per-request latency samples (seconds, arrival to response), as
+    /// observed by the server loop itself.
+    pub latency: Summary,
+}
+
+impl ServeStats {
+    /// Generated tokens per wall-clock second over the whole run.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-12)
+    }
 }
 
 /// Pack up to `batch` token rows into a fixed `[batch * seq]` buffer:
@@ -89,6 +102,8 @@ pub fn serve_loop(
     let t0 = Instant::now();
     let mut served = 0usize;
     let mut batches = 0usize;
+    let mut tokens = 0usize;
+    let mut latency = Summary::new();
     while served < n_requests {
         let Some(batch) = next_batch(rx, b) else { break };
         let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
@@ -106,12 +121,14 @@ pub fn serve_loop(
                 dims.pad_id,
             );
             let lat = now.duration_since(req.t_arrival).as_secs_f64();
+            tokens += toks.len();
+            latency.add(lat);
             req.respond.send((toks, lat)).ok();
         }
         served += batch.len();
         batches += 1;
     }
-    Ok(ServeStats { served, batches, wall_s: t0.elapsed().as_secs_f64() })
+    Ok(ServeStats { served, batches, wall_s: t0.elapsed().as_secs_f64(), tokens, latency })
 }
 
 /// Closed-loop demo driver: a client thread submits `n_requests` random
@@ -134,16 +151,19 @@ pub fn run_demo(
         for _ in 0..n_requests {
             let i = rng.below(corpus.n);
             let (rtx, rrx) = mpsc::channel();
+            let t_submit = Instant::now();
             tx.send(Request {
                 tokens: corpus.src_row(i).to_vec(),
-                t_arrival: Instant::now(),
+                t_arrival: t_submit,
                 respond: rtx,
             })
             .ok();
             // Closed-loop: wait for the response before the next request
-            // (the batcher still groups concurrent stragglers).
-            if let Ok((toks, lat)) = rrx.recv() {
-                latencies.add(lat);
+            // (the batcher still groups concurrent stragglers). Latency
+            // is measured at receive time, so it includes the response
+            // channel hop the server-side percentile rows can't see.
+            if let Ok((toks, _lat)) = rrx.recv() {
+                latencies.add(t_submit.elapsed().as_secs_f64());
                 done.push(toks);
             }
         }
@@ -162,10 +182,22 @@ pub fn run_demo(
     println!("wall time     : {:.2}s", stats.wall_s);
     println!("throughput    : {:.1} sentences/s", stats.served as f64 / stats.wall_s);
     println!(
-        "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3}",
+        "tokens/sec    : {:.1} ({} generated tokens)",
+        stats.tokens_per_s(),
+        stats.tokens
+    );
+    println!(
+        "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3} (client-observed)",
         latencies.quantile(0.5),
         latencies.quantile(0.95),
         latencies.max()
+    );
+    println!(
+        "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3} (server-side, n={})",
+        stats.latency.quantile(0.5),
+        stats.latency.quantile(0.95),
+        stats.latency.max(),
+        stats.latency.count()
     );
     println!(
         "sample output : {:?}",
@@ -180,13 +212,17 @@ pub fn run_demo(
 /// `mode` picks the execution form of the quantized weights:
 /// `Mode::Dense` serves fake-quant f32, `Mode::Quantized` serves the
 /// bit-packed bank (same tokens bit for bit, ~4x fewer weight bytes
-/// resident at W8).
+/// resident at W8). `decode` picks the greedy-decode loop — KV-cached
+/// single-token steps (the serving default) or the full-buffer replay
+/// reference; both produce identical tokens, the cached loop just
+/// serves them a `seq_len`-factor cheaper.
 pub fn serve_demo_native(
     manifest: &crate::model::Manifest,
     pair: &str,
     n_requests: usize,
     workers: usize,
     mode: Mode,
+    decode: DecodePolicy,
 ) -> Result<ServeStats> {
     let info = manifest
         .pairs
@@ -203,13 +239,13 @@ pub fn serve_demo_native(
         None,
         workers,
     );
-    let backend = cm.native_backend_mode(manifest, &model, mode, workers)?;
+    let backend = cm.native_backend_mode(manifest, &model, mode, workers)?.with_decode(decode);
     run_demo(
         &backend,
         corpus,
         &manifest.model,
         n_requests,
-        &format!("{pair}, W8A8, {} exec", mode.key()),
+        &format!("{pair}, W8A8, {} exec, {} decode", mode.key(), decode.key()),
     )
 }
 
@@ -339,6 +375,9 @@ mod tests {
         let stats = serve_loop(&backend, &rx, &d, 5).unwrap();
         assert_eq!(stats.served, 5);
         assert_eq!(stats.batches, 2, "4-capacity batcher must split 5 into 4+1");
+        assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
+        assert_eq!(stats.latency.count(), 5, "one server-side latency sample per request");
+        assert!(stats.tokens_per_s() > 0.0);
         for (i, rrx) in receivers.into_iter().enumerate() {
             let (toks, lat) = rrx.recv().unwrap();
             // Echo + strip_specials leaves exactly the content token.
@@ -356,6 +395,8 @@ mod tests {
         let stats = serve_loop(&backend, &rx, &d, 10).unwrap();
         assert_eq!(stats.served, 0);
         assert_eq!(stats.batches, 0);
+        assert_eq!(stats.tokens, 0);
+        assert_eq!(stats.latency.count(), 0);
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //!   pure-Rust native engine ([`runtime::native`], dense, factored
 //!   low-rank and bit-packed quantized execution on [`tensor::Matrix`])
 //!   and the optional PJRT session (`pjrt` feature) that executes the
-//!   AOT-compiled artifacts.
+//!   AOT-compiled artifacts. The native engine decodes under a
+//!   [`runtime::DecodePolicy`]: KV-cached single-token steps by default
+//!   (per-layer `DecodeState` K/V caches + single-row kernels, a
+//!   `seq_len`-factor fewer decoder MACs per translate), with the AOT
+//!   graph's full-buffer replay kept as the bit-identical reference.
 //! * **Layer 4 ([`qkernel`])** — sub-8-bit execution kernels: bit-packed
 //!   [`qkernel::QMatrix`] storage (2..=8-bit grids in `u32` words,
 //!   per-vector dequant scales, an `i8` fast path at W8) plus the

@@ -455,6 +455,29 @@ impl PackedLinear {
         }
     }
 
+    /// Single-row execution `x · W` — the KV-cached decode-step entry
+    /// point: packed dense runs one [`QMatrix::qmatvec`], the packed
+    /// cascade runs `(x · W1) · W2`, covering **both scale axes** (`W1`
+    /// carries per-rank column scales, `W2` per-rank row scales — the
+    /// shared dequant path handles either). Bit-identical to the row the
+    /// batched `qmatmul` path would produce for the same activation,
+    /// which is what keeps cached decode bit-equal to full-buffer replay
+    /// in `Mode::Quantized`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            PackedLinear::Dense(w) => w.qmatvec(x),
+            PackedLinear::Factored(w1, w2) => w2.qmatvec(&w1.qmatvec(x)),
+        }
+    }
+
+    /// Output features (the `N` of the underlying `[K x N]` linear).
+    pub fn out_features(&self) -> usize {
+        match self {
+            PackedLinear::Dense(w) => w.cols(),
+            PackedLinear::Factored(_, w2) => w2.cols(),
+        }
+    }
+
     /// Resident bytes of the packed representation.
     pub fn packed_bytes(&self) -> usize {
         match self {
@@ -600,6 +623,46 @@ mod tests {
             assert_eq!(got, via_f32, "W{wl} vs tr_matvec");
             assert_eq!(got, via_row.into_vec(), "W{wl} vs 1-row matmul");
         }
+    }
+
+    #[test]
+    fn qmatvec_row_axis_bit_exact() {
+        // The row-scaled side of the decode-step entry point: one scale
+        // per rank (W2 factors), word-misaligned row lengths included.
+        for (r, n, wl) in [(7usize, 33usize, 3u32), (5, 21, 5), (16, 40, 8), (1, 1, 2)] {
+            let w = randn(90 + wl as u64, r, n, 0.3);
+            let (q, s) = quant::quantize_rows(&w, wl);
+            let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Row).unwrap();
+            let mut x: Vec<f32> = (0..r).map(|i| ((i * 5) as f32 * 0.19).sin()).collect();
+            x[r / 2] = 0.0; // the zero-skip must match the f32 kernel
+            let got = qm.qmatvec(&x);
+            assert_eq!(got, q.tr_matvec(&x), "{r}x{n} W{wl} row-scaled");
+        }
+    }
+
+    #[test]
+    fn packed_linear_matvec_bit_exact_both_forms() {
+        // Dense form: one col-scaled qmatvec, misaligned width.
+        let w = randn(95, 26, 33, 0.3);
+        let dense = quant_only(&w, 5);
+        let p = PackedLinear::from_compressed(&dense).unwrap();
+        assert_eq!(p.out_features(), 33);
+        let CompressedLinear::Dense { w: fq, .. } = &dense else { unreachable!() };
+        let x: Vec<f32> = (0..26).map(|i| ((i * 3) as f32 * 0.23).cos()).collect();
+        assert_eq!(p.matvec(&x), fq.tr_matvec(&x), "packed dense matvec");
+
+        // Factored form: col-scaled W1 then row-scaled W2 — the packed
+        // cascade must equal the f32 factor cascade bit for bit.
+        let (low, _) = itera(&w, 7, 4);
+        let p = PackedLinear::from_compressed(&low).unwrap();
+        assert_eq!(p.out_features(), 33);
+        let CompressedLinear::LowRank { w1, w2, .. } = &low else { unreachable!() };
+        let f32_cascade = w2.tr_matvec(&w1.tr_matvec(&x));
+        assert_eq!(p.matvec(&x), f32_cascade, "packed cascade matvec");
+        // ... and to the batched 1-row qmatmul path (the replay kernel).
+        let xm = Matrix::from_vec(1, 26, x.clone());
+        let PackedLinear::Factored(q1, q2) = &p else { unreachable!() };
+        assert_eq!(p.matvec(&x), q2.qmatmul(&q1.qmatmul(&xm)).into_vec());
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //!   of padding up to `r_max` like the AOT artifact must; the quantized
 //!   path keeps every linear bit-packed (`crate::qkernel`) and runs the
 //!   integer GEMM, realizing the paper's sub-8-bit memory footprint
-//!   bit-exactly against the fake-quant reference.
+//!   bit-exactly against the fake-quant reference. Greedy decode runs
+//!   under a [`DecodePolicy`]: KV-cached single-token steps by default,
+//!   or the AOT graph's full-buffer replay as the bit-identical
+//!   reference.
 //! * **PJRT** (`pjrt` feature) — loads AOT-compiled HLO text (the Python
 //!   compile path ran once at build time), compiles through the PJRT C API
 //!   (`xla` crate over xla_extension 0.5.1, CPU plugin) and executes the
@@ -87,6 +90,51 @@ impl Mode {
     }
 }
 
+/// How the native engine's greedy decode loop executes.
+///
+/// Both policies are **bit-identical** in output (pinned by
+/// `tests/e2e_native.rs` and the decode proptest); they differ only in
+/// how much work each of the `seq_len - 1` greedy steps performs:
+///
+/// * [`Replay`](DecodePolicy::Replay) — the AOT graph's loop: every step
+///   re-runs the full decoder stack over the entire fixed-length buffer,
+///   so decoder linear MACs grow as O(s²) and self-attention as O(s³)
+///   per translate. Kept as the reference the cached path is verified
+///   against.
+/// * [`Cached`](DecodePolicy::Cached) — KV-cached incremental decode
+///   (the default): a per-translate `DecodeState` holds each decoder
+///   layer's self-attention K/V rows (plus the already-hoisted cross
+///   K/V), and every step embeds one position, runs the decoder blocks
+///   on a `[b x D]` activation through single-row kernels, and appends
+///   the new K/V rows — decoder linear MACs drop by a factor of
+///   `seq_len` (see `NativeBackend::linear_macs_for`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodePolicy {
+    /// Full-buffer replay each step (the AOT graph's reference loop).
+    Replay,
+    /// Single-token steps over per-layer K/V caches (the default).
+    #[default]
+    Cached,
+}
+
+impl DecodePolicy {
+    pub fn key(self) -> &'static str {
+        match self {
+            DecodePolicy::Replay => "replay",
+            DecodePolicy::Cached => "cached",
+        }
+    }
+
+    /// Parse a CLI `--decode` value.
+    pub fn parse(s: &str) -> Option<DecodePolicy> {
+        match s {
+            "replay" => Some(DecodePolicy::Replay),
+            "cached" => Some(DecodePolicy::Cached),
+            _ => None,
+        }
+    }
+}
+
 /// A model execution backend that can greedy-translate token batches.
 ///
 /// `src_tokens` is a row-major `[rows * seq_len()]` buffer of BOS-framed,
@@ -122,6 +170,15 @@ pub trait TranslateBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn decode_policy_keys_and_default() {
+        assert_eq!(DecodePolicy::default(), DecodePolicy::Cached, "cached is the default");
+        for p in [DecodePolicy::Replay, DecodePolicy::Cached] {
+            assert_eq!(DecodePolicy::parse(p.key()), Some(p));
+        }
+        assert_eq!(DecodePolicy::parse("kv"), None);
+    }
 
     #[test]
     fn mode_keys() {

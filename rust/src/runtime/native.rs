@@ -14,9 +14,19 @@
 //!   convention the JAX graph uses);
 //! * per-linear activation fake-quant (`clip(round(x/s), -lv, lv) * s`)
 //!   replaying the calibrated scales from the manifest;
-//! * a greedy decode loop that re-runs the causally masked decoder over
-//!   the growing buffer and emits PAD once a row has produced EOS —
-//!   token-for-token the `translate` loop the HLO artifacts encode.
+//! * a greedy decode loop whose per-step cost depends on the selected
+//!   [`DecodePolicy`]: the **cached** default holds per-layer
+//!   self-attention K/V rows in a [`DecodeState`] and runs each step on
+//!   a single `[b x D]` activation through single-row kernels
+//!   ([`Matrix::vecmat_par`], [`crate::qkernel::PackedLinear::matvec`]),
+//!   while the **replay** reference re-runs the causally masked decoder
+//!   over the whole fixed-length buffer — token-for-token the
+//!   `translate` loop the HLO artifacts encode. Both emit PAD once a row
+//!   has produced EOS (the cached path tracks this in per-row
+//!   `DecodeState` flags instead of rescanning the buffer) and are
+//!   **bit-identical**: every per-element accumulation order is shared,
+//!   masked attention scores underflow to exactly 0 in both, and a
+//!   position's hidden state depends only on positions `<=` it.
 //!
 //! Every compressed linear executes in one of three forms:
 //!
@@ -53,7 +63,7 @@ use crate::qkernel::PackedLinear;
 use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
-use super::{Mode, TranslateBackend};
+use super::{DecodePolicy, Mode, TranslateBackend};
 
 /// Additive mask value for disallowed attention positions (the JAX graph's
 /// `_NEG`); after the stable softmax shift these underflow to exactly 0.
@@ -68,6 +78,17 @@ enum LinearOp {
     /// Bit-packed weights (`Mode::Quantized`): packed dense or packed
     /// factor cascade, holding integers + scales instead of f32.
     Packed(PackedLinear),
+}
+
+impl LinearOp {
+    /// Output features (the `N` of the underlying `[K x N]` linear).
+    fn n_out(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.cols(),
+            LinearOp::Factored(_, w2) => w2.cols(),
+            LinearOp::Packed(p) => p.out_features(),
+        }
+    }
 }
 
 /// Layer-norm gain/bias pair.
@@ -105,6 +126,66 @@ struct DecLayer {
     ff2: usize,
 }
 
+/// Per-translate state of the KV-cached incremental decode
+/// ([`DecodePolicy::Cached`]).
+///
+/// Holds, for each decoder layer, the self-attention K and V rows of
+/// every already-decoded position (`[b*seq_len x D]` capacity, rows
+/// `bi*seq_len .. bi*seq_len+len` valid per batch row `bi`), plus the
+/// bookkeeping the replay loop recomputes from the token buffer every
+/// step: per-position target-key validity (`token != PAD`, the
+/// self-attention gate) and per-row EOS flags (a finished row emits PAD
+/// without paying for its logits). The cross-attention K/V of the
+/// encoder memory is *not* here — it is constant across the decode and
+/// already hoisted to once per translate ([`NativeBackend::cross_kv`]).
+pub struct DecodeState {
+    /// Per-decoder-layer self-attention key cache.
+    self_k: Vec<Matrix>,
+    /// Per-decoder-layer self-attention value cache.
+    self_v: Vec<Matrix>,
+    /// `token != PAD` per cached position (`b * seq_len`, filled to `len`).
+    tgt_ok: Vec<bool>,
+    /// Per-row "has emitted EOS" flags — replaces the replay loop's
+    /// buffer rescan.
+    done: Vec<bool>,
+    /// Positions decoded so far (the next step appends row `len`).
+    len: usize,
+}
+
+impl DecodeState {
+    /// Empty state for `b` batch rows of a model with `n_dec` decoder
+    /// layers, `seq_len` positions and width `d_model`.
+    pub fn new(n_dec: usize, b: usize, seq_len: usize, d_model: usize) -> DecodeState {
+        DecodeState {
+            self_k: (0..n_dec).map(|_| Matrix::zeros(b * seq_len, d_model)).collect(),
+            self_v: (0..n_dec).map(|_| Matrix::zeros(b * seq_len, d_model)).collect(),
+            tgt_ok: vec![false; b * seq_len],
+            done: vec![false; b],
+            len: 0,
+        }
+    }
+
+    /// Positions decoded so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Per-row EOS flags (true once the row has emitted EOS).
+    pub fn done(&self) -> &[bool] {
+        &self.done
+    }
+
+    /// Whether every batch row has emitted EOS — the remaining buffer
+    /// positions can only be PAD, so the decode loop may stop early.
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+}
+
 /// Dependency-free transformer inference engine over a compressed model.
 ///
 /// Construction resolves the manifest's linear inventory against a
@@ -128,6 +209,8 @@ pub struct NativeBackend {
     /// Positive quant levels; 0 disables activation quantization.
     act_levels: f32,
     workers: usize,
+    /// How `translate` runs its greedy decode loop (cached by default).
+    decode: DecodePolicy,
 }
 
 impl NativeBackend {
@@ -339,7 +422,20 @@ impl NativeBackend {
             act_scales,
             act_levels,
             workers: workers.max(1),
+            decode: DecodePolicy::default(),
         })
+    }
+
+    /// Select the greedy-decode execution policy (cached by default);
+    /// both policies produce bit-identical tokens.
+    pub fn with_decode(mut self, policy: DecodePolicy) -> NativeBackend {
+        self.decode = policy;
+        self
+    }
+
+    /// The active greedy-decode policy.
+    pub fn decode_policy(&self) -> DecodePolicy {
+        self.decode
     }
 
     /// FP32 reference backend: original weights, no quantization.
@@ -352,17 +448,30 @@ impl NativeBackend {
     }
 
     /// Total multiply-accumulates one translate of `rows` source rows
-    /// costs in its compressed linears (decode loop included) — the
-    /// runtime counterpart of the accounting model, used by benches.
+    /// costs in its compressed linears (decode loop included) under the
+    /// backend's active [`DecodePolicy`] — the runtime counterpart of
+    /// the accounting model, used by benches.
     pub fn linear_macs_per_translate(&self, rows: usize) -> u64 {
-        // Encoder runs once over rows*seq tokens; the decoder stack runs
-        // seq-1 times over the full buffer (no KV cache, like the AOT
-        // graph), except the cross-attention K/V projections of the
-        // constant memory, which are hoisted to once per translate.
-        // Only compressed linears are counted.
+        self.linear_macs_for(rows, self.decode)
+    }
+
+    /// [`Self::linear_macs_per_translate`] under an explicit policy.
+    ///
+    /// Encoder linears run once over `rows*seq` tokens; the cross-
+    /// attention K/V projections of the constant memory are hoisted to
+    /// once per translate in both policies. The decoder stack's per-step
+    /// activation differs: **replay** re-runs it over the full buffer
+    /// each of the `seq-1` steps (`m_dec = rows*seq*(seq-1)` — the AOT
+    /// graph's cost), while **cached** runs each step on one row per
+    /// batch element (`m_dec = rows*(seq-1)`), a factor-`seq` reduction.
+    /// Only compressed linears are counted.
+    pub fn linear_macs_for(&self, rows: usize, policy: DecodePolicy) -> u64 {
         let s = self.dims.seq_len as u64;
         let m_enc = (rows * self.dims.seq_len) as u64;
-        let m_dec = m_enc * (s - 1);
+        let m_dec = match policy {
+            DecodePolicy::Replay => m_enc * (s - 1),
+            DecodePolicy::Cached => rows as u64 * (s - 1),
+        };
         let cost = |op: &LinearOp, m: u64| -> u64 {
             match op {
                 LinearOp::Dense(w) => m * w.rows() as u64 * w.cols() as u64,
@@ -415,31 +524,59 @@ impl NativeBackend {
     /// of the JAX model): `x` is the flattened `[rows x K]` activation.
     fn linear(&self, idx: usize, x: &Matrix) -> Matrix {
         let xq = self.fake_quant(idx, x);
+        let xq = xq.as_ref().unwrap_or(x);
         match &self.ops[idx] {
             LinearOp::Dense(w) => xq.matmul_par(w, self.workers),
             LinearOp::Factored(w1, w2) => {
                 xq.matmul_par(w1, self.workers).matmul_par(w2, self.workers)
             }
-            LinearOp::Packed(PackedLinear::Dense(w)) => w.qmatmul_par(&xq, self.workers),
+            LinearOp::Packed(PackedLinear::Dense(w)) => w.qmatmul_par(xq, self.workers),
             LinearOp::Packed(PackedLinear::Factored(w1, w2)) => {
-                let h = w1.qmatmul_par(&xq, self.workers);
+                let h = w1.qmatmul_par(xq, self.workers);
                 w2.qmatmul_par(&h, self.workers)
             }
         }
     }
 
+    /// Single-step linear: the same fake-quant + compressed product as
+    /// [`Self::linear`], executed row by row through the single-row
+    /// kernels ([`Matrix::vecmat_par`], [`PackedLinear::matvec`]).
+    /// Bit-identical to [`Self::linear`] on the same rows — every kernel
+    /// accumulates each output element in the batched kernel's
+    /// ascending-`k` order, which is what makes the cached decode path
+    /// reproduce the full-buffer replay exactly.
+    fn linear_step(&self, idx: usize, x: &Matrix) -> Matrix {
+        let xq = self.fake_quant(idx, x);
+        let xq = xq.as_ref().unwrap_or(x);
+        let op = &self.ops[idx];
+        let mut out = Matrix::zeros(x.rows(), op.n_out());
+        for r in 0..xq.rows() {
+            let y = match op {
+                LinearOp::Dense(w) => w.vecmat_par(xq.row(r), self.workers),
+                LinearOp::Factored(w1, w2) => {
+                    w2.vecmat_par(&w1.vecmat_par(xq.row(r), self.workers), self.workers)
+                }
+                LinearOp::Packed(p) => p.matvec(xq.row(r)),
+            };
+            out.row_mut(r).copy_from_slice(&y);
+        }
+        out
+    }
+
     /// `clip(round(x/s), -lv, lv) * s` with the reference's safe-scale
-    /// convention (`s <= 0` quantizes with scale 1); `lv == 0` is the
-    /// FP32 identity path.
-    fn fake_quant(&self, idx: usize, x: &Matrix) -> Matrix {
+    /// convention (`s <= 0` quantizes with scale 1). `None` when
+    /// `act_levels == 0` (the FP32 identity path) — callers fall back to
+    /// the borrowed input instead of paying a full-matrix clone on every
+    /// linear call.
+    fn fake_quant(&self, idx: usize, x: &Matrix) -> Option<Matrix> {
         let lv = self.act_levels;
         if lv <= 0.0 {
-            return x.clone();
+            return None;
         }
         let s = self.act_scales[idx];
         let s = if s > 0.0 { s } else { 1.0 };
         let data = x.data().iter().map(|&v| (v / s).round().clamp(-lv, lv) * s).collect();
-        Matrix::from_vec(x.rows(), x.cols(), data)
+        Some(Matrix::from_vec(x.rows(), x.cols(), data))
     }
 
     /// `ff2(relu(ff1(x)))`.
@@ -451,6 +588,17 @@ impl NativeBackend {
             }
         }
         self.linear(ff2, &h)
+    }
+
+    /// [`Self::ffn`] through the single-row kernels (bit-identical).
+    fn ffn_step(&self, ff1: usize, ff2: usize, x: &Matrix) -> Matrix {
+        let mut h = self.linear_step(ff1, x);
+        for v in h.data_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        self.linear_step(ff2, &h)
     }
 
     /// Multi-head scaled-dot-product attention core (projections already
@@ -493,6 +641,57 @@ impl NativeBackend {
                         for (o, &vv) in o_slice.iter_mut().zip(v_slice) {
                             *o += w * vv;
                         }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Single-query attention over the first `n_keys` rows of a K/V
+    /// cache: the step-wise counterpart of [`Self::attend`] (`tq = 1`,
+    /// keys truncated to the filled prefix). `q` is `[b x D]`; `k`/`v`
+    /// are `[b*cap x D]` caches with `cap` rows per batch element.
+    ///
+    /// Bit-identical to [`Self::attend`] over a full `cap`-key score row
+    /// whose keys `>= n_keys` are masked: masked scores underflow to
+    /// exactly 0 after the stable softmax shift and contribute `+0.0` to
+    /// the normalizer (an exact no-op on the non-negative partial sums),
+    /// so skipping their computation entirely changes no bit.
+    #[allow(clippy::too_many_arguments)] // mirrors attend's one call-site geometry
+    fn attend_step(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        b: usize,
+        cap: usize,
+        n_keys: usize,
+        allowed: impl Fn(usize, usize) -> bool,
+    ) -> Matrix {
+        let d = self.dims.d_model;
+        let hd = self.head_dim;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Matrix::zeros(b, d);
+        let mut scores = vec![0.0f32; n_keys];
+        for bi in 0..b {
+            for h in 0..self.dims.n_heads {
+                let lo = h * hd;
+                let hi = lo + hd;
+                let q_slice = &q.row(bi)[lo..hi];
+                for (kj, s) in scores.iter_mut().enumerate() {
+                    let raw = dot(q_slice, &k.row(bi * cap + kj)[lo..hi]) * scale;
+                    *s = if allowed(bi, kj) { raw } else { raw + NEG };
+                }
+                softmax_in_place(&mut scores);
+                let o_slice = &mut out.row_mut(bi)[lo..hi];
+                for (kj, &w) in scores.iter().enumerate() {
+                    if w == 0.0 {
+                        continue; // masked keys underflow to exactly 0
+                    }
+                    let v_slice = &v.row(bi * cap + kj)[lo..hi];
+                    for (o, &vv) in o_slice.iter_mut().zip(v_slice) {
+                        *o += w * vv;
                     }
                 }
             }
@@ -583,6 +782,86 @@ impl NativeBackend {
         Ok(layer_norm(&x, &self.dec_ln))
     }
 
+    /// One KV-cached decoder step: embed position `state.len()` of every
+    /// batch row (`tokens[r]` is row `r`'s token there), run the decoder
+    /// blocks on the `[b x D]` activation, append the new self-attention
+    /// K/V rows to `state`, and return the final hidden rows `[b x D]`
+    /// (pre output-head).
+    ///
+    /// Bit-identical to row `state.len()` of [`Self::decode_hidden`] over
+    /// the same buffer: a position's hidden state depends only on
+    /// positions `<=` it (causal masking — masked attention weights are
+    /// exactly 0 and skipped), every linear/layer-norm/FFN is
+    /// row-independent with a shared per-element accumulation order, and
+    /// the cached K/V rows equal the ones replay recomputes each step.
+    pub fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        cross: &[(Matrix, Matrix)],
+        src_ok: &[bool],
+        b: usize,
+    ) -> Result<Matrix> {
+        let s = self.dims.seq_len;
+        let d = self.dims.d_model;
+        let i = state.len;
+        ensure!(i < s, "decode_step past the fixed {s}-token buffer");
+        ensure!(tokens.len() == b, "one token per batch row: {} vs {b}", tokens.len());
+        ensure!(
+            state.done.len() == b && state.tgt_ok.len() == b * s,
+            "DecodeState sized for {} rows, step called with {b}",
+            state.done.len()
+        );
+
+        // Embed position i of every row (token + positional encoding).
+        let mut x = Matrix::zeros(b, d);
+        for (r, &t) in tokens.iter().enumerate() {
+            ensure!(
+                t >= 0 && (t as usize) < self.dims.vocab,
+                "token {t} in decode row {r} outside vocab 0..{}",
+                self.dims.vocab
+            );
+            let e = self.tgt_emb.row(t as usize);
+            let p = self.pos_emb.row(i);
+            for ((o, &ec), &pc) in x.row_mut(r).iter_mut().zip(e).zip(p) {
+                *o = ec + pc;
+            }
+            state.tgt_ok[r * s + i] = t != self.dims.pad_id;
+        }
+
+        for (li, (layer, (ck, cv))) in self.dec.iter().zip(cross).enumerate() {
+            let h = layer_norm(&x, &layer.ln1);
+            let q = self.linear_step(layer.self_q, &h);
+            let k_new = self.linear_step(layer.self_k, &h);
+            let v_new = self.linear_step(layer.self_v, &h);
+            for r in 0..b {
+                state.self_k[li].row_mut(r * s + i).copy_from_slice(k_new.row(r));
+                state.self_v[li].row_mut(r * s + i).copy_from_slice(v_new.row(r));
+            }
+            let tgt_ok = &state.tgt_ok;
+            let ctx = self.attend_step(
+                &q,
+                &state.self_k[li],
+                &state.self_v[li],
+                b,
+                s,
+                i + 1,
+                |bi, kj| tgt_ok[bi * s + kj],
+            );
+            x = x.add(&self.linear_step(layer.self_o, &ctx));
+
+            let h = layer_norm(&x, &layer.ln2);
+            let q = self.linear_step(layer.cross_q, &h);
+            let ctx = self.attend_step(&q, ck, cv, b, s, s, |bi, kj| src_ok[bi * s + kj]);
+            x = x.add(&self.linear_step(layer.cross_o, &ctx));
+
+            let h = layer_norm(&x, &layer.ln3);
+            x = x.add(&self.ffn_step(layer.ff1, layer.ff2, &h));
+        }
+        state.len = i + 1;
+        Ok(layer_norm(&x, &self.dec_ln))
+    }
+
     /// Teacher-forced logits `[b*s x vocab]` for `tgt_in` given `src` —
     /// the parity/diagnostic surface (greedy decode uses only one row per
     /// step, but tolerance comparisons want the full tensor).
@@ -630,12 +909,26 @@ impl TranslateBackend for NativeBackend {
         false
     }
 
-    /// Greedy decode, replaying the AOT graph's loop: the decoder re-runs
-    /// over the whole fixed-length buffer each step, position `i`'s
+    /// Greedy decode under the backend's [`DecodePolicy`]: position `i`'s
     /// logits pick token `i+1`, and a row that has emitted EOS produces
     /// PAD from then on. Unlike the fixed-batch artifacts, any positive
-    /// multiple of `seq_len` rows is accepted.
+    /// multiple of `seq_len` rows is accepted. Both policies return
+    /// bit-identical buffers (pinned by `tests/e2e_native.rs` and the
+    /// decode proptest).
     fn translate(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
+        match self.decode {
+            DecodePolicy::Replay => self.translate_replay(src_tokens),
+            DecodePolicy::Cached => self.translate_cached(src_tokens),
+        }
+    }
+}
+
+impl NativeBackend {
+    /// [`DecodePolicy::Replay`]: the AOT graph's loop — the decoder
+    /// re-runs over the whole fixed-length buffer each step, rescanning
+    /// it for EOS. Kept verbatim as the reference the cached path is
+    /// pinned against.
+    fn translate_replay(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
         let b = self.rows_of(src_tokens)?;
         let s = self.dims.seq_len;
         let (memory, src_ok) = self.encode(src_tokens, b)?;
@@ -655,6 +948,59 @@ impl TranslateBackend for NativeBackend {
                     argmax(&logits) as i32
                 };
                 buf[r * s + i + 1] = next;
+            }
+        }
+        Ok(buf)
+    }
+
+    /// [`DecodePolicy::Cached`]: KV-cached incremental decode — one
+    /// [`Self::decode_step`] per position, logits only for rows that have
+    /// not finished (tracked in [`DecodeState`] flags instead of the
+    /// replay loop's buffer rescan), early exit once every row has. The
+    /// early exit is exact: a finished row only ever appends PAD, and the
+    /// buffer is PAD-initialized.
+    fn translate_cached(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
+        if self.dims.bos_id == self.dims.pad_id {
+            // With BOS aliased to PAD every self-attention key is masked
+            // at step 0, and the replay reference then degrades to
+            // *uniform* attention over the whole fixed buffer — a
+            // convention only the full-buffer loop reproduces.
+            return self.translate_replay(src_tokens);
+        }
+        let b = self.rows_of(src_tokens)?;
+        let s = self.dims.seq_len;
+        let (memory, src_ok) = self.encode(src_tokens, b)?;
+        let cross = self.cross_kv(&memory);
+        let mut buf = vec![self.dims.pad_id; b * s];
+        let mut state = DecodeState::new(self.dec.len(), b, s, self.dims.d_model);
+        for r in 0..b {
+            buf[r * s] = self.dims.bos_id;
+            // Degenerate manifests may alias EOS with BOS or PAD; the
+            // replay rescan would see every row as immediately finished
+            // in its BOS-framed, PAD-filled initial buffer.
+            state.done[r] =
+                self.dims.bos_id == self.dims.eos_id || self.dims.pad_id == self.dims.eos_id;
+        }
+        let mut tokens = vec![0i32; b];
+        for i in 0..s - 1 {
+            for r in 0..b {
+                tokens[r] = buf[r * s + i];
+            }
+            let hidden = self.decode_step(&mut state, &tokens, &cross, &src_ok, b)?;
+            for r in 0..b {
+                let next = if state.done[r] {
+                    self.dims.pad_id
+                } else {
+                    let logits = self.tgt_emb.matvec(hidden.row(r));
+                    argmax(&logits) as i32
+                };
+                if next == self.dims.eos_id {
+                    state.done[r] = true;
+                }
+                buf[r * s + i + 1] = next;
+            }
+            if state.all_done() {
+                break;
             }
         }
         Ok(buf)
@@ -734,6 +1080,24 @@ mod tests {
         assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
         assert_eq!(argmax(&[2.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn decode_state_bookkeeping() {
+        let mut st = DecodeState::new(2, 3, 5, 4);
+        assert!(st.is_empty());
+        assert_eq!(st.len(), 0);
+        assert!(!st.all_done());
+        assert_eq!(st.self_k.len(), 2);
+        assert_eq!(st.self_k[0].shape(), (15, 4));
+        assert_eq!(st.self_v[1].shape(), (15, 4));
+        assert_eq!(st.tgt_ok.len(), 15);
+        st.done[0] = true;
+        st.done[2] = true;
+        assert!(!st.all_done(), "one row still live");
+        st.done[1] = true;
+        assert!(st.all_done());
+        assert_eq!(st.done(), &[true, true, true]);
     }
 
     #[test]

@@ -213,6 +213,46 @@ impl Matrix {
         out.extend((0..self.rows).map(|i| super::dot(self.row(i), v)));
     }
 
+    /// Row-vector product `x (k) · self (k x n) -> (n)` — the
+    /// single-token decode-step kernel. Every output element accumulates
+    /// in ascending-`k` order with the zero-activation skip, i.e. exactly
+    /// the per-element order of [`Self::matmul`]'s row loop (simple *and*
+    /// blocked variants visit `k` ascending), so the result is
+    /// **bit-identical** to `Matrix::from_vec(1, k, x.to_vec()).matmul(self)`
+    /// — which is what lets the KV-cached decoder run one activation row
+    /// at a time and still reproduce the full-buffer replay bit for bit.
+    ///
+    /// [`Self::tr_matvec`] computes the same product in the same order;
+    /// this delegates to it (one implementation to keep bit-synchronized)
+    /// and exists to state the matmul-row contract the decode path pins.
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "vecmat shape mismatch");
+        self.tr_matvec(x)
+    }
+
+    /// Column-parallel [`Self::vecmat`] on the shared thread pool: each
+    /// worker owns a disjoint contiguous output range and accumulates it
+    /// in the same ascending-`k` order, so the result is bit-identical to
+    /// the serial kernel for every worker count. Falls back to the serial
+    /// kernel when a single worker (or a small shape) would not amortize
+    /// the thread handoff — a matvec is bandwidth-bound, so the threshold
+    /// sits below the matmul one.
+    pub fn vecmat_par(&self, x: &[f32], workers: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "vecmat shape mismatch");
+        let (k, n) = (self.rows, self.cols);
+        let workers = workers.min(n).max(1);
+        if workers == 1 || k * n < VM_PAR_MIN_MACS {
+            return self.vecmat(x);
+        }
+        let mut out = vec![0.0f32; n];
+        // Column chunks are disjoint ranges of the single output vector
+        // (an [n x 1] view for the row-chunk scaffolding).
+        super::par_row_chunks(&mut out, n, 1, workers, |j0, j1, cols| {
+            vecmat_cols(self, x, j0, j1, cols)
+        });
+        out
+    }
+
     /// `self^T * v` without materializing the transpose.
     pub fn tr_matvec(&self, v: &[f32]) -> Vec<f32> {
         let mut out = Vec::new();
@@ -316,6 +356,10 @@ const MM_BLOCK_MIN_MACS: usize = 1 << 25;
 /// Threads pay off earlier than blocking does: per-row work is O(k*n) and
 /// the scoped-pool handoff is microseconds.
 const MM_PAR_MIN_MACS: usize = 1 << 22;
+/// A single-row matvec streams the whole weight matrix once (bandwidth-
+/// bound, no panel reuse), so threads start paying off at smaller shapes
+/// than the matmul threshold.
+const VM_PAR_MIN_MACS: usize = 1 << 20;
 
 /// i-k-j product of rows `i0..i1` of `a` with `b`, written to `out`
 /// (`(i1-i0) x n`, row-major). Zero A entries skip whole B rows — the
@@ -333,6 +377,24 @@ fn matmul_rows_simple(a: &Matrix, b: &Matrix, i0: usize, i1: usize, out: &mut [f
             for (o, &bv) in o_row.iter_mut().zip(b_row) {
                 *o += av * bv;
             }
+        }
+    }
+}
+
+/// Output columns `j0..j1` of the row-vector product `x · w`, written to
+/// `out` (`j1 - j0` elements): ascending-`k` accumulation with the
+/// zero-activation skip — per output element, exactly
+/// [`matmul_rows_simple`]'s order restricted to one activation row, so
+/// `vecmat` results are bit-equal to the corresponding matmul row.
+fn vecmat_cols(w: &Matrix, x: &[f32], j0: usize, j1: usize, out: &mut [f32]) {
+    let n = w.cols;
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let w_row = &w.data[kk * n + j0..kk * n + j1];
+        for (o, &wv) in out.iter_mut().zip(w_row) {
+            *o += xv * wv;
         }
     }
 }
@@ -481,6 +543,41 @@ mod tests {
         for workers in [1usize, 2, 3, 7] {
             let par = a.matmul_par(&b, workers);
             assert_eq!(serial.data(), par.data(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn vecmat_bit_equal_to_one_row_matmul() {
+        // Shapes straddling the blocked-path edges, plus a zero activation
+        // to exercise the skip predicate the bit-parity contract includes.
+        let mut rng = Pcg64::new(24);
+        for &(k, n) in &[(3usize, 5usize), (64, 129), (200, 150), (130, 257)] {
+            let w = Matrix::randn(k, n, &mut rng);
+            let mut x: Vec<f32> = (0..k).map(|i| ((i * 7) as f32 * 0.13).sin()).collect();
+            x[k / 2] = 0.0;
+            let want = Matrix::from_vec(1, k, x.clone()).matmul(&w);
+            let got = w.vecmat(&x);
+            assert_eq!(got.len(), n);
+            for (a, b) in got.iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{k}x{n}");
+            }
+            // tr_matvec computes the same product; same accumulation order.
+            assert_eq!(got, w.tr_matvec(&x), "{k}x{n} vs tr_matvec");
+        }
+    }
+
+    #[test]
+    fn vecmat_par_matches_serial_bitwise() {
+        // 1100x1100 crosses VM_PAR_MIN_MACS, so workers > 1 take the
+        // column-chunked path; smaller shapes exercise the fallback.
+        let mut rng = Pcg64::new(25);
+        for &(k, n) in &[(1100usize, 1100usize), (40, 30)] {
+            let w = Matrix::randn(k, n, &mut rng);
+            let x: Vec<f32> = (0..k).map(|i| ((i * 11) as f32 * 0.07).cos()).collect();
+            let serial = w.vecmat(&x);
+            for workers in [1usize, 2, 3, 7] {
+                assert_eq!(serial, w.vecmat_par(&x, workers), "{k}x{n} workers={workers}");
+            }
         }
     }
 

@@ -64,9 +64,10 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 
 /// Split the `[m x n]` row-major buffer `out` into one contiguous row
 /// chunk per worker and run `kernel(i0, i1, rows)` on each from a scoped
-/// thread pool — the shared scaffolding under `Matrix::matmul_par` and
-/// `qkernel::QMatrix::qmatmul_par`. Each element of `out` is handed to
-/// exactly one kernel invocation (disjoint row ranges), so results are
+/// thread pool — the shared scaffolding under `Matrix::matmul_par`,
+/// `qkernel::QMatrix::qmatmul_par` and (as an `[n x 1]` view over the
+/// output vector) `Matrix::vecmat_par`. Each element of `out` is handed
+/// to exactly one kernel invocation (disjoint row ranges), so results are
 /// bit-identical to running `kernel(0, m, out)` serially whenever the
 /// kernel itself is row-independent.
 pub(crate) fn par_row_chunks<F>(out: &mut [f32], m: usize, n: usize, workers: usize, kernel: F)

@@ -22,7 +22,7 @@ use std::collections::BTreeMap;
 use itera_llm::compress::{itera, quant_only, CompressedLinear};
 use itera_llm::eval::{evaluate_bleu, translate_corpus, Corpus};
 use itera_llm::model::{Manifest, PairModel};
-use itera_llm::runtime::{Mode, NativeBackend, TranslateBackend};
+use itera_llm::runtime::{DecodePolicy, Mode, NativeBackend, TranslateBackend};
 use itera_llm::testkit::tinymodel;
 
 struct Fixture {
@@ -256,11 +256,17 @@ fn serve_demo_runs_on_the_native_backend() {
         10,
         2,
         Mode::Dense,
+        DecodePolicy::Cached,
     )
     .unwrap();
     assert_eq!(stats.served, 10, "every request must be answered");
     assert!(stats.batches >= 1 && stats.batches <= 10);
     assert!(stats.wall_s > 0.0);
+    // Serving throughput is observable: the loop counts generated tokens
+    // and per-request latency, not just batch totals.
+    assert!(stats.tokens > 0, "echoing real sentences must emit tokens");
+    assert!(stats.tokens_per_s() > 0.0);
+    assert_eq!(stats.latency.count(), 10, "one latency sample per request");
 }
 
 #[test]
@@ -273,9 +279,40 @@ fn serve_demo_runs_quantized() {
         6,
         2,
         Mode::Quantized,
+        DecodePolicy::Cached,
     )
     .unwrap();
     assert_eq!(stats.served, 6, "every request must be answered");
+}
+
+#[test]
+fn serve_demo_replay_and_cached_translate_identically() {
+    // The serving path produces the same translations under either
+    // decode policy (closed-loop client, same request stream).
+    let f = fixture("serve_decode");
+    let cached = itera_llm::coordinator::serve_demo_native(
+        &f.manifest,
+        tinymodel::PAIR,
+        8,
+        2,
+        Mode::Dense,
+        DecodePolicy::Cached,
+    )
+    .unwrap();
+    let replay = itera_llm::coordinator::serve_demo_native(
+        &f.manifest,
+        tinymodel::PAIR,
+        8,
+        2,
+        Mode::Dense,
+        DecodePolicy::Replay,
+    )
+    .unwrap();
+    assert_eq!(cached.served, replay.served);
+    assert_eq!(
+        cached.tokens, replay.tokens,
+        "same deterministic request stream must emit the same token count"
+    );
 }
 
 /// Backend over `layers` at A8 with the given execution mode.
@@ -394,6 +431,88 @@ fn quantized_mode_cuts_resident_weight_bytes() {
     let bank = cm.packed_bank(&f.manifest).unwrap();
     let bank_bytes: usize = bank.values().map(|p| p.packed_bytes()).sum();
     assert_eq!(bank_bytes, qb.weight_bytes(), "bank vs backend byte accounting");
+}
+
+/// THE decode-cache acceptance bar: KV-cached greedy decode
+/// ([`DecodePolicy::Cached`], the default) is **bit-identical** to the
+/// full-buffer replay reference for all three execution modes — dense
+/// fake-quant, factored cascade, bit-packed quantized (both packed
+/// shapes) — plus the FP32 reference, across worker counts, on the full
+/// hermetic-tiny-model corpus. Any token divergence is a real cache/step
+/// bug (argmax over bit-equal logits), not float noise.
+#[test]
+fn cached_decode_bit_identical_to_replay_all_modes() {
+    let f = fixture("decode_cache");
+    let dims = &f.manifest.model;
+    // Every corpus row at once: content lengths vary per row, so rows
+    // reach EOS/PAD at different decode steps and exercise the ragged
+    // DecodeState bookkeeping.
+    let src = f.corpus.src_batch(0, f.corpus.n, dims.pad_id);
+    let banks = [
+        ("W6 dense", Mode::Dense, quant_all(&f, 6)),
+        ("W8 factored", Mode::Svd, factor_all(&f, 0.5, 8)),
+        ("W4 packed dense", Mode::Quantized, quant_all(&f, 4)),
+        ("W4 packed cascade", Mode::Quantized, factor_all(&f, 0.5, 4)),
+    ];
+    for (tag, mode, layers) in &banks {
+        let replay = backend(&f, layers, *mode, 2).with_decode(DecodePolicy::Replay);
+        assert_eq!(replay.decode_policy(), DecodePolicy::Replay);
+        let want = replay.translate(&src).unwrap();
+        for workers in [1usize, 3] {
+            let cached = backend(&f, layers, *mode, workers);
+            assert_eq!(
+                cached.decode_policy(),
+                DecodePolicy::Cached,
+                "cached must be the default policy"
+            );
+            assert_eq!(
+                want,
+                cached.translate(&src).unwrap(),
+                "{tag}, workers={workers}: cached decode diverged from replay"
+            );
+        }
+    }
+    // And the FP32 reference path (no activation quant, original weights).
+    let replay = NativeBackend::fp32(&f.manifest, &f.model, 2)
+        .unwrap()
+        .with_decode(DecodePolicy::Replay);
+    let want = replay.translate(&src).unwrap();
+    for workers in [1usize, 3] {
+        let cached = NativeBackend::fp32(&f.manifest, &f.model, workers).unwrap();
+        assert_eq!(want, cached.translate(&src).unwrap(), "fp32, workers={workers}");
+    }
+}
+
+/// The modeled MAC reduction behind the decode cache: per-translate
+/// decoder linears drop from `rows*seq*(seq-1)` activation rows to
+/// `rows*(seq-1)` — a factor `seq_len` on the decoder stack, well over
+/// the 3x acceptance bar on the whole translate even with the encoder
+/// and hoisted cross-K/V included.
+#[test]
+fn cached_decode_macs_model_drops() {
+    let f = fixture("decode_macs");
+    let rows = f.manifest.model.eval_batch;
+    let fp32_be = NativeBackend::fp32(&f.manifest, &f.model, 1).unwrap();
+    let replay = fp32_be.linear_macs_for(rows, DecodePolicy::Replay);
+    let cached = fp32_be.linear_macs_for(rows, DecodePolicy::Cached);
+    assert!(
+        cached * 3 <= replay,
+        "cached decode must model >= 3x fewer linear MACs: {cached} vs {replay}"
+    );
+    // The default policy is cached, and the policy-less accessor follows
+    // the backend's own policy.
+    assert_eq!(fp32_be.linear_macs_per_translate(rows), cached);
+    assert_eq!(
+        fp32_be.with_decode(DecodePolicy::Replay).linear_macs_per_translate(rows),
+        replay
+    );
+    // Factored execution keeps the same structural reduction.
+    let layers = factor_all(&f, 0.5, 8);
+    let fact = backend(&f, &layers, Mode::Svd, 1);
+    assert!(
+        fact.linear_macs_for(rows, DecodePolicy::Cached) * 3
+            <= fact.linear_macs_for(rows, DecodePolicy::Replay)
+    );
 }
 
 #[test]

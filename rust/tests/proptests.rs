@@ -475,6 +475,97 @@ fn prop_qmatvec_i32_exact_and_close_to_f32() {
     });
 }
 
+// --------------------------------------------------------------- decode
+
+/// KV-cached greedy decode is bit-identical to the full-buffer replay
+/// reference — across all three execution modes, word lengths {4, 6, 8},
+/// worker counts {1, 4}, and random ragged batches (source rows of
+/// different lengths, so decode rows hit EOS/PAD at different steps and
+/// exercise the DecodeState done/tgt_ok bookkeeping).
+#[test]
+fn prop_cached_decode_bit_identical_to_replay() {
+    use std::collections::BTreeMap;
+
+    use itera_llm::model::PairModel;
+    use itera_llm::runtime::{DecodePolicy, Mode, NativeBackend, TranslateBackend};
+    use itera_llm::testkit::tinymodel;
+
+    let (dir, manifest) =
+        tinymodel::generate_in_temp("prop_decode", 0xDEC0DE).expect("generate tiny model");
+    let model = PairModel::load(&manifest, tinymodel::PAIR).expect("load tiny model");
+    let dims = manifest.model.clone();
+    let s = dims.seq_len;
+
+    // One compressed bank per (word length, family), built once and
+    // shared across cases.
+    let wls = [4u32, 6, 8];
+    let mut dense_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    let mut factored_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    for &wl in &wls {
+        dense_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), wl)))
+                .collect(),
+        );
+        factored_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| {
+                    let r = (l.r_max / 2).max(1);
+                    (l.name.clone(), itera(model.linear(&l.name), r, wl).0)
+                })
+                .collect(),
+        );
+    }
+
+    check("cached-decode-vs-replay", 12, |g: &mut Gen| {
+        let wi = g.usize_in(0, wls.len() - 1);
+        let wl = wls[wi];
+        let workers = *g.pick(&[1usize, 4]);
+        let mode = *g.pick(&[Mode::Dense, Mode::Svd, Mode::Quantized]);
+        let layers = match mode {
+            Mode::Dense => &dense_banks[wi],
+            Mode::Svd => &factored_banks[wi],
+            // The packed runtime executes either structure.
+            Mode::Quantized => {
+                if g.bool() {
+                    &dense_banks[wi]
+                } else {
+                    &factored_banks[wi]
+                }
+            }
+        };
+
+        // Ragged batch: 1..=5 BOS-framed, EOS-terminated, PAD-padded rows
+        // with different content lengths.
+        let b = g.usize_in(1, 5);
+        let mut src = vec![dims.pad_id; b * s];
+        for r in 0..b {
+            let len = g.usize_in(1, s - 3);
+            src[r * s] = dims.bos_id;
+            let toks = g.tokens(len, dims.vocab as i32);
+            src[r * s + 1..r * s + 1 + len].copy_from_slice(&toks);
+            src[r * s + 1 + len] = dims.eos_id;
+        }
+
+        let replay = NativeBackend::new(&manifest, &model, layers, Some(8), mode, workers)
+            .expect("replay backend")
+            .with_decode(DecodePolicy::Replay);
+        let cached = NativeBackend::new(&manifest, &model, layers, Some(8), mode, workers)
+            .expect("cached backend");
+        assert_eq!(cached.decode_policy(), DecodePolicy::Cached, "default policy");
+        assert_eq!(
+            replay.translate(&src).unwrap(),
+            cached.translate(&src).unwrap(),
+            "mode {mode:?} W{wl} workers={workers} b={b}"
+        );
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ------------------------------------------------------- representation
 
 #[test]
