@@ -1,7 +1,7 @@
 //! Batched NMT serving demo over the native runtime.
 //!
 //! ```bash
-//! cargo run --release --example serve_nmt [-- <requests> <pair> <mode> <decode>]
+//! cargo run --release --example serve_nmt [-- <requests> <pair> <mode> <decode> <batcher>]
 //! ```
 //!
 //! `<mode>` is `dense` (fake-quant f32, the default) or `quantized`
@@ -9,6 +9,10 @@
 //! resident at W8). `<decode>` is `cached` (KV-cached single-token decode
 //! steps, the default) or `replay` (the full-buffer reference loop) —
 //! same tokens bit for bit, a seq_len-factor fewer decoder MACs cached.
+//! `<batcher>` is `static` (group, decode to completion, respond — the
+//! default) or `continuous` (the slot scheduler: retire EOS'd sequences
+//! and admit queued ones between decode steps) — same responses bit for
+//! bit, the decode engine just stays full under load.
 //!
 //! Spins up the request-batching loop (`coordinator::serve_demo_native`):
 //! a closed-loop client submits single-sentence translation requests, the
@@ -22,7 +26,7 @@
 //! `itera serve --backend pjrt`.
 
 use anyhow::Result;
-use itera_llm::coordinator::serve_demo_native;
+use itera_llm::coordinator::{serve_demo_native, Batcher};
 use itera_llm::model::Manifest;
 use itera_llm::runtime::{DecodePolicy, Mode};
 use itera_llm::util::pool::default_workers;
@@ -54,6 +58,11 @@ fn main() -> Result<()> {
         Some(d) => DecodePolicy::parse(d)
             .ok_or_else(|| anyhow::anyhow!("unknown decode policy {d} (expected replay|cached)"))?,
     };
-    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode)?;
+    let batcher = match std::env::args().nth(5).as_deref() {
+        None => Batcher::default(),
+        Some(b) => Batcher::parse(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown batcher {b} (expected static|continuous)"))?,
+    };
+    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode, batcher)?;
     Ok(())
 }

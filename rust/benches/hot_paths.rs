@@ -234,6 +234,9 @@ fn main() {
     // ---- decode policies: full-buffer replay vs KV-cached steps --------
     decode_benches(&mut b, workers);
 
+    // ---- serving batchers: static waves vs continuous slot scheduling --
+    batcher_benches(&mut b, workers);
+
     // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
     runtime_benches(&mut b);
 
@@ -334,6 +337,138 @@ fn decode_benches(b: &mut Bench, workers: usize) {
                 / be.linear_macs_for(rows, DecodePolicy::Cached) as f64,
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tokens/sec of the serving path under both batching disciplines
+/// (`runtime/native_serve_{static,continuous}` — the same pre-queued
+/// request stream through `serve_loop` and `serve_loop_continuous`), plus
+/// the deterministic mean slot occupancy of a staggered-arrival
+/// continuous workload (`runtime/slot_occupancy` gauge). The responses
+/// are bit-identical (pinned by the serving soak test and the continuous
+/// proptest); these lanes record how much better the slot scheduler
+/// keeps the KV-cached decode engine fed. Hermetic: runs on the testkit
+/// tiny model. Registered under the `batcher` group, so
+/// `cargo bench --bench hot_paths batcher` selects the whole block.
+fn batcher_benches(b: &mut Bench, workers: usize) {
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    use itera_llm::coordinator::{
+        self, serve_loop, serve_loop_continuous, ContinuousBatcher, Method, Request,
+    };
+    use itera_llm::runtime::Mode;
+    use itera_llm::testkit::tinymodel;
+
+    b.set_group(Some("batcher"));
+    let lanes = [
+        "runtime/native_serve_static",
+        "runtime/native_serve_continuous",
+        "runtime/slot_occupancy",
+    ];
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_batcher", 0xBA7) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping batcher benches)");
+            b.set_group(None);
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let dims = manifest.model.clone();
+    // The serving configuration: W8A8 quant-only, dense execution (what
+    // `serve_demo_native` deploys), KV-cached decode.
+    let weights: Vec<&Matrix> =
+        manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = coordinator::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm.native_backend_mode(&manifest, &model, Mode::Dense, workers).unwrap();
+
+    // A fixed open-loop request stream: the corpus cycled to 12 requests,
+    // pre-queued so both loops measure pure serving throughput.
+    let n_requests = 12usize;
+    let rows: Vec<Vec<i32>> = (0..n_requests)
+        .map(|i| corpus.src_row(i % corpus.n).to_vec())
+        .collect();
+    let queue_all = |rows: &[Vec<i32>]| {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut receivers = Vec::new();
+        for row in rows {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: row.clone(),
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        (rx, receivers)
+    };
+
+    let static_on = b.enabled("runtime/native_serve_static");
+    let continuous_on = b.enabled("runtime/native_serve_continuous");
+    if static_on || continuous_on {
+        // Generated tokens per run are deterministic (bit-reproducible
+        // decode): measure once, then use as the throughput denominator.
+        // Skipped entirely when only the occupancy gauge is selected.
+        let (rx, _resp) = queue_all(&rows);
+        let tokens = serve_loop(&backend, &rx, &dims, n_requests).unwrap().tokens as u64;
+
+        if static_on {
+            b.bench_throughput("runtime/native_serve_static", tokens, || {
+                let (rx, _resp) = queue_all(&rows);
+                std::hint::black_box(serve_loop(&backend, &rx, &dims, n_requests).unwrap());
+            });
+        }
+        if continuous_on {
+            let capacity = dims.eval_batch;
+            b.bench_throughput("runtime/native_serve_continuous", tokens, || {
+                let (rx, _resp) = queue_all(&rows);
+                std::hint::black_box(
+                    serve_loop_continuous(&backend, &rx, &dims, n_requests, capacity).unwrap(),
+                );
+            });
+        }
+    }
+
+    // Deterministic slot occupancy on a staggered-arrival workload:
+    // capacity 3, a small initial backlog, then arrivals trickle in per
+    // tick (topping the queue back up to capacity) — later admissions
+    // join live mixed-age batches, every retirement backfills
+    // immediately, and only the final drain tail can idle a slot. The
+    // acceptance bar for this gauge is > 0.9.
+    if b.enabled("runtime/slot_occupancy") {
+        let n = 24usize;
+        let capacity = 3usize;
+        let mut batcher = ContinuousBatcher::new(&backend, capacity);
+        let mut submitted = 0usize;
+        while submitted < 2 * capacity {
+            batcher.submit(rows[submitted % rows.len()].clone());
+            submitted += 1;
+        }
+        while !(submitted == n && batcher.idle()) {
+            while submitted < n && batcher.pending() < capacity {
+                batcher.submit(rows[submitted % rows.len()].clone());
+                submitted += 1;
+            }
+            batcher.tick().unwrap();
+        }
+        b.gauge("runtime/slot_occupancy", batcher.occupancy());
+    }
+    b.set_group(None);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -30,6 +30,12 @@ pub struct BenchResult {
 /// Bench suite runner.
 pub struct Bench {
     filter: Option<String>,
+    /// Active group label: while set, the `cargo bench <filter>` match
+    /// also runs against this label, so a whole block of related lanes
+    /// can be selected by its group name even when the individual lane
+    /// names don't contain it (e.g. `cargo bench --bench hot_paths
+    /// batcher` for the `runtime/native_serve_*` lanes).
+    group: Option<String>,
     warmup_iters: usize,
     min_samples: usize,
     max_samples: usize,
@@ -50,6 +56,7 @@ impl Bench {
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
         Bench {
             filter,
+            group: None,
             warmup_iters: 2,
             min_samples: 5,
             max_samples: 30,
@@ -78,9 +85,19 @@ impl Bench {
     }
 
     /// Whether `name` passes the active `cargo bench <filter>` (suites use
-    /// this to skip expensive setup whose benches are filtered out).
+    /// this to skip expensive setup whose benches are filtered out). The
+    /// active [`group`](Self::set_group) label matches too.
     pub fn enabled(&self, name: &str) -> bool {
-        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+        let Some(f) = self.filter.as_deref() else { return true };
+        name.contains(f) || self.group.as_deref().map(|g| g.contains(f)).unwrap_or(false)
+    }
+
+    /// Enter (`Some`) or leave (`None`) a named group of lanes: while a
+    /// group is active, `enabled` also matches the filter against the
+    /// group label, so `cargo bench <group>` selects every lane the
+    /// block registers regardless of lane naming.
+    pub fn set_group(&mut self, group: Option<&str>) {
+        self.group = group.map(str::to_string);
     }
 
     /// Register and run one benchmark.
@@ -258,6 +275,25 @@ mod tests {
         assert!(b.results().is_empty());
         b.bench("match-me-too", || {});
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn group_label_matches_filter() {
+        let mut b = Bench::new().quick();
+        b.filter = Some("batcher".to_string());
+        b.bench("runtime/native_serve_static", || {});
+        assert!(b.results().is_empty(), "lane name alone does not match");
+        b.set_group(Some("batcher"));
+        assert!(b.enabled("runtime/native_serve_static"), "group label matches the filter");
+        b.bench("runtime/native_serve_static", || {});
+        assert_eq!(b.results().len(), 1);
+        b.set_group(None);
+        b.bench("runtime/native_serve_continuous", || {});
+        assert_eq!(b.results().len(), 1, "leaving the group restores name-only matching");
+        // No filter: everything runs, group or not.
+        b.filter = None;
+        b.bench("anything", || {});
+        assert_eq!(b.results().len(), 2);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{compress_model_from, serve_demo_native, Method};
+use crate::coordinator::{compress_model_from, serve_demo_native, Batcher, Method};
 use crate::eval::{evaluate_bleu, Corpus};
 #[cfg(feature = "pjrt")]
 use crate::hw::Platform;
@@ -46,6 +46,15 @@ fn decode_flag(args: &Args) -> Result<DecodePolicy> {
         None => Ok(DecodePolicy::default()),
         Some(d) => DecodePolicy::parse(d)
             .ok_or_else(|| anyhow::anyhow!("--decode expects replay|cached, got {d}")),
+    }
+}
+
+/// Parse the `--batcher` flag (serving discipline; static by default).
+fn batcher_flag(args: &Args) -> Result<Batcher> {
+    match args.flag("batcher") {
+        None => Ok(Batcher::default()),
+        Some(b) => Batcher::parse(b)
+            .ok_or_else(|| anyhow::anyhow!("--batcher expects static|continuous, got {b}")),
     }
 }
 
@@ -412,9 +421,15 @@ pub fn cmd_sra(_args: &Args) -> Result<()> {
 /// pack/unpack exactness, GEMM bit-parity vs the fake-quant f32 kernel,
 /// and the byte accounting per word length. With `--decode cached`, the
 /// KV-cached decode is cross-validated against the full-buffer replay
-/// reference instead (optionally restricted to one `--mode`).
+/// reference instead (optionally restricted to one `--mode`). With
+/// `--batcher continuous`, the slot-scheduled continuous decode is
+/// cross-validated against per-request sequential decode (again
+/// optionally restricted to one `--mode`).
 pub fn cmd_validate(args: &Args) -> Result<()> {
     use crate::coordinator::report::Table;
+    if args.has("batcher") {
+        return validate_continuous(args);
+    }
     if args.has("decode") {
         return validate_decode(args);
     }
@@ -488,34 +503,32 @@ fn validate_quantized() -> Result<()> {
     Ok(())
 }
 
-/// `validate --decode cached [--mode <m>]`: cross-validate the KV-cached
-/// incremental decode against the full-buffer replay reference on the
-/// hermetic tiny model — greedy tokens must match **bit for bit** per
-/// execution mode — and report the modeled linear-MAC reduction. Fails
-/// (non-zero exit) on any divergence, so CI can gate on it.
-fn validate_decode(args: &Args) -> Result<()> {
+/// Parse the optional `--mode` filter of a validation sub-command.
+fn only_mode_flag(args: &Args) -> Result<Option<Mode>> {
+    match args.flag("mode") {
+        None => Ok(None),
+        Some(m) => Mode::parse(m)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("--mode expects dense|svd|quantized")),
+    }
+}
+
+/// The cross-validation banks shared by the decode- and batcher-parity
+/// tables: one compression per execution mode/structure — dense
+/// fake-quant, true-rank factors, and both packed forms (the cascade
+/// covers both qkernel scale axes). Kept in one place so the two parity
+/// sub-commands can never drift apart in what they test.
+fn validation_cases(
+    manifest: &Manifest,
+    model: &PairModel,
+) -> Vec<(
+    &'static str,
+    Mode,
+    std::collections::BTreeMap<String, crate::compress::CompressedLinear>,
+)> {
     use std::collections::BTreeMap;
 
     use crate::compress::{itera, quant_only, CompressedLinear};
-    use crate::coordinator::report::Table;
-    use crate::runtime::TranslateBackend;
-    use crate::testkit::tinymodel;
-
-    if decode_flag(args)? != DecodePolicy::Cached {
-        bail!("--decode replay IS the reference; pass --decode cached to cross-validate");
-    }
-    let only_mode = match args.flag("mode") {
-        None => None,
-        Some(m) => Some(
-            Mode::parse(m).ok_or_else(|| anyhow::anyhow!("--mode expects dense|svd|quantized"))?,
-        ),
-    };
-
-    let (dir, manifest) = tinymodel::generate_in_temp("validate_decode", 0xD0C5)?;
-    let model = PairModel::load(&manifest, tinymodel::PAIR)?;
-    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
-    let rows = corpus.n;
-    let src = corpus.src_batch(0, rows, manifest.model.pad_id);
 
     let factor_bank = |wl: u32| -> BTreeMap<String, CompressedLinear> {
         manifest
@@ -534,12 +547,35 @@ fn validate_decode(args: &Args) -> Result<()> {
             .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), wl)))
             .collect()
     };
-    let cases = [
+    vec![
         ("quant W8", Mode::Dense, quant_bank(8)),
         ("itera W8 r/2", Mode::Svd, factor_bank(8)),
         ("quant W6 packed", Mode::Quantized, quant_bank(6)),
         ("itera W4 packed cascade", Mode::Quantized, factor_bank(4)),
-    ];
+    ]
+}
+
+/// `validate --decode cached [--mode <m>]`: cross-validate the KV-cached
+/// incremental decode against the full-buffer replay reference on the
+/// hermetic tiny model — greedy tokens must match **bit for bit** per
+/// execution mode — and report the modeled linear-MAC reduction. Fails
+/// (non-zero exit) on any divergence, so CI can gate on it.
+fn validate_decode(args: &Args) -> Result<()> {
+    use crate::coordinator::report::Table;
+    use crate::runtime::TranslateBackend;
+    use crate::testkit::tinymodel;
+
+    if decode_flag(args)? != DecodePolicy::Cached {
+        bail!("--decode replay IS the reference; pass --decode cached to cross-validate");
+    }
+    let only_mode = only_mode_flag(args)?;
+
+    let (dir, manifest) = tinymodel::generate_in_temp("validate_decode", 0xD0C5)?;
+    let model = PairModel::load(&manifest, tinymodel::PAIR)?;
+    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
+    let rows = corpus.n;
+    let src = corpus.src_batch(0, rows, manifest.model.pad_id);
+    let cases = validation_cases(&manifest, &model);
 
     let mut t = Table::new(
         "KV-cached decode vs full-buffer replay (hermetic tiny model)",
@@ -581,6 +617,103 @@ fn validate_decode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `validate --batcher continuous [--mode <m>] [--decode cached]`:
+/// cross-validate the slot-scheduled continuous decode against
+/// per-request sequential cached decode on the hermetic tiny model. The
+/// full corpus is fed through a `ContinuousBatcher` on a staggered
+/// arrival trace (a backlog plus one new request per tick, so admissions
+/// splice into a live mixed-age batch); every completed buffer must
+/// match `translate` of that request alone **bit for bit** — per
+/// execution mode (the packed cascade covers both qkernel scale axes).
+/// Fails (non-zero exit) on any divergence, so CI can gate on it.
+fn validate_continuous(args: &Args) -> Result<()> {
+    use crate::coordinator::report::Table;
+    use crate::coordinator::ContinuousBatcher;
+    use crate::runtime::TranslateBackend;
+    use crate::testkit::tinymodel;
+
+    if batcher_flag(args)? != Batcher::Continuous {
+        bail!("--batcher static IS the reference; pass --batcher continuous to cross-validate");
+    }
+    if decode_flag(args)? != DecodePolicy::Cached {
+        bail!("the continuous batcher schedules KV slots; only --decode cached applies");
+    }
+    let only_mode = only_mode_flag(args)?;
+
+    let (dir, manifest) = tinymodel::generate_in_temp("validate_batcher", 0xBA7C)?;
+    let model = PairModel::load(&manifest, tinymodel::PAIR)?;
+    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
+    let s = manifest.model.seq_len;
+    let capacity = 3usize;
+    let cases = validation_cases(&manifest, &model);
+
+    let mut t = Table::new(
+        &format!(
+            "Continuous batcher vs sequential cached decode (hermetic tiny model, \
+             capacity {capacity}, staggered arrivals)"
+        ),
+        &["mode", "bank", "requests", "tokens_exact", "decode_steps", "occupancy"],
+    );
+    let mut all_ok = true;
+    let mut ran = 0usize;
+    for (bank, mode, layers) in &cases {
+        if let Some(m) = only_mode {
+            if m != *mode {
+                continue;
+            }
+        }
+        ran += 1;
+        let backend = NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?;
+
+        // Sequential reference: each corpus row decoded alone through the
+        // existing cached path.
+        let rows: Vec<Vec<i32>> = (0..corpus.n).map(|i| corpus.src_row(i).to_vec()).collect();
+        let want = backend.translate_stream(&rows)?;
+
+        // Continuous run on a staggered trace: 2 requests up front, one
+        // more per tick — later admissions join a batch of older slots.
+        let mut batcher = ContinuousBatcher::new(&backend, capacity);
+        let mut submitted = 0usize;
+        let mut got: Vec<Option<Vec<i32>>> = vec![None; rows.len()];
+        while submitted < rows.len().min(2) {
+            batcher.submit(rows[submitted].clone());
+            submitted += 1;
+        }
+        while !(submitted == rows.len() && batcher.idle()) {
+            if submitted < rows.len() {
+                batcher.submit(rows[submitted].clone());
+                submitted += 1;
+            }
+            for c in batcher.tick()? {
+                got[c.id as usize] = Some(c.tokens);
+            }
+        }
+
+        let ok = got
+            .iter()
+            .zip(&want)
+            .all(|(g, w)| g.as_ref().map(|g| g.as_slice()) == Some(&w[..s]));
+        all_ok &= ok;
+        t.row(vec![
+            mode.key().to_string(),
+            bank.to_string(),
+            format!("{}", rows.len()),
+            if ok { "yes" } else { "NO" }.to_string(),
+            format!("{}", batcher.stats().steps),
+            format!("{:.2}", batcher.occupancy()),
+        ]);
+    }
+    print!("{}", t.render());
+    std::fs::remove_dir_all(&dir).ok();
+    if ran == 0 {
+        bail!("no continuous-parity case matches --mode {:?}", args.flag("mode"));
+    }
+    if !all_ok {
+        bail!("continuous-batched decode DIVERGED from sequential decode — see table above");
+    }
+    Ok(())
+}
+
 /// Batched serving demo: random test sentences through a compressed
 /// model, reporting latency/throughput percentiles. Native by default;
 /// `--backend pjrt` uses the AOT artifacts (pjrt builds only). For the
@@ -602,13 +735,28 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 Some(m) => bail!("serve --mode expects dense|quantized, got {m}"),
             };
             let decode = decode_flag(args)?;
-            serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode)?;
+            let batcher = batcher_flag(args)?;
+            serve_demo_native(
+                &manifest,
+                &pair,
+                requests,
+                default_workers(8),
+                mode,
+                decode,
+                batcher,
+            )?;
             Ok(())
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             if let Some(m) = args.flag("mode") {
                 bail!("--mode {m} applies to the native backend; the PJRT demo runs dense");
+            }
+            if batcher_flag(args)? != Batcher::Static {
+                bail!(
+                    "--batcher continuous needs the native slot API; the AOT artifacts \
+                     only translate monolithic batches"
+                );
             }
             let c = coordinator(args)?;
             let pair = args.flag_or("pair", "en-de");

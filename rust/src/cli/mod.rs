@@ -7,8 +7,10 @@
 //! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
 //!            [--mode dense|svd|quantized] [--decode replay|cached]
 //! itera serve [--requests 64] [--mode quantized] [--decode replay|cached]
-//! itera validate [--mode quantized] [--decode cached]
-//!                                    # model-vs-sim / qkernel / decode parity
+//!             [--batcher static|continuous]
+//! itera validate [--mode quantized] [--decode cached] [--batcher continuous]
+//!                                    # model-vs-sim / qkernel / decode /
+//!                                    # continuous-batching parity
 //! ```
 //!
 //! PJRT-artifact measurement (needs `--features pjrt`):
@@ -97,7 +99,8 @@ USAGE (native runtime, every build):
              [--decode <replay|cached>]
   itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
               [--mode <dense|quantized>] [--decode <replay|cached>]
-  itera validate [--mode quantized] [--decode cached]
+              [--batcher <static|continuous>]
+  itera validate [--mode quantized] [--decode cached] [--batcher continuous]
   itera help
 
   --mode quantized executes the compressed model from bit-packed sub-8-bit
@@ -106,6 +109,12 @@ USAGE (native runtime, every build):
   or the AOT graph's full-buffer replay — bit-identical tokens, a
   seq_len-factor fewer decoder MACs cached. `validate --decode cached`
   cross-checks the parity on a hermetic tiny model.
+  --batcher picks the serving discipline: static group-decode-respond
+  waves (default) or the continuous slot scheduler, which retires and
+  admits sequences between decode steps so the KV-cached engine stays
+  full under dynamic load — bit-identical responses, higher occupancy.
+  `validate --batcher continuous` cross-checks continuous vs sequential
+  decode on a hermetic tiny model.
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]

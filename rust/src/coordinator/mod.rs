@@ -11,22 +11,31 @@
 //!
 //! Everything touching the PJRT runtime (the coordinator itself, figures)
 //! needs the `pjrt` feature; the method/dispatch layer ([`methods`]),
-//! report emission and the backend-agnostic serving loop ([`serve`]) stay
-//! in the default build — `serve_demo_native` runs the full request path
-//! on the pure-Rust engine.
+//! report emission, the backend-agnostic serving loop ([`serve`]) and the
+//! continuous-batching scheduler ([`scheduler`]) stay in the default
+//! build — `serve_demo_native` runs the full request path on the
+//! pure-Rust engine under either [`Batcher`]: the static
+//! group-decode-respond loop, or [`ContinuousBatcher`]'s slot-addressed
+//! retire/admit/step rounds that keep the KV-cached decode engine full
+//! under dynamic load.
 
 #[cfg(feature = "pjrt")]
 pub mod figures;
 mod methods;
 pub mod report;
+pub mod scheduler;
 mod serve;
 
 pub use methods::{compress_model_from, CompressedModel, Method};
+pub use scheduler::{Batcher, BatcherStats, Completion, ContinuousBatcher};
 #[cfg(feature = "pjrt")]
 pub use serve::serve_bank;
 #[cfg(feature = "pjrt")]
 pub use serve::serve_demo;
-pub use serve::{pack_rows, run_demo, serve_demo_native, serve_loop, Request, ServeStats};
+pub use serve::{
+    pack_rows, run_demo, serve_demo_native, serve_loop, serve_loop_continuous, Request,
+    ServeStats,
+};
 
 #[cfg(feature = "pjrt")]
 use std::collections::{BTreeMap, HashMap};

@@ -1,0 +1,473 @@
+//! Dynamic admission scheduling for slot-addressed decode: the
+//! continuous-batching engine.
+//!
+//! The static batcher ([`super::serve::serve_loop`]) runs one monolithic
+//! batch lifecycle: group requests, decode the whole batch to completion
+//! (stragglers pin every other row), respond, repeat — so the decode
+//! engine idles between waves. [`ContinuousBatcher`] keeps it hot by
+//! scheduling per-sequence KV slots ([`crate::runtime::SlotEngine`])
+//! instead of batches: **between decode steps** it retires EOS'd slots,
+//! admits queued requests into the freed capacity (running their encoder
+//! pass and splicing their cross-attention context into the live batch),
+//! and steps the resulting mixed-age batch.
+//!
+//! Scheduling is deterministic and wall-clock-free — admission is FIFO
+//! into the lowest free slot index, slots are never preempted (a long
+//! request keeps its slot until it completes, so nothing starves), and
+//! an idle tick (no live slots, empty queue) is a no-op. That makes the
+//! policy unit-testable with scripted arrival/length traces against a
+//! mock engine, with no model anywhere.
+//!
+//! Outputs are **bit-identical** to decoding each request alone through
+//! the cached path: slot independence is the engine's contract
+//! ([`crate::runtime::SlotEngine`]), pinned end-to-end by
+//! `prop_continuous_decode_bit_identical_to_sequential`, the serving
+//! soak test and `itera validate --batcher continuous`.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::SlotEngine;
+
+/// Which serving batcher runs the decode loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Batcher {
+    /// Monolithic batch lifecycle: fill up to capacity, decode the whole
+    /// batch to completion, respond, repeat.
+    #[default]
+    Static,
+    /// Slot-addressed lifecycle: retire/admit between decode steps so
+    /// the batch stays full under dynamic load ([`ContinuousBatcher`]).
+    Continuous,
+}
+
+impl Batcher {
+    pub fn key(self) -> &'static str {
+        match self {
+            Batcher::Static => "static",
+            Batcher::Continuous => "continuous",
+        }
+    }
+
+    /// Parse a CLI `--batcher` value.
+    pub fn parse(s: &str) -> Option<Batcher> {
+        match s {
+            "static" => Some(Batcher::Static),
+            "continuous" => Some(Batcher::Continuous),
+            _ => None,
+        }
+    }
+}
+
+/// One finished request, reported by [`ContinuousBatcher::tick`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Completion {
+    /// Submission id (assigned FIFO by [`ContinuousBatcher::submit`]).
+    pub id: u64,
+    /// Slot index the request decoded in (observable slot reuse).
+    pub slot: usize,
+    /// The decoded `seq_len`-token output buffer.
+    pub tokens: Vec<i32>,
+}
+
+/// Deterministic scheduling counters.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherStats {
+    /// Decode steps executed (idle ticks are not steps).
+    pub steps: usize,
+    /// Requests admitted into a slot.
+    pub admitted: usize,
+    /// Slots retired (EOS or full buffer).
+    pub retired: usize,
+    /// Sum over steps of live slots — the occupancy numerator.
+    pub occupied_slot_steps: usize,
+}
+
+impl BatcherStats {
+    /// Mean fraction of `capacity` occupied per decode step, in `[0, 1]`.
+    pub fn occupancy(&self, capacity: usize) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.occupied_slot_steps as f64 / (self.steps * capacity.max(1)) as f64
+    }
+}
+
+struct Live<S> {
+    id: u64,
+    slot: S,
+}
+
+/// Continuous-batching engine over any [`SlotEngine`].
+///
+/// `capacity` bounds concurrent slots; requests beyond it queue FIFO.
+/// Drive it with [`submit`](Self::submit) + [`tick`](Self::tick) (one
+/// retire/admit/step round per call) or [`run_until_drained`]
+/// (Self::run_until_drained).
+pub struct ContinuousBatcher<'e, E: SlotEngine> {
+    engine: &'e E,
+    capacity: usize,
+    /// Fixed-capacity slot table; `None` entries are free and reusable.
+    slots: Vec<Option<Live<E::Slot>>>,
+    /// FIFO admission queue of `(id, framed source row)`.
+    queue: VecDeque<(u64, Vec<i32>)>,
+    next_id: u64,
+    stats: BatcherStats,
+}
+
+impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
+    pub fn new(engine: &'e E, capacity: usize) -> ContinuousBatcher<'e, E> {
+        assert!(capacity >= 1, "continuous batcher needs at least one slot");
+        ContinuousBatcher {
+            engine,
+            capacity,
+            slots: (0..capacity).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            next_id: 0,
+            stats: BatcherStats::default(),
+        }
+    }
+
+    /// Enqueue one `seq_len`-framed request; returns its id (ids are
+    /// assigned — and admitted — in submission order).
+    pub fn submit(&mut self, src_row: Vec<i32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, src_row));
+        id
+    }
+
+    /// Requests waiting for a slot.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Currently occupied slots.
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Nothing live and nothing queued: a [`tick`](Self::tick) would be
+    /// a no-op.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn stats(&self) -> &BatcherStats {
+        &self.stats
+    }
+
+    /// Mean slot occupancy over all decode steps so far.
+    pub fn occupancy(&self) -> f64 {
+        self.stats.occupancy(self.capacity)
+    }
+
+    /// One scheduling round: admit queued requests into free slots
+    /// (FIFO, lowest free index first — each admission runs the
+    /// request's encoder pass), retire anything already complete (a
+    /// degenerate admission can be born finished — it must never reach
+    /// the step kernel), step the mixed-age batch of live slots once,
+    /// then retire completed slots and return every output. An idle
+    /// round (nothing live after admission) executes no decode step.
+    pub fn tick(&mut self) -> Result<Vec<Completion>> {
+        // Admit: fill every free slot while the queue has work.
+        for entry in self.slots.iter_mut() {
+            if entry.is_some() {
+                continue;
+            }
+            let Some((id, row)) = self.queue.pop_front() else { break };
+            ensure!(
+                row.len() == self.engine.slot_seq_len(),
+                "request {id}: {} tokens, slots are {}-framed",
+                row.len(),
+                self.engine.slot_seq_len()
+            );
+            *entry = Some(Live { id, slot: self.engine.admit(&row)? });
+            self.stats.admitted += 1;
+        }
+
+        // Pre-step retire: only admissions that are complete on arrival
+        // (e.g. a seq_len-1 buffer, or EOS aliased to BOS/PAD) — slots
+        // finished by a step were retired at the end of that tick.
+        let mut done = self.retire_complete();
+
+        // Step whatever is live, in ascending slot order (slot
+        // independence makes the order bit-irrelevant; fixing it keeps
+        // traces reproducible).
+        let mut live: Vec<&mut E::Slot> =
+            self.slots.iter_mut().filter_map(|e| e.as_mut().map(|l| &mut l.slot)).collect();
+        if live.is_empty() {
+            return Ok(done);
+        }
+        let occupied = live.len();
+        self.engine.step(&mut live)?;
+        self.stats.steps += 1;
+        self.stats.occupied_slot_steps += occupied;
+
+        // Retire: free completed slots for the next tick's admissions.
+        done.extend(self.retire_complete());
+        Ok(done)
+    }
+
+    /// Take every complete slot out of the table (freeing it for reuse)
+    /// and return the completions in ascending slot order.
+    fn retire_complete(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        for (si, entry) in self.slots.iter_mut().enumerate() {
+            let complete = match entry {
+                Some(l) => self.engine.slot_complete(&l.slot),
+                None => false,
+            };
+            if complete {
+                let l = entry.take().expect("checked Some above");
+                done.push(Completion {
+                    id: l.id,
+                    slot: si,
+                    tokens: self.engine.slot_output(&l.slot),
+                });
+                self.stats.retired += 1;
+            }
+        }
+        done
+    }
+
+    /// Tick until nothing is live or queued; returns every completion in
+    /// retirement order.
+    pub fn run_until_drained(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.tick()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scripted mock engine: no model, no clock. A request row encodes
+    /// its own lifecycle — `row[0]` is the number of decode steps until
+    /// EOS, `row[1]` a tag echoed in the output — so arrival/length
+    /// traces are fully deterministic.
+    struct ScriptEngine {
+        seq: usize,
+    }
+
+    struct ScriptSlot {
+        need: usize,
+        len: usize,
+        tag: i32,
+    }
+
+    impl SlotEngine for ScriptEngine {
+        type Slot = ScriptSlot;
+
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn admit(&self, src_row: &[i32]) -> Result<ScriptSlot> {
+            ensure!(src_row.len() == self.seq, "framing");
+            Ok(ScriptSlot { need: src_row[0] as usize, len: 0, tag: src_row[1] })
+        }
+
+        fn step(&self, slots: &mut [&mut ScriptSlot]) -> Result<()> {
+            for s in slots.iter_mut() {
+                s.len += 1;
+            }
+            Ok(())
+        }
+
+        fn slot_complete(&self, s: &ScriptSlot) -> bool {
+            s.len >= s.need || s.len + 1 >= self.seq
+        }
+
+        fn slot_output(&self, s: &ScriptSlot) -> Vec<i32> {
+            vec![s.tag, s.len as i32]
+        }
+    }
+
+    fn req(need: usize, tag: i32, seq: usize) -> Vec<i32> {
+        let mut r = vec![0; seq];
+        r[0] = need as i32;
+        r[1] = tag;
+        r
+    }
+
+    #[test]
+    fn fifo_admission_and_capacity_never_exceeded() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 2);
+        for i in 0..5 {
+            b.submit(req(3, i, 16));
+        }
+        assert_eq!(b.pending(), 5);
+        let mut completions = Vec::new();
+        for _ in 0..30 {
+            assert!(b.live() <= 2, "live slots exceed capacity");
+            completions.extend(b.tick().unwrap());
+            assert!(b.live() <= 2, "live slots exceed capacity after tick");
+            if b.idle() {
+                break;
+            }
+        }
+        assert!(b.idle(), "trace must drain");
+        // Equal-length requests: FIFO admission implies FIFO completion.
+        let ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "FIFO admission order");
+        assert_eq!(b.stats().admitted, 5);
+        assert_eq!(b.stats().retired, 5);
+    }
+
+    #[test]
+    fn slot_reuse_after_retirement() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        // Slot 0 retires first (1 step), slots 1/2 run long.
+        b.submit(req(1, 10, 16));
+        b.submit(req(6, 11, 16));
+        b.submit(req(6, 12, 16));
+        let first = b.tick().unwrap();
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].id, 0);
+        assert_eq!(first[0].slot, 0, "short request lived in slot 0");
+        // The next request must land in the freed slot 0, not a new one.
+        b.submit(req(1, 13, 16));
+        let second = b.tick().unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].id, 3);
+        assert_eq!(second[0].slot, 0, "retired slot is reused");
+        assert_eq!(b.live(), 2, "long requests still hold slots 1 and 2");
+    }
+
+    #[test]
+    fn long_requests_are_never_starved() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 2);
+        let long_id = b.submit(req(6, 99, 16));
+        // A stream of short requests arrives every tick; the long request
+        // keeps its slot (no preemption) and completes on schedule.
+        let mut long_done_at = None;
+        for tick in 1..=10 {
+            b.submit(req(1, tick, 16));
+            for c in b.tick().unwrap() {
+                if c.id == long_id {
+                    long_done_at = Some(tick);
+                }
+            }
+        }
+        assert_eq!(long_done_at, Some(6), "6-step request completes at tick 6");
+    }
+
+    #[test]
+    fn empty_queue_idle_tick_is_a_noop() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 4);
+        assert!(b.idle());
+        assert_eq!(b.tick().unwrap(), Vec::new());
+        assert_eq!(b.stats().steps, 0, "idle tick executes no decode step");
+        assert_eq!(b.occupancy(), 0.0);
+        // ... and the batcher still works after idling.
+        b.submit(req(2, 7, 16));
+        assert!(!b.idle());
+        let out = b.run_until_drained().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, vec![7, 2]);
+        assert_eq!(b.stats().steps, 2);
+    }
+
+    #[test]
+    fn backlogged_trace_keeps_slots_occupied() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        for i in 0..9 {
+            b.submit(req(4, i, 16));
+        }
+        let out = b.run_until_drained().unwrap();
+        assert_eq!(out.len(), 9);
+        // Equal 4-step lifecycles in cohorts of 3: every step runs a full
+        // batch, so occupancy is exactly 1.
+        assert_eq!(b.stats().steps, 12);
+        assert!((b.occupancy() - 1.0).abs() < 1e-12, "occupancy {}", b.occupancy());
+    }
+
+    #[test]
+    fn staggered_arrivals_mix_slot_ages() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        // Arrivals staggered across ticks; lengths differ, so admissions
+        // backfill mid-decode and the batch holds mixed-age slots.
+        b.submit(req(2, 0, 16));
+        b.submit(req(5, 1, 16));
+        let mut completions = Vec::new();
+        for t in 0..12 {
+            if t == 1 {
+                b.submit(req(2, 2, 16));
+            }
+            if t == 3 {
+                b.submit(req(1, 3, 16));
+            }
+            completions.extend(b.tick().unwrap());
+            if b.idle() {
+                break;
+            }
+        }
+        assert_eq!(completions.len(), 4);
+        // The long request (id 1) outlives later arrivals: 2 and 3
+        // complete before it — continuous batching, not head-of-line.
+        let pos = |id: u64| completions.iter().position(|c| c.id == id).unwrap();
+        assert!(pos(2) < pos(1) && pos(3) < pos(1), "later short requests finish first");
+        assert_eq!(b.stats().admitted, 4);
+        assert_eq!(b.stats().retired, 4);
+        assert!(b.occupancy() > 0.5, "occupancy {}", b.occupancy());
+    }
+
+    #[test]
+    fn born_complete_admissions_retire_without_stepping() {
+        // A slot that is complete the moment it is admitted (need = 0 —
+        // the mock twin of a seq_len-1 buffer or EOS-aliased framing)
+        // must be retired before the step batch forms, never stepped.
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 2);
+        b.submit(req(0, 41, 16));
+        let out = b.tick().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, vec![41, 0], "retired at age 0: never stepped");
+        assert_eq!(b.stats().steps, 0, "no live work, no decode step");
+        assert!(b.idle());
+        // Mixed with a real request, the degenerate one still skips the
+        // step batch while the live one decodes normally.
+        b.submit(req(0, 42, 16));
+        b.submit(req(2, 43, 16));
+        let first = b.tick().unwrap();
+        assert_eq!(first.len(), 1, "only the born-complete request retires this tick");
+        assert_eq!(first[0].tokens, vec![42, 0]);
+        let rest = b.run_until_drained().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].tokens, vec![43, 2], "the live request stepped to completion");
+    }
+
+    #[test]
+    fn rejects_misframed_requests() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1);
+        b.submit(vec![1, 2, 3]); // not seq_len-framed
+        assert!(b.tick().is_err(), "misframed request must fail admission");
+    }
+
+    #[test]
+    fn batcher_keys_parse() {
+        for k in [Batcher::Static, Batcher::Continuous] {
+            assert_eq!(Batcher::parse(k.key()), Some(k));
+        }
+        assert_eq!(Batcher::default(), Batcher::Static);
+        assert_eq!(Batcher::parse("vllm"), None);
+    }
+}

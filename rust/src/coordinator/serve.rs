@@ -1,19 +1,30 @@
 //! Batched serving demo: a minimal request loop over any translate
-//! backend.
+//! backend, under either batching discipline.
 //!
-//! Demonstrates the deployment story: single-sentence translation requests
-//! arrive on a channel, a batcher groups them up to the backend's batch
-//! capacity (padding short batches), executes one translate call per
-//! batch, and reports per-request latency percentiles and aggregate
-//! throughput. The loop is backend-agnostic ([`TranslateBackend`]), so
-//! the same code path serves the always-built native engine and — with
-//! the `pjrt` feature — the AOT-compiled PJRT session; Python is nowhere
-//! on either path.
+//! Demonstrates the deployment story: single-sentence translation
+//! requests arrive on a channel and are answered with de-framed tokens +
+//! latency, by one of two server loops:
 //!
-//! The batcher itself ([`pack_rows`], [`serve_loop`]) is split out of the
-//! demo driver so it can be unit-tested against a mock backend without
-//! threads, models or artifacts.
+//! * **static** ([`serve_loop`]) — group whatever is queued up to the
+//!   backend's batch capacity, execute one monolithic translate call per
+//!   batch (stragglers pin the batch), respond, repeat. Backend-agnostic
+//!   ([`TranslateBackend`]): the same code path serves the always-built
+//!   native engine and — with the `pjrt` feature — the AOT-compiled PJRT
+//!   session.
+//! * **continuous** ([`serve_loop_continuous`]) — drive a
+//!   [`ContinuousBatcher`] over any slot engine
+//!   ([`crate::runtime::SlotEngine`]): between decode steps, retire
+//!   EOS'd slots, admit queued requests into the freed capacity, and
+//!   step the mixed-age batch — the decode engine never idles while work
+//!   is queued, and responses are **bit-identical** to the static loop's
+//!   (slot independence; pinned by the serving soak test).
+//!
+//! Python is nowhere on either path. The batching logic ([`pack_rows`],
+//! [`serve_loop`], the scheduler in `coordinator::scheduler`) is split
+//! out of the demo driver so it can be unit-tested against mock backends
+//! without threads, models or artifacts.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -21,9 +32,11 @@ use anyhow::Result;
 
 use crate::eval::{strip_specials, Corpus};
 use crate::model::ModelDims;
-use crate::runtime::{DecodePolicy, Mode, TranslateBackend};
+use crate::runtime::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
+
+use super::scheduler::{Batcher, ContinuousBatcher};
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::{PjrtBackend, TranslateSession};
@@ -39,10 +52,16 @@ pub struct Request {
     pub respond: mpsc::Sender<(Vec<i32>, f64)>,
 }
 
-/// Aggregate outcome of one [`serve_loop`] run.
+/// Aggregate outcome of one [`serve_loop`] / [`serve_loop_continuous`]
+/// run.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
+    /// Responses sent. Balances [`received`](Self::received) on a clean
+    /// run: every request taken off the channel is answered exactly once.
     pub served: usize,
+    /// Requests taken off the channel.
+    pub received: usize,
+    /// Static loop: translate calls. Continuous loop: decode steps.
     pub batches: usize,
     pub wall_s: f64,
     /// Generated (de-framed) output tokens across all responses — the
@@ -51,6 +70,9 @@ pub struct ServeStats {
     /// Per-request latency samples (seconds, arrival to response), as
     /// observed by the server loop itself.
     pub latency: Summary,
+    /// Mean fraction of batch/slot capacity occupied per translate call
+    /// (static) or decode step (continuous), in `[0, 1]`.
+    pub occupancy: f64,
 }
 
 impl ServeStats {
@@ -73,9 +95,14 @@ pub fn pack_rows(rows: &[&[i32]], batch: usize, seq: usize, pad: i32) -> Vec<i32
     src
 }
 
-/// Drain one batch from the request channel: block for the first request,
-/// then opportunistically take whatever else is already queued, up to
-/// `capacity`. `None` when the channel has disconnected.
+/// Drain one batch from the request channel: block for the **first**
+/// request only, then opportunistically take whatever else is already
+/// queued, up to `capacity`. `None` when the channel has disconnected.
+///
+/// Blocking past the first request would be head-of-line blocking — the
+/// loop would wait indefinitely for a full batch while admitted clients
+/// hold their responses. Partial batches must flush; pinned by the
+/// `partial_batch_flushes_without_disconnect` regression test.
 fn next_batch(rx: &mpsc::Receiver<Request>, capacity: usize) -> Option<Vec<Request>> {
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
@@ -103,9 +130,11 @@ pub fn serve_loop(
     let mut served = 0usize;
     let mut batches = 0usize;
     let mut tokens = 0usize;
+    let mut occupied_rows = 0usize;
     let mut latency = Summary::new();
     while served < n_requests {
         let Some(batch) = next_batch(rx, b) else { break };
+        occupied_rows += batch.len();
         let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
         // Fixed-shape backends (AOT artifacts) need the full compiled
         // batch; variable-shape ones only pay for the rows they got.
@@ -128,23 +157,101 @@ pub fn serve_loop(
         served += batch.len();
         batches += 1;
     }
-    Ok(ServeStats { served, batches, wall_s: t0.elapsed().as_secs_f64(), tokens, latency })
+    Ok(ServeStats {
+        served,
+        received: served,
+        batches,
+        wall_s: t0.elapsed().as_secs_f64(),
+        tokens,
+        latency,
+        occupancy: occupied_rows as f64 / (batches * b).max(1) as f64,
+    })
 }
 
-/// Closed-loop demo driver: a client thread submits `n_requests` random
-/// test sentences back-to-back, [`serve_loop`] batches and executes them,
-/// and the latency/throughput summary is printed.
-pub fn run_demo(
-    backend: &dyn TranslateBackend,
-    corpus: Corpus,
+/// The continuous server loop: drive a [`ContinuousBatcher`] over a slot
+/// engine. Each round drains whatever the channel already holds into the
+/// admission queue (blocking only when there is nothing live or queued
+/// to step), ticks the batcher — retire, admit, one mixed-age decode
+/// step — and responds to completions with de-framed tokens + latency.
+/// Runs until `n_requests` have been served or the channel disconnects
+/// and the backlog drains. Responses are bit-identical to the static
+/// loop's for the same requests (slot independence).
+pub fn serve_loop_continuous<E: SlotEngine>(
+    engine: &E,
+    rx: &mpsc::Receiver<Request>,
     dims: &ModelDims,
     n_requests: usize,
-    label: &str,
+    capacity: usize,
 ) -> Result<ServeStats> {
-    let (tx, rx) = mpsc::channel::<Request>();
+    let s = engine.slot_seq_len();
+    let t0 = Instant::now();
+    let mut batcher = ContinuousBatcher::new(engine, capacity);
+    let mut inflight: HashMap<u64, Request> = HashMap::new();
+    let mut received = 0usize;
+    let mut served = 0usize;
+    let mut tokens = 0usize;
+    let mut latency = Summary::new();
+    let mut disconnected = false;
+    let mut enqueue = |req: Request,
+                       batcher: &mut ContinuousBatcher<E>,
+                       inflight: &mut HashMap<u64, Request>| {
+        let id = batcher.submit(pack_rows(&[req.tokens.as_slice()], 1, s, dims.pad_id));
+        inflight.insert(id, req);
+    };
+    while served < n_requests {
+        // Block for a request only when a tick would be an idle no-op;
+        // otherwise drain the channel opportunistically between steps.
+        if batcher.idle() {
+            if received >= n_requests || disconnected {
+                break;
+            }
+            let Ok(req) = rx.recv() else { break };
+            enqueue(req, &mut batcher, &mut inflight);
+            received += 1;
+        }
+        while received < n_requests && !disconnected {
+            match rx.try_recv() {
+                Ok(req) => {
+                    enqueue(req, &mut batcher, &mut inflight);
+                    received += 1;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => disconnected = true,
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        let completions = batcher.tick()?;
+        let now = Instant::now();
+        for c in completions {
+            let Some(req) = inflight.remove(&c.id) else { continue };
+            let toks = strip_specials(&c.tokens, dims.bos_id, dims.eos_id, dims.pad_id);
+            let lat = now.duration_since(req.t_arrival).as_secs_f64();
+            tokens += toks.len();
+            latency.add(lat);
+            req.respond.send((toks, lat)).ok();
+            served += 1;
+        }
+    }
+    Ok(ServeStats {
+        served,
+        received,
+        batches: batcher.stats().steps,
+        wall_s: t0.elapsed().as_secs_f64(),
+        tokens,
+        latency,
+        occupancy: batcher.occupancy(),
+    })
+}
 
-    // Client thread: submits requests back-to-back (closed-loop).
-    let client = std::thread::spawn(move || {
+/// Spawn the closed-loop demo client: submits `n_requests` random test
+/// sentences back-to-back (each waits for its response before the next
+/// goes out; the batcher still groups concurrent stragglers). Returns
+/// client-observed latencies + the received translations on join.
+fn spawn_client(
+    corpus: Corpus,
+    n_requests: usize,
+    tx: mpsc::Sender<Request>,
+) -> std::thread::JoinHandle<(Summary, Vec<Vec<i32>>)> {
+    std::thread::spawn(move || {
         let mut rng = Pcg64::new(0xBEEF);
         let mut latencies = Summary::new();
         let mut done = Vec::new();
@@ -158,27 +265,36 @@ pub fn run_demo(
                 respond: rtx,
             })
             .ok();
-            // Closed-loop: wait for the response before the next request
-            // (the batcher still groups concurrent stragglers). Latency
-            // is measured at receive time, so it includes the response
-            // channel hop the server-side percentile rows can't see.
+            // Latency is measured at receive time, so it includes the
+            // response channel hop the server-side percentile rows can't
+            // see.
             if let Ok((toks, _lat)) = rrx.recv() {
                 latencies.add(t_submit.elapsed().as_secs_f64());
                 done.push(toks);
             }
         }
         (latencies, done)
-    });
+    })
+}
 
-    let stats = serve_loop(backend, &rx, dims, n_requests)?;
-    let (latencies, translations) = client.join().expect("client thread");
-
+fn print_demo_stats(
+    label: &str,
+    kind: &str,
+    batcher: Batcher,
+    capacity: usize,
+    stats: &ServeStats,
+    latencies: &Summary,
+    translations: &[Vec<i32>],
+) {
     println!(
-        "== serving demo ({label}, backend {}, batch capacity {}) ==",
-        backend.kind(),
-        backend.batch()
+        "== serving demo ({label}, backend {kind}, {} batcher, capacity {capacity}) ==",
+        batcher.key()
     );
-    println!("requests      : {n_requests} ({} batches)", stats.batches);
+    let unit = match batcher {
+        Batcher::Static => "batches",
+        Batcher::Continuous => "decode steps",
+    };
+    println!("requests      : {} ({} {unit})", stats.served, stats.batches);
     println!("wall time     : {:.2}s", stats.wall_s);
     println!("throughput    : {:.1} sentences/s", stats.served as f64 / stats.wall_s);
     println!(
@@ -186,6 +302,7 @@ pub fn run_demo(
         stats.tokens_per_s(),
         stats.tokens
     );
+    println!("occupancy     : {:.1}% of capacity per {unit}", stats.occupancy * 100.0);
     println!(
         "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3} (client-observed)",
         latencies.quantile(0.5),
@@ -203,6 +320,59 @@ pub fn run_demo(
         "sample output : {:?}",
         translations.first().map(|t| &t[..t.len().min(8)])
     );
+}
+
+/// Closed-loop demo driver over the **static** batcher: a client thread
+/// submits `n_requests` random test sentences back-to-back,
+/// [`serve_loop`] batches and executes them, and the latency/throughput
+/// summary is printed.
+pub fn run_demo(
+    backend: &dyn TranslateBackend,
+    corpus: Corpus,
+    dims: &ModelDims,
+    n_requests: usize,
+    label: &str,
+) -> Result<ServeStats> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let client = spawn_client(corpus, n_requests, tx);
+    let stats = serve_loop(backend, &rx, dims, n_requests)?;
+    let (latencies, translations) = client.join().expect("client thread");
+    print_demo_stats(
+        label,
+        backend.kind(),
+        Batcher::Static,
+        backend.batch(),
+        &stats,
+        &latencies,
+        &translations,
+    );
+    Ok(stats)
+}
+
+/// [`run_demo`]'s twin over the **continuous** batcher: same closed-loop
+/// client, served by [`serve_loop_continuous`] at `capacity` slots.
+pub fn run_demo_continuous<E: SlotEngine>(
+    engine: &E,
+    kind: &str,
+    capacity: usize,
+    corpus: Corpus,
+    dims: &ModelDims,
+    n_requests: usize,
+    label: &str,
+) -> Result<ServeStats> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let client = spawn_client(corpus, n_requests, tx);
+    let stats = serve_loop_continuous(engine, &rx, dims, n_requests, capacity)?;
+    let (latencies, translations) = client.join().expect("client thread");
+    print_demo_stats(
+        label,
+        kind,
+        Batcher::Continuous,
+        capacity,
+        &stats,
+        &latencies,
+        &translations,
+    );
     Ok(stats)
 }
 
@@ -215,7 +385,10 @@ pub fn run_demo(
 /// resident at W8). `decode` picks the greedy-decode loop — KV-cached
 /// single-token steps (the serving default) or the full-buffer replay
 /// reference; both produce identical tokens, the cached loop just
-/// serves them a `seq_len`-factor cheaper.
+/// serves them a `seq_len`-factor cheaper. `batcher` picks the serving
+/// discipline — static group-decode-respond waves, or the continuous
+/// slot scheduler (requires the cached decode policy; identical tokens
+/// either way, the batch just stays full under dynamic load).
 pub fn serve_demo_native(
     manifest: &crate::model::Manifest,
     pair: &str,
@@ -223,6 +396,7 @@ pub fn serve_demo_native(
     workers: usize,
     mode: Mode,
     decode: DecodePolicy,
+    batcher: Batcher,
 ) -> Result<ServeStats> {
     let info = manifest
         .pairs
@@ -240,13 +414,32 @@ pub fn serve_demo_native(
         workers,
     );
     let backend = cm.native_backend_mode(manifest, &model, mode, workers)?.with_decode(decode);
-    run_demo(
-        &backend,
-        corpus,
-        &manifest.model,
-        n_requests,
-        &format!("{pair}, W8A8, {} exec, {} decode", mode.key(), decode.key()),
-    )
+    let label = format!(
+        "{pair}, W8A8, {} exec, {} decode, {} batcher",
+        mode.key(),
+        decode.key(),
+        batcher.key()
+    );
+    match batcher {
+        Batcher::Static => run_demo(&backend, corpus, &manifest.model, n_requests, &label),
+        Batcher::Continuous => {
+            anyhow::ensure!(
+                decode == DecodePolicy::Cached,
+                "the continuous batcher schedules KV slots; it requires --decode cached \
+                 (replay has no slot lifecycle to interleave)"
+            );
+            let capacity = backend.batch();
+            run_demo_continuous(
+                &backend,
+                "native",
+                capacity,
+                corpus,
+                &manifest.model,
+                n_requests,
+                &label,
+            )
+        }
+    }
 }
 
 /// Serving demo over the PJRT runtime (kept for artifact parity runs).
@@ -383,6 +576,105 @@ mod tests {
             // Echo + strip_specials leaves exactly the content token.
             assert_eq!(toks, vec![10 + i as i32]);
             assert!(lat >= 0.0);
+        }
+    }
+
+    /// Head-of-line regression: with fewer queued requests than batch
+    /// capacity and the sender still alive, the loop must flush a
+    /// partial batch instead of waiting indefinitely for a full one.
+    /// (If `next_batch` ever regresses to blocking until `capacity`
+    /// requests arrive, this test hangs: the sender is never dropped.)
+    #[test]
+    fn partial_batch_flushes_without_disconnect() {
+        let backend = Echo::new(4, 6, true);
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut receivers = Vec::new();
+        for i in 0..2 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: vec![1, 20 + i, 2],
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .unwrap();
+            receivers.push(rrx);
+        }
+        // NOTE: tx intentionally kept alive — no disconnect to fall back on.
+        let stats = serve_loop(&backend, &rx, &d, 2).unwrap();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.received, 2, "requests in == responses out");
+        assert_eq!(stats.batches, 1, "both queued requests flush in one partial batch");
+        assert!((stats.occupancy - 0.5).abs() < 1e-12, "2 of 4 slots occupied");
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let (toks, _) = rrx.recv().unwrap();
+            assert_eq!(toks, vec![20 + i as i32]);
+        }
+        drop(tx);
+    }
+
+    /// Minimal slot engine for continuous-loop unit tests: admission
+    /// stores the framed row, one step completes it, output echoes it.
+    struct EchoSlots {
+        seq: usize,
+    }
+
+    struct EchoSlot {
+        row: Vec<i32>,
+        stepped: bool,
+    }
+
+    impl crate::runtime::SlotEngine for EchoSlots {
+        type Slot = EchoSlot;
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&self, src_row: &[i32]) -> Result<EchoSlot> {
+            assert_eq!(src_row.len(), self.seq, "framed admission");
+            Ok(EchoSlot { row: src_row.to_vec(), stepped: false })
+        }
+        fn step(&self, slots: &mut [&mut EchoSlot]) -> Result<()> {
+            for s in slots.iter_mut() {
+                s.stepped = true;
+            }
+            Ok(())
+        }
+        fn slot_complete(&self, slot: &EchoSlot) -> bool {
+            slot.stepped
+        }
+        fn slot_output(&self, slot: &EchoSlot) -> Vec<i32> {
+            slot.row.clone()
+        }
+    }
+
+    #[test]
+    fn continuous_loop_serves_and_balances() {
+        let engine = EchoSlots { seq: 6 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut receivers = Vec::new();
+        for i in 0..5 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                tokens: vec![1, 30 + i, 2],
+                t_arrival: Instant::now(),
+                respond: rtx,
+            })
+            .unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 5, 3).unwrap();
+        assert_eq!(stats.served, 5);
+        assert_eq!(stats.received, 5, "requests in == responses out");
+        assert!(stats.batches >= 2, "5 one-step requests need >= 2 decode steps at capacity 3");
+        assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
+        assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
+        assert_eq!(stats.latency.count(), 5);
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let (toks, lat) = rrx.recv().unwrap();
+            assert_eq!(toks, vec![30 + i as i32], "responses route to their requester, FIFO");
+            assert!(lat >= 0.0 && lat.is_finite());
         }
     }
 

@@ -10,10 +10,15 @@
 //!   low-rank and bit-packed quantized execution on [`tensor::Matrix`])
 //!   and the optional PJRT session (`pjrt` feature) that executes the
 //!   AOT-compiled artifacts. The native engine decodes under a
-//!   [`runtime::DecodePolicy`]: KV-cached single-token steps by default
-//!   (per-layer `DecodeState` K/V caches + single-row kernels, a
-//!   `seq_len`-factor fewer decoder MACs per translate), with the AOT
-//!   graph's full-buffer replay kept as the bit-identical reference.
+//!   [`runtime::DecodePolicy`]: KV-cached **slot-addressed** single-token
+//!   steps by default — every sequence owns a [`runtime::SeqSlot`]
+//!   (per-layer K/V slabs + cross context + step counter) that is
+//!   admitted, stepped in mixed-age batches and retired independently
+//!   ([`runtime::SlotEngine`]), a `seq_len`-factor fewer decoder MACs
+//!   per translate — with the AOT graph's full-buffer replay kept as the
+//!   bit-identical reference. Slot independence feeds the serving layer:
+//!   `coordinator::scheduler::ContinuousBatcher` retires/admits between
+//!   decode steps (continuous batching) with bit-identical output.
 //! * **Layer 4 ([`qkernel`])** — sub-8-bit execution kernels: bit-packed
 //!   [`qkernel::QMatrix`] storage (2..=8-bit grids in `u32` words,
 //!   per-vector dequant scales, an `i8` fast path at W8) plus the

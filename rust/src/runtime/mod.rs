@@ -46,7 +46,7 @@ mod session;
 
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use native::NativeBackend;
+pub use native::{NativeBackend, SeqSlot};
 #[cfg(feature = "pjrt")]
 pub use session::{ArgBank, PjrtBackend, TranslateSession};
 
@@ -102,12 +102,15 @@ impl Mode {
 ///   per translate. Kept as the reference the cached path is verified
 ///   against.
 /// * [`Cached`](DecodePolicy::Cached) — KV-cached incremental decode
-///   (the default): a per-translate `DecodeState` holds each decoder
-///   layer's self-attention K/V rows (plus the already-hoisted cross
-///   K/V), and every step embeds one position, runs the decoder blocks
-///   on a `[b x D]` activation through single-row kernels, and appends
-///   the new K/V rows — decoder linear MACs drop by a factor of
-///   `seq_len` (see `NativeBackend::linear_macs_for`).
+///   (the default): every sequence owns a private `SeqSlot` (per-layer
+///   self-attention K/V slabs, its encoder memory's cross K/V, token
+///   buffer and step counter), and every step embeds one position per
+///   live slot, runs the decoder blocks on a `[b x D]` activation
+///   through single-row kernels, and appends each slot's new K/V row —
+///   decoder linear MACs drop by a factor of `seq_len` (see
+///   `NativeBackend::linear_macs_for`). Slots are independent, so the
+///   same step kernel serves both a fixed `translate` batch and the
+///   continuous batcher's mixed-age batches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DecodePolicy {
     /// Full-buffer replay each step (the AOT graph's reference loop).
@@ -165,6 +168,54 @@ pub trait TranslateBackend {
     /// (or any positive multiple of `seq_len()` when `fixed_shape()` is
     /// false).
     fn translate(&self, src_tokens: &[i32]) -> anyhow::Result<Vec<i32>>;
+
+    /// Translate many independent single-sequence requests (each one
+    /// `seq_len()` framed tokens), returning one output buffer per
+    /// request. The default decodes each request alone — the sequential
+    /// reference the continuous batcher's bit-parity suite pins against.
+    /// Backends with a slot API reach higher throughput by scheduling the
+    /// same requests through `coordinator::scheduler::ContinuousBatcher`.
+    fn translate_stream(&self, rows: &[Vec<i32>]) -> anyhow::Result<Vec<Vec<i32>>> {
+        rows.iter().map(|r| self.translate(r)).collect()
+    }
+}
+
+/// Slot-addressed decode API: the contract continuous batching is built
+/// on. An engine that can **admit** a request into a private KV slot,
+/// **step** an arbitrary mixed-age set of live slots by one position,
+/// and report when a slot's lifecycle is **complete** can be driven by
+/// `coordinator::scheduler::ContinuousBatcher` — between decode steps
+/// the batcher retires finished slots, admits queued requests into the
+/// freed capacity, and steps whatever is live.
+///
+/// Implementations must keep slots independent: stepping a slot inside
+/// any batch must be bit-identical to stepping it alone (the native
+/// engine's per-row kernels guarantee this; see
+/// [`native::NativeBackend::step_slots`]). The associated `Slot` type
+/// keeps the scheduler generic, so its admission/retirement logic is
+/// unit-tested against scripted mock engines with no model at all.
+pub trait SlotEngine {
+    /// Per-sequence decode state owned by the engine.
+    type Slot;
+
+    /// Fixed token-buffer length of every slot.
+    fn slot_seq_len(&self) -> usize;
+
+    /// Run one request's encoder pass and return a fresh slot positioned
+    /// at the BOS step. `src_row` is one `slot_seq_len()`-token framed
+    /// source row.
+    fn admit(&self, src_row: &[i32]) -> anyhow::Result<Self::Slot>;
+
+    /// Advance every given live slot by one decode step (slots may be of
+    /// different ages). An empty set is a no-op.
+    fn step(&self, slots: &mut [&mut Self::Slot]) -> anyhow::Result<()>;
+
+    /// Whether the slot's lifecycle is over (EOS emitted or buffer full)
+    /// and it can be retired/reused.
+    fn slot_complete(&self, slot: &Self::Slot) -> bool;
+
+    /// The slot's `slot_seq_len()`-token output buffer.
+    fn slot_output(&self, slot: &Self::Slot) -> Vec<i32>;
 }
 
 #[cfg(test)]

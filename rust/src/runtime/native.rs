@@ -15,18 +15,25 @@
 //! * per-linear activation fake-quant (`clip(round(x/s), -lv, lv) * s`)
 //!   replaying the calibrated scales from the manifest;
 //! * a greedy decode loop whose per-step cost depends on the selected
-//!   [`DecodePolicy`]: the **cached** default holds per-layer
-//!   self-attention K/V rows in a [`DecodeState`] and runs each step on
-//!   a single `[b x D]` activation through single-row kernels
-//!   ([`Matrix::vecmat_par`], [`crate::qkernel::PackedLinear::matvec`]),
-//!   while the **replay** reference re-runs the causally masked decoder
-//!   over the whole fixed-length buffer — token-for-token the
-//!   `translate` loop the HLO artifacts encode. Both emit PAD once a row
-//!   has produced EOS (the cached path tracks this in per-row
-//!   `DecodeState` flags instead of rescanning the buffer) and are
+//!   [`DecodePolicy`]: the **cached** default runs a **slot-addressed**
+//!   lifecycle — every sequence owns an independent [`SeqSlot`] (its
+//!   per-layer self-attention K/V slabs, cross-attention context, token
+//!   buffer, `done` flag and step counter) that is admitted
+//!   ([`NativeBackend::admit_slot`] or a batched encode), stepped in
+//!   mixed-age batches ([`NativeBackend::step_slots`], a single
+//!   `[b x D]` activation through single-row kernels:
+//!   [`Matrix::vecmat_par`], [`crate::qkernel::PackedLinear::matvec`])
+//!   and retired on EOS — while the **replay** reference re-runs the
+//!   causally masked decoder over the whole fixed-length buffer —
+//!   token-for-token the `translate` loop the HLO artifacts encode. Both
+//!   emit PAD once a row has produced EOS (the cached path tracks this
+//!   in the slot's flag instead of rescanning the buffer) and are
 //!   **bit-identical**: every per-element accumulation order is shared,
 //!   masked attention scores underflow to exactly 0 in both, and a
-//!   position's hidden state depends only on positions `<=` it.
+//!   position's hidden state depends only on positions `<=` it. Slot
+//!   independence is what the continuous batcher
+//!   (`coordinator::scheduler`) builds on: admitting or retiring one
+//!   sequence never changes another sequence's bits.
 //!
 //! Every compressed linear executes in one of three forms:
 //!
@@ -63,7 +70,7 @@ use crate::qkernel::PackedLinear;
 use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
-use super::{DecodePolicy, Mode, TranslateBackend};
+use super::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
 
 /// Additive mask value for disallowed attention positions (the JAX graph's
 /// `_NEG`); after the stable softmax shift these underflow to exactly 0.
@@ -126,45 +133,52 @@ struct DecLayer {
     ff2: usize,
 }
 
-/// Per-translate state of the KV-cached incremental decode
-/// ([`DecodePolicy::Cached`]).
+/// One sequence's private share of the KV-cached incremental decode
+/// ([`DecodePolicy::Cached`]): an independent **KV slot** that can be
+/// admitted, stepped, retired and reused without touching any other
+/// sequence.
 ///
-/// Holds, for each decoder layer, the self-attention K and V rows of
-/// every already-decoded position (`[b*seq_len x D]` capacity, rows
-/// `bi*seq_len .. bi*seq_len+len` valid per batch row `bi`), plus the
-/// bookkeeping the replay loop recomputes from the token buffer every
-/// step: per-position target-key validity (`token != PAD`, the
-/// self-attention gate) and per-row EOS flags (a finished row emits PAD
-/// without paying for its logits). The cross-attention K/V of the
-/// encoder memory is *not* here — it is constant across the decode and
-/// already hoisted to once per translate ([`NativeBackend::cross_kv`]).
-pub struct DecodeState {
-    /// Per-decoder-layer self-attention key cache.
+/// A slot owns everything a single decode lifecycle needs:
+///
+/// * per-decoder-layer self-attention K and V slabs (`[seq_len x D]`,
+///   rows `0..len` valid — appended one row per step);
+/// * the cross-attention K/V of *this sequence's* encoder memory (also
+///   per decoder layer, constant from admission on) plus the source-key
+///   PAD mask — spliced in at [`NativeBackend::admit_slot`] so a freshly
+///   admitted sequence can join a batch of older ones mid-decode;
+/// * the decoded token buffer (BOS-framed, PAD-initialized), the
+///   per-position target-key validity flags (`token != PAD`, the
+///   self-attention gate) and the EOS flag (a finished sequence emits
+///   PAD without paying for its logits);
+/// * the step counter `len` — slots of different ages coexist in one
+///   [`NativeBackend::step_slots`] batch, each attending over its own
+///   `len + 1`-key prefix.
+///
+/// Because every per-row kernel on the step path is row-independent with
+/// a fixed per-element accumulation order, stepping a slot inside any
+/// mixed-age batch is bit-identical to stepping it alone — the invariant
+/// the continuous batcher's parity tests pin.
+pub struct SeqSlot {
+    /// Per-decoder-layer self-attention key slab `[seq_len x D]`.
     self_k: Vec<Matrix>,
-    /// Per-decoder-layer self-attention value cache.
+    /// Per-decoder-layer self-attention value slab `[seq_len x D]`.
     self_v: Vec<Matrix>,
-    /// `token != PAD` per cached position (`b * seq_len`, filled to `len`).
+    /// Per-decoder-layer cross-attention (K, V) of the encoder memory.
+    cross: Vec<(Matrix, Matrix)>,
+    /// Source-key validity (`token != PAD`) of the encoder memory.
+    src_ok: Vec<bool>,
+    /// `token != PAD` per decoded position (filled to `len`).
     tgt_ok: Vec<bool>,
-    /// Per-row "has emitted EOS" flags — replaces the replay loop's
-    /// buffer rescan.
-    done: Vec<bool>,
+    /// Decoded token buffer `[seq_len]`: BOS-framed, PAD-initialized,
+    /// position `i + 1` written by the step taken at `len == i`.
+    buf: Vec<i32>,
+    /// Whether the sequence has emitted EOS.
+    done: bool,
     /// Positions decoded so far (the next step appends row `len`).
     len: usize,
 }
 
-impl DecodeState {
-    /// Empty state for `b` batch rows of a model with `n_dec` decoder
-    /// layers, `seq_len` positions and width `d_model`.
-    pub fn new(n_dec: usize, b: usize, seq_len: usize, d_model: usize) -> DecodeState {
-        DecodeState {
-            self_k: (0..n_dec).map(|_| Matrix::zeros(b * seq_len, d_model)).collect(),
-            self_v: (0..n_dec).map(|_| Matrix::zeros(b * seq_len, d_model)).collect(),
-            tgt_ok: vec![false; b * seq_len],
-            done: vec![false; b],
-            len: 0,
-        }
-    }
-
+impl SeqSlot {
     /// Positions decoded so far.
     pub fn len(&self) -> usize {
         self.len
@@ -174,15 +188,63 @@ impl DecodeState {
         self.len == 0
     }
 
-    /// Per-row EOS flags (true once the row has emitted EOS).
-    pub fn done(&self) -> &[bool] {
-        &self.done
+    /// Whether the sequence has emitted EOS.
+    pub fn is_done(&self) -> bool {
+        self.done
     }
 
-    /// Whether every batch row has emitted EOS — the remaining buffer
-    /// positions can only be PAD, so the decode loop may stop early.
-    pub fn all_done(&self) -> bool {
-        self.done.iter().all(|&d| d)
+    /// Whether the lifecycle is over: EOS emitted or the fixed buffer is
+    /// full. A complete slot's remaining positions are PAD by
+    /// construction, so retiring it early changes no output bit.
+    pub fn complete(&self) -> bool {
+        self.done || self.len + 1 >= self.buf.len()
+    }
+
+    /// The decoded token buffer (BOS-framed, PAD-padded, `seq_len` long).
+    pub fn buffer(&self) -> &[i32] {
+        &self.buf
+    }
+}
+
+/// The batch-lifecycle view of the KV-cached decode: a set of
+/// [`SeqSlot`]s stepped together. After the slot refactor this is a thin
+/// container — all per-sequence state lives in the slots themselves, so
+/// `translate` batches and the continuous batcher share one lifecycle
+/// (admit → step → retire) instead of the old monolithic `[b*s x D]`
+/// slabs indexed by batch row.
+#[derive(Default)]
+pub struct DecodeState {
+    slots: Vec<SeqSlot>,
+}
+
+impl DecodeState {
+    pub fn new() -> DecodeState {
+        DecodeState::default()
+    }
+
+    /// Add an admitted slot to the batch.
+    pub fn push(&mut self, slot: SeqSlot) {
+        self.slots.push(slot);
+    }
+
+    /// Slots in admission order.
+    pub fn slots(&self) -> &[SeqSlot] {
+        &self.slots
+    }
+
+    /// Number of slots in the batch.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Whether every slot's lifecycle is over (EOS emitted or buffer
+    /// full) — the decode loop may stop early.
+    pub fn all_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.complete())
     }
 }
 
@@ -648,55 +710,58 @@ impl NativeBackend {
         out
     }
 
-    /// Single-query attention over the first `n_keys` rows of a K/V
-    /// cache: the step-wise counterpart of [`Self::attend`] (`tq = 1`,
-    /// keys truncated to the filled prefix). `q` is `[b x D]`; `k`/`v`
-    /// are `[b*cap x D]` caches with `cap` rows per batch element.
+    /// Single-query attention of one batch row over the first `n_keys`
+    /// rows of a per-sequence K/V slab: the step-wise, slot-addressed
+    /// counterpart of [`Self::attend`] (`tq = 1`, keys truncated to the
+    /// filled prefix). `q_row`/`out` are one `[D]` row; `k`/`v` are a
+    /// slot's `[seq_len x D]` slabs. Each row carrying its own `n_keys`
+    /// is what lets sequences of different ages share one step batch.
     ///
-    /// Bit-identical to [`Self::attend`] over a full `cap`-key score row
-    /// whose keys `>= n_keys` are masked: masked scores underflow to
-    /// exactly 0 after the stable softmax shift and contribute `+0.0` to
-    /// the normalizer (an exact no-op on the non-negative partial sums),
-    /// so skipping their computation entirely changes no bit.
+    /// Bit-identical to [`Self::attend`] over a full score row whose keys
+    /// `>= n_keys` are masked: masked scores underflow to exactly 0 after
+    /// the stable softmax shift and contribute `+0.0` to the normalizer
+    /// (an exact no-op on the non-negative partial sums), so skipping
+    /// their computation entirely changes no bit.
+    ///
+    /// `scratch` is a caller-owned score buffer, resized (not
+    /// reallocated, once warm) to `n_keys` and fully overwritten before
+    /// use — one allocation per step batch instead of one per row.
     #[allow(clippy::too_many_arguments)] // mirrors attend's one call-site geometry
-    fn attend_step(
+    fn attend_slot_row(
         &self,
-        q: &Matrix,
+        q_row: &[f32],
         k: &Matrix,
         v: &Matrix,
-        b: usize,
-        cap: usize,
         n_keys: usize,
-        allowed: impl Fn(usize, usize) -> bool,
-    ) -> Matrix {
-        let d = self.dims.d_model;
+        allowed: impl Fn(usize) -> bool,
+        scratch: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
         let hd = self.head_dim;
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut out = Matrix::zeros(b, d);
-        let mut scores = vec![0.0f32; n_keys];
-        for bi in 0..b {
-            for h in 0..self.dims.n_heads {
-                let lo = h * hd;
-                let hi = lo + hd;
-                let q_slice = &q.row(bi)[lo..hi];
-                for (kj, s) in scores.iter_mut().enumerate() {
-                    let raw = dot(q_slice, &k.row(bi * cap + kj)[lo..hi]) * scale;
-                    *s = if allowed(bi, kj) { raw } else { raw + NEG };
+        scratch.clear();
+        scratch.resize(n_keys, 0.0);
+        let scores = scratch.as_mut_slice();
+        for h in 0..self.dims.n_heads {
+            let lo = h * hd;
+            let hi = lo + hd;
+            let q_slice = &q_row[lo..hi];
+            for (kj, s) in scores.iter_mut().enumerate() {
+                let raw = dot(q_slice, &k.row(kj)[lo..hi]) * scale;
+                *s = if allowed(kj) { raw } else { raw + NEG };
+            }
+            softmax_in_place(scores);
+            let o_slice = &mut out[lo..hi];
+            for (kj, &w) in scores.iter().enumerate() {
+                if w == 0.0 {
+                    continue; // masked keys underflow to exactly 0
                 }
-                softmax_in_place(&mut scores);
-                let o_slice = &mut out.row_mut(bi)[lo..hi];
-                for (kj, &w) in scores.iter().enumerate() {
-                    if w == 0.0 {
-                        continue; // masked keys underflow to exactly 0
-                    }
-                    let v_slice = &v.row(bi * cap + kj)[lo..hi];
-                    for (o, &vv) in o_slice.iter_mut().zip(v_slice) {
-                        *o += w * vv;
-                    }
+                let v_slice = &v.row(kj)[lo..hi];
+                for (o, &vv) in o_slice.iter_mut().zip(v_slice) {
+                    *o += w * vv;
                 }
             }
         }
-        out
     }
 
     /// Token embedding + positional encoding: `[b*s x D]`.
@@ -782,43 +847,88 @@ impl NativeBackend {
         Ok(layer_norm(&x, &self.dec_ln))
     }
 
-    /// One KV-cached decoder step: embed position `state.len()` of every
-    /// batch row (`tokens[r]` is row `r`'s token there), run the decoder
-    /// blocks on the `[b x D]` activation, append the new self-attention
-    /// K/V rows to `state`, and return the final hidden rows `[b x D]`
-    /// (pre output-head).
+    /// Admit one request: run its encoder pass and return a fresh
+    /// [`SeqSlot`] positioned at the BOS step, its cross-attention
+    /// context spliced in so it can join a live batch of older slots.
     ///
-    /// Bit-identical to row `state.len()` of [`Self::decode_hidden`] over
-    /// the same buffer: a position's hidden state depends only on
-    /// positions `<=` it (causal masking — masked attention weights are
-    /// exactly 0 and skipped), every linear/layer-norm/FFN is
-    /// row-independent with a shared per-element accumulation order, and
-    /// the cached K/V rows equal the ones replay recomputes each step.
-    pub fn decode_step(
-        &self,
-        state: &mut DecodeState,
-        tokens: &[i32],
-        cross: &[(Matrix, Matrix)],
-        src_ok: &[bool],
-        b: usize,
-    ) -> Result<Matrix> {
+    /// `src_row` is a single BOS-framed, PAD-padded `seq_len`-token
+    /// source row. Every encoder op is row-independent with a fixed
+    /// per-element accumulation order, so the slot built here is
+    /// bit-identical to the corresponding row of a batched encode — the
+    /// continuous batcher's admissions reproduce `translate` exactly.
+    pub fn admit_slot(&self, src_row: &[i32]) -> Result<SeqSlot> {
+        let s = self.dims.seq_len;
+        ensure!(
+            src_row.len() == s,
+            "admit_slot expects one seq_len={s} source row, got {} tokens",
+            src_row.len()
+        );
+        ensure!(
+            self.dims.bos_id != self.dims.pad_id,
+            "BOS aliased to PAD degrades the reference decode to uniform attention \
+             over the full buffer; only the replay loop reproduces that convention"
+        );
+        let (memory, src_ok) = self.encode(src_row, 1)?;
+        let cross = self.cross_kv(&memory);
+        Ok(self.slot_from_parts(cross, src_ok))
+    }
+
+    /// Assemble a BOS-positioned slot from an encoder pass's per-layer
+    /// cross K/V (`[seq_len x D]` each) and source-key mask.
+    fn slot_from_parts(&self, cross: Vec<(Matrix, Matrix)>, src_ok: Vec<bool>) -> SeqSlot {
         let s = self.dims.seq_len;
         let d = self.dims.d_model;
-        let i = state.len;
-        ensure!(i < s, "decode_step past the fixed {s}-token buffer");
-        ensure!(tokens.len() == b, "one token per batch row: {} vs {b}", tokens.len());
-        ensure!(
-            state.done.len() == b && state.tgt_ok.len() == b * s,
-            "DecodeState sized for {} rows, step called with {b}",
-            state.done.len()
-        );
+        let n_dec = self.dec.len();
+        let mut buf = vec![self.dims.pad_id; s];
+        buf[0] = self.dims.bos_id;
+        SeqSlot {
+            self_k: (0..n_dec).map(|_| Matrix::zeros(s, d)).collect(),
+            self_v: (0..n_dec).map(|_| Matrix::zeros(s, d)).collect(),
+            cross,
+            src_ok,
+            tgt_ok: vec![false; s],
+            buf,
+            // Degenerate manifests may alias EOS with BOS or PAD; the
+            // replay rescan would see every row as immediately finished
+            // in its BOS-framed, PAD-filled initial buffer.
+            done: self.dims.bos_id == self.dims.eos_id || self.dims.pad_id == self.dims.eos_id,
+            len: 0,
+        }
+    }
 
-        // Embed position i of every row (token + positional encoding).
+    /// One KV-cached decoder step over a **mixed-age** batch of live
+    /// slots: embed each slot's current token at *its own* position, run
+    /// the decoder blocks on the `[b x D]` activation, append each slot's
+    /// new self-attention K/V row, pick the next token (greedy argmax, or
+    /// PAD for finished slots) and advance each step counter.
+    ///
+    /// Bit-identical to row `slot.len()` of [`Self::decode_hidden`] over
+    /// the same buffer — for every slot independently, whatever batch it
+    /// shares the step with: a position's hidden state depends only on
+    /// positions `<=` it (causal masking — masked attention weights are
+    /// exactly 0 and skipped), every linear/layer-norm/FFN is
+    /// row-independent with a shared per-element accumulation order, each
+    /// row attends over its own slot's caches, and the cached K/V rows
+    /// equal the ones replay recomputes each step. This independence is
+    /// the architectural unlock for continuous batching: admitting or
+    /// retiring a slot never perturbs another slot's bits.
+    pub fn step_slots(&self, slots: &mut [&mut SeqSlot]) -> Result<()> {
+        let b = slots.len();
+        if b == 0 {
+            return Ok(());
+        }
+        let s = self.dims.seq_len;
+        let d = self.dims.d_model;
+
+        // Embed each slot's current token at its own position.
         let mut x = Matrix::zeros(b, d);
-        for (r, &t) in tokens.iter().enumerate() {
+        for (r, slot) in slots.iter_mut().enumerate() {
+            let i = slot.len;
+            ensure!(i + 1 < s, "slot {r} stepped past its fixed {s}-token buffer");
+            let t = slot.buf[i];
             ensure!(
                 t >= 0 && (t as usize) < self.dims.vocab,
-                "token {t} in decode row {r} outside vocab 0..{}",
+                "token {t} in slot {r} outside vocab 0..{}",
                 self.dims.vocab
             );
             let e = self.tgt_emb.row(t as usize);
@@ -826,40 +936,76 @@ impl NativeBackend {
             for ((o, &ec), &pc) in x.row_mut(r).iter_mut().zip(e).zip(p) {
                 *o = ec + pc;
             }
-            state.tgt_ok[r * s + i] = t != self.dims.pad_id;
+            slot.tgt_ok[i] = t != self.dims.pad_id;
         }
 
-        for (li, (layer, (ck, cv))) in self.dec.iter().zip(cross).enumerate() {
+        let mut scores = Vec::with_capacity(s);
+        for (li, layer) in self.dec.iter().enumerate() {
             let h = layer_norm(&x, &layer.ln1);
             let q = self.linear_step(layer.self_q, &h);
             let k_new = self.linear_step(layer.self_k, &h);
             let v_new = self.linear_step(layer.self_v, &h);
-            for r in 0..b {
-                state.self_k[li].row_mut(r * s + i).copy_from_slice(k_new.row(r));
-                state.self_v[li].row_mut(r * s + i).copy_from_slice(v_new.row(r));
+            for (r, slot) in slots.iter_mut().enumerate() {
+                let i = slot.len;
+                slot.self_k[li].row_mut(i).copy_from_slice(k_new.row(r));
+                slot.self_v[li].row_mut(i).copy_from_slice(v_new.row(r));
             }
-            let tgt_ok = &state.tgt_ok;
-            let ctx = self.attend_step(
-                &q,
-                &state.self_k[li],
-                &state.self_v[li],
-                b,
-                s,
-                i + 1,
-                |bi, kj| tgt_ok[bi * s + kj],
-            );
+            let mut ctx = Matrix::zeros(b, d);
+            for (r, slot) in slots.iter().enumerate() {
+                let sl: &SeqSlot = slot;
+                self.attend_slot_row(
+                    q.row(r),
+                    &sl.self_k[li],
+                    &sl.self_v[li],
+                    sl.len + 1,
+                    |kj| sl.tgt_ok[kj],
+                    &mut scores,
+                    ctx.row_mut(r),
+                );
+            }
             x = x.add(&self.linear_step(layer.self_o, &ctx));
 
             let h = layer_norm(&x, &layer.ln2);
             let q = self.linear_step(layer.cross_q, &h);
-            let ctx = self.attend_step(&q, ck, cv, b, s, s, |bi, kj| src_ok[bi * s + kj]);
+            let mut ctx = Matrix::zeros(b, d);
+            for (r, slot) in slots.iter().enumerate() {
+                let sl: &SeqSlot = slot;
+                let (ck, cv) = &sl.cross[li];
+                self.attend_slot_row(
+                    q.row(r),
+                    ck,
+                    cv,
+                    s,
+                    |kj| sl.src_ok[kj],
+                    &mut scores,
+                    ctx.row_mut(r),
+                );
+            }
             x = x.add(&self.linear_step(layer.cross_o, &ctx));
 
             let h = layer_norm(&x, &layer.ln3);
             x = x.add(&self.ffn_step(layer.ff1, layer.ff2, &h));
         }
-        state.len = i + 1;
-        Ok(layer_norm(&x, &self.dec_ln))
+        let hidden = layer_norm(&x, &self.dec_ln);
+
+        // Greedy pick + append: a finished slot emits PAD without paying
+        // for its logits (same order as the batched reference — the done
+        // flag is consulted before this step's EOS can set it).
+        for (r, slot) in slots.iter_mut().enumerate() {
+            let i = slot.len;
+            let next = if slot.done {
+                self.dims.pad_id
+            } else {
+                let logits = self.tgt_emb.matvec(hidden.row(r));
+                argmax(&logits) as i32
+            };
+            if next == self.dims.eos_id {
+                slot.done = true;
+            }
+            slot.buf[i + 1] = next;
+            slot.len = i + 1;
+        }
+        Ok(())
     }
 
     /// Teacher-forced logits `[b*s x vocab]` for `tgt_in` given `src` —
@@ -923,6 +1069,34 @@ impl TranslateBackend for NativeBackend {
     }
 }
 
+/// The slot-addressed decode contract the continuous batcher drives:
+/// thin delegation onto the inherent slot API. Slot independence (the
+/// bit-parity requirement the trait documents) is pinned by the
+/// continuous-vs-sequential proptest and the serving soak test.
+impl SlotEngine for NativeBackend {
+    type Slot = SeqSlot;
+
+    fn slot_seq_len(&self) -> usize {
+        self.dims.seq_len
+    }
+
+    fn admit(&self, src_row: &[i32]) -> Result<SeqSlot> {
+        self.admit_slot(src_row)
+    }
+
+    fn step(&self, slots: &mut [&mut SeqSlot]) -> Result<()> {
+        self.step_slots(slots)
+    }
+
+    fn slot_complete(&self, slot: &SeqSlot) -> bool {
+        slot.complete()
+    }
+
+    fn slot_output(&self, slot: &SeqSlot) -> Vec<i32> {
+        slot.buffer().to_vec()
+    }
+}
+
 impl NativeBackend {
     /// [`DecodePolicy::Replay`]: the AOT graph's loop — the decoder
     /// re-runs over the whole fixed-length buffer each step, rescanning
@@ -953,12 +1127,15 @@ impl NativeBackend {
         Ok(buf)
     }
 
-    /// [`DecodePolicy::Cached`]: KV-cached incremental decode — one
-    /// [`Self::decode_step`] per position, logits only for rows that have
-    /// not finished (tracked in [`DecodeState`] flags instead of the
-    /// replay loop's buffer rescan), early exit once every row has. The
-    /// early exit is exact: a finished row only ever appends PAD, and the
-    /// buffer is PAD-initialized.
+    /// [`DecodePolicy::Cached`]: KV-cached incremental decode over
+    /// per-sequence [`SeqSlot`]s — one batched encoder pass (bit-identical
+    /// per row to encoding each row alone), one slot per batch row, then
+    /// [`Self::step_slots`] over whichever slots are still live until all
+    /// lifecycles complete. Retiring a finished slot from the step batch
+    /// is exact: a finished slot only ever appends PAD, and the buffer is
+    /// PAD-initialized. This is the same admit → step → retire lifecycle
+    /// the continuous batcher drives — `translate` is simply the variant
+    /// where every sequence is admitted at step 0.
     fn translate_cached(&self, src_tokens: &[i32]) -> Result<Vec<i32>> {
         if self.dims.bos_id == self.dims.pad_id {
             // With BOS aliased to PAD every self-attention key is masked
@@ -971,40 +1148,35 @@ impl NativeBackend {
         let s = self.dims.seq_len;
         let (memory, src_ok) = self.encode(src_tokens, b)?;
         let cross = self.cross_kv(&memory);
-        let mut buf = vec![self.dims.pad_id; b * s];
-        let mut state = DecodeState::new(self.dec.len(), b, s, self.dims.d_model);
+        let mut state = DecodeState::new();
         for r in 0..b {
-            buf[r * s] = self.dims.bos_id;
-            // Degenerate manifests may alias EOS with BOS or PAD; the
-            // replay rescan would see every row as immediately finished
-            // in its BOS-framed, PAD-filled initial buffer.
-            state.done[r] =
-                self.dims.bos_id == self.dims.eos_id || self.dims.pad_id == self.dims.eos_id;
+            // Splice row r's share out of the batched encoder products:
+            // the same `[s x D]` cross K/V and PAD mask `admit_slot`
+            // computes for a lone request.
+            let row_cross: Vec<(Matrix, Matrix)> = cross
+                .iter()
+                .map(|(ck, cv)| (row_block(ck, r * s, s), row_block(cv, r * s, s)))
+                .collect();
+            state.push(self.slot_from_parts(row_cross, src_ok[r * s..(r + 1) * s].to_vec()));
         }
-        let mut tokens = vec![0i32; b];
-        for i in 0..s - 1 {
-            for r in 0..b {
-                tokens[r] = buf[r * s + i];
-            }
-            let hidden = self.decode_step(&mut state, &tokens, &cross, &src_ok, b)?;
-            for r in 0..b {
-                let next = if state.done[r] {
-                    self.dims.pad_id
-                } else {
-                    let logits = self.tgt_emb.matvec(hidden.row(r));
-                    argmax(&logits) as i32
-                };
-                if next == self.dims.eos_id {
-                    state.done[r] = true;
-                }
-                buf[r * s + i + 1] = next;
-            }
-            if state.all_done() {
-                break;
-            }
+        while !state.all_complete() {
+            let mut live: Vec<&mut SeqSlot> =
+                state.slots.iter_mut().filter(|sl| !sl.complete()).collect();
+            self.step_slots(&mut live)?;
+        }
+        let mut buf = vec![self.dims.pad_id; b * s];
+        for (r, slot) in state.slots().iter().enumerate() {
+            buf[r * s..(r + 1) * s].copy_from_slice(slot.buffer());
         }
         Ok(buf)
     }
+}
+
+/// Copy `rows` rows of `m` starting at row `r0` into a fresh matrix
+/// (a batch row's private share of a batched `[b*s x D]` product).
+fn row_block(m: &Matrix, r0: usize, rows: usize) -> Matrix {
+    let d = m.cols();
+    Matrix::from_vec(rows, d, m.data()[r0 * d..(r0 + rows) * d].to_vec())
 }
 
 /// Row-wise layer norm (eps 1e-5, population variance) with gain/bias.
@@ -1082,22 +1254,55 @@ mod tests {
         assert_eq!(argmax(&[2.0, 1.0]), 0);
     }
 
+    /// A hand-built slot (no model needed): 2 decoder layers, seq 5, D 4.
+    fn test_slot(s: usize, d: usize) -> SeqSlot {
+        SeqSlot {
+            self_k: (0..2).map(|_| Matrix::zeros(s, d)).collect(),
+            self_v: (0..2).map(|_| Matrix::zeros(s, d)).collect(),
+            cross: (0..2).map(|_| (Matrix::zeros(s, d), Matrix::zeros(s, d))).collect(),
+            src_ok: vec![true; s],
+            tgt_ok: vec![false; s],
+            buf: vec![0; s],
+            done: false,
+            len: 0,
+        }
+    }
+
     #[test]
-    fn decode_state_bookkeeping() {
-        let mut st = DecodeState::new(2, 3, 5, 4);
+    fn seq_slot_lifecycle_bookkeeping() {
+        let mut slot = test_slot(5, 4);
+        assert!(slot.is_empty());
+        assert_eq!(slot.len(), 0);
+        assert!(!slot.is_done() && !slot.complete());
+        assert_eq!(slot.self_k.len(), 2);
+        assert_eq!(slot.self_k[0].shape(), (5, 4));
+        assert_eq!(slot.buffer().len(), 5);
+        // Each slot ages independently of any batch it shares a step with.
+        slot.len = 3;
+        assert!(!slot.complete(), "positions remain in the buffer");
+        slot.len = 4;
+        assert!(slot.complete(), "len + 1 == seq_len: buffer full");
+        let mut eos = test_slot(5, 4);
+        eos.done = true;
+        assert!(eos.complete(), "EOS retires a slot regardless of age");
+    }
+
+    #[test]
+    fn decode_state_tracks_slot_completion() {
+        let mut st = DecodeState::new();
         assert!(st.is_empty());
-        assert_eq!(st.len(), 0);
-        assert!(!st.all_done());
-        assert_eq!(st.self_k.len(), 2);
-        assert_eq!(st.self_k[0].shape(), (15, 4));
-        assert_eq!(st.self_v[1].shape(), (15, 4));
-        assert_eq!(st.tgt_ok.len(), 15);
-        st.done[0] = true;
-        st.done[2] = true;
-        assert!(!st.all_done(), "one row still live");
-        st.done[1] = true;
-        assert!(st.all_done());
-        assert_eq!(st.done(), &[true, true, true]);
+        assert!(st.all_complete(), "no slots: vacuously complete");
+        for _ in 0..3 {
+            st.push(test_slot(5, 4));
+        }
+        assert_eq!(st.len(), 3);
+        assert!(!st.all_complete());
+        st.slots[0].done = true;
+        st.slots[2].done = true;
+        assert!(!st.all_complete(), "one slot still live");
+        st.slots[1].len = 4;
+        assert!(st.all_complete(), "EOS or a full buffer both complete a lifecycle");
+        assert_eq!(st.slots().len(), 3);
     }
 
     #[test]

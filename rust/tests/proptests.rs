@@ -481,7 +481,7 @@ fn prop_qmatvec_i32_exact_and_close_to_f32() {
 /// reference — across all three execution modes, word lengths {4, 6, 8},
 /// worker counts {1, 4}, and random ragged batches (source rows of
 /// different lengths, so decode rows hit EOS/PAD at different steps and
-/// exercise the DecodeState done/tgt_ok bookkeeping).
+/// exercise the per-slot done/tgt_ok bookkeeping).
 #[test]
 fn prop_cached_decode_bit_identical_to_replay() {
     use std::collections::BTreeMap;
@@ -562,6 +562,137 @@ fn prop_cached_decode_bit_identical_to_replay() {
             cached.translate(&src).unwrap(),
             "mode {mode:?} W{wl} workers={workers} b={b}"
         );
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Continuous batching is bit-identical to per-request sequential decode:
+/// for random ragged arrival traces (1..=8 requests with staggered
+/// admission steps and per-row content lengths), word lengths {4, 6, 8},
+/// worker counts {1, 4} and all three execution modes, every buffer a
+/// [`ContinuousBatcher`] completes equals `translate` of that request
+/// alone via the existing cached path — whatever mixed-age batches the
+/// scheduler happened to form. This is the slot-independence contract the
+/// continuous serving path rests on.
+#[test]
+fn prop_continuous_decode_bit_identical_to_sequential() {
+    use std::collections::BTreeMap;
+
+    use itera_llm::coordinator::ContinuousBatcher;
+    use itera_llm::model::PairModel;
+    use itera_llm::runtime::{Mode, NativeBackend, TranslateBackend};
+    use itera_llm::testkit::tinymodel;
+
+    let (dir, manifest) =
+        tinymodel::generate_in_temp("prop_batcher", 0xBA7C4).expect("generate tiny model");
+    let model = PairModel::load(&manifest, tinymodel::PAIR).expect("load tiny model");
+    let dims = manifest.model.clone();
+    let s = dims.seq_len;
+
+    // One compressed bank per (word length, family), built once and
+    // shared across cases.
+    let wls = [4u32, 6, 8];
+    let mut dense_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    let mut factored_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    for &wl in &wls {
+        dense_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), wl)))
+                .collect(),
+        );
+        factored_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| {
+                    let r = (l.r_max / 2).max(1);
+                    (l.name.clone(), itera(model.linear(&l.name), r, wl).0)
+                })
+                .collect(),
+        );
+    }
+
+    check("continuous-vs-sequential", 10, |g: &mut Gen| {
+        let wi = g.usize_in(0, wls.len() - 1);
+        let wl = wls[wi];
+        let workers = *g.pick(&[1usize, 4]);
+        let mode = *g.pick(&[Mode::Dense, Mode::Svd, Mode::Quantized]);
+        let layers = match mode {
+            Mode::Dense => &dense_banks[wi],
+            Mode::Svd => &factored_banks[wi],
+            // The packed runtime executes either structure (and the
+            // cascade exercises both qkernel scale axes).
+            Mode::Quantized => {
+                if g.bool() {
+                    &dense_banks[wi]
+                } else {
+                    &factored_banks[wi]
+                }
+            }
+        };
+        let backend = NativeBackend::new(&manifest, &model, layers, Some(8), mode, workers)
+            .expect("backend");
+
+        // Ragged requests: BOS-framed, EOS-terminated, PAD-padded rows of
+        // random content length.
+        let n_req = g.usize_in(1, 8);
+        let rows: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| {
+                let len = g.usize_in(1, s - 3);
+                let mut row = vec![dims.pad_id; s];
+                row[0] = dims.bos_id;
+                let toks = g.tokens(len, dims.vocab as i32);
+                row[1..1 + len].copy_from_slice(&toks);
+                row[1 + len] = dims.eos_id;
+                row
+            })
+            .collect();
+
+        // Sequential reference: each request decoded alone (cached path).
+        let want: Vec<Vec<i32>> = rows
+            .iter()
+            .map(|r| backend.translate(r).expect("sequential translate"))
+            .collect();
+
+        // Continuous run under a random staggered arrival trace: a
+        // random capacity, a random initial backlog, and 0..=2 new
+        // arrivals before each tick.
+        let capacity = g.usize_in(1, 4);
+        let mut batcher = ContinuousBatcher::new(&backend, capacity);
+        let mut submitted = 0usize;
+        let mut got: Vec<Option<Vec<i32>>> = vec![None; n_req];
+        let upfront = g.usize_in(1, n_req);
+        while submitted < upfront {
+            batcher.submit(rows[submitted].clone());
+            submitted += 1;
+        }
+        while !(submitted == n_req && batcher.idle()) {
+            let arrivals = g.usize_in(0, 2).min(n_req - submitted);
+            for _ in 0..arrivals {
+                batcher.submit(rows[submitted].clone());
+                submitted += 1;
+            }
+            if batcher.idle() && submitted < n_req {
+                // Never stall the trace: an idle batcher with requests
+                // still unsubmitted must receive at least one.
+                batcher.submit(rows[submitted].clone());
+                submitted += 1;
+            }
+            for c in batcher.tick().expect("tick") {
+                got[c.id as usize] = Some(c.tokens);
+            }
+        }
+
+        for (i, w) in want.iter().enumerate() {
+            let g_i = got[i].as_ref().expect("every request completes");
+            assert_eq!(
+                g_i, w,
+                "request {i}/{n_req} diverged (mode {mode:?}, W{wl}, workers={workers}, \
+                 capacity={capacity})"
+            );
+        }
     });
     std::fs::remove_dir_all(&dir).ok();
 }
