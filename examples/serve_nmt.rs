@@ -26,7 +26,7 @@
 //! `itera serve --backend pjrt`.
 
 use anyhow::Result;
-use itera_llm::coordinator::{serve_demo_native, Batcher};
+use itera_llm::coordinator::{serve_demo_native, Batcher, ServeTuning};
 use itera_llm::model::Manifest;
 use itera_llm::runtime::{DecodePolicy, Mode};
 use itera_llm::util::pool::default_workers;
@@ -63,6 +63,17 @@ fn main() -> Result<()> {
         Some(b) => Batcher::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown batcher {b} (expected static|continuous)"))?,
     };
-    serve_demo_native(&manifest, &pair, requests, default_workers(8), mode, decode, batcher)?;
+    // Default tuning: unbounded queue, no deadlines, closed-loop client.
+    // The `itera serve` CLI exposes the overload/deadline knobs.
+    serve_demo_native(
+        &manifest,
+        &pair,
+        requests,
+        default_workers(8),
+        mode,
+        decode,
+        batcher,
+        &ServeTuning::default(),
+    )?;
     Ok(())
 }

@@ -342,7 +342,9 @@ fn decode_benches(b: &mut Bench, workers: usize) {
 
 /// Tokens/sec of the serving path under both batching disciplines
 /// (`runtime/native_serve_{static,continuous}` — the same pre-queued
-/// request stream through `serve_loop` and `serve_loop_continuous`), plus
+/// request stream through `serve_loop` and `serve_loop_continuous`), the
+/// overload lane (`runtime/native_serve_overload`: the burst at a
+/// bounded queue, with its deterministic `runtime/shed_rate` gauge), plus
 /// the deterministic mean slot occupancy of a staggered-arrival
 /// continuous workload (`runtime/slot_occupancy` gauge). The responses
 /// are bit-identical (pinned by the serving soak test and the continuous
@@ -352,10 +354,10 @@ fn decode_benches(b: &mut Bench, workers: usize) {
 /// `cargo bench --bench hot_paths batcher` selects the whole block.
 fn batcher_benches(b: &mut Bench, workers: usize) {
     use std::sync::mpsc;
-    use std::time::Instant;
 
     use itera_llm::coordinator::{
-        self, serve_loop, serve_loop_continuous, ContinuousBatcher, Method, Request,
+        self, response_channel, serve_loop, serve_loop_continuous, ContinuousBatcher, Method,
+        Request, ServeConfig,
     };
     use itera_llm::runtime::Mode;
     use itera_llm::testkit::tinymodel;
@@ -364,7 +366,9 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
     let lanes = [
         "runtime/native_serve_static",
         "runtime/native_serve_continuous",
+        "runtime/native_serve_overload",
         "runtime/slot_occupancy",
+        "runtime/shed_rate",
     ];
     if !lanes.iter().any(|n| b.enabled(n)) {
         b.set_group(None);
@@ -405,13 +409,8 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
         let (tx, rx) = mpsc::channel::<Request>();
         let mut receivers = Vec::new();
         for row in rows {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: row.clone(),
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .unwrap();
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(row.clone(), rtx)).unwrap();
             receivers.push(rrx);
         }
         drop(tx);
@@ -434,11 +433,35 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
             });
         }
         if continuous_on {
-            let capacity = dims.eval_batch;
+            let cfg = ServeConfig::new(dims.eval_batch);
             b.bench_throughput("runtime/native_serve_continuous", tokens, || {
                 let (rx, _resp) = queue_all(&rows);
                 std::hint::black_box(
-                    serve_loop_continuous(&backend, &rx, &dims, n_requests, capacity).unwrap(),
+                    serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap(),
+                );
+            });
+        }
+    }
+
+    // Overload lane: the same 12-request burst against capacity 3 with a
+    // queue bound of 3 — the burst lands before the first tick, so the
+    // queue absorbs 3 requests and the other 9 are shed immediately with
+    // a typed `Overloaded` rejection. The shed rate is deterministic
+    // (recorded as a gauge); the throughput lane records how fast the
+    // loop answers an over-capacity burst when most of it is load-shed.
+    if b.enabled("runtime/native_serve_overload") || b.enabled("runtime/shed_rate") {
+        let mut cfg = ServeConfig::new(3);
+        cfg.queue_limit = Some(3);
+        let (rx, _resp) = queue_all(&rows);
+        let stats = serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap();
+        assert!(stats.is_balanced(), "overload bench accounting must balance: {stats:?}");
+        b.gauge("runtime/shed_rate", stats.shed as f64 / stats.received.max(1) as f64);
+        if b.enabled("runtime/native_serve_overload") {
+            let tokens = stats.tokens as u64;
+            b.bench_throughput("runtime/native_serve_overload", tokens, || {
+                let (rx, _resp) = queue_all(&rows);
+                std::hint::black_box(
+                    serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap(),
                 );
             });
         }
@@ -456,15 +479,15 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
         let mut batcher = ContinuousBatcher::new(&backend, capacity);
         let mut submitted = 0usize;
         while submitted < 2 * capacity {
-            batcher.submit(rows[submitted % rows.len()].clone());
+            batcher.submit(rows[submitted % rows.len()].clone()).expect("unbounded submit");
             submitted += 1;
         }
         while !(submitted == n && batcher.idle()) {
             while submitted < n && batcher.pending() < capacity {
-                batcher.submit(rows[submitted % rows.len()].clone());
+                batcher.submit(rows[submitted % rows.len()].clone()).expect("unbounded submit");
                 submitted += 1;
             }
-            batcher.tick().unwrap();
+            let _ = batcher.tick();
         }
         b.gauge("runtime/slot_occupancy", batcher.occupancy());
     }

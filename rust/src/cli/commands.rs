@@ -58,6 +58,13 @@ fn batcher_flag(args: &Args) -> Result<Batcher> {
     }
 }
 
+/// Parse an optional usize flag (absent stays `None`, present must parse).
+fn opt_usize(args: &Args, name: &str) -> Result<Option<usize>> {
+    args.flag(name)
+        .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("--{name} expects a count, got {s}")))
+        .transpose()
+}
+
 /// First registered language pair (the default for `--pair`).
 fn default_pair(manifest: &Manifest) -> Result<String> {
     manifest
@@ -676,16 +683,23 @@ fn validate_continuous(args: &Args) -> Result<()> {
         let mut submitted = 0usize;
         let mut got: Vec<Option<Vec<i32>>> = vec![None; rows.len()];
         while submitted < rows.len().min(2) {
-            batcher.submit(rows[submitted].clone());
+            batcher
+                .submit(rows[submitted].clone())
+                .map_err(|e| anyhow::anyhow!("unbounded queue refused a request: {e}"))?;
             submitted += 1;
         }
         while !(submitted == rows.len() && batcher.idle()) {
             if submitted < rows.len() {
-                batcher.submit(rows[submitted].clone());
+                batcher
+                    .submit(rows[submitted].clone())
+                    .map_err(|e| anyhow::anyhow!("unbounded queue refused a request: {e}"))?;
                 submitted += 1;
             }
-            for c in batcher.tick()? {
-                got[c.id as usize] = Some(c.tokens);
+            for c in batcher.tick() {
+                let toks = c
+                    .result
+                    .map_err(|e| anyhow::anyhow!("request {} faulted during parity run: {e}", c.id))?;
+                got[c.id as usize] = Some(toks);
             }
         }
 
@@ -718,11 +732,40 @@ fn validate_continuous(args: &Args) -> Result<()> {
 /// model, reporting latency/throughput percentiles. Native by default;
 /// `--backend pjrt` uses the AOT artifacts (pjrt builds only). For the
 /// native backend, `--mode quantized` serves the bit-packed weight bank.
+///
+/// Robustness knobs (continuous batcher only): `--queue-limit` bounds
+/// admission (overflow sheds with a typed `Overloaded` error),
+/// `--deadline` / `--max-new-tokens` set server-side default limits in
+/// decode steps / generated tokens, and `--burst` drives the demo client
+/// with that many requests in flight (overload needs `burst` past
+/// capacity + queue limit). `--tinymodel` serves the hermetic synthetic
+/// model instead of trained artifacts — the CI overload smoke runs
+/// without any Python-built files.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::{RequestLimits, ServeTuning};
+
     let requests = args.flag_usize("requests", 64)?;
+    let mut limits = RequestLimits::none();
+    if let Some(d) = opt_usize(args, "deadline")? {
+        limits = limits.with_deadline(d);
+    }
+    if let Some(m) = opt_usize(args, "max-new-tokens")? {
+        limits = limits.with_max_new_tokens(m);
+    }
+    let tuning = ServeTuning {
+        queue_limit: opt_usize(args, "queue-limit")?,
+        limits,
+        burst: args.flag_usize("burst", 1)?,
+    };
     match args.flag_or("backend", "native").as_str() {
         "native" => {
-            let manifest = Manifest::load(Manifest::default_dir())?;
+            let (tmp_dir, manifest) = if args.has("tinymodel") {
+                let (dir, manifest) =
+                    crate::testkit::tinymodel::generate_in_temp("serve_cli", 0x5E4E)?;
+                (Some(dir), manifest)
+            } else {
+                (None, Manifest::load(Manifest::default_dir())?)
+            };
             let pair = match args.flag("pair") {
                 Some(p) => p.to_string(),
                 None => default_pair(&manifest)?,
@@ -736,7 +779,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             };
             let decode = decode_flag(args)?;
             let batcher = batcher_flag(args)?;
-            serve_demo_native(
+            let out = serve_demo_native(
                 &manifest,
                 &pair,
                 requests,
@@ -744,7 +787,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 mode,
                 decode,
                 batcher,
-            )?;
+                &tuning,
+            );
+            if let Some(dir) = tmp_dir {
+                std::fs::remove_dir_all(&dir).ok();
+            }
+            out?;
             Ok(())
         }
         #[cfg(feature = "pjrt")]

@@ -7,7 +7,8 @@
 //! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
 //!            [--mode dense|svd|quantized] [--decode replay|cached]
 //! itera serve [--requests 64] [--mode quantized] [--decode replay|cached]
-//!             [--batcher static|continuous]
+//!             [--batcher static|continuous] [--queue-limit 8] [--deadline 200]
+//!             [--max-new-tokens 16] [--burst 12] [--tinymodel]
 //! itera validate [--mode quantized] [--decode cached] [--batcher continuous]
 //!                                    # model-vs-sim / qkernel / decode /
 //!                                    # continuous-batching parity
@@ -99,7 +100,9 @@ USAGE (native runtime, every build):
              [--decode <replay|cached>]
   itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
               [--mode <dense|quantized>] [--decode <replay|cached>]
-              [--batcher <static|continuous>]
+              [--batcher <static|continuous>] [--tinymodel]
+              [--queue-limit N] [--deadline STEPS] [--max-new-tokens N]
+              [--burst N]
   itera validate [--mode quantized] [--decode cached] [--batcher continuous]
   itera help
 
@@ -115,6 +118,13 @@ USAGE (native runtime, every build):
   full under dynamic load — bit-identical responses, higher occupancy.
   `validate --batcher continuous` cross-checks continuous vs sequential
   decode on a hermetic tiny model.
+  Continuous-batcher robustness knobs: --queue-limit bounds admission
+  (overflow gets a typed `overloaded` rejection instead of unbounded
+  queueing), --deadline / --max-new-tokens set server-side default
+  per-request limits (decode steps / generated tokens), and --burst
+  drives the demo client with N requests in flight (push it past
+  capacity + queue limit to see load shedding). --tinymodel serves the
+  hermetic synthetic model, so the overload smoke needs no artifacts.
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]

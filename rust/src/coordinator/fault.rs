@@ -1,0 +1,309 @@
+//! Fault-handling vocabulary for the serving stack: the typed error
+//! taxonomy, per-request limits, the one-shot response channel with
+//! disconnect detection, and the graceful-shutdown signal.
+//!
+//! Serving failures are **data, not panics**: every request submitted to
+//! a serve loop receives exactly one terminal outcome — a [`Response`]
+//! or a [`ServeError`] — through its [`ResponseRx`]. The scheduler
+//! ([`super::scheduler::ContinuousBatcher`]) and the serve loops
+//! ([`super::serve`]) never abort the whole process for a single bad
+//! request; they retire the offender with a typed error and keep every
+//! other slot stepping bit-identically (slot independence is the
+//! [`crate::runtime::SlotEngine`] contract).
+//!
+//! `std::sync::mpsc` has no way to ask a `Sender` whether its `Receiver`
+//! is still alive without sending, so the response channel here is a
+//! small hand-rolled one-shot (`Mutex` + `Condvar` + liveness flags):
+//! dropping the [`ResponseRx`] is visible to the server through
+//! [`ResponseTx::is_disconnected`], which is what lets the serve loop
+//! cancel orphaned slots instead of decoding to EOS for nobody.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Why a request did not produce a translation. Every variant is a
+/// per-request outcome: the server stays up and other requests are
+/// unaffected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission: the bounded queue was full or the server
+    /// was draining. Clients may retry (ideally with backoff).
+    Overloaded,
+    /// The per-request deadline (measured in decode steps since
+    /// submission, queue wait included) elapsed before completion.
+    DeadlineExceeded,
+    /// The client disappeared (response receiver dropped) and the
+    /// request was retired without decoding further.
+    Cancelled,
+    /// The engine failed or panicked while admitting or stepping this
+    /// request; the message carries the underlying fault.
+    EngineFault(String),
+}
+
+impl ServeError {
+    /// Stable short tag for stats tables and logs.
+    pub fn key(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded => "overloaded",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::Cancelled => "cancelled",
+            ServeError::EngineFault(_) => "engine_fault",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "overloaded: admission queue full or draining"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before completion"),
+            ServeError::Cancelled => write!(f, "cancelled: client disconnected"),
+            ServeError::EngineFault(msg) => write!(f, "engine fault: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request latency/length budget. Unset fields are unlimited (or
+/// fall back to the server's defaults via [`RequestLimits::or`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestLimits {
+    /// Retire with [`ServeError::DeadlineExceeded`] once this many
+    /// decode steps have elapsed since submission. The clock is the
+    /// batcher's deterministic step counter — queue wait counts, wall
+    /// time never does, so expiry is reproducible.
+    pub deadline_steps: Option<usize>,
+    /// Retire **successfully** (truncation, not an error) after this
+    /// many generated tokens, bounding the decode cost any single
+    /// request can consume.
+    pub max_new_tokens: Option<usize>,
+}
+
+impl RequestLimits {
+    pub fn none() -> RequestLimits {
+        RequestLimits::default()
+    }
+
+    pub fn with_deadline(mut self, steps: usize) -> RequestLimits {
+        self.deadline_steps = Some(steps);
+        self
+    }
+
+    pub fn with_max_new_tokens(mut self, tokens: usize) -> RequestLimits {
+        self.max_new_tokens = Some(tokens);
+        self
+    }
+
+    /// Fill unset fields from server-side defaults.
+    pub fn or(self, defaults: RequestLimits) -> RequestLimits {
+        RequestLimits {
+            deadline_steps: self.deadline_steps.or(defaults.deadline_steps),
+            max_new_tokens: self.max_new_tokens.or(defaults.max_new_tokens),
+        }
+    }
+}
+
+/// A served translation: de-framed tokens + server-observed latency.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    pub latency_s: f64,
+}
+
+/// The terminal outcome every submitted request receives exactly once.
+pub type ServeResult = Result<Response, ServeError>;
+
+/// Cooperative drain signal: flip it and the serve loop stops admitting,
+/// finishes what is queued and live, and exits with balanced accounting.
+/// Clone freely — all clones observe the same flag.
+#[derive(Clone, Default)]
+pub struct ShutdownSignal(Arc<AtomicBool>);
+
+impl ShutdownSignal {
+    pub fn new() -> ShutdownSignal {
+        ShutdownSignal::default()
+    }
+
+    /// Request a graceful drain (idempotent).
+    pub fn drain(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+struct ChannelState {
+    value: Option<ServeResult>,
+    tx_gone: bool,
+    rx_gone: bool,
+}
+
+struct ChannelInner {
+    state: Mutex<ChannelState>,
+    cv: Condvar,
+}
+
+/// A poisoned mutex only means the *other* side panicked mid-access;
+/// the state itself is a few flags and an `Option`, always coherent.
+fn lock(inner: &ChannelInner) -> MutexGuard<'_, ChannelState> {
+    inner.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One-shot response channel: the server holds the [`ResponseTx`], the
+/// client blocks on [`ResponseRx::recv`]. Either side dropping is
+/// observable by the other — the disconnect detection the serve loop's
+/// orphaned-slot cancellation is built on.
+pub fn response_channel() -> (ResponseTx, ResponseRx) {
+    let inner = Arc::new(ChannelInner {
+        state: Mutex::new(ChannelState { value: None, tx_gone: false, rx_gone: false }),
+        cv: Condvar::new(),
+    });
+    (ResponseTx(inner.clone()), ResponseRx(inner))
+}
+
+/// Server half of [`response_channel`].
+pub struct ResponseTx(Arc<ChannelInner>);
+
+impl ResponseTx {
+    /// Deliver the terminal outcome. Returns `false` when the receiver
+    /// is gone (client disconnected) or an outcome was already sent —
+    /// a request can never be answered twice.
+    pub fn send(&self, result: ServeResult) -> bool {
+        let mut st = lock(&self.0);
+        if st.rx_gone || st.value.is_some() {
+            return false;
+        }
+        st.value = Some(result);
+        self.0.cv.notify_all();
+        true
+    }
+
+    /// The receiving side dropped: nobody will read a response, so the
+    /// request's slot should be cancelled instead of decoded to EOS.
+    pub fn is_disconnected(&self) -> bool {
+        lock(&self.0).rx_gone
+    }
+}
+
+impl Drop for ResponseTx {
+    fn drop(&mut self) {
+        let mut st = lock(&self.0);
+        st.tx_gone = true;
+        self.0.cv.notify_all();
+    }
+}
+
+/// Client half of [`response_channel`].
+pub struct ResponseRx(Arc<ChannelInner>);
+
+impl ResponseRx {
+    /// Block for the terminal outcome. `None` only when the server
+    /// dropped its half without ever responding (a server bug — the
+    /// serve loops answer every request they take).
+    pub fn recv(&self) -> Option<ServeResult> {
+        let mut st = lock(&self.0);
+        loop {
+            if let Some(v) = st.value.take() {
+                return Some(v);
+            }
+            if st.tx_gone {
+                return None;
+            }
+            st = self.0.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking probe: the outcome if it has already arrived.
+    pub fn try_recv(&self) -> Option<ServeResult> {
+        lock(&self.0).value.take()
+    }
+}
+
+impl Drop for ResponseRx {
+    fn drop(&mut self) {
+        lock(&self.0).rx_gone = true;
+    }
+}
+
+/// Render a `catch_unwind` payload for an [`ServeError::EngineFault`].
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_keys_and_display() {
+        let e = ServeError::EngineFault("kv cache torn".into());
+        assert_eq!(e.key(), "engine_fault");
+        assert!(e.to_string().contains("kv cache torn"));
+        assert_eq!(ServeError::Overloaded.key(), "overloaded");
+        assert_eq!(ServeError::DeadlineExceeded.key(), "deadline_exceeded");
+        assert_eq!(ServeError::Cancelled.key(), "cancelled");
+        // The taxonomy is part of the wire contract: Display must be
+        // stable enough to grep in logs.
+        assert!(ServeError::Overloaded.to_string().contains("overloaded"));
+    }
+
+    #[test]
+    fn limits_merge_with_defaults() {
+        let server = RequestLimits::none().with_deadline(100).with_max_new_tokens(32);
+        let per_request = RequestLimits::none().with_deadline(10);
+        let eff = per_request.or(server);
+        assert_eq!(eff.deadline_steps, Some(10), "per-request deadline wins");
+        assert_eq!(eff.max_new_tokens, Some(32), "unset field falls back to server default");
+        assert_eq!(RequestLimits::none().or(server), server);
+    }
+
+    #[test]
+    fn oneshot_delivers_exactly_once() {
+        let (tx, rx) = response_channel();
+        assert!(tx.send(Ok(Response { tokens: vec![7], latency_s: 0.5 })));
+        assert!(!tx.send(Err(ServeError::Overloaded)), "second send must be refused");
+        match rx.recv() {
+            Some(Ok(r)) => assert_eq!(r.tokens, vec![7]),
+            other => panic!("expected the first outcome, got {other:?}"),
+        }
+        assert!(rx.try_recv().is_none(), "outcome is consumed exactly once");
+    }
+
+    #[test]
+    fn dropped_receiver_is_visible_to_sender() {
+        let (tx, rx) = response_channel();
+        assert!(!tx.is_disconnected());
+        drop(rx);
+        assert!(tx.is_disconnected(), "disconnect must be observable without sending");
+        assert!(!tx.send(Err(ServeError::Cancelled)), "send into a dropped receiver fails");
+    }
+
+    #[test]
+    fn dropped_sender_unblocks_receiver() {
+        let (tx, rx) = response_channel();
+        let waiter = std::thread::spawn(move || rx.recv());
+        drop(tx);
+        assert!(waiter.join().unwrap().is_none(), "recv returns None, never hangs");
+    }
+
+    #[test]
+    fn shutdown_signal_is_shared_across_clones() {
+        let s = ShutdownSignal::new();
+        let c = s.clone();
+        assert!(!c.is_draining());
+        s.drain();
+        assert!(c.is_draining(), "clones observe the same flag");
+        s.drain(); // idempotent
+        assert!(s.is_draining());
+    }
+}

@@ -18,14 +18,27 @@
 //! group-decode-respond loop, or [`ContinuousBatcher`]'s slot-addressed
 //! retire/admit/step rounds that keep the KV-cached decode engine full
 //! under dynamic load.
+//!
+//! The serving stack is fault-tolerant by construction ([`fault`]):
+//! requests carry [`RequestLimits`] (step deadlines, token budgets) and
+//! answer through one-shot [`response_channel`]s with a typed
+//! [`ServeError`] taxonomy — admission overload sheds, deadlines expire
+//! slots deterministically, client disconnects cancel orphaned work,
+//! engine panics are isolated per slot, and a [`ShutdownSignal`] drains
+//! the loop with balanced accounting.
 
 #[cfg(feature = "pjrt")]
 pub mod figures;
+pub mod fault;
 mod methods;
 pub mod report;
 pub mod scheduler;
 mod serve;
 
+pub use fault::{
+    response_channel, RequestLimits, Response, ResponseRx, ResponseTx, ServeError, ServeResult,
+    ShutdownSignal,
+};
 pub use methods::{compress_model_from, CompressedModel, Method};
 pub use scheduler::{Batcher, BatcherStats, Completion, ContinuousBatcher};
 #[cfg(feature = "pjrt")]
@@ -33,8 +46,8 @@ pub use serve::serve_bank;
 #[cfg(feature = "pjrt")]
 pub use serve::serve_demo;
 pub use serve::{
-    pack_rows, run_demo, serve_demo_native, serve_loop, serve_loop_continuous, Request,
-    ServeStats,
+    pack_rows, run_demo, run_demo_continuous, serve_demo_native, serve_loop,
+    serve_loop_continuous, Request, ServeConfig, ServeStats, ServeTuning,
 };
 
 #[cfg(feature = "pjrt")]

@@ -18,17 +18,40 @@
 //! policy unit-testable with scripted arrival/length traces against a
 //! mock engine, with no model anywhere.
 //!
+//! **Faults are per-request outcomes, not batcher failures.** Every
+//! submission ends in exactly one [`Completion`] whose `result` is
+//! either the decoded buffer or a typed [`ServeError`]:
+//!
+//! * deadlines ([`RequestLimits::deadline_steps`], counted in the
+//!   batcher's own decode steps, queue wait included) retire expired
+//!   work with `DeadlineExceeded`, freeing capacity deterministically;
+//! * `max_new_tokens` truncates long decodes into **successful**
+//!   completions;
+//! * a bounded queue ([`Self::with_queue_limit`]) sheds excess
+//!   submissions with `Overloaded` instead of growing without bound,
+//!   and [`Self::begin_drain`] sheds all further submissions while the
+//!   backlog finishes;
+//! * [`Self::cancel`] drops a queued or live request whose client went
+//!   away (the serve loop's disconnect detection calls this);
+//! * engine `Err`s **and panics** during admit/step are caught
+//!   (`catch_unwind`), attributed to the offending request, and retired
+//!   as `EngineFault` — the other slots keep stepping bit-identically
+//!   (slot independence plus the engine's re-steppable-on-failure
+//!   contract, see [`crate::runtime::SlotEngine::step`]).
+//!
 //! Outputs are **bit-identical** to decoding each request alone through
 //! the cached path: slot independence is the engine's contract
 //! ([`crate::runtime::SlotEngine`]), pinned end-to-end by
 //! `prop_continuous_decode_bit_identical_to_sequential`, the serving
-//! soak test and `itera validate --batcher continuous`.
+//! soak tests (including the seeded chaos soak) and
+//! `itera validate --batcher continuous`.
 
 use std::collections::VecDeque;
-
-use anyhow::{ensure, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::runtime::SlotEngine;
+
+use super::fault::{panic_message, RequestLimits, ServeError};
 
 /// Which serving batcher runs the decode loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -60,28 +83,55 @@ impl Batcher {
     }
 }
 
-/// One finished request, reported by [`ContinuousBatcher::tick`].
+/// One finished request, reported by [`ContinuousBatcher::tick`] —
+/// successfully decoded or retired with a typed error, but always
+/// reported exactly once.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Completion {
     /// Submission id (assigned FIFO by [`ContinuousBatcher::submit`]).
     pub id: u64,
-    /// Slot index the request decoded in (observable slot reuse).
-    pub slot: usize,
-    /// The decoded `seq_len`-token output buffer.
-    pub tokens: Vec<i32>,
+    /// Slot index the request decoded in (observable slot reuse), or
+    /// `None` when it never reached a slot (expired or faulted while
+    /// queued).
+    pub slot: Option<usize>,
+    /// The decoded `seq_len`-token output buffer, or why there is none.
+    pub result: Result<Vec<i32>, ServeError>,
 }
 
-/// Deterministic scheduling counters.
+impl Completion {
+    /// The output buffer of a successful completion.
+    pub fn tokens(&self) -> Option<&[i32]> {
+        self.result.as_ref().ok().map(|t| t.as_slice())
+    }
+}
+
+/// Deterministic scheduling counters. On any run,
+/// `submitted == retired + shed + expired + cancelled + faulted` once
+/// the batcher is idle (every submission gets exactly one outcome).
 #[derive(Debug, Clone, Default)]
 pub struct BatcherStats {
     /// Decode steps executed (idle ticks are not steps).
     pub steps: usize,
     /// Requests admitted into a slot.
     pub admitted: usize,
-    /// Slots retired (EOS or full buffer).
+    /// Slots retired successfully (EOS, full buffer, or truncated by
+    /// `max_new_tokens`).
     pub retired: usize,
     /// Sum over steps of live slots — the occupancy numerator.
     pub occupied_slot_steps: usize,
+    /// Submissions rejected with [`ServeError::Overloaded`] (bounded
+    /// queue full, or draining).
+    pub shed: usize,
+    /// Requests retired with [`ServeError::DeadlineExceeded`] (queued or
+    /// live).
+    pub expired: usize,
+    /// Requests dropped via [`ContinuousBatcher::cancel`] (client gone).
+    pub cancelled: usize,
+    /// Requests retired with [`ServeError::EngineFault`] (admission or
+    /// step failure/panic).
+    pub faulted: usize,
+    /// Subset of `retired` cut short by their `max_new_tokens` budget.
+    pub truncated: usize,
 }
 
 impl BatcherStats {
@@ -94,24 +144,42 @@ impl BatcherStats {
     }
 }
 
+/// A queued submission waiting for a slot.
+struct Pending {
+    id: u64,
+    row: Vec<i32>,
+    limits: RequestLimits,
+    /// `stats.steps` at submission — the deadline epoch.
+    submit_step: usize,
+}
+
 struct Live<S> {
     id: u64,
     slot: S,
+    limits: RequestLimits,
+    submit_step: usize,
+    /// Decode steps this slot has survived (the `max_new_tokens` meter).
+    new_tokens: usize,
 }
 
 /// Continuous-batching engine over any [`SlotEngine`].
 ///
-/// `capacity` bounds concurrent slots; requests beyond it queue FIFO.
-/// Drive it with [`submit`](Self::submit) + [`tick`](Self::tick) (one
-/// retire/admit/step round per call) or [`run_until_drained`]
-/// (Self::run_until_drained).
+/// `capacity` bounds concurrent slots; requests beyond it queue FIFO
+/// (bounded by [`Self::with_queue_limit`], unbounded otherwise). Drive
+/// it with [`submit`](Self::submit) + [`tick`](Self::tick) (one
+/// retire/admit/step round per call) or
+/// [`run_until_drained`](Self::run_until_drained).
 pub struct ContinuousBatcher<'e, E: SlotEngine> {
     engine: &'e E,
     capacity: usize,
     /// Fixed-capacity slot table; `None` entries are free and reusable.
     slots: Vec<Option<Live<E::Slot>>>,
-    /// FIFO admission queue of `(id, framed source row)`.
-    queue: VecDeque<(u64, Vec<i32>)>,
+    /// FIFO admission queue.
+    queue: VecDeque<Pending>,
+    /// Admission-queue bound; submissions beyond it are shed.
+    queue_limit: Option<usize>,
+    /// Drain mode: shed all further submissions, finish the backlog.
+    draining: bool,
     next_id: u64,
     stats: BatcherStats,
 }
@@ -124,18 +192,84 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             capacity,
             slots: (0..capacity).map(|_| None).collect(),
             queue: VecDeque::new(),
+            queue_limit: None,
+            draining: false,
             next_id: 0,
             stats: BatcherStats::default(),
         }
     }
 
-    /// Enqueue one `seq_len`-framed request; returns its id (ids are
-    /// assigned — and admitted — in submission order).
-    pub fn submit(&mut self, src_row: Vec<i32>) -> u64 {
+    /// Bound the admission queue: submissions arriving while `limit`
+    /// requests already wait are shed with [`ServeError::Overloaded`].
+    pub fn with_queue_limit(mut self, limit: usize) -> ContinuousBatcher<'e, E> {
+        self.queue_limit = Some(limit);
+        self
+    }
+
+    /// Enqueue one `seq_len`-framed request with default (unlimited)
+    /// limits; returns its id (ids are assigned — and admitted — in
+    /// submission order), or [`ServeError::Overloaded`] when shed.
+    pub fn submit(&mut self, src_row: Vec<i32>) -> Result<u64, ServeError> {
+        self.submit_with(src_row, RequestLimits::none())
+    }
+
+    /// [`submit`](Self::submit) with a per-request deadline/length
+    /// budget.
+    pub fn submit_with(
+        &mut self,
+        src_row: Vec<i32>,
+        limits: RequestLimits,
+    ) -> Result<u64, ServeError> {
+        if self.draining {
+            self.stats.shed += 1;
+            return Err(ServeError::Overloaded);
+        }
+        if let Some(limit) = self.queue_limit {
+            if self.queue.len() >= limit {
+                self.stats.shed += 1;
+                return Err(ServeError::Overloaded);
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, src_row));
-        id
+        self.queue.push_back(Pending {
+            id,
+            row: src_row,
+            limits,
+            submit_step: self.stats.steps,
+        });
+        Ok(id)
+    }
+
+    /// Stop admitting: every further [`submit`](Self::submit) is shed
+    /// with [`ServeError::Overloaded`] while queued and live work runs
+    /// to completion (tick until [`idle`](Self::idle) to finish the
+    /// drain).
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Drop a queued or live request (client disconnected). Returns
+    /// whether the id was found; a cancelled request produces **no**
+    /// completion — the caller owns its terminal outcome.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|p| p.id == id) {
+            self.queue.remove(pos);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        for entry in self.slots.iter_mut() {
+            if entry.as_ref().is_some_and(|l| l.id == id) {
+                *entry = None;
+                self.stats.cancelled += 1;
+                return true;
+            }
+        }
+        false
     }
 
     /// Requests waiting for a slot.
@@ -168,83 +302,229 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         self.stats.occupancy(self.capacity)
     }
 
-    /// One scheduling round: admit queued requests into free slots
-    /// (FIFO, lowest free index first — each admission runs the
-    /// request's encoder pass), retire anything already complete (a
-    /// degenerate admission can be born finished — it must never reach
-    /// the step kernel), step the mixed-age batch of live slots once,
-    /// then retire completed slots and return every output. An idle
-    /// round (nothing live after admission) executes no decode step.
-    pub fn tick(&mut self) -> Result<Vec<Completion>> {
-        // Admit: fill every free slot while the queue has work.
-        for entry in self.slots.iter_mut() {
-            if entry.is_some() {
+    fn deadline_hit(limits: &RequestLimits, submit_step: usize, now: usize) -> bool {
+        limits.deadline_steps.is_some_and(|d| now.saturating_sub(submit_step) >= d)
+    }
+
+    /// One scheduling round: expire deadlined work (live slots in
+    /// ascending slot order, then the queue FIFO), admit queued requests
+    /// into free slots (FIFO, lowest free index first — each admission
+    /// runs the request's encoder pass), retire anything already
+    /// complete (a degenerate admission can be born finished — it must
+    /// never reach the step kernel), step the mixed-age batch of live
+    /// slots once, then retire completed slots and return every
+    /// completion. An idle round (nothing live after admission) executes
+    /// no decode step. Engine failures and panics never escape: they
+    /// become [`ServeError::EngineFault`] completions for the requests
+    /// they are attributed to.
+    pub fn tick(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        let now = self.stats.steps;
+
+        // Expire live slots first: the freed capacity is admittable in
+        // this same tick. Ascending slot order keeps traces reproducible.
+        for si in 0..self.slots.len() {
+            let hit = matches!(
+                &self.slots[si],
+                Some(l) if Self::deadline_hit(&l.limits, l.submit_step, now)
+            );
+            if !hit {
                 continue;
             }
-            let Some((id, row)) = self.queue.pop_front() else { break };
-            ensure!(
-                row.len() == self.engine.slot_seq_len(),
-                "request {id}: {} tokens, slots are {}-framed",
-                row.len(),
-                self.engine.slot_seq_len()
-            );
-            *entry = Some(Live { id, slot: self.engine.admit(&row)? });
-            self.stats.admitted += 1;
+            if let Some(l) = self.slots[si].take() {
+                self.stats.expired += 1;
+                done.push(Completion {
+                    id: l.id,
+                    slot: Some(si),
+                    result: Err(ServeError::DeadlineExceeded),
+                });
+            }
+        }
+
+        // Expire queued requests: they never reach a slot. (Deadlines
+        // count queue wait — a request nobody can schedule in time is
+        // answered, not leaked.)
+        let mut keep = VecDeque::with_capacity(self.queue.len());
+        for p in self.queue.drain(..) {
+            if Self::deadline_hit(&p.limits, p.submit_step, now) {
+                self.stats.expired += 1;
+                done.push(Completion {
+                    id: p.id,
+                    slot: None,
+                    result: Err(ServeError::DeadlineExceeded),
+                });
+            } else {
+                keep.push_back(p);
+            }
+        }
+        self.queue = keep;
+
+        // Admit: fill every free slot while the queue has work. A
+        // misframed or faulting admission consumes its request (an
+        // `EngineFault` completion), not the slot — keep trying the
+        // queue until the slot is filled or the queue is empty.
+        for si in 0..self.slots.len() {
+            if self.slots[si].is_some() {
+                continue;
+            }
+            while let Some(p) = self.queue.pop_front() {
+                if p.row.len() != self.engine.slot_seq_len() {
+                    self.stats.faulted += 1;
+                    done.push(Completion {
+                        id: p.id,
+                        slot: None,
+                        result: Err(ServeError::EngineFault(format!(
+                            "request {}: {} tokens, slots are {}-framed",
+                            p.id,
+                            p.row.len(),
+                            self.engine.slot_seq_len()
+                        ))),
+                    });
+                    continue;
+                }
+                let engine = self.engine;
+                let admitted = catch_unwind(AssertUnwindSafe(|| engine.admit(&p.row)));
+                match admitted {
+                    Ok(Ok(slot)) => {
+                        self.slots[si] = Some(Live {
+                            id: p.id,
+                            slot,
+                            limits: p.limits,
+                            submit_step: p.submit_step,
+                            new_tokens: 0,
+                        });
+                        self.stats.admitted += 1;
+                        break;
+                    }
+                    Ok(Err(e)) => {
+                        self.stats.faulted += 1;
+                        done.push(Completion {
+                            id: p.id,
+                            slot: None,
+                            result: Err(ServeError::EngineFault(format!(
+                                "admission failed: {e:#}"
+                            ))),
+                        });
+                    }
+                    Err(payload) => {
+                        self.stats.faulted += 1;
+                        done.push(Completion {
+                            id: p.id,
+                            slot: None,
+                            result: Err(ServeError::EngineFault(format!(
+                                "admission panicked: {}",
+                                panic_message(payload.as_ref())
+                            ))),
+                        });
+                    }
+                }
+            }
         }
 
         // Pre-step retire: only admissions that are complete on arrival
         // (e.g. a seq_len-1 buffer, or EOS aliased to BOS/PAD) — slots
         // finished by a step were retired at the end of that tick.
-        let mut done = self.retire_complete();
+        done.extend(self.retire_complete());
 
         // Step whatever is live, in ascending slot order (slot
         // independence makes the order bit-irrelevant; fixing it keeps
-        // traces reproducible).
-        let mut live: Vec<&mut E::Slot> =
-            self.slots.iter_mut().filter_map(|e| e.as_mut().map(|l| &mut l.slot)).collect();
-        if live.is_empty() {
-            return Ok(done);
+        // traces reproducible). The whole batch steps under
+        // `catch_unwind`; a failure is attributed below.
+        let live_idx: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        if live_idx.is_empty() {
+            return done;
         }
-        let occupied = live.len();
-        self.engine.step(&mut live)?;
+        let occupied = live_idx.len();
+        let batch_result = {
+            let engine = self.engine;
+            let mut live: Vec<&mut E::Slot> =
+                self.slots.iter_mut().filter_map(|e| e.as_mut().map(|l| &mut l.slot)).collect();
+            catch_unwind(AssertUnwindSafe(move || engine.step(&mut live)))
+        };
+        if !matches!(batch_result, Ok(Ok(()))) {
+            // Fault attribution: re-step each live slot alone (engines
+            // must leave failed slots re-steppable — the SlotEngine
+            // contract) and retire the ones that fail with EngineFault.
+            // Healthy slots advance exactly one step either way, so
+            // their outputs stay bit-identical to a fault-free run.
+            for &si in &live_idx {
+                let solo = {
+                    let engine = self.engine;
+                    let Some(l) = self.slots[si].as_mut() else { continue };
+                    let slot = &mut l.slot;
+                    catch_unwind(AssertUnwindSafe(move || engine.step(&mut [slot])))
+                };
+                let msg = match solo {
+                    Ok(Ok(())) => continue,
+                    Ok(Err(e)) => format!("step failed: {e:#}"),
+                    Err(payload) => format!("step panicked: {}", panic_message(payload.as_ref())),
+                };
+                if let Some(l) = self.slots[si].take() {
+                    self.stats.faulted += 1;
+                    done.push(Completion {
+                        id: l.id,
+                        slot: Some(si),
+                        result: Err(ServeError::EngineFault(msg)),
+                    });
+                }
+            }
+        }
         self.stats.steps += 1;
         self.stats.occupied_slot_steps += occupied;
+        for l in self.slots.iter_mut().flatten() {
+            l.new_tokens += 1;
+        }
 
         // Retire: free completed slots for the next tick's admissions.
         done.extend(self.retire_complete());
-        Ok(done)
+        done
     }
 
     /// Take every complete slot out of the table (freeing it for reuse)
-    /// and return the completions in ascending slot order.
+    /// and return the completions in ascending slot order. A slot whose
+    /// `max_new_tokens` budget is spent retires **successfully** with
+    /// whatever it decoded (truncation, not an error).
     fn retire_complete(&mut self) -> Vec<Completion> {
         let mut done = Vec::new();
-        for (si, entry) in self.slots.iter_mut().enumerate() {
-            let complete = match entry {
-                Some(l) => self.engine.slot_complete(&l.slot),
-                None => false,
+        for si in 0..self.slots.len() {
+            let (complete, truncated) = match &self.slots[si] {
+                Some(l) => {
+                    let natural = self.engine.slot_complete(&l.slot);
+                    let budget_spent =
+                        l.limits.max_new_tokens.is_some_and(|m| l.new_tokens >= m);
+                    (natural || budget_spent, budget_spent && !natural)
+                }
+                None => (false, false),
             };
-            if complete {
-                let l = entry.take().expect("checked Some above");
+            if !complete {
+                continue;
+            }
+            if let Some(l) = self.slots[si].take() {
+                self.stats.retired += 1;
+                if truncated {
+                    self.stats.truncated += 1;
+                }
                 done.push(Completion {
                     id: l.id,
-                    slot: si,
-                    tokens: self.engine.slot_output(&l.slot),
+                    slot: Some(si),
+                    result: Ok(self.engine.slot_output(&l.slot)),
                 });
-                self.stats.retired += 1;
             }
         }
         done
     }
 
     /// Tick until nothing is live or queued; returns every completion in
-    /// retirement order.
-    pub fn run_until_drained(&mut self) -> Result<Vec<Completion>> {
+    /// retirement order. A slot that never completes (a stalled engine)
+    /// spins forever unless it carries a deadline — serve loops set a
+    /// default deadline for exactly this reason.
+    pub fn run_until_drained(&mut self) -> Vec<Completion> {
         let mut out = Vec::new();
         while !self.idle() {
-            out.extend(self.tick()?);
+            out.extend(self.tick());
         }
-        Ok(out)
+        out
     }
 }
 
@@ -273,12 +553,12 @@ mod tests {
             self.seq
         }
 
-        fn admit(&self, src_row: &[i32]) -> Result<ScriptSlot> {
-            ensure!(src_row.len() == self.seq, "framing");
+        fn admit(&self, src_row: &[i32]) -> anyhow::Result<ScriptSlot> {
+            anyhow::ensure!(src_row.len() == self.seq, "framing");
             Ok(ScriptSlot { need: src_row[0] as usize, len: 0, tag: src_row[1] })
         }
 
-        fn step(&self, slots: &mut [&mut ScriptSlot]) -> Result<()> {
+        fn step(&self, slots: &mut [&mut ScriptSlot]) -> anyhow::Result<()> {
             for s in slots.iter_mut() {
                 s.len += 1;
             }
@@ -301,18 +581,22 @@ mod tests {
         r
     }
 
+    fn ok_tokens(c: &Completion) -> Vec<i32> {
+        c.result.clone().unwrap_or_else(|e| panic!("request {} failed: {e}", c.id))
+    }
+
     #[test]
     fn fifo_admission_and_capacity_never_exceeded() {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 2);
         for i in 0..5 {
-            b.submit(req(3, i, 16));
+            b.submit(req(3, i, 16)).unwrap();
         }
         assert_eq!(b.pending(), 5);
         let mut completions = Vec::new();
         for _ in 0..30 {
             assert!(b.live() <= 2, "live slots exceed capacity");
-            completions.extend(b.tick().unwrap());
+            completions.extend(b.tick());
             assert!(b.live() <= 2, "live slots exceed capacity after tick");
             if b.idle() {
                 break;
@@ -331,19 +615,19 @@ mod tests {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 3);
         // Slot 0 retires first (1 step), slots 1/2 run long.
-        b.submit(req(1, 10, 16));
-        b.submit(req(6, 11, 16));
-        b.submit(req(6, 12, 16));
-        let first = b.tick().unwrap();
+        b.submit(req(1, 10, 16)).unwrap();
+        b.submit(req(6, 11, 16)).unwrap();
+        b.submit(req(6, 12, 16)).unwrap();
+        let first = b.tick();
         assert_eq!(first.len(), 1);
         assert_eq!(first[0].id, 0);
-        assert_eq!(first[0].slot, 0, "short request lived in slot 0");
+        assert_eq!(first[0].slot, Some(0), "short request lived in slot 0");
         // The next request must land in the freed slot 0, not a new one.
-        b.submit(req(1, 13, 16));
-        let second = b.tick().unwrap();
+        b.submit(req(1, 13, 16)).unwrap();
+        let second = b.tick();
         assert_eq!(second.len(), 1);
         assert_eq!(second[0].id, 3);
-        assert_eq!(second[0].slot, 0, "retired slot is reused");
+        assert_eq!(second[0].slot, Some(0), "retired slot is reused");
         assert_eq!(b.live(), 2, "long requests still hold slots 1 and 2");
     }
 
@@ -351,13 +635,13 @@ mod tests {
     fn long_requests_are_never_starved() {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 2);
-        let long_id = b.submit(req(6, 99, 16));
+        let long_id = b.submit(req(6, 99, 16)).unwrap();
         // A stream of short requests arrives every tick; the long request
         // keeps its slot (no preemption) and completes on schedule.
         let mut long_done_at = None;
         for tick in 1..=10 {
-            b.submit(req(1, tick, 16));
-            for c in b.tick().unwrap() {
+            b.submit(req(1, tick, 16)).unwrap();
+            for c in b.tick() {
                 if c.id == long_id {
                     long_done_at = Some(tick);
                 }
@@ -371,15 +655,15 @@ mod tests {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 4);
         assert!(b.idle());
-        assert_eq!(b.tick().unwrap(), Vec::new());
+        assert_eq!(b.tick(), Vec::new());
         assert_eq!(b.stats().steps, 0, "idle tick executes no decode step");
         assert_eq!(b.occupancy(), 0.0);
         // ... and the batcher still works after idling.
-        b.submit(req(2, 7, 16));
+        b.submit(req(2, 7, 16)).unwrap();
         assert!(!b.idle());
-        let out = b.run_until_drained().unwrap();
+        let out = b.run_until_drained();
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].tokens, vec![7, 2]);
+        assert_eq!(ok_tokens(&out[0]), vec![7, 2]);
         assert_eq!(b.stats().steps, 2);
     }
 
@@ -388,9 +672,9 @@ mod tests {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 3);
         for i in 0..9 {
-            b.submit(req(4, i, 16));
+            b.submit(req(4, i, 16)).unwrap();
         }
-        let out = b.run_until_drained().unwrap();
+        let out = b.run_until_drained();
         assert_eq!(out.len(), 9);
         // Equal 4-step lifecycles in cohorts of 3: every step runs a full
         // batch, so occupancy is exactly 1.
@@ -404,17 +688,17 @@ mod tests {
         let mut b = ContinuousBatcher::new(&e, 3);
         // Arrivals staggered across ticks; lengths differ, so admissions
         // backfill mid-decode and the batch holds mixed-age slots.
-        b.submit(req(2, 0, 16));
-        b.submit(req(5, 1, 16));
+        b.submit(req(2, 0, 16)).unwrap();
+        b.submit(req(5, 1, 16)).unwrap();
         let mut completions = Vec::new();
         for t in 0..12 {
             if t == 1 {
-                b.submit(req(2, 2, 16));
+                b.submit(req(2, 2, 16)).unwrap();
             }
             if t == 3 {
-                b.submit(req(1, 3, 16));
+                b.submit(req(1, 3, 16)).unwrap();
             }
-            completions.extend(b.tick().unwrap());
+            completions.extend(b.tick());
             if b.idle() {
                 break;
             }
@@ -436,30 +720,280 @@ mod tests {
         // must be retired before the step batch forms, never stepped.
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 2);
-        b.submit(req(0, 41, 16));
-        let out = b.tick().unwrap();
+        b.submit(req(0, 41, 16)).unwrap();
+        let out = b.tick();
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].tokens, vec![41, 0], "retired at age 0: never stepped");
+        assert_eq!(ok_tokens(&out[0]), vec![41, 0], "retired at age 0: never stepped");
         assert_eq!(b.stats().steps, 0, "no live work, no decode step");
         assert!(b.idle());
         // Mixed with a real request, the degenerate one still skips the
         // step batch while the live one decodes normally.
-        b.submit(req(0, 42, 16));
-        b.submit(req(2, 43, 16));
-        let first = b.tick().unwrap();
+        b.submit(req(0, 42, 16)).unwrap();
+        b.submit(req(2, 43, 16)).unwrap();
+        let first = b.tick();
         assert_eq!(first.len(), 1, "only the born-complete request retires this tick");
-        assert_eq!(first[0].tokens, vec![42, 0]);
-        let rest = b.run_until_drained().unwrap();
+        assert_eq!(ok_tokens(&first[0]), vec![42, 0]);
+        let rest = b.run_until_drained();
         assert_eq!(rest.len(), 1);
-        assert_eq!(rest[0].tokens, vec![43, 2], "the live request stepped to completion");
+        assert_eq!(ok_tokens(&rest[0]), vec![43, 2], "the live request stepped to completion");
     }
 
     #[test]
-    fn rejects_misframed_requests() {
+    fn rejects_misframed_requests_without_dying() {
         let e = ScriptEngine { seq: 16 };
         let mut b = ContinuousBatcher::new(&e, 1);
-        b.submit(vec![1, 2, 3]); // not seq_len-framed
-        assert!(b.tick().is_err(), "misframed request must fail admission");
+        b.submit(vec![1, 2, 3]).unwrap(); // not seq_len-framed
+        b.submit(req(1, 50, 16)).unwrap(); // healthy follower
+        let out = b.run_until_drained();
+        assert_eq!(out.len(), 2);
+        assert!(
+            matches!(&out[0].result, Err(ServeError::EngineFault(_))),
+            "misframed request retires as EngineFault, got {:?}",
+            out[0].result
+        );
+        assert_eq!(out[0].slot, None, "never reached a slot");
+        assert_eq!(ok_tokens(&out[1]), vec![50, 1], "the healthy request still serves");
+        assert_eq!(b.stats().faulted, 1);
+        assert_eq!(b.stats().retired, 1);
+    }
+
+    #[test]
+    fn shed_on_full_queue() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1).with_queue_limit(2);
+        assert_eq!(b.submit(req(3, 0, 16)), Ok(0));
+        assert_eq!(b.submit(req(3, 1, 16)), Ok(1));
+        // Queue is at its bound: the third submission sheds, and the id
+        // space records the rejection nowhere (no ghost completions).
+        assert_eq!(b.submit(req(3, 2, 16)), Err(ServeError::Overloaded));
+        assert_eq!(b.stats().shed, 1);
+        assert_eq!(b.pending(), 2);
+        // Ticking admits one (freeing queue room): submission works again.
+        let _ = b.tick();
+        assert_eq!(b.submit(req(3, 3, 16)), Ok(2), "queue drained below the bound");
+        let out = b.run_until_drained();
+        let served: Vec<u64> = out.iter().filter(|c| c.result.is_ok()).map(|c| c.id).collect();
+        assert_eq!(served, vec![0, 1, 2], "accepted requests all complete, FIFO");
+        assert_eq!(b.stats().shed, 1, "exactly one shed");
+    }
+
+    #[test]
+    fn deadline_expiry_retires_in_ascending_slot_order() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        let limits = RequestLimits::none().with_deadline(2);
+        // Three long requests that cannot finish within 2 steps, plus a
+        // queued fourth that inherits the freed capacity.
+        for i in 0..3 {
+            b.submit_with(req(10, i, 16), limits).unwrap();
+        }
+        b.submit(req(1, 3, 16)).unwrap();
+        assert!(b.tick().is_empty(), "step 1: nothing expires, nothing completes");
+        assert!(b.tick().is_empty(), "step 2: deadline not yet elapsed at tick start");
+        // Tick 3 starts at steps == 2: all three live slots are expired,
+        // in ascending slot order, and the queued request is admitted
+        // into freed capacity in the same tick.
+        let out = b.tick();
+        let expired: Vec<(u64, Option<usize>)> = out
+            .iter()
+            .filter(|c| c.result == Err(ServeError::DeadlineExceeded))
+            .map(|c| (c.id, c.slot))
+            .collect();
+        assert_eq!(
+            expired,
+            vec![(0, Some(0)), (1, Some(1)), (2, Some(2))],
+            "expiry retires in ascending slot order"
+        );
+        let served: Vec<u64> = out.iter().filter(|c| c.result.is_ok()).map(|c| c.id).collect();
+        assert_eq!(served, vec![3], "freed capacity admits + completes the 1-step request");
+        assert_eq!(b.stats().expired, 3);
+        assert_eq!(b.stats().retired, 1);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn deadline_expires_queued_requests_too() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1);
+        b.submit(req(5, 0, 16)).unwrap(); // occupies the only slot
+        b.submit_with(req(1, 1, 16), RequestLimits::none().with_deadline(2)).unwrap();
+        let mut outcomes = Vec::new();
+        while !b.idle() {
+            outcomes.extend(b.tick());
+        }
+        let queued_victim = outcomes.iter().find(|c| c.id == 1).expect("one outcome per request");
+        assert_eq!(queued_victim.result, Err(ServeError::DeadlineExceeded));
+        assert_eq!(queued_victim.slot, None, "expired while queued: never held a slot");
+        assert!(outcomes.iter().any(|c| c.id == 0 && c.result.is_ok()));
+        assert_eq!(b.stats().expired, 1);
+    }
+
+    #[test]
+    fn max_new_tokens_truncates_successfully() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1);
+        b.submit_with(req(10, 9, 16), RequestLimits::none().with_max_new_tokens(3)).unwrap();
+        let out = b.run_until_drained();
+        assert_eq!(out.len(), 1);
+        assert_eq!(ok_tokens(&out[0]), vec![9, 3], "stopped after 3 generated tokens");
+        assert_eq!(b.stats().steps, 3);
+        assert_eq!(b.stats().retired, 1);
+        assert_eq!(b.stats().truncated, 1, "budget-capped retirement is counted");
+        assert_eq!(b.stats().expired, 0, "truncation is success, not expiry");
+    }
+
+    #[test]
+    fn drain_mode_rejects_admissions_but_finishes_backlog() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1);
+        b.submit(req(2, 0, 16)).unwrap();
+        b.submit(req(2, 1, 16)).unwrap();
+        b.begin_drain();
+        assert!(b.draining());
+        assert_eq!(b.submit(req(1, 2, 16)), Err(ServeError::Overloaded), "draining sheds");
+        let out = b.run_until_drained();
+        let served: Vec<u64> = out.iter().filter(|c| c.result.is_ok()).map(|c| c.id).collect();
+        assert_eq!(served, vec![0, 1], "queued and live work still completes");
+        assert_eq!(b.stats().shed, 1);
+        assert!(b.idle());
+        // Accounting identity at drain: every submission has one outcome.
+        let s = b.stats();
+        assert_eq!(3, s.retired + s.shed + s.expired + s.cancelled + s.faulted);
+    }
+
+    #[test]
+    fn cancel_retires_live_slot_and_queued_request() {
+        // The slot-leak regression: a live request whose client vanished
+        // must free its slot instead of stepping to EOS for nobody.
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 1);
+        let live_id = b.submit(req(10, 0, 16)).unwrap();
+        let queued_id = b.submit(req(1, 1, 16)).unwrap();
+        let _ = b.tick(); // admits live_id into slot 0
+        assert_eq!(b.live(), 1);
+        assert!(b.cancel(live_id), "live slot cancels");
+        assert_eq!(b.live(), 0, "slot freed immediately, no step to EOS");
+        assert!(!b.cancel(live_id), "cancel is idempotent per id");
+        // The freed slot serves the queued request on the next tick.
+        let out = b.run_until_drained();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, queued_id);
+        assert!(out[0].result.is_ok());
+        // Cancelling a queued request removes it before admission.
+        let q = b.submit(req(5, 2, 16)).unwrap();
+        assert!(b.cancel(q));
+        assert!(b.idle(), "cancelled queue entry never admits");
+        assert_eq!(b.stats().cancelled, 2);
+    }
+
+    /// Engine whose step fails (Err or panic) whenever a slot with a
+    /// negative tag is in the batch — the minimal poisoned-request twin
+    /// of `testkit::faultkit` for isolation unit tests.
+    struct PoisonEngine {
+        seq: usize,
+        panics: bool,
+    }
+
+    impl SlotEngine for PoisonEngine {
+        type Slot = ScriptSlot;
+
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn admit(&self, src_row: &[i32]) -> anyhow::Result<ScriptSlot> {
+            Ok(ScriptSlot { need: src_row[0] as usize, len: 0, tag: src_row[1] })
+        }
+
+        fn step(&self, slots: &mut [&mut ScriptSlot]) -> anyhow::Result<()> {
+            // Fail *before* mutating anything: slots stay re-steppable.
+            if slots.iter().any(|s| s.tag < 0) {
+                if self.panics {
+                    panic!("poisoned tag in batch");
+                }
+                anyhow::bail!("poisoned tag in batch");
+            }
+            for s in slots.iter_mut() {
+                s.len += 1;
+            }
+            Ok(())
+        }
+
+        fn slot_complete(&self, s: &ScriptSlot) -> bool {
+            s.len >= s.need || s.len + 1 >= self.seq
+        }
+
+        fn slot_output(&self, s: &ScriptSlot) -> Vec<i32> {
+            vec![s.tag, s.len as i32]
+        }
+    }
+
+    #[test]
+    fn step_fault_is_isolated_to_the_poisoned_slot() {
+        for panics in [false, true] {
+            let e = PoisonEngine { seq: 16, panics };
+            let mut b = ContinuousBatcher::new(&e, 3);
+            b.submit(req(3, 7, 16)).unwrap(); // healthy
+            let mut poison = req(3, 0, 16);
+            poison[1] = -1; // poisoned tag
+            let bad = b.submit(poison).unwrap();
+            b.submit(req(3, 8, 16)).unwrap(); // healthy
+            let out = b.run_until_drained();
+            assert_eq!(out.len(), 3, "every request gets exactly one outcome");
+            let fault = out.iter().find(|c| c.id == bad).unwrap();
+            assert!(
+                matches!(&fault.result, Err(ServeError::EngineFault(m)) if m.contains("poisoned")),
+                "poisoned request retires as EngineFault (panics={panics}): {:?}",
+                fault.result
+            );
+            // The healthy slots finish with exactly the outputs a
+            // fault-free run produces: 3 steps, their own tags.
+            let mut healthy: Vec<Vec<i32>> =
+                out.iter().filter(|c| c.result.is_ok()).map(ok_tokens).collect();
+            healthy.sort();
+            assert_eq!(healthy, vec![vec![7, 3], vec![8, 3]], "panics={panics}");
+            assert_eq!(b.stats().faulted, 1);
+            assert_eq!(b.stats().retired, 2);
+        }
+    }
+
+    #[test]
+    fn accounting_identity_over_a_mixed_trace() {
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 2).with_queue_limit(2);
+        let mut submitted = 0usize;
+        let mut outcomes = 0usize;
+        let mut cancelled_by_us = 0usize;
+        for i in 0..10 {
+            let limits = if i % 3 == 0 {
+                RequestLimits::none().with_deadline(1)
+            } else {
+                RequestLimits::none()
+            };
+            match b.submit_with(req(4, i, 16), limits) {
+                Ok(id) => {
+                    submitted += 1;
+                    if i == 4 && b.cancel(id) {
+                        cancelled_by_us += 1;
+                    }
+                }
+                Err(ServeError::Overloaded) => {
+                    submitted += 1;
+                    outcomes += 1; // the shed IS the outcome
+                }
+                Err(e) => panic!("unexpected submit error {e}"),
+            }
+            outcomes += b.tick().len();
+        }
+        outcomes += b.run_until_drained().len();
+        outcomes += cancelled_by_us;
+        assert_eq!(outcomes, submitted, "every submission gets exactly one terminal outcome");
+        let s = b.stats();
+        assert_eq!(
+            submitted,
+            s.retired + s.shed + s.expired + s.cancelled + s.faulted,
+            "stats balance: {s:?}"
+        );
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! backend, under either batching discipline.
 //!
 //! Demonstrates the deployment story: single-sentence translation
-//! requests arrive on a channel and are answered with de-framed tokens +
-//! latency, by one of two server loops:
+//! requests arrive on a channel and are answered with a typed terminal
+//! outcome — de-framed tokens + latency ([`Response`]) or a
+//! [`ServeError`] — by one of two server loops:
 //!
 //! * **static** ([`serve_loop`]) — group whatever is queued up to the
 //!   backend's batch capacity, execute one monolithic translate call per
@@ -19,6 +20,16 @@
 //!   is queued, and responses are **bit-identical** to the static loop's
 //!   (slot independence; pinned by the serving soak test).
 //!
+//! The continuous loop carries the fault-tolerance layer
+//! ([`super::fault`]): bounded admission sheds with `Overloaded`
+//! ([`ServeConfig::queue_limit`]), per-request deadlines and token
+//! budgets are enforced by the batcher tick, a dropped response receiver
+//! cancels its request instead of leaking the slot, engine faults and
+//! panics retire only the poisoned request, and a [`ShutdownSignal`]
+//! drains the loop gracefully — admissions stop, in-flight work
+//! finishes, and the final [`ServeStats`] balance:
+//! `received == served + shed + expired + cancelled + faulted`.
+//!
 //! Python is nowhere on either path. The batching logic ([`pack_rows`],
 //! [`serve_loop`], the scheduler in `coordinator::scheduler`) is split
 //! out of the demo driver so it can be unit-tested against mock backends
@@ -26,7 +37,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -36,6 +47,9 @@ use crate::runtime::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
+use super::fault::{
+    response_channel, RequestLimits, Response, ResponseTx, ServeError, ShutdownSignal,
+};
 use super::scheduler::{Batcher, ContinuousBatcher};
 
 #[cfg(feature = "pjrt")]
@@ -45,21 +59,68 @@ use crate::runtime::{PjrtBackend, TranslateSession};
 use super::Coordinator;
 use super::Method;
 
-/// One translation request: source tokens in, (tokens, latency_s) out.
+/// How often the continuous loop wakes from an idle block to re-check
+/// its [`ShutdownSignal`] (only when one is configured; without it the
+/// loop blocks indefinitely, woken by requests alone).
+const SHUTDOWN_POLL: Duration = Duration::from_millis(5);
+
+/// One translation request: source tokens in, exactly one terminal
+/// outcome out through the one-shot `respond` channel.
 pub struct Request {
     pub tokens: Vec<i32>,
     pub t_arrival: Instant,
-    pub respond: mpsc::Sender<(Vec<i32>, f64)>,
+    pub respond: ResponseTx,
+    /// Per-request deadline/length budget; unset fields fall back to the
+    /// server's [`ServeConfig::default_limits`].
+    pub limits: RequestLimits,
+}
+
+impl Request {
+    pub fn new(tokens: Vec<i32>, respond: ResponseTx) -> Request {
+        Request { tokens, t_arrival: Instant::now(), respond, limits: RequestLimits::none() }
+    }
+
+    pub fn with_limits(mut self, limits: RequestLimits) -> Request {
+        self.limits = limits;
+        self
+    }
+}
+
+/// Serving knobs shared by [`serve_loop_continuous`] and the demo
+/// drivers. [`ServeConfig::new`] gives the permissive defaults:
+/// unbounded queue, no deadlines, no shutdown signal.
+#[derive(Clone, Default)]
+pub struct ServeConfig {
+    /// Concurrent decode slots (the continuous batcher's capacity).
+    pub capacity: usize,
+    /// Admission-queue bound; `None` is unbounded, `Some(n)` sheds with
+    /// [`ServeError::Overloaded`] once `n` requests wait.
+    pub queue_limit: Option<usize>,
+    /// Server-side limits applied to requests that don't carry their
+    /// own ([`RequestLimits::or`]).
+    pub default_limits: RequestLimits,
+    /// Graceful-shutdown signal; when set, the loop polls it while idle
+    /// and drains (no new admissions, in-flight work finishes) once
+    /// flipped.
+    pub shutdown: Option<ShutdownSignal>,
+}
+
+impl ServeConfig {
+    pub fn new(capacity: usize) -> ServeConfig {
+        ServeConfig { capacity, ..ServeConfig::default() }
+    }
 }
 
 /// Aggregate outcome of one [`serve_loop`] / [`serve_loop_continuous`]
 /// run.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
-    /// Responses sent. Balances [`received`](Self::received) on a clean
-    /// run: every request taken off the channel is answered exactly once.
+    /// Successful responses sent.
     pub served: usize,
-    /// Requests taken off the channel.
+    /// Requests taken off the channel. Balances on every run (clean,
+    /// overloaded, faulted, or drained):
+    /// `received == served + shed + expired + cancelled + faulted` —
+    /// every request taken off the channel gets exactly one outcome.
     pub received: usize,
     /// Static loop: translate calls. Continuous loop: decode steps.
     pub batches: usize,
@@ -68,17 +129,51 @@ pub struct ServeStats {
     /// numerator of the serving throughput number.
     pub tokens: usize,
     /// Per-request latency samples (seconds, arrival to response), as
-    /// observed by the server loop itself.
+    /// observed by the server loop itself. Successful responses only.
     pub latency: Summary,
     /// Mean fraction of batch/slot capacity occupied per translate call
     /// (static) or decode step (continuous), in `[0, 1]`.
     pub occupancy: f64,
+    /// Requests shed at admission with [`ServeError::Overloaded`].
+    pub shed: usize,
+    /// Requests retired with [`ServeError::DeadlineExceeded`].
+    pub expired: usize,
+    /// Requests cancelled after their client disconnected.
+    pub cancelled: usize,
+    /// Requests retired with [`ServeError::EngineFault`].
+    pub faulted: usize,
 }
 
 impl ServeStats {
     /// Generated tokens per wall-clock second over the whole run.
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens as f64 / self.wall_s.max(1e-12)
+    }
+
+    /// Requests that ended in a typed error (the non-`served` outcomes).
+    pub fn failed(&self) -> usize {
+        self.shed + self.expired + self.cancelled + self.faulted
+    }
+
+    /// The accounting identity every run must satisfy.
+    pub fn is_balanced(&self) -> bool {
+        self.received == self.served + self.failed()
+    }
+
+    fn empty(wall_s: f64) -> ServeStats {
+        ServeStats {
+            served: 0,
+            received: 0,
+            batches: 0,
+            wall_s,
+            tokens: 0,
+            latency: Summary::new(),
+            occupancy: 0.0,
+            shed: 0,
+            expired: 0,
+            cancelled: 0,
+            faulted: 0,
+        }
     }
 }
 
@@ -115,9 +210,11 @@ fn next_batch(rx: &mpsc::Receiver<Request>, capacity: usize) -> Option<Vec<Reque
     Some(batch)
 }
 
-/// The server loop: batch requests off `rx`, execute them on `backend`,
-/// respond with de-framed tokens + latency, until `n_requests` have been
-/// served or the channel disconnects.
+/// The static server loop: batch requests off `rx`, execute them on
+/// `backend`, respond with de-framed tokens + latency, until
+/// `n_requests` have received an outcome or the channel disconnects.
+/// A failing translate call faults only its own batch (each member gets
+/// [`ServeError::EngineFault`]); the loop keeps serving.
 pub fn serve_loop(
     backend: &dyn TranslateBackend,
     rx: &mpsc::Receiver<Request>,
@@ -128,21 +225,38 @@ pub fn serve_loop(
     let s = backend.seq_len();
     let t0 = Instant::now();
     let mut served = 0usize;
+    let mut received = 0usize;
+    let mut cancelled = 0usize;
+    let mut faulted = 0usize;
     let mut batches = 0usize;
     let mut tokens = 0usize;
     let mut occupied_rows = 0usize;
     let mut latency = Summary::new();
-    while served < n_requests {
+    while served + cancelled + faulted < n_requests {
         let Some(batch) = next_batch(rx, b) else { break };
+        received += batch.len();
         occupied_rows += batch.len();
         let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
         // Fixed-shape backends (AOT artifacts) need the full compiled
         // batch; variable-shape ones only pay for the rows they got.
         let pack_to = if backend.fixed_shape() { b } else { rows.len() };
         let src = pack_rows(&rows, pack_to, s, dims.pad_id);
-        let out = backend.translate(&src)?;
+        batches += 1;
+        let out = match backend.translate(&src) {
+            Ok(out) => out,
+            Err(e) => {
+                // The whole batch shares the translate call, so the
+                // fault is attributed to every member — typed errors,
+                // not a dead server.
+                for req in batch {
+                    req.respond.send(Err(ServeError::EngineFault(format!("{e:#}"))));
+                    faulted += 1;
+                }
+                continue;
+            }
+        };
         let now = Instant::now();
-        for (row, req) in batch.iter().enumerate() {
+        for (row, req) in batch.into_iter().enumerate() {
             let toks = strip_specials(
                 &out[row * s..(row + 1) * s],
                 dims.bos_id,
@@ -152,128 +266,234 @@ pub fn serve_loop(
             let lat = now.duration_since(req.t_arrival).as_secs_f64();
             tokens += toks.len();
             latency.add(lat);
-            req.respond.send((toks, lat)).ok();
-        }
-        served += batch.len();
-        batches += 1;
-    }
-    Ok(ServeStats {
-        served,
-        received: served,
-        batches,
-        wall_s: t0.elapsed().as_secs_f64(),
-        tokens,
-        latency,
-        occupancy: occupied_rows as f64 / (batches * b).max(1) as f64,
-    })
-}
-
-/// The continuous server loop: drive a [`ContinuousBatcher`] over a slot
-/// engine. Each round drains whatever the channel already holds into the
-/// admission queue (blocking only when there is nothing live or queued
-/// to step), ticks the batcher — retire, admit, one mixed-age decode
-/// step — and responds to completions with de-framed tokens + latency.
-/// Runs until `n_requests` have been served or the channel disconnects
-/// and the backlog drains. Responses are bit-identical to the static
-/// loop's for the same requests (slot independence).
-pub fn serve_loop_continuous<E: SlotEngine>(
-    engine: &E,
-    rx: &mpsc::Receiver<Request>,
-    dims: &ModelDims,
-    n_requests: usize,
-    capacity: usize,
-) -> Result<ServeStats> {
-    let s = engine.slot_seq_len();
-    let t0 = Instant::now();
-    let mut batcher = ContinuousBatcher::new(engine, capacity);
-    let mut inflight: HashMap<u64, Request> = HashMap::new();
-    let mut received = 0usize;
-    let mut served = 0usize;
-    let mut tokens = 0usize;
-    let mut latency = Summary::new();
-    let mut disconnected = false;
-    let mut enqueue = |req: Request,
-                       batcher: &mut ContinuousBatcher<E>,
-                       inflight: &mut HashMap<u64, Request>| {
-        let id = batcher.submit(pack_rows(&[req.tokens.as_slice()], 1, s, dims.pad_id));
-        inflight.insert(id, req);
-    };
-    while served < n_requests {
-        // Block for a request only when a tick would be an idle no-op;
-        // otherwise drain the channel opportunistically between steps.
-        if batcher.idle() {
-            if received >= n_requests || disconnected {
-                break;
+            if req.respond.send(Ok(Response { tokens: toks, latency_s: lat })) {
+                served += 1;
+            } else {
+                // Receiver gone: the work was done, but nobody read it.
+                cancelled += 1;
             }
-            let Ok(req) = rx.recv() else { break };
-            enqueue(req, &mut batcher, &mut inflight);
-            received += 1;
-        }
-        while received < n_requests && !disconnected {
-            match rx.try_recv() {
-                Ok(req) => {
-                    enqueue(req, &mut batcher, &mut inflight);
-                    received += 1;
-                }
-                Err(mpsc::TryRecvError::Disconnected) => disconnected = true,
-                Err(mpsc::TryRecvError::Empty) => break,
-            }
-        }
-        let completions = batcher.tick()?;
-        let now = Instant::now();
-        for c in completions {
-            let Some(req) = inflight.remove(&c.id) else { continue };
-            let toks = strip_specials(&c.tokens, dims.bos_id, dims.eos_id, dims.pad_id);
-            let lat = now.duration_since(req.t_arrival).as_secs_f64();
-            tokens += toks.len();
-            latency.add(lat);
-            req.respond.send((toks, lat)).ok();
-            served += 1;
         }
     }
     Ok(ServeStats {
         served,
         received,
-        batches: batcher.stats().steps,
+        batches,
         wall_s: t0.elapsed().as_secs_f64(),
         tokens,
         latency,
-        occupancy: batcher.occupancy(),
+        occupancy: occupied_rows as f64 / (batches * b).max(1) as f64,
+        shed: 0,
+        expired: 0,
+        cancelled,
+        faulted,
     })
 }
 
-/// Spawn the closed-loop demo client: submits `n_requests` random test
-/// sentences back-to-back (each waits for its response before the next
-/// goes out; the batcher still groups concurrent stragglers). Returns
-/// client-observed latencies + the received translations on join.
+/// The continuous server loop: drive a [`ContinuousBatcher`] over a slot
+/// engine. Each round drains whatever the channel already holds into the
+/// admission queue (shedding with [`ServeError::Overloaded`] past
+/// `cfg.queue_limit`), cancels requests whose clients disconnected,
+/// ticks the batcher — expire, retire, admit, one mixed-age decode
+/// step — and delivers every completion's terminal outcome. Runs until
+/// `n_requests` outcomes are delivered, or the channel disconnects and
+/// the backlog drains, or `cfg.shutdown` flips and the drain finishes.
+/// Successful responses are bit-identical to the static loop's for the
+/// same requests (slot independence), whatever faults hit other slots.
+pub fn serve_loop_continuous<E: SlotEngine>(
+    engine: &E,
+    rx: &mpsc::Receiver<Request>,
+    dims: &ModelDims,
+    n_requests: usize,
+    cfg: &ServeConfig,
+) -> Result<ServeStats> {
+    let s = engine.slot_seq_len();
+    let t0 = Instant::now();
+    let mut batcher = ContinuousBatcher::new(engine, cfg.capacity);
+    if let Some(limit) = cfg.queue_limit {
+        batcher = batcher.with_queue_limit(limit);
+    }
+    let mut inflight: HashMap<u64, Request> = HashMap::new();
+    let mut received = 0usize;
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut expired = 0usize;
+    let mut cancelled = 0usize;
+    let mut faulted = 0usize;
+    let mut done = 0usize;
+    let mut tokens = 0usize;
+    let mut latency = Summary::new();
+    let mut disconnected = false;
+    loop {
+        let draining = cfg.shutdown.as_ref().is_some_and(|sig| sig.is_draining());
+        if draining && !batcher.draining() {
+            batcher.begin_drain();
+        }
+        if batcher.idle() {
+            if done >= n_requests || received >= n_requests || disconnected || draining {
+                break;
+            }
+            // Block for a request only when a tick would be an idle
+            // no-op — with a poll interval when a shutdown signal could
+            // arrive while we sleep.
+            let first = match &cfg.shutdown {
+                None => rx.recv().map_err(|_| ()),
+                Some(_) => match rx.recv_timeout(SHUTDOWN_POLL) {
+                    Ok(req) => Ok(req),
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Err(()),
+                },
+            };
+            match first {
+                Ok(req) => {
+                    received += 1;
+                    let _ = admit_or_shed(req, cfg, s, dims.pad_id, &mut batcher, &mut inflight);
+                }
+                Err(()) => {
+                    disconnected = true;
+                    continue;
+                }
+            }
+        }
+        // Opportunistically drain the channel between steps.
+        while received < n_requests && !disconnected && !draining {
+            match rx.try_recv() {
+                Ok(req) => {
+                    received += 1;
+                    let _ = admit_or_shed(req, cfg, s, dims.pad_id, &mut batcher, &mut inflight);
+                }
+                Err(mpsc::TryRecvError::Disconnected) => disconnected = true,
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        // Cancel orphans: a dropped response receiver means nobody will
+        // read the answer — retire the slot now instead of decoding to
+        // EOS for nobody (the slot-leak fix).
+        let orphans: Vec<u64> = inflight
+            .iter()
+            .filter(|(_, req)| req.respond.is_disconnected())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in orphans {
+            if batcher.cancel(id) {
+                inflight.remove(&id);
+                cancelled += 1;
+                done += 1;
+            }
+        }
+        for c in batcher.tick() {
+            let Some(req) = inflight.remove(&c.id) else { continue };
+            done += 1;
+            match c.result {
+                Ok(buf) => {
+                    let toks = strip_specials(&buf, dims.bos_id, dims.eos_id, dims.pad_id);
+                    let lat = Instant::now().duration_since(req.t_arrival).as_secs_f64();
+                    tokens += toks.len();
+                    latency.add(lat);
+                    req.respond.send(Ok(Response { tokens: toks, latency_s: lat }));
+                    served += 1;
+                }
+                Err(e) => {
+                    match &e {
+                        ServeError::DeadlineExceeded => expired += 1,
+                        ServeError::EngineFault(_) => faulted += 1,
+                        ServeError::Overloaded => shed += 1,
+                        ServeError::Cancelled => cancelled += 1,
+                    }
+                    req.respond.send(Err(e));
+                }
+            }
+        }
+        if done >= n_requests {
+            break;
+        }
+    }
+    // Sheds happen at submit time (admit_or_shed responds immediately
+    // and never inserts into `inflight`); fold them in from the batcher,
+    // whose counter is authoritative for admission rejections.
+    shed += batcher.stats().shed;
+    let mut stats = ServeStats::empty(t0.elapsed().as_secs_f64());
+    stats.served = served;
+    stats.received = received;
+    stats.batches = batcher.stats().steps;
+    stats.tokens = tokens;
+    stats.latency = latency;
+    stats.occupancy = batcher.occupancy();
+    stats.shed = shed;
+    stats.expired = expired;
+    stats.cancelled = cancelled;
+    stats.faulted = faulted;
+    Ok(stats)
+}
+
+/// Pack, apply server-side default limits, and submit one request; on
+/// [`ServeError::Overloaded`] the client is answered immediately and the
+/// request never enters `inflight`.
+fn admit_or_shed<E: SlotEngine>(
+    req: Request,
+    cfg: &ServeConfig,
+    seq: usize,
+    pad: i32,
+    batcher: &mut ContinuousBatcher<E>,
+    inflight: &mut HashMap<u64, Request>,
+) -> Option<u64> {
+    let limits = req.limits.or(cfg.default_limits);
+    let row = pack_rows(&[req.tokens.as_slice()], 1, seq, pad);
+    match batcher.submit_with(row, limits) {
+        Ok(id) => {
+            inflight.insert(id, req);
+            Some(id)
+        }
+        Err(e) => {
+            req.respond.send(Err(e));
+            None
+        }
+    }
+}
+
+/// Spawn the demo client: submits `n_requests` random test sentences in
+/// waves of `burst` (1 = closed loop: each request waits for its
+/// outcome before the next goes out; larger bursts overlap requests and
+/// can drive the server into overload). Returns client-observed
+/// latencies, the received translations, and the number of error
+/// outcomes on join.
 fn spawn_client(
     corpus: Corpus,
     n_requests: usize,
+    burst: usize,
     tx: mpsc::Sender<Request>,
-) -> std::thread::JoinHandle<(Summary, Vec<Vec<i32>>)> {
+) -> std::thread::JoinHandle<(Summary, Vec<Vec<i32>>, usize)> {
     std::thread::spawn(move || {
+        let burst = burst.max(1);
         let mut rng = Pcg64::new(0xBEEF);
         let mut latencies = Summary::new();
         let mut done = Vec::new();
-        for _ in 0..n_requests {
-            let i = rng.below(corpus.n);
-            let (rtx, rrx) = mpsc::channel();
-            let t_submit = Instant::now();
-            tx.send(Request {
-                tokens: corpus.src_row(i).to_vec(),
-                t_arrival: t_submit,
-                respond: rtx,
-            })
-            .ok();
-            // Latency is measured at receive time, so it includes the
-            // response channel hop the server-side percentile rows can't
-            // see.
-            if let Ok((toks, _lat)) = rrx.recv() {
-                latencies.add(t_submit.elapsed().as_secs_f64());
-                done.push(toks);
+        let mut errors = 0usize;
+        let mut sent = 0usize;
+        while sent < n_requests {
+            let wave = burst.min(n_requests - sent);
+            let mut pending = Vec::with_capacity(wave);
+            for _ in 0..wave {
+                let i = rng.below(corpus.n);
+                let (rtx, rrx) = response_channel();
+                let t_submit = Instant::now();
+                tx.send(Request::new(corpus.src_row(i).to_vec(), rtx)).ok();
+                pending.push((t_submit, rrx));
+                sent += 1;
+            }
+            for (t_submit, rrx) in pending {
+                // Latency is measured at receive time, so it includes
+                // the response channel hop the server-side percentile
+                // rows can't see.
+                match rrx.recv() {
+                    Some(Ok(resp)) => {
+                        latencies.add(t_submit.elapsed().as_secs_f64());
+                        done.push(resp.tokens);
+                    }
+                    Some(Err(_)) | None => errors += 1,
+                }
             }
         }
-        (latencies, done)
+        (latencies, done, errors)
     })
 }
 
@@ -285,6 +505,7 @@ fn print_demo_stats(
     stats: &ServeStats,
     latencies: &Summary,
     translations: &[Vec<i32>],
+    client_errors: usize,
 ) {
     println!(
         "== serving demo ({label}, backend {kind}, {} batcher, capacity {capacity}) ==",
@@ -303,6 +524,13 @@ fn print_demo_stats(
         stats.tokens
     );
     println!("occupancy     : {:.1}% of capacity per {unit}", stats.occupancy * 100.0);
+    if stats.failed() > 0 || client_errors > 0 {
+        println!(
+            "errors        : shed {} expired {} cancelled {} faulted {} \
+             (client saw {client_errors} error outcomes)",
+            stats.shed, stats.expired, stats.cancelled, stats.faulted
+        );
+    }
     println!(
         "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3} (client-observed)",
         latencies.quantile(0.5),
@@ -334,9 +562,11 @@ pub fn run_demo(
     label: &str,
 ) -> Result<ServeStats> {
     let (tx, rx) = mpsc::channel::<Request>();
-    let client = spawn_client(corpus, n_requests, tx);
+    let client = spawn_client(corpus, n_requests, 1, tx);
     let stats = serve_loop(backend, &rx, dims, n_requests)?;
-    let (latencies, translations) = client.join().expect("client thread");
+    let (latencies, translations, client_errors) = client
+        .join()
+        .map_err(|_| anyhow::anyhow!("serve demo client thread panicked"))?;
     print_demo_stats(
         label,
         backend.kind(),
@@ -345,35 +575,57 @@ pub fn run_demo(
         &stats,
         &latencies,
         &translations,
+        client_errors,
     );
     Ok(stats)
 }
 
-/// [`run_demo`]'s twin over the **continuous** batcher: same closed-loop
-/// client, served by [`serve_loop_continuous`] at `capacity` slots.
+/// [`run_demo`]'s twin over the **continuous** batcher: the same demo
+/// client (at `burst` requests in flight), served by
+/// [`serve_loop_continuous`] under `cfg`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_demo_continuous<E: SlotEngine>(
     engine: &E,
     kind: &str,
-    capacity: usize,
+    cfg: &ServeConfig,
+    burst: usize,
     corpus: Corpus,
     dims: &ModelDims,
     n_requests: usize,
     label: &str,
 ) -> Result<ServeStats> {
     let (tx, rx) = mpsc::channel::<Request>();
-    let client = spawn_client(corpus, n_requests, tx);
-    let stats = serve_loop_continuous(engine, &rx, dims, n_requests, capacity)?;
-    let (latencies, translations) = client.join().expect("client thread");
+    let client = spawn_client(corpus, n_requests, burst, tx);
+    let stats = serve_loop_continuous(engine, &rx, dims, n_requests, cfg)?;
+    let (latencies, translations, client_errors) = client
+        .join()
+        .map_err(|_| anyhow::anyhow!("serve demo client thread panicked"))?;
     print_demo_stats(
         label,
         kind,
         Batcher::Continuous,
-        capacity,
+        cfg.capacity,
         &stats,
         &latencies,
         &translations,
+        client_errors,
     );
     Ok(stats)
+}
+
+/// Robustness knobs for [`serve_demo_native`] (all default to the
+/// permissive demo behavior). These only apply under
+/// `Batcher::Continuous` — the static loop has no admission queue,
+/// deadlines, or bursts to tune.
+#[derive(Debug, Clone, Default)]
+pub struct ServeTuning {
+    /// Admission-queue bound (sheds with `Overloaded` beyond it).
+    pub queue_limit: Option<usize>,
+    /// Server-side default deadline/length limits.
+    pub limits: RequestLimits,
+    /// Demo-client burst size (requests in flight per wave; 0/1 =
+    /// closed loop).
+    pub burst: usize,
 }
 
 /// Serving demo on the native runtime: W8A8-quantized model (the
@@ -388,7 +640,9 @@ pub fn run_demo_continuous<E: SlotEngine>(
 /// serves them a `seq_len`-factor cheaper. `batcher` picks the serving
 /// discipline — static group-decode-respond waves, or the continuous
 /// slot scheduler (requires the cached decode policy; identical tokens
-/// either way, the batch just stays full under dynamic load).
+/// either way, the batch just stays full under dynamic load). `tuning`
+/// carries the continuous loop's robustness knobs (queue bound,
+/// default deadlines, client burst).
 pub fn serve_demo_native(
     manifest: &crate::model::Manifest,
     pair: &str,
@@ -397,6 +651,7 @@ pub fn serve_demo_native(
     mode: Mode,
     decode: DecodePolicy,
     batcher: Batcher,
+    tuning: &ServeTuning,
 ) -> Result<ServeStats> {
     let info = manifest
         .pairs
@@ -428,11 +683,14 @@ pub fn serve_demo_native(
                 "the continuous batcher schedules KV slots; it requires --decode cached \
                  (replay has no slot lifecycle to interleave)"
             );
-            let capacity = backend.batch();
+            let mut cfg = ServeConfig::new(backend.batch());
+            cfg.queue_limit = tuning.queue_limit;
+            cfg.default_limits = tuning.limits;
             run_demo_continuous(
                 &backend,
                 "native",
-                capacity,
+                &cfg,
+                tuning.burst,
                 corpus,
                 &manifest.model,
                 n_requests,
@@ -471,6 +729,8 @@ mod tests {
     use super::*;
 
     use std::cell::Cell;
+
+    use crate::coordinator::fault::ResponseRx;
 
     /// Echo backend: "translates" by returning the source buffer and
     /// records the size of the last call for shape assertions.
@@ -530,6 +790,19 @@ mod tests {
         }
     }
 
+    fn send_request(tx: &mpsc::Sender<Request>, tokens: Vec<i32>) -> ResponseRx {
+        let (rtx, rrx) = response_channel();
+        tx.send(Request::new(tokens, rtx)).unwrap();
+        rrx
+    }
+
+    fn recv_tokens(rrx: &ResponseRx) -> Vec<i32> {
+        match rrx.recv() {
+            Some(Ok(resp)) => resp.tokens,
+            other => panic!("expected a successful response, got {other:?}"),
+        }
+    }
+
     #[test]
     fn pack_rows_pads_and_truncates() {
         let rows: Vec<&[i32]> = vec![&[1, 5, 6, 2], &[1, 9, 2, 7, 7, 7]];
@@ -555,27 +828,19 @@ mod tests {
         // Queue 5 requests up-front: expect one full batch + one single.
         let mut receivers = Vec::new();
         for i in 0..5 {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: vec![1, 10 + i, 2],
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .unwrap();
-            receivers.push(rrx);
+            receivers.push(send_request(&tx, vec![1, 10 + i, 2]));
         }
         drop(tx);
         let stats = serve_loop(&backend, &rx, &d, 5).unwrap();
         assert_eq!(stats.served, 5);
+        assert!(stats.is_balanced(), "requests in == outcomes out: {stats:?}");
         assert_eq!(stats.batches, 2, "4-capacity batcher must split 5 into 4+1");
         assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
         assert_eq!(stats.latency.count(), 5, "one server-side latency sample per request");
         assert!(stats.tokens_per_s() > 0.0);
         for (i, rrx) in receivers.into_iter().enumerate() {
-            let (toks, lat) = rrx.recv().unwrap();
             // Echo + strip_specials leaves exactly the content token.
-            assert_eq!(toks, vec![10 + i as i32]);
-            assert!(lat >= 0.0);
+            assert_eq!(recv_tokens(&rrx), vec![10 + i as i32]);
         }
     }
 
@@ -591,14 +856,7 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request>();
         let mut receivers = Vec::new();
         for i in 0..2 {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: vec![1, 20 + i, 2],
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .unwrap();
-            receivers.push(rrx);
+            receivers.push(send_request(&tx, vec![1, 20 + i, 2]));
         }
         // NOTE: tx intentionally kept alive — no disconnect to fall back on.
         let stats = serve_loop(&backend, &rx, &d, 2).unwrap();
@@ -607,21 +865,65 @@ mod tests {
         assert_eq!(stats.batches, 1, "both queued requests flush in one partial batch");
         assert!((stats.occupancy - 0.5).abs() < 1e-12, "2 of 4 slots occupied");
         for (i, rrx) in receivers.into_iter().enumerate() {
-            let (toks, _) = rrx.recv().unwrap();
-            assert_eq!(toks, vec![20 + i as i32]);
+            assert_eq!(recv_tokens(&rrx), vec![20 + i as i32]);
         }
         drop(tx);
     }
 
+    /// Backend whose translate call always fails: the static loop must
+    /// answer the batch with typed `EngineFault`s and keep running.
+    struct Broken {
+        seq: usize,
+    }
+
+    impl TranslateBackend for Broken {
+        fn kind(&self) -> &'static str {
+            "broken"
+        }
+        fn batch(&self) -> usize {
+            2
+        }
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+        fn translate(&self, _src: &[i32]) -> Result<Vec<i32>> {
+            anyhow::bail!("matmul exploded")
+        }
+    }
+
+    #[test]
+    fn serve_loop_turns_translate_errors_into_engine_faults() {
+        let backend = Broken { seq: 4 };
+        let d = dims(4, 2);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let r0 = send_request(&tx, vec![1, 9, 2]);
+        let r1 = send_request(&tx, vec![1, 8, 2]);
+        drop(tx);
+        let stats = serve_loop(&backend, &rx, &d, 2).unwrap();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.faulted, 2, "the failing batch faults both members");
+        assert!(stats.is_balanced(), "{stats:?}");
+        for rrx in [r0, r1] {
+            match rrx.recv() {
+                Some(Err(ServeError::EngineFault(m))) => {
+                    assert!(m.contains("matmul exploded"), "fault carries the cause: {m}")
+                }
+                other => panic!("expected EngineFault, got {other:?}"),
+            }
+        }
+    }
+
     /// Minimal slot engine for continuous-loop unit tests: admission
-    /// stores the framed row, one step completes it, output echoes it.
+    /// stores the framed row; a slot completes after `need` steps
+    /// (default 1), output echoes the row.
     struct EchoSlots {
         seq: usize,
+        need: usize,
     }
 
     struct EchoSlot {
         row: Vec<i32>,
-        stepped: bool,
+        steps: usize,
     }
 
     impl crate::runtime::SlotEngine for EchoSlots {
@@ -631,16 +933,16 @@ mod tests {
         }
         fn admit(&self, src_row: &[i32]) -> Result<EchoSlot> {
             assert_eq!(src_row.len(), self.seq, "framed admission");
-            Ok(EchoSlot { row: src_row.to_vec(), stepped: false })
+            Ok(EchoSlot { row: src_row.to_vec(), steps: 0 })
         }
         fn step(&self, slots: &mut [&mut EchoSlot]) -> Result<()> {
             for s in slots.iter_mut() {
-                s.stepped = true;
+                s.steps += 1;
             }
             Ok(())
         }
         fn slot_complete(&self, slot: &EchoSlot) -> bool {
-            slot.stepped
+            slot.steps >= self.need
         }
         fn slot_output(&self, slot: &EchoSlot) -> Vec<i32> {
             slot.row.clone()
@@ -649,33 +951,122 @@ mod tests {
 
     #[test]
     fn continuous_loop_serves_and_balances() {
-        let engine = EchoSlots { seq: 6 };
+        let engine = EchoSlots { seq: 6, need: 1 };
         let d = dims(6, 4);
         let (tx, rx) = mpsc::channel::<Request>();
         let mut receivers = Vec::new();
         for i in 0..5 {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: vec![1, 30 + i, 2],
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .unwrap();
-            receivers.push(rrx);
+            receivers.push(send_request(&tx, vec![1, 30 + i, 2]));
         }
         drop(tx);
-        let stats = serve_loop_continuous(&engine, &rx, &d, 5, 3).unwrap();
+        let stats = serve_loop_continuous(&engine, &rx, &d, 5, &ServeConfig::new(3)).unwrap();
         assert_eq!(stats.served, 5);
         assert_eq!(stats.received, 5, "requests in == responses out");
+        assert!(stats.is_balanced(), "{stats:?}");
         assert!(stats.batches >= 2, "5 one-step requests need >= 2 decode steps at capacity 3");
         assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
         assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
         assert_eq!(stats.latency.count(), 5);
         for (i, rrx) in receivers.into_iter().enumerate() {
-            let (toks, lat) = rrx.recv().unwrap();
-            assert_eq!(toks, vec![30 + i as i32], "responses route to their requester, FIFO");
-            assert!(lat >= 0.0 && lat.is_finite());
+            assert_eq!(
+                recv_tokens(&rrx),
+                vec![30 + i as i32],
+                "responses route to their requester, FIFO"
+            );
         }
+    }
+
+    #[test]
+    fn continuous_loop_sheds_on_overload() {
+        let engine = EchoSlots { seq: 6, need: 1 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        // 8 requests pre-queued against a queue bound of 2: the first
+        // channel drain happens before any tick, so the queue absorbs 2
+        // and the other 6 are shed with an immediate typed rejection.
+        let receivers: Vec<ResponseRx> =
+            (0..8).map(|i| send_request(&tx, vec![1, 3 + i, 2])).collect();
+        drop(tx);
+        let mut cfg = ServeConfig::new(1);
+        cfg.queue_limit = Some(2);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 8, &cfg).unwrap();
+        assert_eq!(stats.received, 8);
+        assert_eq!(stats.shed, 6, "queue bound 2 absorbs 2 of the burst, 6 shed");
+        assert_eq!(stats.served, 2);
+        assert!(stats.is_balanced(), "{stats:?}");
+        let mut outcomes = [0usize; 2]; // [ok, overloaded]
+        for rrx in receivers {
+            match rrx.recv() {
+                Some(Ok(_)) => outcomes[0] += 1,
+                Some(Err(ServeError::Overloaded)) => outcomes[1] += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(outcomes, [2, 6], "every request answered exactly once");
+    }
+
+    #[test]
+    fn continuous_loop_cancels_disconnected_clients() {
+        // Slow engine (3 steps per request) so cancellation happens
+        // before natural completion; receiver 1 is dropped up-front.
+        let engine = EchoSlots { seq: 6, need: 3 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let keep0 = send_request(&tx, vec![1, 7, 2]);
+        let orphan = send_request(&tx, vec![1, 8, 2]);
+        let keep2 = send_request(&tx, vec![1, 9, 2]);
+        drop(orphan); // client walks away before the server even starts
+        drop(tx);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 3, &ServeConfig::new(2)).unwrap();
+        assert_eq!(stats.cancelled, 1, "orphaned request retired, not decoded to EOS");
+        assert_eq!(stats.served, 2);
+        assert!(stats.is_balanced(), "{stats:?}");
+        assert_eq!(recv_tokens(&keep0), vec![7]);
+        assert_eq!(recv_tokens(&keep2), vec![9], "slots after the orphan still serve");
+    }
+
+    #[test]
+    fn continuous_loop_applies_default_deadline() {
+        // An engine that never completes a slot: without the server-side
+        // default deadline this loop would spin forever.
+        let engine = EchoSlots { seq: 6, need: usize::MAX };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rrx = send_request(&tx, vec![1, 5, 2]);
+        drop(tx);
+        let mut cfg = ServeConfig::new(1);
+        cfg.default_limits = RequestLimits::none().with_deadline(4);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 1, &cfg).unwrap();
+        assert_eq!(stats.expired, 1);
+        assert!(stats.is_balanced(), "{stats:?}");
+        assert_eq!(rrx.recv(), Some(Err(ServeError::DeadlineExceeded)));
+        assert_eq!(stats.batches, 4, "exactly the deadline's worth of decode steps");
+    }
+
+    #[test]
+    fn continuous_loop_drains_gracefully_on_shutdown() {
+        let engine = EchoSlots { seq: 6, need: 2 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let shutdown = ShutdownSignal::new();
+        let mut cfg = ServeConfig::new(2);
+        cfg.shutdown = Some(shutdown.clone());
+        // Client thread: send 3 requests, wait for all outcomes, then
+        // signal drain. The server (open-ended n_requests) must exit on
+        // its own with balanced books — the join proves it.
+        let client = std::thread::spawn(move || {
+            let receivers: Vec<ResponseRx> =
+                (0..3).map(|i| send_request(&tx, vec![1, 4 + i, 2])).collect();
+            let served = receivers.iter().filter(|r| matches!(r.recv(), Some(Ok(_)))).count();
+            shutdown.drain();
+            served
+        });
+        let stats = serve_loop_continuous(&engine, &rx, &d, usize::MAX, &cfg).unwrap();
+        let served_by_client = client.join().expect("client thread");
+        assert_eq!(served_by_client, 3);
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.received, 3);
+        assert!(stats.is_balanced(), "drain exits with balanced books: {stats:?}");
     }
 
     #[test]
@@ -699,18 +1090,11 @@ mod tests {
         // A single queued request: the variable-shape path must translate
         // exactly one row (Echo asserts the buffer never exceeds what was
         // packed; a full-capacity pad would be 4 rows).
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Request {
-            tokens: vec![1, 42, 2],
-            t_arrival: Instant::now(),
-            respond: rtx,
-        })
-        .unwrap();
+        let rrx = send_request(&tx, vec![1, 42, 2]);
         drop(tx);
         let stats = serve_loop(&backend, &rx, &d, 1).unwrap();
         assert_eq!(stats.served, 1);
         assert_eq!(backend.last_len.get(), 6, "one row packed, not the full capacity");
-        let (toks, _) = rrx.recv().unwrap();
-        assert_eq!(toks, vec![42]);
+        assert_eq!(recv_tokens(&rrx), vec![42]);
     }
 }

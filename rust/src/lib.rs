@@ -31,7 +31,15 @@
 //!   sensitivity-based rank allocation ([`sra`]), FPGA analytical models
 //!   and dataflow simulator ([`hw`]), design-space exploration ([`dse`]),
 //!   BLEU evaluation service ([`eval`]) and the serving/experiment
-//!   coordinator ([`coordinator`]).
+//!   coordinator ([`coordinator`]). Serving is fault-tolerant: a typed
+//!   error taxonomy ([`coordinator::ServeError`] — overload shedding,
+//!   per-request decode-step deadlines, cancellation on client
+//!   disconnect, panic-isolated engine faults) guarantees every
+//!   admitted request exactly one terminal outcome, with graceful
+//!   drain on shutdown and balanced accounting
+//!   (`received == served + shed + expired + cancelled + faulted`).
+//!   The guarantee is exercised by a seeded deterministic
+//!   fault-injection harness ([`testkit::faultkit`]) in chaos soaks.
 //! * **Layer 2** — JAX transformer (`python/compile/model.py`), lowered
 //!   once to HLO text under `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing

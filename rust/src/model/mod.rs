@@ -13,6 +13,8 @@ mod weights;
 pub use manifest::{ArtifactSet, LinearInfo, Manifest, ModelDims, PairInfo};
 pub use weights::WeightStore;
 
+use anyhow::Context;
+
 use crate::tensor::Matrix;
 
 /// A loaded language-pair model: weights + calibration ranges.
@@ -31,11 +33,17 @@ impl PairModel {
             .get(pair)
             .ok_or_else(|| anyhow::anyhow!("unknown language pair {pair}"))?;
         let weights = WeightStore::load(&info.weights)?;
+        weights.check_finite().with_context(|| {
+            format!("weight store {:?} (pair {pair}) failed load-time validation", info.weights)
+        })?;
         for l in &manifest.linears {
             anyhow::ensure!(
                 weights.get(&l.name).map(|m| m.shape()) == Some((l.k, l.n)),
-                "weight store missing or mis-shaped linear {}",
-                l.name
+                "weight store {:?} missing or mis-shaped linear {} (expected {}x{})",
+                info.weights,
+                l.name,
+                l.k,
+                l.n
             );
         }
         Ok(PairModel {

@@ -111,6 +111,23 @@ impl WeightStore {
         self.entries.get(name).map(|(m, _)| m)
     }
 
+    /// Reject NaN/Inf weight values at load time, naming the offending
+    /// tensor, flat index and shape. A single non-finite entry would
+    /// otherwise propagate silently through every matmul and surface
+    /// as garbage tokens deep in decode — fail at the source instead.
+    pub fn check_finite(&self) -> Result<()> {
+        for (name, (m, _)) in &self.entries {
+            if let Some(i) = m.data().iter().position(|x| !x.is_finite()) {
+                let (rows, cols) = m.shape();
+                bail!(
+                    "tensor {name} ({rows}x{cols}) has non-finite value {} at flat index {i}",
+                    m.data()[i]
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// PJRT dims for a tensor: `[n]` for stored-1-D, `[rows, cols]` else.
     pub fn dims(&self, name: &str) -> Option<Vec<usize>> {
         self.entries.get(name).map(|(m, ndim)| {
@@ -250,6 +267,20 @@ mod tests {
         assert_eq!(r.get("w").unwrap().shape(), (3, 2));
         assert_eq!(r.get("w").unwrap().get(2, 1), 5.0);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_finite_names_the_bad_tensor() {
+        let mut s = WeightStore::new();
+        s.insert("enc0.ok", Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        assert!(s.check_finite().is_ok());
+        s.insert("dec1.bad", Matrix::from_vec(1, 3, vec![0.5, f32::NAN, 1.5]));
+        let err = s.check_finite().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dec1.bad"), "names the tensor: {msg}");
+        assert!(msg.contains("index 1"), "names the position: {msg}");
+        s.insert("dec1.bad", Matrix::from_vec(1, 2, vec![f32::INFINITY, 0.0]));
+        assert!(s.check_finite().is_err(), "Inf is rejected too");
     }
 
     #[test]

@@ -194,6 +194,15 @@ pub trait TranslateBackend {
 /// [`native::NativeBackend::step_slots`]). The associated `Slot` type
 /// keeps the scheduler generic, so its admission/retirement logic is
 /// unit-tested against scripted mock engines with no model at all.
+///
+/// Failure atomicity: a [`SlotEngine::step`] that returns `Err` (or
+/// panics) must leave every slot either unchanged or idempotently
+/// re-steppable — after a batched step fails, the batcher attributes
+/// the fault by re-stepping each slot individually and retires only the
+/// offender with `EngineFault`, so survivors must reproduce the same
+/// bits on the retry. The native engine validates before mutating;
+/// mocks and fault injectors (`testkit::faultkit`) check their fault
+/// scripts before delegating.
 pub trait SlotEngine {
     /// Per-sequence decode state owned by the engine.
     type Slot;

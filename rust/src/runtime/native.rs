@@ -912,6 +912,12 @@ impl NativeBackend {
     /// equal the ones replay recomputes each step. This independence is
     /// the architectural unlock for continuous batching: admitting or
     /// retiring a slot never perturbs another slot's bits.
+    ///
+    /// Failure atomicity: every `Err` return is raised by the validation
+    /// pre-pass below, **before** any slot state is touched, so a failed
+    /// step leaves all slots exactly as they were — the batcher's
+    /// per-slot fault attribution can re-step the survivors safely (the
+    /// [`crate::runtime::SlotEngine::step`] contract).
     pub fn step_slots(&self, slots: &mut [&mut SeqSlot]) -> Result<()> {
         let b = slots.len();
         if b == 0 {
@@ -920,9 +926,9 @@ impl NativeBackend {
         let s = self.dims.seq_len;
         let d = self.dims.d_model;
 
-        // Embed each slot's current token at its own position.
-        let mut x = Matrix::zeros(b, d);
-        for (r, slot) in slots.iter_mut().enumerate() {
+        // Validation pre-pass: reject the whole step before mutating any
+        // slot, so Err never leaves a half-stepped batch behind.
+        for (r, slot) in slots.iter().enumerate() {
             let i = slot.len;
             ensure!(i + 1 < s, "slot {r} stepped past its fixed {s}-token buffer");
             let t = slot.buf[i];
@@ -931,6 +937,13 @@ impl NativeBackend {
                 "token {t} in slot {r} outside vocab 0..{}",
                 self.dims.vocab
             );
+        }
+
+        // Embed each slot's current token at its own position.
+        let mut x = Matrix::zeros(b, d);
+        for (r, slot) in slots.iter_mut().enumerate() {
+            let i = slot.len;
+            let t = slot.buf[i];
             let e = self.tgt_emb.row(t as usize);
             let p = self.pos_emb.row(i);
             for ((o, &ec), &pc) in x.row_mut(r).iter_mut().zip(e).zip(p) {

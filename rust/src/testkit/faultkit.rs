@@ -1,0 +1,408 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultyEngine`] wraps any [`SlotEngine`] and injects failures
+//! according to a seeded [`FaultPlan`]: admissions can be born poisoned
+//! (admit fails or panics), live slots can fault at a scripted decode
+//! step, and slots can stall — consuming steps without ever completing,
+//! so only a deadline can reclaim them. Non-faulted slots delegate
+//! straight to the inner engine, so their outputs stay **bit-identical**
+//! to a fault-free run — exactly the invariant the chaos soak asserts.
+//!
+//! Determinism is the whole point: each admission's fault script is a
+//! pure function of `(plan.seed, admission index)`, independent of
+//! thread timing, tick interleaving, or how many random draws other
+//! admissions consumed. The same seed therefore replays the same chaos,
+//! and a failing soak run names a single integer to reproduce it.
+//!
+//! Faults are injected **before** delegating to the inner engine, which
+//! keeps the wrapper re-steppable on failure — the batcher's per-slot
+//! fault attribution (re-step each slot solo after a batched step
+//! fails) observes the same scripted outcome every time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::runtime::SlotEngine;
+use crate::util::rng::Pcg64;
+
+/// Fault probabilities for a seeded chaos run. All rates are per
+/// admission, in `[0, 1]`; an admission draws at most one fault kind
+/// (checked in the order born-poisoned → stall → step-fault).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Seed for the per-admission script derivation.
+    pub seed: u64,
+    /// P(admission fails outright — `admit` errors or panics).
+    pub admit_fault: f64,
+    /// P(the slot faults at a scripted decode step).
+    pub step_fault: f64,
+    /// Of the faults above, the fraction delivered as panics rather
+    /// than `Err` returns (exercises the `catch_unwind` isolation path).
+    pub panic_frac: f64,
+    /// P(the slot stalls: steps are consumed but it never completes;
+    /// only a deadline reclaims it).
+    pub stall: f64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the wrapper becomes a transparent
+    /// pass-through (useful to validate the harness itself).
+    pub fn quiet(seed: u64) -> FaultPlan {
+        FaultPlan { seed, admit_fault: 0.0, step_fault: 0.0, panic_frac: 0.0, stall: 0.0 }
+    }
+
+    /// The fault script for the `admission`-th admission (0-based).
+    /// Pure in `(self.seed, admission)`: tests can predict every
+    /// injected fault without running the engine.
+    pub fn script(&self, admission: u64) -> FaultScript {
+        let mut rng = Pcg64::new(self.seed ^ admission.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let roll = rng.next_f64();
+        let panics = rng.next_f64() < self.panic_frac;
+        // Disjoint probability bands: one fault kind per admission.
+        if roll < self.admit_fault {
+            FaultScript { born_poisoned: true, stalls: false, fault_at_step: None, panics }
+        } else if roll < self.admit_fault + self.stall {
+            FaultScript { born_poisoned: false, stalls: true, fault_at_step: None, panics }
+        } else if roll < self.admit_fault + self.stall + self.step_fault {
+            let at = rng.below(4);
+            FaultScript {
+                born_poisoned: false,
+                stalls: false,
+                fault_at_step: Some(at),
+                panics,
+            }
+        } else {
+            FaultScript::clean()
+        }
+    }
+}
+
+/// What happens to one admission, decided up-front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultScript {
+    /// `admit` itself fails (error or panic, per `panics`).
+    pub born_poisoned: bool,
+    /// The slot consumes steps but never completes.
+    pub stalls: bool,
+    /// The slot faults the moment it reaches this step count.
+    pub fault_at_step: Option<usize>,
+    /// Deliver faults as panics instead of `Err` returns.
+    pub panics: bool,
+}
+
+impl FaultScript {
+    pub fn clean() -> FaultScript {
+        FaultScript { born_poisoned: false, stalls: false, fault_at_step: None, panics: false }
+    }
+
+    /// Will this admission ever produce a successful output?
+    pub fn survives(&self) -> bool {
+        !self.born_poisoned && !self.stalls && self.fault_at_step.is_none()
+    }
+}
+
+enum Scripts {
+    /// Derived from a seeded plan (pure per-admission function).
+    Seeded(FaultPlan),
+    /// Explicit per-admission list; admissions beyond it are clean.
+    Explicit(Vec<FaultScript>),
+}
+
+/// A [`SlotEngine`] wrapper that injects scripted faults. `Sync` when
+/// the inner engine is (the admission counter is atomic), so chaos
+/// tests can serve from one thread while clients run on others.
+pub struct FaultyEngine<'a, E: SlotEngine> {
+    inner: &'a E,
+    scripts: Scripts,
+    admissions: AtomicU64,
+    /// Admission order log: `injected[i]` is the script admission `i`
+    /// actually received — lets tests map batcher ids to fates.
+    log: Mutex<Vec<FaultScript>>,
+}
+
+impl<'a, E: SlotEngine> FaultyEngine<'a, E> {
+    /// Seeded chaos mode: each admission's fate comes from
+    /// [`FaultPlan::script`].
+    pub fn new(inner: &'a E, plan: FaultPlan) -> FaultyEngine<'a, E> {
+        FaultyEngine {
+            inner,
+            scripts: Scripts::Seeded(plan),
+            admissions: AtomicU64::new(0),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Scripted mode for deterministic unit tests: admission `i` gets
+    /// `scripts[i]`; admissions past the end are clean.
+    pub fn scripted(inner: &'a E, scripts: Vec<FaultScript>) -> FaultyEngine<'a, E> {
+        FaultyEngine {
+            inner,
+            scripts: Scripts::Explicit(scripts),
+            admissions: AtomicU64::new(0),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Admissions attempted so far.
+    pub fn admitted(&self) -> u64 {
+        self.admissions.load(Ordering::SeqCst)
+    }
+
+    /// The scripts handed out, in admission order.
+    pub fn injected(&self) -> Vec<FaultScript> {
+        self.log.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn script_for(&self, admission: u64) -> FaultScript {
+        match &self.scripts {
+            Scripts::Seeded(plan) => plan.script(admission),
+            Scripts::Explicit(list) => {
+                list.get(admission as usize).copied().unwrap_or_else(FaultScript::clean)
+            }
+        }
+    }
+}
+
+/// A wrapped slot: the inner slot plus its fate and step count.
+pub struct FaultySlot<S> {
+    inner: Option<S>,
+    script: FaultScript,
+    steps: usize,
+}
+
+impl<'a, E: SlotEngine> SlotEngine for FaultyEngine<'a, E> {
+    type Slot = FaultySlot<E::Slot>;
+
+    fn slot_seq_len(&self) -> usize {
+        self.inner.slot_seq_len()
+    }
+
+    fn admit(&self, src_row: &[i32]) -> Result<FaultySlot<E::Slot>> {
+        let n = self.admissions.fetch_add(1, Ordering::SeqCst);
+        let script = self.script_for(n);
+        self.log.lock().unwrap_or_else(|e| e.into_inner()).push(script);
+        if script.born_poisoned {
+            if script.panics {
+                panic!("faultkit: admission {n} born poisoned (panic)");
+            }
+            anyhow::bail!("faultkit: admission {n} born poisoned");
+        }
+        // Stalling slots never touch the inner engine: they just burn
+        // scheduler steps until a deadline reclaims them.
+        let inner = if script.stalls { None } else { Some(self.inner.admit(src_row)?) };
+        Ok(FaultySlot { inner, script, steps: 0 })
+    }
+
+    fn step(&self, slots: &mut [&mut FaultySlot<E::Slot>]) -> Result<()> {
+        // Fault check BEFORE any mutation: a failed/panicked step leaves
+        // every slot untouched, so the batcher's solo re-step sees the
+        // same scripted outcome (the re-steppable contract).
+        for s in slots.iter() {
+            if s.script.fault_at_step == Some(s.steps) {
+                if s.script.panics {
+                    panic!("faultkit: scripted panic at step {}", s.steps);
+                }
+                anyhow::bail!("faultkit: scripted fault at step {}", s.steps);
+            }
+        }
+        let mut live: Vec<&mut E::Slot> = Vec::with_capacity(slots.len());
+        for s in slots.iter_mut() {
+            if let Some(inner) = s.inner.as_mut() {
+                live.push(inner);
+            }
+        }
+        if !live.is_empty() {
+            self.inner.step(&mut live)?;
+        }
+        for s in slots.iter_mut() {
+            s.steps += 1;
+        }
+        Ok(())
+    }
+
+    fn slot_complete(&self, slot: &FaultySlot<E::Slot>) -> bool {
+        match &slot.inner {
+            Some(inner) => self.inner.slot_complete(inner),
+            None => false, // stalled: never completes
+        }
+    }
+
+    fn slot_output(&self, slot: &FaultySlot<E::Slot>) -> Vec<i32> {
+        match &slot.inner {
+            Some(inner) => self.inner.slot_output(inner),
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trivial inner engine: completes after `row[0]` steps, output is
+    /// the framed row plus a step count.
+    struct Inner {
+        seq: usize,
+    }
+
+    struct InnerSlot {
+        need: usize,
+        tag: i32,
+        steps: usize,
+    }
+
+    impl SlotEngine for Inner {
+        type Slot = InnerSlot;
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&self, src_row: &[i32]) -> Result<InnerSlot> {
+            anyhow::ensure!(src_row.len() == self.seq, "framing");
+            Ok(InnerSlot { need: src_row[0] as usize, tag: src_row[1], steps: 0 })
+        }
+        fn step(&self, slots: &mut [&mut InnerSlot]) -> Result<()> {
+            for s in slots.iter_mut() {
+                s.steps += 1;
+            }
+            Ok(())
+        }
+        fn slot_complete(&self, slot: &InnerSlot) -> bool {
+            slot.steps >= slot.need
+        }
+        fn slot_output(&self, slot: &InnerSlot) -> Vec<i32> {
+            vec![slot.tag, slot.steps as i32]
+        }
+    }
+
+    fn row(need: i32, tag: i32, seq: usize) -> Vec<i32> {
+        let mut r = vec![0; seq];
+        r[0] = need;
+        r[1] = tag;
+        r
+    }
+
+    #[test]
+    fn scripts_are_pure_in_seed_and_admission() {
+        let plan = FaultPlan {
+            seed: 0xC0FFEE,
+            admit_fault: 0.2,
+            step_fault: 0.3,
+            panic_frac: 0.5,
+            stall: 0.1,
+        };
+        for adm in 0..64u64 {
+            assert_eq!(plan.script(adm), plan.script(adm), "same (seed, admission) same script");
+        }
+        // And the seed actually matters: at these rates 64 admissions
+        // can't all agree across two independent seeds.
+        let other = FaultPlan { seed: 0xBEEF, ..plan };
+        assert!(
+            (0..64u64).any(|a| plan.script(a) != other.script(a)),
+            "different seeds must differ somewhere"
+        );
+    }
+
+    #[test]
+    fn plan_rates_are_roughly_respected() {
+        let plan = FaultPlan {
+            seed: 7,
+            admit_fault: 0.25,
+            step_fault: 0.25,
+            panic_frac: 0.5,
+            stall: 0.25,
+        };
+        let n = 2000u64;
+        let mut poisoned = 0;
+        let mut stalled = 0;
+        let mut stepf = 0;
+        let mut clean = 0;
+        for a in 0..n {
+            let s = plan.script(a);
+            match (s.born_poisoned, s.stalls, s.fault_at_step) {
+                (true, _, _) => poisoned += 1,
+                (_, true, _) => stalled += 1,
+                (_, _, Some(_)) => stepf += 1,
+                _ => clean += 1,
+            }
+        }
+        for (label, count) in
+            [("poisoned", poisoned), ("stalled", stalled), ("step-fault", stepf), ("clean", clean)]
+        {
+            let frac = count as f64 / n as f64;
+            assert!((frac - 0.25).abs() < 0.05, "{label} rate {frac} should be ~0.25");
+        }
+    }
+
+    #[test]
+    fn quiet_plan_is_a_transparent_passthrough() {
+        let inner = Inner { seq: 4 };
+        let faulty = FaultyEngine::new(&inner, FaultPlan::quiet(1));
+        let mut slot = faulty.admit(&row(2, 9, 4)).unwrap();
+        assert!(!faulty.slot_complete(&slot));
+        faulty.step(&mut [&mut slot]).unwrap();
+        faulty.step(&mut [&mut slot]).unwrap();
+        assert!(faulty.slot_complete(&slot));
+        assert_eq!(faulty.slot_output(&slot), vec![9, 2], "bit-identical to the inner engine");
+        assert_eq!(faulty.admitted(), 1);
+    }
+
+    #[test]
+    fn born_poisoned_admission_fails_without_touching_inner() {
+        let inner = Inner { seq: 4 };
+        let script = FaultScript { born_poisoned: true, ..FaultScript::clean() };
+        let faulty = FaultyEngine::scripted(&inner, vec![script]);
+        let err = faulty.admit(&row(1, 5, 4)).unwrap_err();
+        assert!(err.to_string().contains("born poisoned"));
+        // The next admission (beyond the script list) is clean.
+        let slot = faulty.admit(&row(1, 6, 4)).unwrap();
+        assert_eq!(faulty.slot_output(&slot), vec![6, 0]);
+        assert_eq!(faulty.injected().len(), 2);
+    }
+
+    #[test]
+    fn scripted_step_fault_is_resteppable() {
+        let inner = Inner { seq: 4 };
+        let script = FaultScript { fault_at_step: Some(1), ..FaultScript::clean() };
+        let faulty = FaultyEngine::scripted(&inner, vec![script, FaultScript::clean()]);
+        let mut bad = faulty.admit(&row(3, 1, 4)).unwrap();
+        let mut good = faulty.admit(&row(3, 2, 4)).unwrap();
+        faulty.step(&mut [&mut bad, &mut good]).unwrap();
+        // Step 1: the batched step fails because `bad` reached its
+        // scripted step; neither slot advances (fault checked pre-mutation).
+        assert!(faulty.step(&mut [&mut bad, &mut good]).is_err());
+        // Solo re-step attribution: `bad` fails again (same scripted
+        // outcome), `good` advances normally.
+        assert!(faulty.step(&mut [&mut bad]).is_err());
+        faulty.step(&mut [&mut good]).unwrap();
+        faulty.step(&mut [&mut good]).unwrap();
+        assert!(faulty.slot_complete(&good));
+        assert_eq!(faulty.slot_output(&good), vec![2, 3], "untouched by its neighbor's fault");
+    }
+
+    #[test]
+    fn stalling_slot_never_completes() {
+        let inner = Inner { seq: 4 };
+        let script = FaultScript { stalls: true, ..FaultScript::clean() };
+        let faulty = FaultyEngine::scripted(&inner, vec![script]);
+        let mut slot = faulty.admit(&row(1, 5, 4)).unwrap();
+        for _ in 0..32 {
+            faulty.step(&mut [&mut slot]).unwrap();
+        }
+        assert!(!faulty.slot_complete(&slot), "stall means never complete, only deadlines help");
+    }
+
+    #[test]
+    fn panic_scripts_panic_instead_of_erroring() {
+        let inner = Inner { seq: 4 };
+        let script =
+            FaultScript { fault_at_step: Some(0), panics: true, ..FaultScript::clean() };
+        let faulty = FaultyEngine::scripted(&inner, vec![script]);
+        let mut slot = faulty.admit(&row(1, 5, 4)).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = faulty.step(&mut [&mut slot]);
+        }));
+        assert!(caught.is_err(), "scripted panic must actually panic");
+    }
+}

@@ -10,7 +10,12 @@
 //! [`tinymodel`] synthesizes a complete on-disk model artifact set
 //! (ITWB weight store + manifest + corpus) so the native-runtime e2e
 //! suites run without any Python-built artifacts.
+//!
+//! [`faultkit`] wraps any slot engine in seeded, deterministic fault
+//! injection (failed/panicking admissions and steps, stalling slots) —
+//! the chaos harness behind the serving fault-tolerance soaks.
 
+pub mod faultkit;
 pub mod tinymodel;
 
 use crate::util::rng::Pcg64;

@@ -23,7 +23,7 @@
 use std::collections::BTreeMap;
 
 use itera_llm::compress::{itera, quant_only, CompressedLinear};
-use itera_llm::coordinator::Batcher;
+use itera_llm::coordinator::{Batcher, ServeTuning};
 use itera_llm::eval::{evaluate_bleu, translate_corpus, Corpus};
 use itera_llm::model::{Manifest, PairModel};
 use itera_llm::runtime::{DecodePolicy, Mode, NativeBackend, TranslateBackend};
@@ -262,6 +262,7 @@ fn serve_demo_runs_on_the_native_backend() {
         Mode::Dense,
         DecodePolicy::Cached,
         Batcher::Static,
+        &ServeTuning::default(),
     )
     .unwrap();
     assert_eq!(stats.served, 10, "every request must be answered");
@@ -287,6 +288,7 @@ fn serve_demo_runs_quantized() {
         Mode::Quantized,
         DecodePolicy::Cached,
         Batcher::Static,
+        &ServeTuning::default(),
     )
     .unwrap();
     assert_eq!(stats.served, 6, "every request must be answered");
@@ -305,6 +307,7 @@ fn serve_demo_replay_and_cached_translate_identically() {
         Mode::Dense,
         DecodePolicy::Cached,
         Batcher::Static,
+        &ServeTuning::default(),
     )
     .unwrap();
     let replay = itera_llm::coordinator::serve_demo_native(
@@ -315,6 +318,7 @@ fn serve_demo_replay_and_cached_translate_identically() {
         Mode::Dense,
         DecodePolicy::Replay,
         Batcher::Static,
+        &ServeTuning::default(),
     )
     .unwrap();
     assert_eq!(cached.served, replay.served);
@@ -338,6 +342,7 @@ fn serve_demo_runs_continuous() {
         Mode::Quantized,
         DecodePolicy::Cached,
         Batcher::Continuous,
+        &ServeTuning::default(),
     )
     .unwrap();
     assert_eq!(stats.served, 6, "every request must be answered");
@@ -350,6 +355,7 @@ fn serve_demo_runs_continuous() {
         Mode::Dense,
         DecodePolicy::Replay,
         Batcher::Continuous,
+        &ServeTuning::default(),
     );
     assert!(err.is_err(), "continuous batching over replay decode must be rejected");
 }
@@ -363,9 +369,10 @@ fn serve_demo_runs_continuous() {
 #[test]
 fn serve_continuous_soak_matches_static_batching() {
     use std::sync::mpsc;
-    use std::time::Instant;
 
-    use itera_llm::coordinator::{serve_loop, serve_loop_continuous, Request};
+    use itera_llm::coordinator::{
+        response_channel, serve_loop, serve_loop_continuous, Request, ServeConfig,
+    };
 
     let f = fixture("soak");
     let dims = &f.manifest.model;
@@ -384,23 +391,26 @@ fn serve_continuous_soak_matches_static_batching() {
         let (tx, rx) = mpsc::channel::<Request>();
         let mut receivers = Vec::new();
         for row in &rows {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
-                tokens: row.clone(),
-                t_arrival: Instant::now(),
-                respond: rtx,
-            })
-            .unwrap();
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(row.clone(), rtx)).unwrap();
             receivers.push(rrx);
         }
         drop(tx);
         let stats = if continuous {
-            serve_loop_continuous(&backend, &rx, dims, n, 3).unwrap()
+            serve_loop_continuous(&backend, &rx, dims, n, &ServeConfig::new(3)).unwrap()
         } else {
             serve_loop(&backend, &rx, dims, n).unwrap()
         };
-        let responses: Vec<(Vec<i32>, f64)> =
-            receivers.into_iter().map(|r| r.recv().unwrap()).collect();
+        let responses: Vec<(Vec<i32>, f64)> = receivers
+            .into_iter()
+            .map(|r| {
+                let resp = r
+                    .recv()
+                    .expect("server answers every request")
+                    .expect("fault-free soak must succeed");
+                (resp.tokens, resp.latency_s)
+            })
+            .collect();
         (stats, responses)
     };
 
@@ -416,6 +426,8 @@ fn serve_continuous_soak_matches_static_batching() {
     for (tag, stats, resp) in [("static", &stat_s, &resp_s), ("continuous", &stat_c, &resp_c)] {
         assert_eq!(stats.served, n, "{tag}: every request answered");
         assert_eq!(stats.received, n, "{tag}: requests in == responses out");
+        assert_eq!(stats.failed(), 0, "{tag}: fault-free soak has no error outcomes");
+        assert!(stats.is_balanced(), "{tag}: accounting identity violated: {stats:?}");
         let resp_tokens: usize = resp.iter().map(|(t, _)| t.len()).sum();
         assert_eq!(stats.tokens, resp_tokens, "{tag}: token counts balance");
         assert_eq!(stats.latency.count(), n, "{tag}: one latency sample per request");
@@ -438,6 +450,199 @@ fn serve_continuous_soak_matches_static_batching() {
         stat_c.occupancy
     );
     assert!(stat_c.batches > 0, "continuous loop must report decode steps");
+}
+
+/// THE fault-tolerance chaos soak: the native engine wrapped in the
+/// deterministic fault-injection harness at capacity 3, with scripted
+/// admission faults (`Err` and panic), scripted step faults (`Err` and
+/// panic), one stalling slot reclaimed by its deadline, and two clients
+/// that disconnect before serving starts — all driven through an
+/// open-ended server that only a [`ShutdownSignal`] drain ends. Proves
+/// the PR's acceptance bar: every submitted request receives exactly
+/// one terminal outcome, non-faulted responses are **bit-identical** to
+/// a fault-free run, and the graceful shutdown drains with balanced
+/// `received == served + shed + expired + cancelled + faulted`
+/// accounting.
+#[test]
+fn serve_continuous_chaos_soak_is_exactly_once_and_bit_identical() {
+    use std::sync::mpsc;
+
+    use itera_llm::coordinator::{
+        response_channel, serve_loop_continuous, Request, RequestLimits, ResponseRx, ServeConfig,
+        ServeError, ServeResult, ShutdownSignal,
+    };
+    use itera_llm::testkit::faultkit::{FaultScript, FaultyEngine};
+
+    let f = fixture("chaos");
+    let dims = &f.manifest.model;
+    let backend = NativeBackend::fp32(&f.manifest, &f.model, 2).unwrap();
+
+    const N: usize = 12;
+    const DROPPED: [usize; 2] = [4, 9];
+    let rows: Vec<Vec<i32>> =
+        (0..N).map(|i| f.corpus.src_row(i % f.corpus.n).to_vec()).collect();
+
+    // Fault-free reference run on the bare engine: the bit-identity bar.
+    let reference: Vec<Vec<i32>> = {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let receivers: Vec<ResponseRx> = rows
+            .iter()
+            .map(|row| {
+                let (rtx, rrx) = response_channel();
+                tx.send(Request::new(row.clone(), rtx)).unwrap();
+                rrx
+            })
+            .collect();
+        drop(tx);
+        let stats =
+            serve_loop_continuous(&backend, &rx, dims, N, &ServeConfig::new(3)).unwrap();
+        assert_eq!(stats.served, N, "reference run is fault-free");
+        receivers
+            .iter()
+            .map(|r| r.recv().expect("answered").expect("fault-free").tokens)
+            .collect()
+    };
+
+    // Scripts are indexed by ADMISSION order. Disconnected clients are
+    // cancelled out of the queue before the first tick, so the admission
+    // order is the submission order with the dropped requests removed.
+    let survivors: Vec<usize> = (0..N).filter(|i| !DROPPED.contains(i)).collect();
+    let mut scripts = vec![FaultScript::clean(); survivors.len()];
+    scripts[1] =
+        FaultScript { born_poisoned: true, stalls: false, fault_at_step: None, panics: false };
+    scripts[3] =
+        FaultScript { born_poisoned: false, stalls: true, fault_at_step: None, panics: false };
+    scripts[5] =
+        FaultScript { born_poisoned: true, stalls: false, fault_at_step: None, panics: true };
+    scripts[7] =
+        FaultScript { born_poisoned: false, stalls: false, fault_at_step: Some(0), panics: true };
+    scripts[8] =
+        FaultScript { born_poisoned: false, stalls: false, fault_at_step: Some(0), panics: false };
+    let engine = FaultyEngine::scripted(&backend, scripts.clone());
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut receivers: Vec<Option<ResponseRx>> = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let (rtx, rrx) = response_channel();
+        // The stalling admission carries a short per-request deadline
+        // (the reclaim path); everyone else decodes to EOS unbounded.
+        let req = if survivors.iter().position(|&s| s == i) == Some(3) {
+            Request::new(row.clone(), rtx).with_limits(RequestLimits::none().with_deadline(10))
+        } else {
+            Request::new(row.clone(), rtx)
+        };
+        tx.send(req).unwrap();
+        // Dropping the receiver here IS the client disconnect.
+        receivers.push(if DROPPED.contains(&i) { None } else { Some(rrx) });
+    }
+
+    let signal = ShutdownSignal::new();
+    let cfg = ServeConfig {
+        capacity: 3,
+        queue_limit: None,
+        default_limits: RequestLimits::none(),
+        shutdown: Some(signal.clone()),
+    };
+    // Collector thread: gather every surviving client's terminal
+    // outcome, then flip the drain signal; the open-ended server
+    // (`n_requests = usize::MAX`) runs on this thread until the drain.
+    let drainer = signal.clone();
+    let collector = std::thread::spawn(move || {
+        let outs: Vec<(usize, ServeResult)> = receivers
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|rrx| (i, rrx.recv().expect("server answers"))))
+            .collect();
+        drainer.drain();
+        outs
+    });
+    let stats = serve_loop_continuous(&engine, &rx, dims, usize::MAX, &cfg).unwrap();
+    let outcomes = collector.join().expect("collector thread");
+    drop(tx);
+
+    // Exactly one terminal outcome per surviving client, classified by
+    // its script; survivors bit-identical to the fault-free reference.
+    assert_eq!(outcomes.len(), N - DROPPED.len());
+    for (i, out) in outcomes {
+        let adm = survivors.iter().position(|&s| s == i).unwrap();
+        let script = scripts[adm];
+        if script.survives() {
+            let resp = out.unwrap_or_else(|e| panic!("clean request {i} must survive, got {e}"));
+            assert_eq!(
+                resp.tokens, reference[i],
+                "request {i}: survivor must be bit-identical to the fault-free run"
+            );
+        } else if script.stalls {
+            assert!(
+                matches!(out, Err(ServeError::DeadlineExceeded)),
+                "request {i}: stalled slot must be reclaimed by its deadline, got {out:?}"
+            );
+        } else {
+            assert!(
+                matches!(out, Err(ServeError::EngineFault(_))),
+                "request {i}: scripted fault must surface as EngineFault, got {out:?}"
+            );
+        }
+    }
+
+    // Graceful shutdown drained with balanced books.
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.served, 5, "five clean admissions");
+    assert_eq!(stats.cancelled, DROPPED.len(), "disconnects cancelled, not decoded");
+    assert_eq!(stats.faulted, 4, "two poisoned admissions + two step faults");
+    assert_eq!(stats.expired, 1, "the stalled slot expired");
+    assert_eq!(stats.shed, 0, "unbounded queue sheds nothing");
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+    assert!(stats.batches > 0);
+    assert_eq!(engine.admitted() as usize, survivors.len(), "one admission per surviving request");
+}
+
+/// Overload shedding end-to-end: a 12-request burst against capacity 3
+/// with a queue bound of 3. The pre-queued burst lands before the first
+/// tick, so the queue absorbs 3 requests and the other 9 are answered
+/// immediately with a typed `Overloaded` rejection — nobody waits, and
+/// the books balance. (The CI overload smoke drives the same path via
+/// `itera serve --tinymodel --burst N --queue-limit N`.)
+#[test]
+fn serve_continuous_overload_sheds_and_balances() {
+    use std::sync::mpsc;
+
+    use itera_llm::coordinator::{
+        response_channel, serve_loop_continuous, Request, ResponseRx, ServeConfig, ServeError,
+    };
+
+    let f = fixture("overload");
+    let dims = &f.manifest.model;
+    let backend = NativeBackend::fp32(&f.manifest, &f.model, 2).unwrap();
+
+    const N: usize = 12;
+    let (tx, rx) = mpsc::channel::<Request>();
+    let receivers: Vec<ResponseRx> = (0..N)
+        .map(|i| {
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(f.corpus.src_row(i % f.corpus.n).to_vec(), rtx)).unwrap();
+            rrx
+        })
+        .collect();
+    drop(tx);
+
+    let mut cfg = ServeConfig::new(3);
+    cfg.queue_limit = Some(3);
+    let stats = serve_loop_continuous(&backend, &rx, dims, N, &cfg).unwrap();
+
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.shed, N - 3, "queue bound 3 absorbs 3 of the burst");
+    assert_eq!(stats.served, 3);
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+    let (mut ok, mut over) = (0usize, 0usize);
+    for rrx in &receivers {
+        match rrx.recv() {
+            Some(Ok(_)) => ok += 1,
+            Some(Err(ServeError::Overloaded)) => over += 1,
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!((ok, over), (3, N - 3), "every burst request answered exactly once");
 }
 
 /// Backend over `layers` at A8 with the given execution mode.

@@ -665,23 +665,24 @@ fn prop_continuous_decode_bit_identical_to_sequential() {
         let mut got: Vec<Option<Vec<i32>>> = vec![None; n_req];
         let upfront = g.usize_in(1, n_req);
         while submitted < upfront {
-            batcher.submit(rows[submitted].clone());
+            batcher.submit(rows[submitted].clone()).expect("unbounded submit");
             submitted += 1;
         }
         while !(submitted == n_req && batcher.idle()) {
             let arrivals = g.usize_in(0, 2).min(n_req - submitted);
             for _ in 0..arrivals {
-                batcher.submit(rows[submitted].clone());
+                batcher.submit(rows[submitted].clone()).expect("unbounded submit");
                 submitted += 1;
             }
             if batcher.idle() && submitted < n_req {
                 // Never stall the trace: an idle batcher with requests
                 // still unsubmitted must receive at least one.
-                batcher.submit(rows[submitted].clone());
+                batcher.submit(rows[submitted].clone()).expect("unbounded submit");
                 submitted += 1;
             }
-            for c in batcher.tick().expect("tick") {
-                got[c.id as usize] = Some(c.tokens);
+            for c in batcher.tick() {
+                let toks = c.result.expect("fault-free trace completes cleanly");
+                got[c.id as usize] = Some(toks);
             }
         }
 
@@ -719,5 +720,149 @@ fn prop_rank_padding_is_exact() {
                 assert!((x - y).abs() < 1e-5);
             }
         }
+    });
+}
+
+// ------------------------------------------------------ fault tolerance
+
+/// Chaos traces preserve FIFO completion of surviving requests: under
+/// seeded random fault injection (born-poisoned admissions, scripted
+/// step faults/panics, stalling slots), random deadlines, bounded-queue
+/// shedding and random client cancels, every submission still gets
+/// exactly one terminal outcome, the batcher's books balance, and the
+/// requests that survive complete in submission order with outputs
+/// bit-identical to a fault-free run (all requests have equal decode
+/// length, so FIFO admission implies FIFO completion).
+#[test]
+fn prop_chaos_traces_preserve_fifo_completion() {
+    use std::collections::HashMap;
+
+    use itera_llm::coordinator::{ContinuousBatcher, RequestLimits, ServeError};
+    use itera_llm::runtime::SlotEngine;
+    use itera_llm::testkit::faultkit::{FaultPlan, FaultyEngine};
+
+    /// Equal-length mock: every request decodes in exactly `need` steps
+    /// and outputs `[tag, need]` — so surviving completions must arrive
+    /// in submission order, whatever faults hit their neighbors.
+    struct EqualEngine {
+        seq: usize,
+        need: usize,
+    }
+
+    struct EqSlot {
+        len: usize,
+        tag: i32,
+    }
+
+    impl SlotEngine for EqualEngine {
+        type Slot = EqSlot;
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&self, src_row: &[i32]) -> anyhow::Result<EqSlot> {
+            anyhow::ensure!(src_row.len() == self.seq, "framing");
+            Ok(EqSlot { len: 0, tag: src_row[0] })
+        }
+        fn step(&self, slots: &mut [&mut EqSlot]) -> anyhow::Result<()> {
+            for s in slots.iter_mut() {
+                s.len += 1;
+            }
+            Ok(())
+        }
+        fn slot_complete(&self, s: &EqSlot) -> bool {
+            s.len >= self.need
+        }
+        fn slot_output(&self, s: &EqSlot) -> Vec<i32> {
+            vec![s.tag, s.len as i32]
+        }
+    }
+
+    const NEED: usize = 3;
+
+    /// Drain one tick's completions into the exactly-once ledger.
+    fn drain(
+        b: &mut ContinuousBatcher<FaultyEngine<EqualEngine>>,
+        id_to_req: &HashMap<u64, usize>,
+        outcomes: &mut [usize],
+        served: &mut Vec<usize>,
+    ) {
+        for c in b.tick() {
+            let i = id_to_req[&c.id];
+            outcomes[i] += 1;
+            if let Ok(toks) = &c.result {
+                assert_eq!(
+                    toks,
+                    &vec![i as i32, NEED as i32],
+                    "survivor {i} must be bit-identical to the fault-free run"
+                );
+                served.push(i);
+            }
+        }
+    }
+
+    check("chaos-fifo", 25, |g: &mut Gen| {
+        let seq = 12;
+        let inner = EqualEngine { seq, need: NEED };
+        let plan = FaultPlan {
+            seed: g.case_seed,
+            admit_fault: 0.15,
+            step_fault: 0.2,
+            panic_frac: 0.5,
+            stall: 0.15,
+        };
+        let engine = FaultyEngine::new(&inner, plan);
+        let capacity = g.usize_in(1, 3);
+        let queue_limit = g.usize_in(1, 4);
+        let mut b = ContinuousBatcher::new(&engine, capacity).with_queue_limit(queue_limit);
+        // Generous deadline: clean requests always beat it, stalled
+        // slots never do — the drain is guaranteed to terminate.
+        let limits = RequestLimits::none().with_deadline(32);
+
+        let n_req = g.usize_in(4, 16);
+        // outcomes[i] counts terminal outcomes for submission i — the
+        // exactly-once ledger.
+        let mut outcomes = vec![0usize; n_req];
+        let mut id_to_req: HashMap<u64, usize> = HashMap::new();
+        let mut served: Vec<usize> = Vec::new();
+
+        for i in 0..n_req {
+            let mut row = vec![0i32; seq];
+            row[0] = i as i32;
+            match b.submit_with(row, limits) {
+                Ok(id) => {
+                    id_to_req.insert(id, i);
+                    if g.usize_in(0, 9) == 0 {
+                        // A client walks away right after submitting.
+                        assert!(b.cancel(id), "fresh submission is cancellable");
+                        outcomes[i] += 1;
+                    }
+                }
+                Err(ServeError::Overloaded) => outcomes[i] += 1, // the shed IS the outcome
+                Err(e) => panic!("unexpected submit error {e}"),
+            }
+            for _ in 0..g.usize_in(0, 2) {
+                drain(&mut b, &id_to_req, &mut outcomes, &mut served);
+            }
+        }
+        while !b.idle() {
+            drain(&mut b, &id_to_req, &mut outcomes, &mut served);
+        }
+
+        for (i, &n) in outcomes.iter().enumerate() {
+            assert_eq!(n, 1, "submission {i} must get exactly one terminal outcome");
+        }
+        // FIFO of survivors: equal-length requests admitted FIFO must
+        // complete in submission order, whatever chaos hit the rest.
+        assert!(
+            served.windows(2).all(|w| w[0] < w[1]),
+            "surviving completions out of order: {served:?}"
+        );
+        // The batcher's own books balance at idle.
+        let s = b.stats();
+        assert_eq!(
+            n_req,
+            s.retired + s.shed + s.expired + s.cancelled + s.faulted,
+            "accounting identity: {s:?}"
+        );
     });
 }
