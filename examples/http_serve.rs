@@ -1,0 +1,115 @@
+//! Network serving demo: the dependency-free HTTP/1.1 front end over the
+//! continuous batcher, self-driven by the seeded load generator.
+//!
+//! ```bash
+//! cargo run --release --example http_serve [-- <addr> <requests>]
+//! ```
+//!
+//! Binds `<addr>` (default `127.0.0.1:0` — an ephemeral port, printed at
+//! startup) and serves `POST /v1/translate`, `GET /healthz` and
+//! `POST /v1/shutdown` from a W8A8-compressed model on the pure-Rust
+//! native engine — `std::net` only, no HTTP crate, no PJRT, no Python.
+//! Responses are bit-identical to in-process serving; add
+//! `"stream": true` to a translate body for chunked incremental tokens.
+//!
+//! With `<requests> > 0` (default 64) a seeded open-loop Poisson client
+//! drives the server, then flips the shutdown signal; the server drains
+//! gracefully and both ledgers — the server's `ServeStats` and the
+//! client's `LoadReport` — are printed and cross-checked. Pass `0` to
+//! leave the server up until someone POSTs `/v1/shutdown`.
+//!
+//! Works in any checkout: real artifacts when `ITERA_ARTIFACTS` points
+//! at a manifest, the hermetic testkit tiny model otherwise.
+
+use anyhow::Result;
+use itera_llm::coordinator::{self, Method, ServeConfig, ShutdownSignal};
+use itera_llm::model::{Manifest, PairModel};
+use itera_llm::runtime::Mode;
+use itera_llm::server::loadgen::{run_loadgen, LoadGenConfig};
+use itera_llm::server::{serve_http, HttpConfig};
+use itera_llm::testkit::tinymodel;
+use itera_llm::util::pool::default_workers;
+
+fn main() -> Result<()> {
+    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let requests: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    // Real artifacts when present, the hermetic tiny model otherwise —
+    // the demo runs in any checkout.
+    let (tmp, manifest) = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => (None, m),
+        Err(_) => {
+            let (dir, m) = tinymodel::generate_in_temp("http_serve_demo", 0x11775)?;
+            println!("(no artifacts found; serving the hermetic tiny model)");
+            (Some(dir), m)
+        }
+    };
+    let pair = manifest
+        .pairs
+        .keys()
+        .next()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("manifest registers no language pairs"))?;
+    let model = PairModel::load(&manifest, &pair)?;
+    let workers = default_workers(8);
+    let weights: Vec<_> = manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = coordinator::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm.native_backend_mode(&manifest, &model, Mode::Dense, workers)?;
+
+    let listener = std::net::TcpListener::bind(&addr)?;
+    let local = listener.local_addr()?;
+    println!("serving {pair} on http://{local}");
+    println!("  POST /v1/translate  {{\"tokens\": [..], \"stream\": true?}}");
+    println!("  GET  /healthz       POST /v1/shutdown");
+
+    let shutdown = ShutdownSignal::new();
+    let mut serve_cfg = ServeConfig::new(manifest.model.eval_batch);
+    serve_cfg.shutdown = Some(shutdown.clone());
+
+    // Self-drive: the seeded open-loop Poisson client, then a graceful
+    // drain once its last response lands.
+    let client = (requests > 0).then(|| {
+        let cfg = LoadGenConfig {
+            connections: 4,
+            requests,
+            rate: 200.0,
+            len_range: (2, manifest.model.seq_len.saturating_sub(2).max(2)),
+            vocab: manifest.model.vocab as i32,
+            ..LoadGenConfig::default()
+        };
+        std::thread::spawn(move || {
+            let report = run_loadgen(local, &cfg);
+            shutdown.drain();
+            report
+        })
+    });
+
+    let stats = serve_http(&backend, listener, &manifest.model, HttpConfig::new(serve_cfg))?;
+    println!(
+        "served {} / received {} (shed {}, expired {}, cancelled {}, faulted {})",
+        stats.served, stats.received, stats.shed, stats.expired, stats.cancelled, stats.faulted,
+    );
+    println!(
+        "  {:.1} tok/s; latency p50 {:.2} ms p95 {:.2} ms (queue-wait p95 {:.2} ms)",
+        stats.tokens_per_s(),
+        stats.latency.quantile(0.5) * 1e3,
+        stats.latency.quantile(0.95) * 1e3,
+        stats.queue_wait.quantile(0.95) * 1e3,
+    );
+    anyhow::ensure!(stats.is_balanced(), "serve accounting must balance: {stats:?}");
+    if let Some(c) = client {
+        let report = c.join().map_err(|_| anyhow::anyhow!("load generator panicked"))??;
+        report.print("loadgen");
+        anyhow::ensure!(report.ok > 0, "self-drive must answer at least one request");
+    }
+    if let Some(dir) = tmp {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(())
+}

@@ -4,9 +4,10 @@
 //! §Perf): Algorithm 1 and its SVD building blocks, the incremental
 //! compression cache behind the SRA/DSE search loops, quantization, the
 //! dense matmul (serial + blocked + pool-parallel), the dataflow
-//! simulator, the DSE sweep, BLEU scoring, and — when built with `pjrt`
-//! and artifacts are present — the PJRT translate call that dominates
-//! every figure runner.
+//! simulator, the DSE sweep, BLEU scoring, the end-to-end HTTP serving
+//! path (`server/*`: real sockets + the seeded load generator), and —
+//! when built with `pjrt` and artifacts are present — the PJRT translate
+//! call that dominates every figure runner.
 //!
 //! Every run merges its results into `BENCH_hot_paths.json` at the repo
 //! root — the machine-readable trajectory EXPERIMENTS.md tracks. Partial
@@ -236,6 +237,9 @@ fn main() {
 
     // ---- serving batchers: static waves vs continuous slot scheduling --
     batcher_benches(&mut b, workers);
+
+    // ---- HTTP serving: sockets + load generator over the batcher ------
+    server_benches(&mut b, workers);
 
     // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
     runtime_benches(&mut b);
@@ -491,6 +495,116 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
         }
         b.gauge("runtime/slot_occupancy", batcher.occupancy());
     }
+    b.set_group(None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end HTTP serving lanes (`cargo bench --bench hot_paths server`
+/// selects the group): a real `serve_http` instance on an ephemeral
+/// loopback port, saturated by the seeded closed-loop
+/// [`run_loadgen`](itera_llm::server::loadgen::run_loadgen) client.
+/// `server/http_throughput` times whole request waves (bind, serve,
+/// drain) with the generated-token denominator; the deterministic-seed
+/// client latency distribution lands as `server/latency_p50|p95|p99`
+/// gauges (seconds), and the closed-loop token rate — the saturation
+/// ceiling of the HTTP path on this host — as
+/// `server/saturation_tokens_per_s`. Responses are bit-identical to
+/// in-process serving (pinned by the e2e HTTP soak); these lanes record
+/// what the network layer costs on top. Hermetic: tiny model, W8A8.
+fn server_benches(b: &mut Bench, workers: usize) {
+    use std::net::TcpListener;
+
+    use itera_llm::coordinator::{self, Method, ServeConfig, ShutdownSignal};
+    use itera_llm::runtime::Mode;
+    use itera_llm::server::loadgen::{run_loadgen, LoadGenConfig};
+    use itera_llm::server::{serve_http, HttpConfig};
+    use itera_llm::testkit::tinymodel;
+
+    b.set_group(Some("server"));
+    let lanes = [
+        "server/http_throughput",
+        "server/latency_p50",
+        "server/latency_p95",
+        "server/latency_p99",
+        "server/saturation_tokens_per_s",
+    ];
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_server", 0x5EF) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping server benches)");
+            b.set_group(None);
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let dims = manifest.model.clone();
+    let weights: Vec<&Matrix> =
+        manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = coordinator::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm.native_backend_mode(&manifest, &model, Mode::Dense, workers).unwrap();
+
+    let load_cfg = LoadGenConfig {
+        connections: 4,
+        requests: 16,
+        // Closed loop: every connection fires its next request the moment
+        // the previous answer lands — the saturation workload.
+        rate: 0.0,
+        len_range: (2, dims.seq_len.saturating_sub(2).max(2)),
+        vocab: dims.vocab as i32,
+        ..LoadGenConfig::default()
+    };
+
+    // One full wave: fresh ephemeral-port server, the seeded load
+    // generator against it, graceful drain, both ledgers back.
+    let run_once = |cfg: &LoadGenConfig| {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let shutdown = ShutdownSignal::new();
+        let mut serve_cfg = ServeConfig::new(dims.eval_batch);
+        serve_cfg.shutdown = Some(shutdown.clone());
+        let client = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let report = run_loadgen(addr, &cfg);
+                shutdown.drain();
+                report
+            })
+        };
+        let stats =
+            serve_http(&backend, listener, &dims, HttpConfig::new(serve_cfg)).expect("serve");
+        let report = client.join().expect("loadgen thread").expect("loadgen report");
+        (stats, report)
+    };
+
+    // Reference wave: pins the deterministic token denominator and feeds
+    // the latency/saturation gauges.
+    let (stats0, report0) = run_once(&load_cfg);
+    assert!(stats0.is_balanced(), "server bench accounting must balance: {stats0:?}");
+    assert_eq!(report0.failed(), 0, "saturation wave must be error-free: {:?}", report0.errors);
+
+    if b.enabled("server/http_throughput") {
+        let tokens = stats0.tokens as u64;
+        b.bench_throughput("server/http_throughput", tokens, || {
+            let (stats, _) = run_once(&load_cfg);
+            std::hint::black_box(stats);
+        });
+    }
+    b.gauge("server/latency_p50", report0.latency.quantile(0.50));
+    b.gauge("server/latency_p95", report0.latency.quantile(0.95));
+    b.gauge("server/latency_p99", report0.latency.quantile(0.99));
+    b.gauge("server/saturation_tokens_per_s", report0.tokens_per_s());
+
     b.set_group(None);
     std::fs::remove_dir_all(&dir).ok();
 }

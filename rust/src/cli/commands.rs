@@ -757,6 +757,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         limits,
         burst: args.flag_usize("burst", 1)?,
     };
+    if let Some(listen) = args.flag("listen") {
+        return cmd_serve_http(args, listen, &tuning);
+    }
     match args.flag_or("backend", "native").as_str() {
         "native" => {
             let (tmp_dir, manifest) = if args.has("tinymodel") {
@@ -815,4 +818,130 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "pjrt" => bail!("this binary was built without the `pjrt` feature"),
         other => bail!("unknown backend {other} (expected native|pjrt)"),
     }
+}
+
+/// `serve --listen ADDR`: expose the continuous serve loop over HTTP/1.1
+/// on the native backend. Runs until `POST /v1/shutdown` — or, with
+/// `--loadgen N`, self-drives: a seeded open-loop load generator fires
+/// `N` requests at `--rate` req/s over `--connections` keep-alive
+/// connections against the server's own port, requests a drain when
+/// done, and both sides' reports are printed (the CI HTTP smoke).
+fn cmd_serve_http(
+    args: &Args,
+    listen: &str,
+    tuning: &crate::coordinator::ServeTuning,
+) -> Result<()> {
+    if args.flag_or("backend", "native") != "native" {
+        bail!("--listen serves the native backend only");
+    }
+    let (tmp_dir, manifest) = if args.has("tinymodel") {
+        let (dir, manifest) = crate::testkit::tinymodel::generate_in_temp("serve_http", 0x5E4E)?;
+        (Some(dir), manifest)
+    } else {
+        (None, Manifest::load(Manifest::default_dir())?)
+    };
+    let out = serve_http_native(args, &manifest, listen, tuning);
+    if let Some(dir) = tmp_dir {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    out
+}
+
+fn serve_http_native(
+    args: &Args,
+    manifest: &Manifest,
+    listen: &str,
+    tuning: &crate::coordinator::ServeTuning,
+) -> Result<()> {
+    use crate::coordinator::{ServeConfig, ShutdownSignal};
+    use crate::server::loadgen::{run_loadgen, LoadGenConfig};
+    use crate::server::{serve_http, HttpConfig};
+
+    let pair = match args.flag("pair") {
+        Some(p) => p.to_string(),
+        None => default_pair(manifest)?,
+    };
+    let mode = match args.flag("mode") {
+        None | Some("dense") => Mode::Dense,
+        Some("quantized") => Mode::Quantized,
+        Some(m) => bail!("serve --mode expects dense|quantized, got {m}"),
+    };
+    let workers = default_workers(8);
+    let model = PairModel::load(manifest, &pair)?;
+    let weights: Vec<&Matrix> = manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm
+        .native_backend_mode(manifest, &model, mode, workers)?
+        .with_decode(DecodePolicy::Cached);
+    // The native backend's slot capacity is the model's eval batch.
+    let mut serve_cfg = ServeConfig::new(manifest.model.eval_batch);
+    serve_cfg.queue_limit = tuning.queue_limit;
+    serve_cfg.default_limits = tuning.limits;
+    let shutdown = ShutdownSignal::new();
+    serve_cfg.shutdown = Some(shutdown.clone());
+
+    let listener = std::net::TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    println!("itera http server on {addr} (pair {pair}, W8A8, {} exec)", mode.key());
+
+    let load_cfg = match opt_usize(args, "loadgen")? {
+        None => None,
+        Some(n) => Some(LoadGenConfig {
+            connections: args.flag_usize("connections", 8)?,
+            requests: n,
+            rate: args.flag_f64("rate", 0.0)?,
+            len_range: (2, manifest.model.seq_len.saturating_sub(2).max(2)),
+            vocab: manifest.model.vocab as i32,
+            deadline_steps: tuning.limits.deadline_steps,
+            ..LoadGenConfig::default()
+        }),
+    };
+    let client = load_cfg.map(|cfg| {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let report = run_loadgen(addr, &cfg);
+            shutdown.drain();
+            report
+        })
+    });
+
+    let mut http_cfg = HttpConfig::new(serve_cfg);
+    http_cfg.max_connections = args.flag_usize("max-connections", 256)?;
+    let stats = serve_http(&backend, listener, &manifest.model, http_cfg)?;
+
+    println!("== server stats ==");
+    println!(
+        "served {} / received {} (shed {} expired {} cancelled {} faulted {})",
+        stats.served, stats.received, stats.shed, stats.expired, stats.cancelled, stats.faulted
+    );
+    println!(
+        "decode steps {} occupancy {:.2} tokens/s {:.1}",
+        stats.batches,
+        stats.occupancy,
+        stats.tokens_per_s()
+    );
+    println!(
+        "latency p50 {:.4}s p95 {:.4}s (queue-wait p95 {:.4}s execution p95 {:.4}s)",
+        stats.latency.quantile(0.5),
+        stats.latency.quantile(0.95),
+        stats.queue_wait.quantile(0.95),
+        stats.execution.quantile(0.95)
+    );
+    if !stats.is_balanced() {
+        bail!("serve stats do not balance: {stats:?}");
+    }
+    if let Some(c) = client {
+        let report = c.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))??;
+        report.print("self-drive");
+        if report.ok == 0 {
+            bail!("loadgen saw no successful responses");
+        }
+    }
+    Ok(())
 }

@@ -9,6 +9,8 @@
 //! itera serve [--requests 64] [--mode quantized] [--decode replay|cached]
 //!             [--batcher static|continuous] [--queue-limit 8] [--deadline 200]
 //!             [--max-new-tokens 16] [--burst 12] [--tinymodel]
+//!             [--listen 127.0.0.1:8080 [--loadgen 256] [--connections 16]
+//!              [--rate 100] [--max-connections 256]]
 //! itera validate [--mode quantized] [--decode cached] [--batcher continuous]
 //!                                    # model-vs-sim / qkernel / decode /
 //!                                    # continuous-batching parity
@@ -102,7 +104,8 @@ USAGE (native runtime, every build):
               [--mode <dense|quantized>] [--decode <replay|cached>]
               [--batcher <static|continuous>] [--tinymodel]
               [--queue-limit N] [--deadline STEPS] [--max-new-tokens N]
-              [--burst N]
+              [--burst N] [--listen ADDR] [--loadgen N] [--connections N]
+              [--rate R] [--max-connections N]
   itera validate [--mode quantized] [--decode cached] [--batcher continuous]
   itera help
 
@@ -125,6 +128,14 @@ USAGE (native runtime, every build):
   drives the demo client with N requests in flight (push it past
   capacity + queue limit to see load shedding). --tinymodel serves the
   hermetic synthetic model, so the overload smoke needs no artifacts.
+  --listen ADDR exposes the continuous serve loop over HTTP/1.1
+  (dependency-free, std only): POST /v1/translate, GET /healthz,
+  POST /v1/shutdown; bind port 0 for an ephemeral port. --loadgen N
+  self-drives it with a seeded open-loop Poisson load generator
+  (--connections keep-alive clients at --rate req/s aggregate; rate 0 =
+  closed loop), then drains and prints both reports — the HTTP smoke.
+  --max-connections bounds concurrent HTTP connections (excess get an
+  immediate 503).
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]

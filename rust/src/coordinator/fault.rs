@@ -21,6 +21,7 @@
 use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Why a request did not produce a translation. Every variant is a
 /// per-request outcome: the server stays up and other requests are
@@ -66,6 +67,33 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// A [`ServeError`] pinned to the request it failed — the attribution
+/// unit the HTTP layer logs and serializes. The taxonomy itself stays
+/// id-free (errors are compared structurally all over the test suite);
+/// threading the request id happens at the reporting boundary via
+/// [`ServeError::attributed`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AttributedError {
+    /// Server-assigned per-request id (unique for the server's lifetime).
+    pub id: u64,
+    pub err: ServeError,
+}
+
+impl fmt::Display for AttributedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request {}: {}", self.id, self.err)
+    }
+}
+
+impl std::error::Error for AttributedError {}
+
+impl ServeError {
+    /// Attach the failing request's id for logs and error bodies.
+    pub fn attributed(self, id: u64) -> AttributedError {
+        AttributedError { id, err: self }
+    }
+}
+
 /// Per-request latency/length budget. Unset fields are unlimited (or
 /// fall back to the server's defaults via [`RequestLimits::or`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -106,7 +134,7 @@ impl RequestLimits {
 }
 
 /// A served translation: de-framed tokens + server-observed latency.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub tokens: Vec<i32>,
     pub latency_s: f64,
@@ -136,8 +164,40 @@ impl ShutdownSignal {
     }
 }
 
+/// Outcome of a bounded wait on [`ResponseRx::recv_timeout`].
+#[derive(Debug, PartialEq)]
+pub enum TimedRecv {
+    /// The terminal outcome arrived within the timeout.
+    Ready(ServeResult),
+    /// The server dropped its half without ever responding (the
+    /// `recv() == None` case): nothing will ever arrive.
+    SenderGone,
+    /// Nothing arrived within the timeout; the request may still be in
+    /// flight — retry, or drop the receiver to cancel it.
+    TimedOut,
+}
+
+/// One event on a streaming receive ([`ResponseRx::recv_progress`]).
+#[derive(Debug, PartialEq)]
+pub enum StreamEvent {
+    /// Newly generated tokens since the previous progress read (the
+    /// incremental side-channel the chunked HTTP responses are wired to).
+    Tokens(Vec<i32>),
+    /// The terminal outcome: no further events follow.
+    Done(ServeResult),
+    /// Sender dropped without a terminal outcome (server bug/shutdown).
+    SenderGone,
+    /// No progress within the timeout.
+    TimedOut,
+}
+
 struct ChannelState {
     value: Option<ServeResult>,
+    /// Incremental token progress pushed by the server before the
+    /// terminal outcome ([`ResponseTx::push_tokens`]); `taken` marks how
+    /// much of it the receiver has already consumed.
+    progress: Vec<i32>,
+    taken: usize,
     tx_gone: bool,
     rx_gone: bool,
 }
@@ -159,7 +219,13 @@ fn lock(inner: &ChannelInner) -> MutexGuard<'_, ChannelState> {
 /// orphaned-slot cancellation is built on.
 pub fn response_channel() -> (ResponseTx, ResponseRx) {
     let inner = Arc::new(ChannelInner {
-        state: Mutex::new(ChannelState { value: None, tx_gone: false, rx_gone: false }),
+        state: Mutex::new(ChannelState {
+            value: None,
+            progress: Vec::new(),
+            taken: 0,
+            tx_gone: false,
+            rx_gone: false,
+        }),
         cv: Condvar::new(),
     });
     (ResponseTx(inner.clone()), ResponseRx(inner))
@@ -178,6 +244,22 @@ impl ResponseTx {
             return false;
         }
         st.value = Some(result);
+        self.0.cv.notify_all();
+        true
+    }
+
+    /// Append incremental token progress ahead of the terminal outcome
+    /// (the streaming side-channel). Returns `false` once the receiver is
+    /// gone or the terminal outcome was already delivered.
+    pub fn push_tokens(&self, tokens: &[i32]) -> bool {
+        if tokens.is_empty() {
+            return true;
+        }
+        let mut st = lock(&self.0);
+        if st.rx_gone || st.value.is_some() {
+            return false;
+        }
+        st.progress.extend_from_slice(tokens);
         self.0.cv.notify_all();
         true
     }
@@ -221,6 +303,87 @@ impl ResponseRx {
     pub fn try_recv(&self) -> Option<ServeResult> {
         lock(&self.0).value.take()
     }
+
+    /// [`recv`](Self::recv) with an upper bound: connection handlers must
+    /// never hang forever on a response that was lost to a server bug —
+    /// they time out, answer the client with a typed error, and drop the
+    /// receiver (which cancels the server-side slot).
+    pub fn recv_timeout(&self, timeout: Duration) -> TimedRecv {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock(&self.0);
+        loop {
+            if let Some(v) = st.value.take() {
+                return TimedRecv::Ready(v);
+            }
+            if st.tx_gone {
+                return TimedRecv::SenderGone;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return TimedRecv::TimedOut;
+            }
+            let (g, _) = self
+                .0
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+
+    /// Streaming receive: wait up to `timeout` for the next event —
+    /// incremental tokens pushed via [`ResponseTx::push_tokens`] drain
+    /// first (exactly once, in order), then the terminal outcome. Chunked
+    /// HTTP responses are one `recv_progress` loop.
+    pub fn recv_progress(&self, timeout: Duration) -> StreamEvent {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock(&self.0);
+        loop {
+            if st.taken < st.progress.len() {
+                let fresh = st.progress[st.taken..].to_vec();
+                st.taken = st.progress.len();
+                return StreamEvent::Tokens(fresh);
+            }
+            if let Some(v) = st.value.take() {
+                return StreamEvent::Done(v);
+            }
+            if st.tx_gone {
+                return StreamEvent::SenderGone;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return StreamEvent::TimedOut;
+            }
+            let (g, _) = self
+                .0
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+}
+
+/// Non-blocking sweep over a set of pending receivers: split out every
+/// outcome that has already arrived (`Some`) or whose sender vanished
+/// without answering (`None`), returning the rest still pending. Lets
+/// collectors and shutdown paths harvest finished work without ever
+/// blocking on a straggler.
+pub fn drain_ready(pending: Vec<ResponseRx>) -> (Vec<Option<ServeResult>>, Vec<ResponseRx>) {
+    let mut resolved = Vec::new();
+    let mut still = Vec::new();
+    for rx in pending {
+        let (value, tx_gone) = {
+            let mut st = lock(&rx.0);
+            (st.value.take(), st.tx_gone)
+        };
+        match value {
+            Some(v) => resolved.push(Some(v)),
+            None if tx_gone => resolved.push(None),
+            None => still.push(rx),
+        }
+    }
+    (resolved, still)
 }
 
 impl Drop for ResponseRx {
@@ -294,6 +457,77 @@ mod tests {
         let waiter = std::thread::spawn(move || rx.recv());
         drop(tx);
         assert!(waiter.join().unwrap().is_none(), "recv returns None, never hangs");
+    }
+
+    /// Satellite regression: the timeout path must return `TimedOut`
+    /// without consuming anything, and a later send still delivers.
+    #[test]
+    fn recv_timeout_expires_then_delivers() {
+        let (tx, rx) = response_channel();
+        let t0 = Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(20)), TimedRecv::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "must actually wait");
+        assert!(tx.send(Ok(Response { tokens: vec![3], latency_s: 0.1 })));
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            TimedRecv::Ready(Ok(r)) => assert_eq!(r.tokens, vec![3]),
+            other => panic!("expected the outcome after timeout retry, got {other:?}"),
+        }
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(1)),
+            TimedRecv::TimedOut,
+            "outcome is consumed exactly once even on the timed path"
+        );
+    }
+
+    #[test]
+    fn recv_timeout_sees_dropped_sender() {
+        let (tx, rx) = response_channel();
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), TimedRecv::SenderGone);
+    }
+
+    #[test]
+    fn progress_streams_in_order_then_terminates() {
+        let (tx, rx) = response_channel();
+        assert!(tx.push_tokens(&[1, 2]));
+        assert!(tx.push_tokens(&[3]));
+        assert_eq!(
+            rx.recv_progress(Duration::from_secs(1)),
+            StreamEvent::Tokens(vec![1, 2, 3]),
+            "progress drains coalesced, in push order"
+        );
+        assert_eq!(rx.recv_progress(Duration::from_millis(5)), StreamEvent::TimedOut);
+        assert!(tx.send(Ok(Response { tokens: vec![1, 2, 3, 4], latency_s: 0.2 })));
+        assert!(!tx.push_tokens(&[9]), "no progress after the terminal outcome");
+        match rx.recv_progress(Duration::from_secs(1)) {
+            StreamEvent::Done(Ok(r)) => assert_eq!(r.tokens, vec![1, 2, 3, 4]),
+            other => panic!("expected terminal outcome, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_ready_partitions_without_blocking() {
+        let (tx_a, rx_a) = response_channel();
+        let (tx_b, rx_b) = response_channel();
+        let (tx_c, rx_c) = response_channel();
+        tx_a.send(Ok(Response { tokens: vec![1], latency_s: 0.0 }));
+        drop(tx_c); // lost without answering
+        let (resolved, still) = drain_ready(vec![rx_a, rx_b, rx_c]);
+        assert_eq!(resolved.len(), 2, "answered + lost resolve, pending stays");
+        assert_eq!(still.len(), 1);
+        assert!(matches!(&resolved[0], Some(Ok(r)) if r.tokens == vec![1]));
+        assert!(resolved[1].is_none(), "dropped sender surfaces as None");
+        drop(tx_b);
+        let (resolved, still) = drain_ready(still);
+        assert_eq!((resolved.len(), still.len()), (1, 0));
+    }
+
+    #[test]
+    fn attributed_error_carries_request_id() {
+        let e = ServeError::Overloaded.attributed(42);
+        assert_eq!(e.id, 42);
+        assert_eq!(e.err, ServeError::Overloaded);
+        assert!(e.to_string().contains("request 42"), "{e}");
     }
 
     #[test]

@@ -36,8 +36,8 @@ pub mod scheduler;
 mod serve;
 
 pub use fault::{
-    response_channel, RequestLimits, Response, ResponseRx, ResponseTx, ServeError, ServeResult,
-    ShutdownSignal,
+    drain_ready, response_channel, AttributedError, RequestLimits, Response, ResponseRx,
+    ResponseTx, ServeError, ServeResult, ShutdownSignal, StreamEvent, TimedRecv,
 };
 pub use methods::{compress_model_from, CompressedModel, Method};
 pub use scheduler::{Batcher, BatcherStats, Completion, ContinuousBatcher};

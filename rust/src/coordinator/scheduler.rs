@@ -297,6 +297,26 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         &self.stats
     }
 
+    /// Whether `id` currently occupies a slot (admitted, not yet
+    /// retired). The serve loop uses this to timestamp slot entry for
+    /// the queue-wait vs execution latency split.
+    pub fn is_live(&self, id: u64) -> bool {
+        self.slots.iter().flatten().any(|l| l.id == id)
+    }
+
+    /// Current output buffer of a **live** request (partial decode so
+    /// far), or `None` while it is still queued / already retired. This
+    /// is the read the serve loop's incremental streaming pushes are
+    /// built on; the buffer is framed like the terminal output, so the
+    /// caller de-frames it the same way.
+    pub fn peek_output(&self, id: u64) -> Option<Vec<i32>> {
+        self.slots
+            .iter()
+            .flatten()
+            .find(|l| l.id == id)
+            .map(|l| self.engine.slot_output(&l.slot))
+    }
+
     /// Mean slot occupancy over all decode steps so far.
     pub fn occupancy(&self) -> f64 {
         self.stats.occupancy(self.capacity)

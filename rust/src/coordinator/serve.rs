@@ -73,15 +73,32 @@ pub struct Request {
     /// Per-request deadline/length budget; unset fields fall back to the
     /// server's [`ServeConfig::default_limits`].
     pub limits: RequestLimits,
+    /// Stream incremental decode progress through
+    /// [`ResponseTx::push_tokens`] between ticks (the continuous loop
+    /// only; the terminal outcome still arrives exactly once). Costs one
+    /// partial-output read per decode step, so it is opt-in.
+    pub stream: bool,
 }
 
 impl Request {
     pub fn new(tokens: Vec<i32>, respond: ResponseTx) -> Request {
-        Request { tokens, t_arrival: Instant::now(), respond, limits: RequestLimits::none() }
+        Request {
+            tokens,
+            t_arrival: Instant::now(),
+            respond,
+            limits: RequestLimits::none(),
+            stream: false,
+        }
     }
 
     pub fn with_limits(mut self, limits: RequestLimits) -> Request {
         self.limits = limits;
+        self
+    }
+
+    /// Opt in to incremental token streaming.
+    pub fn with_stream(mut self) -> Request {
+        self.stream = true;
         self
     }
 }
@@ -131,6 +148,14 @@ pub struct ServeStats {
     /// Per-request latency samples (seconds, arrival to response), as
     /// observed by the server loop itself. Successful responses only.
     pub latency: Summary,
+    /// Queue-wait component of `latency`: arrival to admission (static
+    /// loop: arrival to batch formation). Together with `execution` this
+    /// attributes tail latency to admission pressure vs compute —
+    /// `latency ≈ queue_wait + execution` per request.
+    pub queue_wait: Summary,
+    /// Execution component of `latency`: admission to response (static
+    /// loop: the translate call).
+    pub execution: Summary,
     /// Mean fraction of batch/slot capacity occupied per translate call
     /// (static) or decode step (continuous), in `[0, 1]`.
     pub occupancy: f64,
@@ -168,6 +193,8 @@ impl ServeStats {
             wall_s,
             tokens: 0,
             latency: Summary::new(),
+            queue_wait: Summary::new(),
+            execution: Summary::new(),
             occupancy: 0.0,
             shed: 0,
             expired: 0,
@@ -232,6 +259,8 @@ pub fn serve_loop(
     let mut tokens = 0usize;
     let mut occupied_rows = 0usize;
     let mut latency = Summary::new();
+    let mut queue_wait = Summary::new();
+    let mut execution = Summary::new();
     while served + cancelled + faulted < n_requests {
         let Some(batch) = next_batch(rx, b) else { break };
         received += batch.len();
@@ -242,6 +271,7 @@ pub fn serve_loop(
         let pack_to = if backend.fixed_shape() { b } else { rows.len() };
         let src = pack_rows(&rows, pack_to, s, dims.pad_id);
         batches += 1;
+        let t_exec = Instant::now();
         let out = match backend.translate(&src) {
             Ok(out) => out,
             Err(e) => {
@@ -266,6 +296,8 @@ pub fn serve_loop(
             let lat = now.duration_since(req.t_arrival).as_secs_f64();
             tokens += toks.len();
             latency.add(lat);
+            queue_wait.add(t_exec.duration_since(req.t_arrival).as_secs_f64());
+            execution.add(now.duration_since(t_exec).as_secs_f64());
             if req.respond.send(Ok(Response { tokens: toks, latency_s: lat })) {
                 served += 1;
             } else {
@@ -281,6 +313,8 @@ pub fn serve_loop(
         wall_s: t0.elapsed().as_secs_f64(),
         tokens,
         latency,
+        queue_wait,
+        execution,
         occupancy: occupied_rows as f64 / (batches * b).max(1) as f64,
         shed: 0,
         expired: 0,
@@ -312,7 +346,7 @@ pub fn serve_loop_continuous<E: SlotEngine>(
     if let Some(limit) = cfg.queue_limit {
         batcher = batcher.with_queue_limit(limit);
     }
-    let mut inflight: HashMap<u64, Request> = HashMap::new();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     let mut received = 0usize;
     let mut served = 0usize;
     let mut shed = 0usize;
@@ -322,6 +356,8 @@ pub fn serve_loop_continuous<E: SlotEngine>(
     let mut done = 0usize;
     let mut tokens = 0usize;
     let mut latency = Summary::new();
+    let mut queue_wait = Summary::new();
+    let mut execution = Summary::new();
     let mut disconnected = false;
     loop {
         let draining = cfg.shutdown.as_ref().is_some_and(|sig| sig.is_draining());
@@ -370,7 +406,7 @@ pub fn serve_loop_continuous<E: SlotEngine>(
         // EOS for nobody (the slot-leak fix).
         let orphans: Vec<u64> = inflight
             .iter()
-            .filter(|(_, req)| req.respond.is_disconnected())
+            .filter(|(_, inf)| inf.req.respond.is_disconnected())
             .map(|(&id, _)| id)
             .collect();
         for id in orphans {
@@ -380,16 +416,23 @@ pub fn serve_loop_continuous<E: SlotEngine>(
                 done += 1;
             }
         }
+        let t_tick = Instant::now();
         for c in batcher.tick() {
-            let Some(req) = inflight.remove(&c.id) else { continue };
+            let Some(inf) = inflight.remove(&c.id) else { continue };
             done += 1;
             match c.result {
                 Ok(buf) => {
                     let toks = strip_specials(&buf, dims.bos_id, dims.eos_id, dims.pad_id);
-                    let lat = Instant::now().duration_since(req.t_arrival).as_secs_f64();
+                    let now = Instant::now();
+                    let lat = now.duration_since(inf.req.t_arrival).as_secs_f64();
+                    // A request that entered a slot and completed within
+                    // this same tick was admitted at the tick boundary.
+                    let t_admit = inf.t_admit.unwrap_or(t_tick);
                     tokens += toks.len();
                     latency.add(lat);
-                    req.respond.send(Ok(Response { tokens: toks, latency_s: lat }));
+                    queue_wait.add(t_admit.duration_since(inf.req.t_arrival).as_secs_f64());
+                    execution.add(now.duration_since(t_admit).as_secs_f64());
+                    inf.req.respond.send(Ok(Response { tokens: toks, latency_s: lat }));
                     served += 1;
                 }
                 Err(e) => {
@@ -399,7 +442,29 @@ pub fn serve_loop_continuous<E: SlotEngine>(
                         ServeError::Overloaded => shed += 1,
                         ServeError::Cancelled => cancelled += 1,
                     }
-                    req.respond.send(Err(e));
+                    inf.req.respond.send(Err(e));
+                }
+            }
+        }
+        // Post-tick bookkeeping over still-inflight requests: timestamp
+        // slot entry (admission happens inside the tick, at its start —
+        // the queue-wait/execution split pivots there), and push each
+        // opted-in live request's newly decoded tokens (its partial
+        // output past what was already pushed). Completions this tick
+        // were removed above, so their tail tokens travel with the
+        // terminal Response instead.
+        for (id, inf) in inflight.iter_mut() {
+            if inf.t_admit.is_none() && batcher.is_live(*id) {
+                inf.t_admit = Some(t_tick);
+            }
+            if !inf.req.stream {
+                continue;
+            }
+            if let Some(buf) = batcher.peek_output(*id) {
+                let toks = strip_specials(&buf, dims.bos_id, dims.eos_id, dims.pad_id);
+                if toks.len() > inf.streamed {
+                    inf.req.respond.push_tokens(&toks[inf.streamed..]);
+                    inf.streamed = toks.len();
                 }
             }
         }
@@ -417,12 +482,24 @@ pub fn serve_loop_continuous<E: SlotEngine>(
     stats.batches = batcher.stats().steps;
     stats.tokens = tokens;
     stats.latency = latency;
+    stats.queue_wait = queue_wait;
+    stats.execution = execution;
     stats.occupancy = batcher.occupancy();
     stats.shed = shed;
     stats.expired = expired;
     stats.cancelled = cancelled;
     stats.faulted = faulted;
     Ok(stats)
+}
+
+/// One submitted request plus the serve loop's bookkeeping: when it
+/// entered a decode slot (`None` while still queued — the pivot of the
+/// queue-wait/execution latency split) and how many tokens have already
+/// been streamed to its client.
+struct Inflight {
+    req: Request,
+    t_admit: Option<Instant>,
+    streamed: usize,
 }
 
 /// Pack, apply server-side default limits, and submit one request; on
@@ -434,13 +511,13 @@ fn admit_or_shed<E: SlotEngine>(
     seq: usize,
     pad: i32,
     batcher: &mut ContinuousBatcher<E>,
-    inflight: &mut HashMap<u64, Request>,
+    inflight: &mut HashMap<u64, Inflight>,
 ) -> Option<u64> {
     let limits = req.limits.or(cfg.default_limits);
     let row = pack_rows(&[req.tokens.as_slice()], 1, seq, pad);
     match batcher.submit_with(row, limits) {
         Ok(id) => {
-            inflight.insert(id, req);
+            inflight.insert(id, Inflight { req, t_admit: None, streamed: 0 });
             Some(id)
         }
         Err(e) => {
@@ -837,6 +914,12 @@ mod tests {
         assert_eq!(stats.batches, 2, "4-capacity batcher must split 5 into 4+1");
         assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
         assert_eq!(stats.latency.count(), 5, "one server-side latency sample per request");
+        assert_eq!(stats.queue_wait.count(), 5, "latency split covers every served request");
+        assert_eq!(stats.execution.count(), 5);
+        assert!(
+            (stats.queue_wait.mean() + stats.execution.mean() - stats.latency.mean()).abs() < 1e-6,
+            "latency decomposes into queue-wait + execution: {stats:?}"
+        );
         assert!(stats.tokens_per_s() > 0.0);
         for (i, rrx) in receivers.into_iter().enumerate() {
             // Echo + strip_specials leaves exactly the content token.
@@ -967,12 +1050,80 @@ mod tests {
         assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
         assert_eq!(stats.tokens, 5, "one de-framed token per echoed request");
         assert_eq!(stats.latency.count(), 5);
+        assert_eq!(stats.queue_wait.count(), 5, "latency split covers every served request");
+        assert_eq!(stats.execution.count(), 5);
+        assert!(
+            (stats.queue_wait.mean() + stats.execution.mean() - stats.latency.mean()).abs() < 1e-6,
+            "latency decomposes into queue-wait + execution: {stats:?}"
+        );
         for (i, rrx) in receivers.into_iter().enumerate() {
             assert_eq!(
                 recv_tokens(&rrx),
                 vec![30 + i as i32],
                 "responses route to their requester, FIFO"
             );
+        }
+    }
+
+    /// Slot engine whose output grows by one content token per step —
+    /// exercises the incremental streaming deltas.
+    struct GrowSlots {
+        seq: usize,
+        need: usize,
+    }
+
+    struct GrowSlot {
+        steps: usize,
+    }
+
+    impl crate::runtime::SlotEngine for GrowSlots {
+        type Slot = GrowSlot;
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&self, _src_row: &[i32]) -> Result<GrowSlot> {
+            Ok(GrowSlot { steps: 0 })
+        }
+        fn step(&self, slots: &mut [&mut GrowSlot]) -> Result<()> {
+            for s in slots.iter_mut() {
+                s.steps += 1;
+            }
+            Ok(())
+        }
+        fn slot_complete(&self, slot: &GrowSlot) -> bool {
+            slot.steps >= self.need
+        }
+        fn slot_output(&self, slot: &GrowSlot) -> Vec<i32> {
+            // BOS, one content token (10 + k) per completed step, EOS,
+            // PAD-filled to seq — framed like a real decode buffer.
+            let mut out = vec![1];
+            out.extend((0..slot.steps).map(|k| 10 + k as i32));
+            out.push(2);
+            out.resize(self.seq, 0);
+            out
+        }
+    }
+
+    #[test]
+    fn continuous_loop_streams_incremental_tokens() {
+        use crate::coordinator::fault::StreamEvent;
+        let engine = GrowSlots { seq: 6, need: 3 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = response_channel();
+        tx.send(Request::new(vec![1, 5, 2], rtx).with_stream()).unwrap();
+        drop(tx);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 1, &ServeConfig::new(1)).unwrap();
+        assert_eq!(stats.served, 1);
+        // The two non-final ticks pushed [10] then [11]; reading after
+        // the run coalesces them into one event. The final step's token
+        // travels with the terminal Response, which carries the full
+        // de-framed output.
+        let t = Duration::from_secs(5);
+        assert_eq!(rrx.recv_progress(t), StreamEvent::Tokens(vec![10, 11]));
+        match rrx.recv_progress(t) {
+            StreamEvent::Done(Ok(resp)) => assert_eq!(resp.tokens, vec![10, 11, 12]),
+            other => panic!("expected terminal response, got {other:?}"),
         }
     }
 

@@ -40,6 +40,13 @@
 //!   (`received == served + shed + expired + cancelled + faulted`).
 //!   The guarantee is exercised by a seeded deterministic
 //!   fault-injection harness ([`testkit::faultkit`]) in chaos soaks.
+//!   The serving layer is reachable over the network through [`server`]:
+//!   a dependency-free HTTP/1.1 front end (`std::net` only — routing,
+//!   keep-alive, chunked streaming of incremental decode progress,
+//!   typed error→status mapping) that feeds the same continuous serve
+//!   loop, so HTTP responses are bit-identical to in-process serving;
+//!   [`server::loadgen`] drives it with seeded Poisson open-loop load
+//!   for the latency/saturation bench lanes.
 //! * **Layer 2** — JAX transformer (`python/compile/model.py`), lowered
 //!   once to HLO text under `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing
@@ -58,6 +65,7 @@ pub mod eval;
 pub mod hw;
 pub mod model;
 pub mod runtime;
+pub mod server;
 pub mod sra;
 pub mod linalg;
 pub mod qkernel;

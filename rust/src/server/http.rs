@@ -1,0 +1,447 @@
+//! Dependency-free HTTP/1.1 plumbing for the inference server and its
+//! clients: request/response parsing and writing over `std::io`, with
+//! keep-alive, `Content-Length` bodies, and chunked transfer encoding
+//! (the wire form of streaming token responses). No TLS, no HTTP/2 —
+//! exactly the subset a self-contained serving stack needs, implemented
+//! on the standard library alone.
+//!
+//! The reader ([`HttpConn`]) is generic over any byte stream and keeps
+//! leftover bytes between messages, which is what makes keep-alive and
+//! client-side pipelining work over plain blocking reads; the writers
+//! are free functions over `impl Write`, shared by the server, the load
+//! generator and the test clients.
+
+use std::io::{self, Read, Write};
+
+use crate::util::json::{Json, JsonError};
+
+/// Upper bound on a request/response head (start line + headers).
+const MAX_HEAD: usize = 16 * 1024;
+
+/// How much of an oversized (413) body the server is willing to drain
+/// before closing. Draining lets the rejection reach the client — a
+/// close with unread bytes in the socket buffer resets the connection
+/// and can destroy the in-flight response — while the bound keeps a
+/// hostile content-length from pinning the handler.
+const MAX_DRAIN: usize = 256 * 1024;
+
+/// A parsed HTTP/1.1 request (server side): head + body.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    /// Header names lowercased, values trimmed; duplicates kept in order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, &name.to_ascii_lowercase())
+    }
+
+    /// The client asked for the connection to close after this exchange.
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// A parsed HTTP/1.1 response (client side). Chunked bodies arrive
+/// already reassembled.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, &name.to_ascii_lowercase())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json, JsonError> {
+        match std::str::from_utf8(&self.body) {
+            Ok(s) => Json::parse(s),
+            Err(_) => Err(JsonError { pos: 0, msg: "body is not utf-8".to_string() }),
+        }
+    }
+}
+
+fn find_header<'a>(headers: &'a [(String, String)], lower_name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == lower_name).map(|(_, v)| v.as_str())
+}
+
+/// Why reading the next message off a connection failed.
+#[derive(Debug)]
+pub enum RecvError {
+    /// Clean EOF on a message boundary: the peer is done.
+    Closed,
+    /// The socket's read timeout elapsed. Buffered bytes are kept — call
+    /// again to keep waiting (the server's drain-aware idle loop).
+    Idle,
+    /// Malformed or oversized message — answer 400 (if serving) and
+    /// close; the stream position can no longer be trusted.
+    Bad(String),
+    /// Declared body length exceeds the configured cap (413).
+    TooLarge,
+    Io(io::Error),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "connection closed"),
+            RecvError::Idle => write!(f, "read timed out"),
+            RecvError::Bad(m) => write!(f, "malformed message: {m}"),
+            RecvError::TooLarge => write!(f, "body exceeds the configured cap"),
+            RecvError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Buffered HTTP message reader over any byte stream.
+pub struct HttpConn<S> {
+    stream: S,
+    buf: Vec<u8>,
+}
+
+impl<S: Read> HttpConn<S> {
+    pub fn new(stream: S) -> HttpConn<S> {
+        HttpConn { stream, buf: Vec::new() }
+    }
+
+    /// The underlying stream (for writing responses/requests back).
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Pull more bytes into the buffer. `Ok(false)` on EOF.
+    fn fill(&mut self) -> Result<bool, RecvError> {
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => Ok(false),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(true)
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                Err(RecvError::Idle)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(true),
+            Err(e) => Err(RecvError::Io(e)),
+        }
+    }
+
+    /// Index just past the `\r\n\r\n` head terminator, if buffered.
+    fn head_end(&self) -> Option<usize> {
+        self.buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+    }
+
+    /// Block until a full head is buffered; returns its length.
+    fn read_head(&mut self) -> Result<usize, RecvError> {
+        loop {
+            if let Some(end) = self.head_end() {
+                return Ok(end);
+            }
+            if self.buf.len() > MAX_HEAD {
+                return Err(RecvError::Bad("head exceeds 16 KiB".to_string()));
+            }
+            if !self.fill()? {
+                return if self.buf.is_empty() {
+                    Err(RecvError::Closed)
+                } else {
+                    Err(RecvError::Bad("connection closed mid-head".to_string()))
+                };
+            }
+        }
+    }
+
+    /// Take exactly `len` bytes off the front of the stream.
+    fn read_exact_buf(&mut self, len: usize) -> Result<Vec<u8>, RecvError> {
+        while self.buf.len() < len {
+            if !self.fill()? {
+                return Err(RecvError::Bad("connection closed mid-body".to_string()));
+            }
+        }
+        let out = self.buf[..len].to_vec();
+        self.buf.drain(..len);
+        Ok(out)
+    }
+
+    /// One CRLF-terminated line (chunk-size framing).
+    fn read_line(&mut self) -> Result<String, RecvError> {
+        loop {
+            if let Some(i) = self.buf.windows(2).position(|w| w == b"\r\n") {
+                let line = String::from_utf8_lossy(&self.buf[..i]).into_owned();
+                self.buf.drain(..i + 2);
+                return Ok(line);
+            }
+            if self.buf.len() > MAX_HEAD {
+                return Err(RecvError::Bad("line exceeds 16 KiB".to_string()));
+            }
+            if !self.fill()? {
+                return Err(RecvError::Bad("connection closed mid-line".to_string()));
+            }
+        }
+    }
+
+    /// Read one full request (head + `Content-Length` body).
+    pub fn read_request(&mut self, max_body: usize) -> Result<HttpRequest, RecvError> {
+        let head_len = self.read_head()?;
+        let (start, headers) = parse_head(&self.buf[..head_len])?;
+        let mut parts = start.split(' ');
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+            return Err(RecvError::Bad(format!("malformed request line: {start:?}")));
+        }
+        if find_header(&headers, "transfer-encoding").is_some() {
+            return Err(RecvError::Bad("chunked request bodies are not supported".to_string()));
+        }
+        let body_len = match find_header(&headers, "content-length") {
+            None => 0,
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| RecvError::Bad(format!("bad content-length: {v:?}")))?,
+        };
+        if body_len > max_body {
+            self.buf.drain(..head_len);
+            if body_len <= MAX_DRAIN {
+                // Best effort: an Idle/EOF mid-drain still rejects.
+                let _ = self.read_exact_buf(body_len);
+            }
+            return Err(RecvError::TooLarge);
+        }
+        self.buf.drain(..head_len);
+        let body = self.read_exact_buf(body_len)?;
+        Ok(HttpRequest { method, target, headers, body })
+    }
+
+    /// Read one full response; chunked bodies are reassembled.
+    pub fn read_response(&mut self) -> Result<HttpResponse, RecvError> {
+        let head_len = self.read_head()?;
+        let (start, headers) = parse_head(&self.buf[..head_len])?;
+        let status = start
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| RecvError::Bad(format!("malformed status line: {start:?}")))?;
+        self.buf.drain(..head_len);
+        let chunked = find_header(&headers, "transfer-encoding")
+            .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"));
+        let body = if chunked {
+            let mut body = Vec::new();
+            loop {
+                let line = self.read_line()?;
+                let size = usize::from_str_radix(line.trim(), 16)
+                    .map_err(|_| RecvError::Bad(format!("bad chunk size: {line:?}")))?;
+                // Chunk data is followed by its own CRLF; the terminal
+                // 0-chunk's trailing CRLF closes the body.
+                let chunk = self.read_exact_buf(size + 2)?;
+                if size == 0 {
+                    break;
+                }
+                body.extend_from_slice(&chunk[..size]);
+            }
+            body
+        } else {
+            let len = match find_header(&headers, "content-length") {
+                None => 0,
+                Some(v) => v
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| RecvError::Bad(format!("bad content-length: {v:?}")))?,
+            };
+            self.read_exact_buf(len)?
+        };
+        Ok(HttpResponse { status, headers, body })
+    }
+}
+
+/// Split a head block (bytes up to and including the blank line) into
+/// its start line and lowercased header pairs.
+fn parse_head(head: &[u8]) -> Result<(String, Vec<(String, String)>), RecvError> {
+    let text = std::str::from_utf8(&head[..head.len() - 4])
+        .map_err(|_| RecvError::Bad("head is not utf-8".to_string()))?;
+    let mut lines = text.split("\r\n");
+    let start = lines.next().unwrap_or("").to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(RecvError::Bad(format!("malformed header line: {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok((start, headers))
+}
+
+/// Standard reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete JSON response with `Content-Length` framing.
+pub fn write_response(w: &mut impl Write, status: u16, body: &Json, close: bool) -> io::Result<()> {
+    let payload = body.to_string();
+    let conn = if close { "close" } else { "keep-alive" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{payload}",
+        reason(status),
+        payload.len(),
+    )?;
+    w.flush()
+}
+
+/// Start a chunked (streaming) response; follow with [`write_chunk`]
+/// calls and one [`finish_chunks`].
+pub fn write_chunked_head(w: &mut impl Write, status: u16) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Transfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n",
+        reason(status),
+    )?;
+    w.flush()
+}
+
+/// One body chunk. Empty data is skipped (an empty chunk would
+/// terminate the body early — that is [`finish_chunks`]' job).
+pub fn write_chunk(w: &mut impl Write, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked body.
+pub fn finish_chunks(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Write a client request; `body` adds JSON + `Content-Length` framing.
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> io::Result<()> {
+    match body {
+        Some(j) => {
+            let payload = j.to_string();
+            write!(
+                w,
+                "{method} {path} HTTP/1.1\r\nHost: itera\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{payload}",
+                payload.len(),
+            )?;
+        }
+        None => write!(w, "{method} {path} HTTP/1.1\r\nHost: itera\r\n\r\n")?,
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_pipelined_requests_with_bodies() {
+        let wire = b"POST /v1/translate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd\
+                     GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut conn = HttpConn::new(Cursor::new(wire.to_vec()));
+        let r1 = conn.read_request(1024).unwrap();
+        assert_eq!(r1.method, "POST");
+        assert_eq!(r1.target, "/v1/translate");
+        assert_eq!(r1.body, b"abcd");
+        assert_eq!(r1.header("Host"), Some("x"), "header lookup is case-insensitive");
+        assert!(!r1.wants_close());
+        let r2 = conn.read_request(1024).unwrap();
+        assert_eq!(r2.method, "GET");
+        assert!(r2.body.is_empty());
+        assert!(r2.wants_close());
+        assert!(matches!(conn.read_request(1024), Err(RecvError::Closed)), "clean EOF");
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed() {
+        let wire = b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        let mut conn = HttpConn::new(Cursor::new(wire.to_vec()));
+        assert!(matches!(conn.read_request(10), Err(RecvError::TooLarge)));
+
+        let mut conn = HttpConn::new(Cursor::new(b"garbage\r\n\r\n".to_vec()));
+        assert!(matches!(conn.read_request(10), Err(RecvError::Bad(_))));
+
+        let mut conn = HttpConn::new(Cursor::new(b"GET /x HTTP/1.1\r\nnocolon\r\n\r\n".to_vec()));
+        assert!(matches!(conn.read_request(10), Err(RecvError::Bad(_))));
+
+        // EOF mid-head is not a clean close.
+        let mut conn = HttpConn::new(Cursor::new(b"GET /x HT".to_vec()));
+        assert!(matches!(conn.read_request(10), Err(RecvError::Bad(_))));
+    }
+
+    #[test]
+    fn response_roundtrip_content_length() {
+        let body = Json::obj(vec![("ok", Json::Bool(true)), ("n", Json::Num(3.0))]);
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, &body, false).unwrap();
+        let mut conn = HttpConn::new(Cursor::new(wire));
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.json().unwrap(), body);
+    }
+
+    #[test]
+    fn response_roundtrip_chunked() {
+        let mut wire = Vec::new();
+        write_chunked_head(&mut wire, 200).unwrap();
+        write_chunk(&mut wire, b"{\"a\":1}\n").unwrap();
+        write_chunk(&mut wire, b"").unwrap(); // skipped, not terminal
+        write_chunk(&mut wire, b"{\"b\":2}\n").unwrap();
+        finish_chunks(&mut wire).unwrap();
+        let mut conn = HttpConn::new(Cursor::new(wire));
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"a\":1}\n{\"b\":2}\n", "chunks reassemble in order");
+    }
+
+    #[test]
+    fn request_writer_roundtrips_through_parser() {
+        let body = Json::obj(vec![("tokens", Json::arr_f64(&[1.0, 2.0]))]);
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/translate", Some(&body)).unwrap();
+        write_request(&mut wire, "GET", "/healthz", None).unwrap();
+        let mut conn = HttpConn::new(Cursor::new(wire));
+        let r1 = conn.read_request(1 << 20).unwrap();
+        assert_eq!(r1.method, "POST");
+        assert_eq!(Json::parse(std::str::from_utf8(&r1.body).unwrap()).unwrap(), body);
+        let r2 = conn.read_request(1 << 20).unwrap();
+        assert_eq!((r2.method.as_str(), r2.target.as_str()), ("GET", "/healthz"));
+    }
+}

@@ -1,0 +1,307 @@
+//! Open-loop HTTP load generator for the inference server.
+//!
+//! Offered load is a seeded Poisson process: a single global schedule of
+//! exponential inter-arrivals is drawn up-front ([`crate::util::rng`],
+//! fully reproducible), round-robined across persistent keep-alive
+//! connections, and each connection thread fires at its absolute
+//! schedule offsets. When the server saturates, threads fall behind
+//! schedule and the backlog surfaces as latency — exactly what the p99
+//! lanes should see, instead of the closed-loop coordinated omission
+//! that hides it. `rate = 0` degenerates to closed-loop back-to-back
+//! requests (the saturation-throughput probe).
+//!
+//! Request bodies are ragged: token counts draw uniformly from a
+//! configured range, content ids uniformly from the model vocabulary,
+//! framed the way the tokenizer would (BOS/EOS are the server's
+//! business — the loadgen sends raw content rows like any client).
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+use super::http::{write_request, HttpConn, HttpResponse, RecvError};
+
+/// Open-loop load-generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Persistent keep-alive connections, each on its own thread.
+    pub connections: usize,
+    /// Total requests across the whole fleet.
+    pub requests: usize,
+    /// Offered arrival rate in requests/second (aggregate, Poisson).
+    /// `0.0` means closed-loop: every connection fires back-to-back.
+    pub rate: f64,
+    /// RNG seed: schedule and request shapes are reproducible.
+    pub seed: u64,
+    /// Ragged request lengths: token counts draw uniformly from this
+    /// inclusive range.
+    pub len_range: (usize, usize),
+    /// Content token ids draw uniformly from `3..vocab` (ids 0/1/2 are
+    /// the PAD/BOS/EOS convention).
+    pub vocab: i32,
+    /// Per-request decode-step deadline forwarded to the server.
+    pub deadline_steps: Option<usize>,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            connections: 8,
+            requests: 64,
+            rate: 0.0,
+            seed: 0x10AD,
+            len_range: (2, 8),
+            vocab: 16,
+            deadline_steps: None,
+        }
+    }
+}
+
+/// What the load generator observed, aggregated across connections.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Requests put on the wire.
+    pub sent: usize,
+    /// 200 responses.
+    pub ok: usize,
+    /// Non-200 outcomes bucketed by HTTP status (0 = transport error).
+    pub errors: BTreeMap<u16, usize>,
+    /// Generated tokens across successful responses.
+    pub tokens: usize,
+    pub wall_s: f64,
+    /// Client-observed request latency (send to full response), seconds.
+    pub latency: Summary,
+}
+
+impl LoadReport {
+    /// Successful requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.ok as f64 / self.wall_s.max(1e-12)
+    }
+
+    /// Generated tokens per wall-clock second — the saturation gauge.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-12)
+    }
+
+    /// Requests that did not end in a 200.
+    pub fn failed(&self) -> usize {
+        self.errors.values().sum()
+    }
+
+    /// One-screen human summary (the CLI's `--loadgen` output).
+    pub fn print(&self, label: &str) {
+        println!("== loadgen ({label}) ==");
+        println!("sent          : {} ({} ok, {} failed)", self.sent, self.ok, self.failed());
+        println!("wall time     : {:.2}s", self.wall_s);
+        println!("throughput    : {:.1} req/s", self.throughput_rps());
+        println!("tokens/sec    : {:.1} ({} generated tokens)", self.tokens_per_s(), self.tokens);
+        println!(
+            "latency (s)   : p50 {:.4}  p95 {:.4}  p99 {:.4}  max {:.4}",
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.95),
+            self.latency.quantile(0.99),
+            self.latency.max()
+        );
+        for (status, n) in &self.errors {
+            println!("status {status:>3}    : {n}");
+        }
+    }
+}
+
+/// Per-connection slice of the run (merged by [`run_loadgen`]).
+#[derive(Default)]
+struct Part {
+    sent: usize,
+    ok: usize,
+    tokens: usize,
+    errors: BTreeMap<u16, usize>,
+    lats: Vec<f64>,
+}
+
+/// Drive the configured load against `addr` and aggregate what came
+/// back. Blocks until every scheduled request has an outcome.
+pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    let conns = cfg.connections.max(1);
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut plans: Vec<Vec<(Duration, Vec<i32>)>> = vec![Vec::new(); conns];
+    let mut at = 0.0f64;
+    let (lo, hi) = cfg.len_range;
+    let span = hi.max(lo) - lo + 1;
+    let ids = (cfg.vocab - 3).max(1) as usize;
+    for i in 0..cfg.requests {
+        if cfg.rate > 0.0 {
+            // Exponential inter-arrival via inverse CDF: -ln(1-u)/rate.
+            at += -(1.0 - rng.next_f64()).ln() / cfg.rate;
+        }
+        let len = lo + rng.below(span);
+        let tokens: Vec<i32> = (0..len).map(|_| 3 + rng.below(ids) as i32).collect();
+        plans[i % conns].push((Duration::from_secs_f64(at), tokens));
+    }
+    let t0 = Instant::now();
+    let workers: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let deadline_steps = cfg.deadline_steps;
+            std::thread::spawn(move || run_connection(addr, t0, plan, deadline_steps))
+        })
+        .collect();
+    let mut report = LoadReport::default();
+    for w in workers {
+        let part = w.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))??;
+        report.sent += part.sent;
+        report.ok += part.ok;
+        report.tokens += part.tokens;
+        for (status, n) in part.errors {
+            *report.errors.entry(status).or_insert(0) += n;
+        }
+        for lat in part.lats {
+            report.latency.add(lat);
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn exchange(conn: &mut HttpConn<TcpStream>, body: &Json) -> Result<HttpResponse, RecvError> {
+    write_request(conn.get_mut(), "POST", "/v1/translate", Some(body)).map_err(RecvError::Io)?;
+    conn.read_response()
+}
+
+fn run_connection(
+    addr: SocketAddr,
+    t0: Instant,
+    plan: Vec<(Duration, Vec<i32>)>,
+    deadline_steps: Option<usize>,
+) -> Result<Part> {
+    let mut part = Part::default();
+    if plan.is_empty() {
+        return Ok(part);
+    }
+    let stream = TcpStream::connect(addr).context("loadgen connect")?;
+    stream.set_nodelay(true).ok();
+    let mut conn = HttpConn::new(stream);
+    for (at, tokens) in plan {
+        // Open-loop pacing: wait for the scheduled offset; once the
+        // server saturates we fall behind and the backlog shows up as
+        // latency instead of silently thinning the offered load.
+        let elapsed = t0.elapsed();
+        if at > elapsed {
+            std::thread::sleep(at - elapsed);
+        }
+        let toks = Json::Arr(tokens.iter().map(|&t| Json::Num(f64::from(t))).collect());
+        let mut fields = vec![("tokens", toks)];
+        if let Some(d) = deadline_steps {
+            fields.push(("deadline_steps", Json::Num(d as f64)));
+        }
+        let body = Json::obj(fields);
+        let t_send = Instant::now();
+        part.sent += 1;
+        let resp = match exchange(&mut conn, &body) {
+            Ok(resp) => resp,
+            Err(_) => {
+                // The server sheds whole connections at the accept level
+                // under overload; reconnect once, else count the miss.
+                match TcpStream::connect(addr) {
+                    Ok(s) => {
+                        s.set_nodelay(true).ok();
+                        conn = HttpConn::new(s);
+                        match exchange(&mut conn, &body) {
+                            Ok(resp) => resp,
+                            Err(_) => {
+                                *part.errors.entry(0).or_insert(0) += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        *part.errors.entry(0).or_insert(0) += 1;
+                        continue;
+                    }
+                }
+            }
+        };
+        part.lats.push(t_send.elapsed().as_secs_f64());
+        if resp.status == 200 {
+            part.ok += 1;
+            if let Ok(j) = resp.json() {
+                part.tokens += j.get("tokens").as_arr().map_or(0, <[Json]>::len);
+            }
+        } else {
+            *part.errors.entry(resp.status).or_insert(0) += 1;
+        }
+    }
+    Ok(part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Draw the schedule exactly the way `run_loadgen` does.
+    fn draw_schedule(cfg: &LoadGenConfig) -> Vec<(f64, Vec<i32>)> {
+        let mut rng = Pcg64::new(cfg.seed);
+        let (lo, hi) = cfg.len_range;
+        let mut at = 0.0;
+        let mut out = Vec::new();
+        for _ in 0..cfg.requests {
+            if cfg.rate > 0.0 {
+                at += -(1.0 - rng.next_f64()).ln() / cfg.rate;
+            }
+            let len = lo + rng.below(hi - lo + 1);
+            let tokens: Vec<i32> =
+                (0..len).map(|_| 3 + rng.below((cfg.vocab - 3) as usize) as i32).collect();
+            out.push((at, tokens));
+        }
+        out
+    }
+
+    #[test]
+    fn schedule_is_reproducible_and_poisson_shaped() {
+        let cfg = LoadGenConfig { requests: 4000, rate: 500.0, ..LoadGenConfig::default() };
+        let sched = draw_schedule(&cfg);
+        let (lo, hi) = cfg.len_range;
+        let mut prev = 0.0;
+        let mut gap_sum = 0.0;
+        for (at, tokens) in &sched {
+            assert!(*at >= prev, "arrival times are monotone");
+            gap_sum += at - prev;
+            prev = *at;
+            assert!((lo..=hi).contains(&tokens.len()), "ragged lengths stay in range");
+            assert!(tokens.iter().all(|t| (3..cfg.vocab).contains(t)));
+        }
+        // Exponential inter-arrivals: the mean gap estimates 1/rate.
+        let mean = gap_sum / sched.len() as f64;
+        assert!((mean - 1.0 / cfg.rate).abs() < 0.2 / cfg.rate, "mean gap ~ 1/rate, got {mean}");
+        // Same seed, same schedule — bit for bit.
+        let again = draw_schedule(&cfg);
+        assert_eq!(sched.len(), again.len());
+        for ((a, ta), (b, tb)) in sched.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(ta, tb);
+        }
+    }
+
+    #[test]
+    fn report_aggregates_and_rates() {
+        let mut r = LoadReport::default();
+        r.sent = 10;
+        r.ok = 8;
+        r.errors.insert(503, 2);
+        r.tokens = 40;
+        r.wall_s = 2.0;
+        for i in 0..8 {
+            r.latency.add(0.01 * (i + 1) as f64);
+        }
+        assert_eq!(r.failed(), 2);
+        assert!((r.throughput_rps() - 4.0).abs() < 1e-12);
+        assert!((r.tokens_per_s() - 20.0).abs() < 1e-12);
+        assert_eq!(r.latency.count(), 8);
+    }
+}

@@ -1,0 +1,588 @@
+//! Network serving: a dependency-free HTTP/1.1 front end over the
+//! continuous-batching serve loop.
+//!
+//! [`serve_http`] binds the whole stack together: an acceptor thread
+//! hands connections to bounded handler threads, handlers parse JSON
+//! request bodies into [`Request`]s and feed them over the same mpsc
+//! channel + one-shot response channel the in-process clients use, and
+//! [`serve_loop_continuous`] runs unchanged on the **caller's** thread
+//! (the engine never crosses threads, so `SlotEngine` needs no `Send`).
+//! Translation over HTTP is therefore bit-identical to in-process
+//! serving — the network layer adds transport, not semantics.
+//!
+//! Routes:
+//!
+//! * `POST /v1/translate` — body `{"tokens": [i32...]}` plus optional
+//!   `"deadline_steps"`, `"max_new_tokens"` (per-request limits) and
+//!   `"stream": true` (chunked transfer encoding, one JSON line of
+//!   newly decoded tokens per chunk). Unary responses carry
+//!   `{"id", "tokens", "latency_s"}`.
+//! * `GET /healthz` — liveness + drain state.
+//! * `POST /v1/shutdown` — flips the [`ShutdownSignal`]: 202, then the
+//!   loop drains and [`serve_http`] returns its final [`ServeStats`].
+//!
+//! The fault taxonomy maps onto status codes ([`status_for`]):
+//! `Overloaded` → 503, `DeadlineExceeded` → 504, `EngineFault` → 500;
+//! parse/extraction failures → 400 (with the JSONPath of the offending
+//! field), unknown routes → 404, oversized bodies → 413. Error bodies
+//! carry the server-assigned request id
+//! ([`crate::coordinator::AttributedError`]) so a client log line can
+//! be matched to a server-side event.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    response_channel, serve_loop_continuous, Request, RequestLimits, ResponseRx, ServeConfig,
+    ServeError, ServeStats, ShutdownSignal, StreamEvent, TimedRecv,
+};
+use crate::model::ModelDims;
+use crate::runtime::SlotEngine;
+use crate::util::json::Json;
+
+pub mod http;
+pub mod loadgen;
+
+use http::{
+    finish_chunks, write_chunk, write_chunked_head, write_response, HttpConn, HttpRequest,
+    RecvError,
+};
+
+/// How often the acceptor re-checks the shutdown signal between
+/// non-blocking accept attempts.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Knobs for [`serve_http`] beyond the serve loop's own [`ServeConfig`].
+#[derive(Clone)]
+pub struct HttpConfig {
+    /// The continuous serve loop's configuration (capacity, queue bound,
+    /// default limits). Its `shutdown` signal is created automatically
+    /// when unset — `POST /v1/shutdown` needs one to flip.
+    pub serve: ServeConfig,
+    /// Concurrent connections served; excess connections receive an
+    /// immediate 503 and are closed (accept-side load shedding).
+    pub max_connections: usize,
+    /// Request bodies beyond this many bytes are rejected with 413.
+    pub max_body_bytes: usize,
+    /// Requests served per connection before it is closed — bounds how
+    /// long one keep-alive client can pin a handler thread.
+    pub keep_alive_requests: usize,
+    /// Socket read timeout: the granularity at which idle handler
+    /// threads notice a drain.
+    pub read_timeout: Duration,
+    /// Upper bound a handler waits for the serve loop's outcome before
+    /// answering 500 and cancelling the request (dropping the response
+    /// receiver retires the slot server-side).
+    pub response_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            serve: ServeConfig::default(),
+            max_connections: 256,
+            max_body_bytes: 1 << 20,
+            keep_alive_requests: 1024,
+            read_timeout: Duration::from_millis(50),
+            response_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl HttpConfig {
+    pub fn new(serve: ServeConfig) -> HttpConfig {
+        HttpConfig { serve, ..HttpConfig::default() }
+    }
+}
+
+/// The HTTP status each typed serve error maps to.
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Overloaded => 503,
+        ServeError::DeadlineExceeded => 504,
+        ServeError::EngineFault(_) | ServeError::Cancelled => 500,
+    }
+}
+
+/// State shared by the acceptor and every handler thread.
+struct Ctx {
+    cfg: HttpConfig,
+    shutdown: ShutdownSignal,
+    /// Server-assigned request ids ([`AttributedError`] attribution).
+    next_id: AtomicU64,
+    /// Live handler threads (the `max_connections` bound).
+    active: AtomicUsize,
+}
+
+/// Serve HTTP requests over `listener` until a graceful drain
+/// (`POST /v1/shutdown`, or the config's own [`ShutdownSignal`] flipped
+/// externally), then return the serve loop's final [`ServeStats`]. The
+/// serve loop runs on the calling thread; the listener is consumed by
+/// the acceptor thread. Bind to port 0 for an ephemeral port and read
+/// it back with `listener.local_addr()` before calling.
+pub fn serve_http<E: SlotEngine>(
+    engine: &E,
+    listener: TcpListener,
+    dims: &ModelDims,
+    mut cfg: HttpConfig,
+) -> Result<ServeStats> {
+    let shutdown = match &cfg.serve.shutdown {
+        Some(s) => s.clone(),
+        None => {
+            let s = ShutdownSignal::new();
+            cfg.serve.shutdown = Some(s.clone());
+            s
+        }
+    };
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = mpsc::channel::<Request>();
+    let ctx = Arc::new(Ctx {
+        cfg: cfg.clone(),
+        shutdown,
+        next_id: AtomicU64::new(1),
+        active: AtomicUsize::new(0),
+    });
+    let acceptor = {
+        let ctx = ctx.clone();
+        std::thread::spawn(move || accept_loop(listener, tx, ctx))
+    };
+    let stats = serve_loop_continuous(engine, &rx, dims, usize::MAX, &cfg.serve)?;
+    acceptor.join().map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
+    // Every outcome was already delivered by the serve loop; give the
+    // remaining handlers a moment to flush their final bytes.
+    let t0 = Instant::now();
+    while ctx.active.load(Ordering::SeqCst) > 0 && t0.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    Ok(stats)
+}
+
+/// Decrements the live-connection count however the handler exits
+/// (including panics — the bound must never leak).
+struct ConnGuard(Arc<Ctx>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Request>, ctx: Arc<Ctx>) {
+    loop {
+        if ctx.shutdown.is_draining() {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if ctx.active.load(Ordering::SeqCst) >= ctx.cfg.max_connections {
+                    // Accept-side shedding: answer before the handler
+                    // pool, so overload never queues unbounded threads.
+                    let body = error_json("overloaded", "connection limit reached");
+                    let _ = write_response(&mut stream, 503, &body, true);
+                    continue;
+                }
+                ctx.active.fetch_add(1, Ordering::SeqCst);
+                let tx = tx.clone();
+                let ctx = ctx.clone();
+                std::thread::spawn(move || {
+                    let guard = ConnGuard(ctx);
+                    handle_connection(stream, tx, &guard.0);
+                });
+            }
+            // WouldBlock (no pending connection) and transient accept
+            // errors both back off to the next poll.
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Request>, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut conn = HttpConn::new(stream);
+    let mut served = 0usize;
+    while served < ctx.cfg.keep_alive_requests {
+        let req = match conn.read_request(ctx.cfg.max_body_bytes) {
+            Ok(req) => req,
+            Err(RecvError::Idle) => {
+                if ctx.shutdown.is_draining() {
+                    return;
+                }
+                continue; // keep-alive idle; doesn't consume the budget
+            }
+            Err(RecvError::Closed) | Err(RecvError::Io(_)) => return,
+            Err(RecvError::TooLarge) => {
+                let body =
+                    error_json("payload_too_large", "request body exceeds the configured cap");
+                let _ = write_response(conn.get_mut(), 413, &body, true);
+                return;
+            }
+            Err(RecvError::Bad(msg)) => {
+                let body = error_json("bad_request", &msg);
+                let _ = write_response(conn.get_mut(), 400, &body, true);
+                return;
+            }
+        };
+        served += 1;
+        let close = req.wants_close() || served == ctx.cfg.keep_alive_requests;
+        if !route(&mut conn, &req, close, &tx, ctx) || close {
+            return;
+        }
+    }
+}
+
+/// Dispatch one request; `false` means the connection is no longer
+/// usable (write failure or a mid-stream error).
+fn route(
+    conn: &mut HttpConn<TcpStream>,
+    req: &HttpRequest,
+    close: bool,
+    tx: &mpsc::Sender<Request>,
+    ctx: &Ctx,
+) -> bool {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("status", Json::Str("ok".to_string())),
+                ("draining", Json::Bool(ctx.shutdown.is_draining())),
+            ]);
+            write_response(conn.get_mut(), 200, &body, close).is_ok()
+        }
+        ("POST", "/v1/shutdown") => {
+            ctx.shutdown.drain();
+            let body = Json::obj(vec![("draining", Json::Bool(true))]);
+            write_response(conn.get_mut(), 202, &body, close).is_ok()
+        }
+        ("POST", "/v1/translate") => translate(conn, req, close, tx, ctx),
+        (_, "/healthz" | "/v1/shutdown" | "/v1/translate") => {
+            let msg = format!("{} not supported on {}", req.method, req.target);
+            let body = error_json("method_not_allowed", &msg);
+            write_response(conn.get_mut(), 405, &body, close).is_ok()
+        }
+        _ => {
+            let body = error_json("not_found", &format!("no route for {}", req.target));
+            write_response(conn.get_mut(), 404, &body, close).is_ok()
+        }
+    }
+}
+
+fn translate(
+    conn: &mut HttpConn<TcpStream>,
+    req: &HttpRequest,
+    close: bool,
+    tx: &mpsc::Sender<Request>,
+    ctx: &Ctx,
+) -> bool {
+    let id = ctx.next_id.fetch_add(1, Ordering::SeqCst);
+    let (tokens, limits, stream) = match parse_translate(&req.body) {
+        Ok(parts) => parts,
+        Err(msg) => {
+            let body = error_body(id, "bad_request", &msg);
+            return write_response(conn.get_mut(), 400, &body, close).is_ok();
+        }
+    };
+    if ctx.shutdown.is_draining() {
+        let e = ServeError::Overloaded;
+        let body = error_body(id, e.key(), &e.clone().attributed(id).to_string());
+        return write_response(conn.get_mut(), 503, &body, close).is_ok();
+    }
+    let (rtx, rrx) = response_channel();
+    let mut r = Request::new(tokens, rtx).with_limits(limits);
+    if stream {
+        r = r.with_stream();
+    }
+    if tx.send(r).is_err() {
+        // The serve loop is gone (drained): nothing will ever answer.
+        let body = error_body(id, ServeError::Overloaded.key(), "server is draining");
+        return write_response(conn.get_mut(), 503, &body, close).is_ok();
+    }
+    if stream {
+        stream_response(conn, id, &rrx, ctx)
+    } else {
+        unary_response(conn, id, close, &rrx, ctx)
+    }
+}
+
+/// Parse a translate request body into (tokens, limits, stream).
+fn parse_translate(body: &[u8]) -> Result<(Vec<i32>, RequestLimits, bool), String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let x = j.extract();
+    let tokens = x
+        .field("tokens")
+        .and_then(|t| t.i32s())
+        .map_err(|e| e.to_string())?;
+    if tokens.is_empty() {
+        return Err("at $.tokens: must be non-empty".to_string());
+    }
+    let opt_usize = |key: &str| -> Result<Option<usize>, String> {
+        match x.opt(key).map_err(|e| e.to_string())? {
+            Some(v) => Ok(Some(v.usize().map_err(|e| e.to_string())?)),
+            None => Ok(None),
+        }
+    };
+    let mut limits = RequestLimits::none();
+    if let Some(d) = opt_usize("deadline_steps")? {
+        limits = limits.with_deadline(d);
+    }
+    if let Some(m) = opt_usize("max_new_tokens")? {
+        limits = limits.with_max_new_tokens(m);
+    }
+    let stream = match x.opt("stream").map_err(|e| e.to_string())? {
+        Some(v) => v.bool().map_err(|e| e.to_string())?,
+        None => false,
+    };
+    Ok((tokens, limits, stream))
+}
+
+fn unary_response(
+    conn: &mut HttpConn<TcpStream>,
+    id: u64,
+    close: bool,
+    rrx: &ResponseRx,
+    ctx: &Ctx,
+) -> bool {
+    match rrx.recv_timeout(ctx.cfg.response_timeout) {
+        TimedRecv::Ready(Ok(resp)) => {
+            let body = Json::obj(vec![
+                ("id", num_u64(id)),
+                ("tokens", tokens_json(&resp.tokens)),
+                ("latency_s", Json::Num(resp.latency_s)),
+            ]);
+            write_response(conn.get_mut(), 200, &body, close).is_ok()
+        }
+        TimedRecv::Ready(Err(e)) => {
+            let body = error_body(id, e.key(), &e.clone().attributed(id).to_string());
+            write_response(conn.get_mut(), status_for(&e), &body, close).is_ok()
+        }
+        TimedRecv::SenderGone => {
+            let body = error_body(id, "overloaded", "server dropped the request during drain");
+            write_response(conn.get_mut(), 503, &body, close).is_ok()
+        }
+        TimedRecv::TimedOut => {
+            // The caller drops `rrx` right after us, which cancels the
+            // server-side slot instead of decoding for nobody.
+            let body = error_body(id, "engine_fault", "response timed out; request cancelled");
+            write_response(conn.get_mut(), 500, &body, close).is_ok()
+        }
+    }
+}
+
+/// Chunked streaming response: one JSON line per progress event, a
+/// terminal line carrying the tail tokens + latency (success) or the
+/// typed error, then the chunked-body terminator.
+fn stream_response(conn: &mut HttpConn<TcpStream>, id: u64, rrx: &ResponseRx, ctx: &Ctx) -> bool {
+    let w = conn.get_mut();
+    if write_chunked_head(w, 200).is_err() {
+        return false;
+    }
+    let deadline = Instant::now() + ctx.cfg.response_timeout;
+    let mut streamed = 0usize;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        let event = if left.is_zero() { StreamEvent::TimedOut } else { rrx.recv_progress(left) };
+        match event {
+            StreamEvent::Tokens(ts) => {
+                streamed += ts.len();
+                let line = Json::obj(vec![("id", num_u64(id)), ("tokens", tokens_json(&ts))]);
+                if write_chunk(w, line_bytes(&line).as_slice()).is_err() {
+                    return false;
+                }
+            }
+            StreamEvent::Done(Ok(resp)) => {
+                // Progress pushes covered `streamed` tokens; the rest
+                // (the final decode step's output) rides the terminal
+                // line, so the concatenation is the full response.
+                let tail = &resp.tokens[streamed.min(resp.tokens.len())..];
+                let line = Json::obj(vec![
+                    ("id", num_u64(id)),
+                    ("done", Json::Bool(true)),
+                    ("tokens", tokens_json(tail)),
+                    ("latency_s", Json::Num(resp.latency_s)),
+                ]);
+                let ok = write_chunk(w, line_bytes(&line).as_slice()).is_ok();
+                return finish_chunks(w).is_ok() && ok;
+            }
+            StreamEvent::Done(Err(e)) => {
+                let line = error_body(id, e.key(), &e.clone().attributed(id).to_string());
+                let ok = write_chunk(w, line_bytes(&line).as_slice()).is_ok();
+                return finish_chunks(w).is_ok() && ok;
+            }
+            StreamEvent::SenderGone => {
+                let line = error_body(id, "overloaded", "server dropped the request during drain");
+                let _ = write_chunk(w, line_bytes(&line).as_slice());
+                let _ = finish_chunks(w);
+                return false;
+            }
+            StreamEvent::TimedOut => {
+                let line = error_body(id, "engine_fault", "response timed out; request cancelled");
+                let _ = write_chunk(w, line_bytes(&line).as_slice());
+                let _ = finish_chunks(w);
+                return false;
+            }
+        }
+    }
+}
+
+fn line_bytes(j: &Json) -> Vec<u8> {
+    let mut s = j.to_string();
+    s.push('\n');
+    s.into_bytes()
+}
+
+fn num_u64(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn tokens_json(ts: &[i32]) -> Json {
+    Json::Arr(ts.iter().map(|&t| Json::Num(f64::from(t))).collect())
+}
+
+fn error_json(key: &str, message: &str) -> Json {
+    Json::obj(vec![
+        ("error", Json::Str(key.to_string())),
+        ("message", Json::Str(message.to_string())),
+    ])
+}
+
+/// Error body with the server-assigned request id (the
+/// [`crate::coordinator::AttributedError`] attribution on the wire).
+fn error_body(id: u64, key: &str, message: &str) -> Json {
+    Json::obj(vec![
+        ("id", num_u64(id)),
+        ("error", Json::Str(key.to_string())),
+        ("message", Json::Str(message.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use http::write_request;
+
+    /// Echo slot engine (mirrors the serve-loop unit tests): completes
+    /// after one step, output echoes the framed row.
+    struct EchoSlots {
+        seq: usize,
+    }
+
+    struct EchoSlot {
+        row: Vec<i32>,
+        steps: usize,
+    }
+
+    impl SlotEngine for EchoSlots {
+        type Slot = EchoSlot;
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&self, src_row: &[i32]) -> Result<EchoSlot> {
+            Ok(EchoSlot { row: src_row.to_vec(), steps: 0 })
+        }
+        fn step(&self, slots: &mut [&mut EchoSlot]) -> Result<()> {
+            for s in slots.iter_mut() {
+                s.steps += 1;
+            }
+            Ok(())
+        }
+        fn slot_complete(&self, slot: &EchoSlot) -> bool {
+            slot.steps >= 1
+        }
+        fn slot_output(&self, slot: &EchoSlot) -> Vec<i32> {
+            slot.row.clone()
+        }
+    }
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            n_enc: 1,
+            n_dec: 1,
+            seq_len: 6,
+            eval_batch: 4,
+            pad_id: 0,
+            bos_id: 1,
+            eos_id: 2,
+        }
+    }
+
+    #[test]
+    fn http_smoke_translate_health_errors_shutdown() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let engine = EchoSlots { seq: 6 };
+            serve_http(&engine, listener, &dims(), HttpConfig::new(ServeConfig::new(2))).unwrap()
+        });
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut conn = HttpConn::new(stream);
+
+        // Health first.
+        write_request(conn.get_mut(), "GET", "/healthz", None).unwrap();
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json().unwrap().get("status").as_str(), Some("ok"));
+
+        // A translate round-trip on the same keep-alive connection.
+        let body = Json::obj(vec![("tokens", Json::arr_f64(&[1.0, 9.0, 2.0]))]);
+        write_request(conn.get_mut(), "POST", "/v1/translate", Some(&body)).unwrap();
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("tokens").as_arr().unwrap().len(), 1, "echo de-frames to [9]");
+        assert_eq!(j.get("tokens").idx(0).as_f64(), Some(9.0));
+        assert!(j.get("id").as_f64().is_some());
+
+        // Typed 400 with the offending JSONPath.
+        let bad = Json::obj(vec![("tokens", Json::Str("nope".to_string()))]);
+        write_request(conn.get_mut(), "POST", "/v1/translate", Some(&bad)).unwrap();
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 400);
+        let msg = resp.json().unwrap().get("message").as_str().unwrap_or("").to_string();
+        assert!(msg.contains("$.tokens"), "400 names the bad field: {msg}");
+
+        // 404 and 405.
+        write_request(conn.get_mut(), "GET", "/nope", None).unwrap();
+        assert_eq!(conn.read_response().unwrap().status, 404);
+        write_request(conn.get_mut(), "GET", "/v1/translate", None).unwrap();
+        assert_eq!(conn.read_response().unwrap().status, 405);
+
+        // Graceful shutdown: 202, then the server thread joins with
+        // balanced books.
+        write_request(conn.get_mut(), "POST", "/v1/shutdown", None).unwrap();
+        assert_eq!(conn.read_response().unwrap().status, 202);
+        let stats = server.join().expect("server thread");
+        assert_eq!(stats.served, 1);
+        assert!(stats.is_balanced(), "{stats:?}");
+    }
+
+    #[test]
+    fn parse_translate_covers_limits_and_stream() {
+        let body = br#"{"tokens": [1, 5, 2], "deadline_steps": 9, "stream": true}"#;
+        let (tokens, limits, stream) = parse_translate(body).unwrap();
+        assert_eq!(tokens, vec![1, 5, 2]);
+        assert_eq!(limits.deadline_steps, Some(9));
+        assert_eq!(limits.max_new_tokens, None);
+        assert!(stream);
+
+        let (_, limits, stream) = parse_translate(br#"{"tokens": [3]}"#).unwrap();
+        assert_eq!(limits, RequestLimits::none());
+        assert!(!stream);
+
+        assert!(parse_translate(b"{").unwrap_err().contains("parse error"));
+        assert!(parse_translate(br#"{"tokens": []}"#).unwrap_err().contains("non-empty"));
+        let e = parse_translate(br#"{"tokens": [1.5]}"#).unwrap_err();
+        assert!(e.contains("$.tokens[0]"), "{e}");
+        let e = parse_translate(br#"{"tokens": [1], "deadline_steps": -4}"#).unwrap_err();
+        assert!(e.contains("non-negative"), "{e}");
+    }
+}

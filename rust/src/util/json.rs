@@ -153,7 +153,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; rejecting to null keeps
+                    // every writer output re-parseable (the round-trip
+                    // property test pins this).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -202,6 +207,175 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Which JSON shape a value is — used in extractor error messages.
+fn type_name(j: &Json) -> &'static str {
+    match j {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// A typed-extraction failure: the JSONPath-style location that failed
+/// and what was expected there. This is what the HTTP layer turns into a
+/// 400 body, so the message must name the offending field, not just
+/// "type error".
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtractError {
+    pub path: String,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ExtractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "at {}: {}", self.path, self.msg)
+    }
+}
+
+impl std::error::Error for ExtractError {}
+
+/// Typed, path-tracking view over a parsed [`Json`] value — the
+/// alternative to hand-indexing `get`/`as_*` chains whose failures all
+/// collapse into an unexplained `None`. Navigation ([`Extract::field`],
+/// [`Extract::item`]) extends the recorded path; terminal accessors
+/// ([`Extract::str`], [`Extract::usize`], ...) fail with the full path
+/// and the expected-vs-found types.
+///
+/// ```
+/// # use itera_llm::util::json::Json;
+/// let j = Json::parse(r#"{"tokens": [1, 2, 3], "stream": true}"#).unwrap();
+/// let x = j.extract();
+/// assert_eq!(x.field("tokens").unwrap().i32s().unwrap(), vec![1, 2, 3]);
+/// let err = x.field("missing").unwrap_err();
+/// assert_eq!(err.path, "$.missing");
+/// ```
+#[derive(Clone)]
+pub struct Extract<'a> {
+    j: &'a Json,
+    path: String,
+}
+
+impl Json {
+    /// Root of a typed extraction (path `$`).
+    pub fn extract(&self) -> Extract<'_> {
+        Extract { j: self, path: "$".to_string() }
+    }
+}
+
+impl<'a> Extract<'a> {
+    /// The underlying value at this path.
+    pub fn json(&self) -> &'a Json {
+        self.j
+    }
+
+    /// The JSONPath-style location this view points at.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    fn fail(&self, msg: String) -> ExtractError {
+        ExtractError { path: self.path.clone(), msg }
+    }
+
+    fn expected(&self, what: &str) -> ExtractError {
+        self.fail(format!("expected {what}, got {}", type_name(self.j)))
+    }
+
+    /// Required object field: errors when this value is not an object or
+    /// the key is absent.
+    pub fn field(&self, key: &str) -> Result<Extract<'a>, ExtractError> {
+        let Json::Obj(m) = self.j else { return Err(self.expected("object")) };
+        match m.get(key) {
+            Some(v) => Ok(Extract { j: v, path: format!("{}.{key}", self.path) }),
+            None => Err(ExtractError {
+                path: format!("{}.{key}", self.path),
+                msg: "missing required field".to_string(),
+            }),
+        }
+    }
+
+    /// Optional object field: `None` when absent or `null`; still errors
+    /// when this value is not an object at all.
+    pub fn opt(&self, key: &str) -> Result<Option<Extract<'a>>, ExtractError> {
+        let Json::Obj(m) = self.j else { return Err(self.expected("object")) };
+        match m.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => Ok(Some(Extract { j: v, path: format!("{}.{key}", self.path) })),
+        }
+    }
+
+    /// Required array element by index.
+    pub fn item(&self, i: usize) -> Result<Extract<'a>, ExtractError> {
+        let Json::Arr(v) = self.j else { return Err(self.expected("array")) };
+        match v.get(i) {
+            Some(x) => Ok(Extract { j: x, path: format!("{}[{i}]", self.path) }),
+            None => Err(self.fail(format!("index {i} out of bounds (len {})", v.len()))),
+        }
+    }
+
+    /// Every array element, as typed views.
+    pub fn items(&self) -> Result<Vec<Extract<'a>>, ExtractError> {
+        let Json::Arr(v) = self.j else { return Err(self.expected("array")) };
+        Ok(v.iter()
+            .enumerate()
+            .map(|(i, x)| Extract { j: x, path: format!("{}[{i}]", self.path) })
+            .collect())
+    }
+
+    pub fn str(&self) -> Result<&'a str, ExtractError> {
+        match self.j {
+            Json::Str(s) => Ok(s),
+            _ => Err(self.expected("string")),
+        }
+    }
+
+    pub fn bool(&self) -> Result<bool, ExtractError> {
+        match self.j {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(self.expected("bool")),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64, ExtractError> {
+        match self.j {
+            Json::Num(x) => Ok(*x),
+            _ => Err(self.expected("number")),
+        }
+    }
+
+    /// Exact integer in `i64` range (fractional or out-of-range numbers
+    /// are rejected, unlike the truncating [`Json::as_i64`]).
+    pub fn i64(&self) -> Result<i64, ExtractError> {
+        let x = self.f64()?;
+        if x.fract() != 0.0 || !(-9.007199254740992e15..=9.007199254740992e15).contains(&x) {
+            return Err(self.fail(format!("expected an integer, got {x}")));
+        }
+        Ok(x as i64)
+    }
+
+    /// Exact non-negative integer.
+    pub fn usize(&self) -> Result<usize, ExtractError> {
+        let n = self.i64()?;
+        usize::try_from(n)
+            .map_err(|_| self.fail(format!("expected a non-negative integer, got {n}")))
+    }
+
+    /// Exact integer fitting `i32` (token ids on the wire).
+    pub fn i32(&self) -> Result<i32, ExtractError> {
+        let n = self.i64()?;
+        i32::try_from(n).map_err(|_| self.fail(format!("expected a 32-bit integer, got {n}")))
+    }
+
+    /// A whole array of `i32`s — the token-row shape every translate
+    /// request carries.
+    pub fn i32s(&self) -> Result<Vec<i32>, ExtractError> {
+        self.items()?.iter().map(|x| x.i32()).collect()
     }
 }
 
@@ -448,6 +622,64 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_reject_to_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let out = Json::Num(bad).to_string();
+            assert_eq!(out, "null", "non-finite must not emit unparseable text");
+            assert_eq!(Json::parse(&out).unwrap(), Json::Null);
+        }
+        let j = Json::obj(vec![("x", Json::Num(f64::NAN)), ("y", Json::Num(2.5))]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("x"), &Json::Null);
+        assert_eq!(back.get("y").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn extractor_happy_paths() {
+        let j = Json::parse(
+            r#"{"tokens": [1, -2, 3], "deadline": 40, "stream": true,
+                "name": "xx-yy", "rate": 2.5, "nested": {"inner": [10]}}"#,
+        )
+        .unwrap();
+        let x = j.extract();
+        assert_eq!(x.field("tokens").unwrap().i32s().unwrap(), vec![1, -2, 3]);
+        assert_eq!(x.field("deadline").unwrap().usize().unwrap(), 40);
+        assert!(x.field("stream").unwrap().bool().unwrap());
+        assert_eq!(x.field("name").unwrap().str().unwrap(), "xx-yy");
+        assert_eq!(x.field("rate").unwrap().f64().unwrap(), 2.5);
+        assert_eq!(
+            x.field("nested").unwrap().field("inner").unwrap().item(0).unwrap().i64().unwrap(),
+            10
+        );
+        assert!(x.opt("missing").unwrap().is_none(), "absent optional is None");
+        assert_eq!(x.opt("deadline").unwrap().unwrap().usize().unwrap(), 40);
+        assert_eq!(x.field("tokens").unwrap().items().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn extractor_errors_carry_paths() {
+        let j = Json::parse(r#"{"a": {"b": [1, "x"]}, "n": 1.5, "neg": -1}"#).unwrap();
+        let x = j.extract();
+        let e = x.field("missing").unwrap_err();
+        assert_eq!(e.path, "$.missing");
+        assert!(e.msg.contains("missing"), "{e}");
+        let e = x.field("a").unwrap().field("b").unwrap().item(1).unwrap().i32().unwrap_err();
+        assert_eq!(e.path, "$.a.b[1]");
+        assert!(e.msg.contains("expected number"), "{e}");
+        let e = x.field("n").unwrap().usize().unwrap_err();
+        assert!(e.msg.contains("integer"), "fractional rejected: {e}");
+        let e = x.field("neg").unwrap().usize().unwrap_err();
+        assert!(e.msg.contains("non-negative"), "{e}");
+        let e = x.field("a").unwrap().item(0).unwrap_err();
+        assert!(e.msg.contains("expected array"), "{e}");
+        let e = x.field("a").unwrap().field("b").unwrap().item(7).unwrap_err();
+        assert!(e.msg.contains("out of bounds"), "{e}");
+        // Null is treated as absent by opt(), a type error by field accessors.
+        let j2 = Json::parse(r#"{"k": null}"#).unwrap();
+        assert!(j2.extract().opt("k").unwrap().is_none());
     }
 
     #[test]

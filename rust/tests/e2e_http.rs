@@ -1,0 +1,429 @@
+//! End-to-end tests of the HTTP serving layer: concurrent keep-alive
+//! clients against [`itera_llm::server::serve_http`] on real sockets.
+//!
+//! The load-bearing assertions:
+//!
+//! * HTTP translation is **bit-identical** to in-process
+//!   `serve_loop_continuous` on the same request rows — the network
+//!   layer adds transport, not semantics — and every concurrent client
+//!   request is answered exactly once with a unique server-assigned id;
+//! * the typed fault taxonomy surfaces as status codes on the wire:
+//!   queue overflow → 503, per-request decode deadlines → 504,
+//!   oversized bodies → 413, malformed bodies → 400, unknown routes →
+//!   404 — and the books still balance after a graceful drain;
+//! * chunked streaming reassembles to exactly the unary response for
+//!   the same input, with at least one genuine progress chunk ahead of
+//!   the terminal line;
+//! * the open-loop load generator drives the server end to end and its
+//!   client-side accounting agrees with the server's `ServeStats`.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use itera_llm::coordinator::{
+    response_channel, serve_loop_continuous, Request, ResponseRx, ServeConfig,
+};
+use itera_llm::eval::Corpus;
+use itera_llm::model::{Manifest, ModelDims, PairModel};
+use itera_llm::runtime::{NativeBackend, SlotEngine};
+use itera_llm::server::http::{write_request, HttpConn};
+use itera_llm::server::loadgen::{run_loadgen, LoadGenConfig};
+use itera_llm::server::{serve_http, HttpConfig};
+use itera_llm::testkit::tinymodel;
+use itera_llm::util::json::Json;
+
+/// POST one translate body and return (status, parsed body).
+fn post_translate(
+    conn: &mut HttpConn<TcpStream>,
+    tokens: &[i32],
+    extra: Vec<(&str, Json)>,
+) -> (u16, Json) {
+    let mut fields = vec![(
+        "tokens",
+        Json::Arr(tokens.iter().map(|&t| Json::Num(f64::from(t))).collect()),
+    )];
+    fields.extend(extra);
+    let body = Json::obj(fields);
+    write_request(conn.get_mut(), "POST", "/v1/translate", Some(&body)).unwrap();
+    let resp = conn.read_response().unwrap();
+    let j = resp.json().unwrap_or(Json::Null);
+    (resp.status, j)
+}
+
+fn shutdown(addr: std::net::SocketAddr) {
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    write_request(conn.get_mut(), "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(conn.read_response().unwrap().status, 202);
+}
+
+fn tokens_of(j: &Json) -> Vec<i32> {
+    j.extract().field("tokens").and_then(|t| t.i32s()).expect("tokens array")
+}
+
+/// THE network-serving soak bar: the full tinymodel corpus (repeated)
+/// through `serve_http` from concurrent keep-alive clients must answer
+/// every request with **exactly** the tokens in-process
+/// `serve_loop_continuous` serves for the same rows, assign each a
+/// unique id, and drain gracefully with balanced accounting.
+#[test]
+fn http_serving_soak_bit_identical_to_in_process() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 3;
+    const N: usize = CLIENTS * PER_CLIENT;
+
+    let (dir, manifest) = tinymodel::generate_in_temp("e2e_http_soak", 0x7E57).unwrap();
+    let model = PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let rows: Vec<Vec<i32>> = (0..N).map(|i| corpus.src_row(i % corpus.n).to_vec()).collect();
+
+    // In-process reference: the same rows, pre-queued, served at the
+    // same slot capacity on a separately constructed backend (bit-equal
+    // by the determinism suite).
+    let reference: Vec<Vec<i32>> = {
+        let backend = NativeBackend::fp32(&manifest, &model, 2).unwrap();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let receivers: Vec<ResponseRx> = rows
+            .iter()
+            .map(|row| {
+                let (rtx, rrx) = response_channel();
+                tx.send(Request::new(row.clone(), rtx)).unwrap();
+                rrx
+            })
+            .collect();
+        drop(tx);
+        let stats =
+            serve_loop_continuous(&backend, &rx, &manifest.model, N, &ServeConfig::new(3))
+                .unwrap();
+        assert_eq!(stats.served, N, "reference run is fault-free");
+        receivers
+            .iter()
+            .map(|r| r.recv().expect("answered").expect("fault-free").tokens)
+            .collect()
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let manifest = manifest.clone();
+        std::thread::spawn(move || {
+            let model = PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+            let backend = NativeBackend::fp32(&manifest, &model, 2).unwrap();
+            serve_http(&backend, listener, &manifest.model, HttpConfig::new(ServeConfig::new(3)))
+                .unwrap()
+        })
+    };
+
+    // Concurrent keep-alive clients, each owning a slice of the rows.
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let mine: Vec<(usize, Vec<i32>)> = (0..PER_CLIENT)
+                .map(|k| {
+                    let i = c * PER_CLIENT + k;
+                    (i, rows[i].clone())
+                })
+                .collect();
+            std::thread::spawn(move || {
+                let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+                mine.into_iter()
+                    .map(|(i, row)| {
+                        let (status, j) = post_translate(&mut conn, &row, vec![]);
+                        assert_eq!(status, 200, "request {i}: {j:?}");
+                        let id = j.get("id").as_f64().expect("server-assigned id") as u64;
+                        let lat = j.get("latency_s").as_f64().expect("latency");
+                        assert!(lat >= 0.0 && lat.is_finite(), "request {i}: latency {lat}");
+                        (i, id, tokens_of(&j))
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut results: Vec<(usize, u64, Vec<i32>)> = Vec::new();
+    for c in clients {
+        results.extend(c.join().expect("client thread"));
+    }
+
+    // Exactly once: N results, N distinct server-side ids.
+    assert_eq!(results.len(), N);
+    let mut ids: Vec<u64> = results.iter().map(|(_, id, _)| *id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), N, "every request carries a unique server-assigned id");
+
+    // Bit-identity, request by request.
+    for (i, _, toks) in &results {
+        assert_eq!(toks, &reference[*i], "request {i}: HTTP diverged from in-process serving");
+    }
+
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.served, N, "every HTTP request served");
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.failed(), 0);
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+    assert_eq!(stats.latency.count(), N);
+    assert_eq!(stats.queue_wait.count(), N, "queue-wait split recorded per request");
+    assert_eq!(stats.execution.count(), N, "execution split recorded per request");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Slow echo engine: every decode step sleeps, and completion takes
+/// `need` steps — so slots stay live long enough for queue overflow and
+/// deadline expiry to be observed deterministically over real sockets.
+struct SlowSlots {
+    seq: usize,
+    need: usize,
+    step_ms: u64,
+}
+
+struct SlowSlot {
+    row: Vec<i32>,
+    steps: usize,
+}
+
+impl SlotEngine for SlowSlots {
+    type Slot = SlowSlot;
+    fn slot_seq_len(&self) -> usize {
+        self.seq
+    }
+    fn admit(&self, src_row: &[i32]) -> anyhow::Result<SlowSlot> {
+        Ok(SlowSlot { row: src_row.to_vec(), steps: 0 })
+    }
+    fn step(&self, slots: &mut [&mut SlowSlot]) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_millis(self.step_ms));
+        for s in slots.iter_mut() {
+            s.steps += 1;
+        }
+        Ok(())
+    }
+    fn slot_complete(&self, slot: &SlowSlot) -> bool {
+        slot.steps >= self.need
+    }
+    fn slot_output(&self, slot: &SlowSlot) -> Vec<i32> {
+        slot.row.clone()
+    }
+}
+
+fn tiny_dims(seq_len: usize) -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        n_enc: 1,
+        n_dec: 1,
+        seq_len,
+        eval_batch: 4,
+        pad_id: 0,
+        bos_id: 1,
+        eos_id: 2,
+    }
+}
+
+/// The typed error taxonomy on the wire: a capacity-1 server with a
+/// queue bound of 1 answers a backlogged burst with 504 (deadline
+/// expiry in the slot), 200 (the queued survivor) and 503 (queue
+/// overflow shed) — plus 413/400/404 on the protocol edges — and still
+/// drains with balanced books.
+#[test]
+fn http_maps_overload_deadline_and_protocol_errors_to_statuses() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = SlowSlots { seq: 8, need: 300, step_ms: 1 };
+        let mut serve_cfg = ServeConfig::new(1);
+        serve_cfg.queue_limit = Some(1);
+        let mut cfg = HttpConfig::new(serve_cfg);
+        cfg.max_body_bytes = 256;
+        serve_http(&engine, listener, &tiny_dims(8), cfg).unwrap()
+    });
+
+    // Client A occupies the single slot and expires at step 100 — well
+    // before the 300-step completion: a deterministic 504.
+    let a = std::thread::spawn(move || {
+        let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+        let (status, j) =
+            post_translate(&mut conn, &[1, 7, 2], vec![("deadline_steps", Json::Num(100.0))]);
+        (status, j)
+    });
+    // Client C queues behind A (queue bound 1 holds exactly one waiter)
+    // and completes once A's slot is reclaimed.
+    std::thread::sleep(Duration::from_millis(20));
+    let c = std::thread::spawn(move || {
+        let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+        post_translate(&mut conn, &[1, 9, 2], vec![])
+    });
+
+    // B arrives while A holds the slot and C holds the queue: shed with
+    // an attributed 503 before any decode work happens.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let (status, j) = post_translate(&mut conn, &[1, 5, 2], vec![]);
+    assert_eq!(status, 503, "queue overflow must shed: {j:?}");
+    assert_eq!(j.get("error").as_str(), Some("overloaded"));
+    assert!(j.get("id").as_f64().is_some(), "error body carries the request id");
+
+    let (status, j) = a.join().expect("client A");
+    assert_eq!(status, 504, "deadline expiry maps to 504: {j:?}");
+    assert_eq!(j.get("error").as_str(), Some("deadline_exceeded"));
+    let (status, j) = c.join().expect("client C");
+    assert_eq!(status, 200, "the queued request survives: {j:?}");
+    assert_eq!(tokens_of(&j), vec![9], "echo de-frames the survivor's row");
+
+    // Protocol edges on the same connection: 404 and 400.
+    write_request(conn.get_mut(), "GET", "/nope", None).unwrap();
+    assert_eq!(conn.read_response().unwrap().status, 404);
+    let bad = Json::obj(vec![("tokens", Json::Str("x".to_string()))]);
+    write_request(conn.get_mut(), "POST", "/v1/translate", Some(&bad)).unwrap();
+    assert_eq!(conn.read_response().unwrap().status, 400);
+
+    // An oversized body on a fresh connection: 413, then close.
+    let mut big = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let huge: Vec<i32> = (0..500).collect();
+    write_request(
+        big.get_mut(),
+        "POST",
+        "/v1/translate",
+        Some(&Json::Arr(huge.iter().map(|&t| Json::Num(f64::from(t))).collect())),
+    )
+    .unwrap();
+    assert_eq!(big.read_response().unwrap().status, 413);
+
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.served, 1, "only the queued survivor completes");
+    assert_eq!(stats.expired, 1, "the deadline expiry is accounted");
+    assert_eq!(stats.shed, 1, "the queue overflow is accounted");
+    assert_eq!(stats.received, 3, "translate requests that reached the loop");
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+}
+
+/// Growing engine: one new content token per decode step, completing
+/// after `need` steps — so a streaming client observes genuine
+/// incremental progress.
+struct GrowSlots {
+    seq: usize,
+    need: usize,
+    step_ms: u64,
+}
+
+struct GrowSlot {
+    steps: usize,
+}
+
+impl SlotEngine for GrowSlots {
+    type Slot = GrowSlot;
+    fn slot_seq_len(&self) -> usize {
+        self.seq
+    }
+    fn admit(&self, _src_row: &[i32]) -> anyhow::Result<GrowSlot> {
+        Ok(GrowSlot { steps: 0 })
+    }
+    fn step(&self, slots: &mut [&mut GrowSlot]) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_millis(self.step_ms));
+        for s in slots.iter_mut() {
+            s.steps += 1;
+        }
+        Ok(())
+    }
+    fn slot_complete(&self, slot: &GrowSlot) -> bool {
+        slot.steps >= self.need
+    }
+    fn slot_output(&self, slot: &GrowSlot) -> Vec<i32> {
+        // BOS + one content token per completed step + EOS, PAD-padded.
+        let mut out = vec![1];
+        out.extend((0..slot.steps).map(|k| 10 + k as i32));
+        out.push(2);
+        out.resize(self.seq, 0);
+        out
+    }
+}
+
+/// Chunked streaming reassembles to exactly the unary response for the
+/// same input: the concatenation of the progress lines' tokens plus the
+/// terminal line's tail equals the unary token stream, and at least one
+/// genuine progress chunk precedes the terminal line.
+#[test]
+fn http_streaming_reassembles_to_the_unary_response() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = GrowSlots { seq: 8, need: 4, step_ms: 20 };
+        serve_http(&engine, listener, &tiny_dims(8), HttpConfig::new(ServeConfig::new(2)))
+            .unwrap()
+    });
+
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let (status, j) = post_translate(&mut conn, &[1, 3, 2], vec![]);
+    assert_eq!(status, 200);
+    let unary = tokens_of(&j);
+    assert_eq!(unary, vec![10, 11, 12, 13], "one grown token per decode step");
+
+    let body = Json::obj(vec![
+        ("tokens", Json::arr_f64(&[1.0, 3.0, 2.0])),
+        ("stream", Json::Bool(true)),
+    ]);
+    write_request(conn.get_mut(), "POST", "/v1/translate", Some(&body)).unwrap();
+    let resp = conn.read_response().unwrap();
+    assert_eq!(resp.status, 200, "streaming responses carry the 200 on the chunked head");
+
+    // One JSON line per chunk; HttpConn reassembled the chunked body.
+    let text = String::from_utf8(resp.body.clone()).unwrap();
+    let lines: Vec<Json> =
+        text.lines().map(|l| Json::parse(l).expect("every chunk line is valid JSON")).collect();
+    assert!(lines.len() >= 2, "streaming must emit progress before the terminal line: {text}");
+    let (terminal, progress) = lines.split_last().unwrap();
+    assert_eq!(terminal.get("done").as_bool(), Some(true));
+    assert!(terminal.get("latency_s").as_f64().is_some());
+    let mut reassembled = Vec::new();
+    for line in progress {
+        assert_eq!(line.get("done").as_bool(), None, "only the last line is terminal");
+        reassembled.extend(tokens_of(line));
+    }
+    reassembled.extend(tokens_of(terminal));
+    assert_eq!(reassembled, unary, "streamed chunks must reassemble to the unary response");
+
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.served, 2, "unary + streaming");
+    assert!(stats.is_balanced(), "{stats:?}");
+}
+
+/// The open-loop load generator end to end: every generated request gets
+/// a 200, client-side and server-side accounting agree, and the report's
+/// rates are finite and positive.
+#[test]
+fn loadgen_drives_the_server_and_accounts_cleanly() {
+    const N: usize = 24;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = SlowSlots { seq: 16, need: 1, step_ms: 0 };
+        serve_http(&engine, listener, &tiny_dims(16), HttpConfig::new(ServeConfig::new(4)))
+            .unwrap()
+    });
+
+    let cfg = LoadGenConfig {
+        connections: 4,
+        requests: N,
+        rate: 400.0,
+        len_range: (2, 6),
+        vocab: 16,
+        ..LoadGenConfig::default()
+    };
+    let report = run_loadgen(addr, &cfg).unwrap();
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+
+    assert_eq!(report.sent, N, "every scheduled request goes on the wire");
+    assert_eq!(report.ok, N, "an unloaded echo server answers everything: {:?}", report.errors);
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.latency.count(), N);
+    assert!(report.wall_s > 0.0 && report.throughput_rps() > 0.0);
+    assert!(report.tokens > 0, "echoed content tokens are counted");
+    assert_eq!(stats.served, N, "server books agree with the client");
+    assert_eq!(stats.received, N);
+    assert!(stats.is_balanced(), "{stats:?}");
+}

@@ -11,6 +11,7 @@ use itera_llm::qkernel::{packed_bytes_for, PackedLinear, QMatrix, ScaleAxis};
 use itera_llm::quant;
 use itera_llm::sra;
 use itera_llm::testkit::{check, Gen};
+use itera_llm::util::json::Json;
 
 const CASES: usize = 40;
 
@@ -718,6 +719,161 @@ fn prop_rank_padding_is_exact() {
             let trunc = w1.matmul(w2);
             for (x, y) in full.data().iter().zip(trunc.data()) {
                 assert!((x - y).abs() < 1e-5);
+            }
+        }
+    });
+}
+
+// ----------------------------------------------------------------- json
+
+/// Random finite JSON number drawn from the writer's interesting
+/// classes: small and large integers (the `< 1e15` i64 fast path —
+/// 2^49 keeps them f64-exact), f32-exact fractions and small-magnitude
+/// values (the shortest-repr `Display` path). `-0.0` canonicalizes to
+/// `0.0`: the writer prints both as `0`, so the sign of zero is outside
+/// the round-trip contract.
+fn gen_number(g: &mut Gen) -> f64 {
+    let sign = if g.bool() { -1.0 } else { 1.0 };
+    let x = match g.usize_in(0, 3) {
+        0 => g.usize_in(0, 999) as f64,
+        1 => g.usize_in(0, (1u64 << 49) as usize) as f64,
+        2 => f64::from(g.f32_in(0.0, 1e6)),
+        _ => f64::from(g.normal()) * 1e-3,
+    };
+    let v = sign * x;
+    if v == 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// Random string over a palette that exercises every escape class: the
+/// mandatory `\"` / `\\`, whitespace escapes, raw control bytes (the
+/// `\uXXXX` writer path), JSON syntax characters inside strings, and
+/// multi-byte UTF-8 (two-, three- and four-byte sequences).
+fn gen_string(g: &mut Gen) -> String {
+    #[rustfmt::skip]
+    const PALETTE: &[&str] = &[
+        "a", "Z", "7", " ", "\"", "\\", "\n", "\r", "\t", "\u{1}", "\u{1f}", "/", "{", "]",
+        ":", ",", "é", "λ", "你", "🦀", "\u{fffd}",
+    ];
+    let len = g.usize_in(0, 8);
+    (0..len).map(|_| *g.pick(PALETTE)).collect()
+}
+
+/// Random JSON value with nesting bounded by `depth`.
+fn gen_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 || g.bool() {
+        match g.usize_in(0, 3) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(gen_number(g)),
+            _ => Json::Str(gen_string(g)),
+        }
+    } else if g.bool() {
+        let n = g.usize_in(0, 4);
+        Json::Arr((0..n).map(|_| gen_json(g, depth - 1)).collect())
+    } else {
+        let n = g.usize_in(0, 4);
+        Json::Obj(
+            (0..n)
+                .map(|i| (format!("k{i}{}", gen_string(g)), gen_json(g, depth - 1)))
+                .collect(),
+        )
+    }
+}
+
+/// Structural equality with **bit-exact** numbers (`PartialEq` on f64
+/// would pass 0.0 == -0.0 and fail NaN == NaN; `to_bits` does neither).
+fn assert_json_bits_eq(a: &Json, b: &Json, path: &str) {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => {
+            assert_eq!(x.to_bits(), y.to_bits(), "{path}: {x} vs {y}");
+        }
+        (Json::Arr(xs), Json::Arr(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: array length");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_json_bits_eq(x, y, &format!("{path}[{i}]"));
+            }
+        }
+        (Json::Obj(xm), Json::Obj(ym)) => {
+            assert_eq!(xm.len(), ym.len(), "{path}: key count");
+            for ((kx, x), (ky, y)) in xm.iter().zip(ym.iter()) {
+                assert_eq!(kx, ky, "{path}: key");
+                assert_json_bits_eq(x, y, &format!("{path}.{kx}"));
+            }
+        }
+        _ => assert_eq!(a, b, "{path}"),
+    }
+}
+
+/// write -> parse is the identity, bit for bit: every finite number
+/// (integer fast path and shortest-repr `Display` path alike), every
+/// escape class, arbitrary nesting. The wire format the HTTP layer
+/// speaks is exactly the in-memory value.
+#[test]
+fn prop_json_round_trips_bit_exact() {
+    check("json-roundtrip", CASES, |g: &mut Gen| {
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("re-parse {text:?}: {e}"));
+        assert_json_bits_eq(&v, &back, "$");
+        // Writing the re-parsed value is a fixed point of the encoding.
+        assert_eq!(text, back.to_string(), "write-parse-write must be stable");
+        // The pretty writer encodes the same value.
+        let pretty = Json::parse(&v.to_string_pretty()).expect("pretty output parses");
+        assert_json_bits_eq(&v, &pretty, "$ (pretty)");
+    });
+}
+
+/// Non-finite numbers are unrepresentable in JSON: wherever they sit in
+/// a structure, the writer emits `null` (parseable) rather than `NaN` /
+/// `inf` (which would poison every downstream consumer of a report).
+#[test]
+fn prop_json_non_finite_writes_as_null() {
+    check("json-nonfinite", CASES, |g: &mut Gen| {
+        let bad = *g.pick(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+        let v = Json::obj(vec![
+            ("ok", Json::Num(gen_number(g))),
+            ("bad", Json::Num(bad)),
+            ("arr", Json::Arr(vec![Json::Num(bad), Json::Bool(true)])),
+        ]);
+        let back = Json::parse(&v.to_string()).expect("output must stay parseable");
+        assert_eq!(back.get("bad"), &Json::Null);
+        assert_eq!(back.get("arr").idx(0), &Json::Null);
+        assert!(matches!(back.get("ok"), Json::Num(_)));
+    });
+}
+
+/// The parser is total on arbitrary text: random byte-level mutations
+/// of valid documents (truncations, byte flips, syntax-char insertions)
+/// must produce `Ok` or a typed `JsonError` — never a panic (the `check`
+/// harness converts panics into failures). Successful parses must also
+/// re-serialize without panicking: the HTTP server runs this exact
+/// parse on every untrusted request body.
+#[test]
+fn prop_json_parser_total_on_mutated_input() {
+    check("json-fuzz", CASES, |g: &mut Gen| {
+        let mut bytes = gen_json(g, 3).to_string().into_bytes();
+        for _ in 0..g.usize_in(1, 4) {
+            if bytes.is_empty() {
+                break;
+            }
+            let i = g.usize_in(0, bytes.len() - 1);
+            match g.usize_in(0, 2) {
+                0 => bytes.truncate(i),
+                1 => bytes[i] = bytes[i].wrapping_add(g.usize_in(1, 255) as u8),
+                _ => {
+                    const SYNTAX: &[u8] = b"{}[]\",:0e.x\\";
+                    bytes.insert(i, SYNTAX[g.usize_in(0, SYNTAX.len() - 1)]);
+                }
+            }
+        }
+        // Mutations may break UTF-8; `parse` takes &str, so gate first.
+        if let Ok(text) = String::from_utf8(bytes) {
+            if let Ok(v) = Json::parse(&text) {
+                let _ = v.to_string();
             }
         }
     });
