@@ -241,6 +241,9 @@ fn main() {
     // ---- HTTP serving: sockets + load generator over the batcher ------
     server_benches(&mut b, workers);
 
+    // ---- telemetry: recording primitives + whole-loop overhead --------
+    obs_benches(&mut b, workers);
+
     // ---- PJRT runtime (needs the `pjrt` feature + artifacts) -----------
     runtime_benches(&mut b);
 
@@ -604,6 +607,158 @@ fn server_benches(b: &mut Bench, workers: usize) {
     b.gauge("server/latency_p95", report0.latency.quantile(0.95));
     b.gauge("server/latency_p99", report0.latency.quantile(0.99));
     b.gauge("server/saturation_tokens_per_s", report0.tokens_per_s());
+
+    b.set_group(None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Telemetry lanes (`cargo bench --bench hot_paths obs` selects the
+/// group): the primitive recording costs (`obs/counter_inc`,
+/// `obs/histogram_observe` — amortized over 1M operations — and
+/// `obs/snapshot_prometheus`, one full registry render), then the
+/// whole-serving-loop cost of telemetry: the same pre-queued continuous
+/// workload with recording enabled vs [`ObsConfig::disabled`]
+/// (`obs/decode_enabled` / `obs/decode_disabled`), with the relative
+/// cost recorded as the `obs/decode_overhead_pct` gauge. The acceptance
+/// bar is < 2%; the lane soft-warns (shared CI hosts are too noisy for
+/// a hard assert) and the trajectory keeps the history. The enabled
+/// lane's registry snapshot is exported under `obs/serve/*`, so the
+/// trajectory also carries the serving counters the lane accumulated.
+/// Hermetic: runs on the testkit tiny model.
+fn obs_benches(b: &mut Bench, workers: usize) {
+    use std::sync::mpsc;
+
+    use itera_llm::coordinator::{
+        self, response_channel, serve_loop_continuous, Method, Request, ServeConfig,
+    };
+    use itera_llm::obs::{Obs, ObsConfig};
+    use itera_llm::runtime::Mode;
+    use itera_llm::testkit::tinymodel;
+
+    b.set_group(Some("obs"));
+    let lanes = [
+        "obs/counter_inc",
+        "obs/histogram_observe",
+        "obs/snapshot_prometheus",
+        "obs/decode_enabled",
+        "obs/decode_disabled",
+        "obs/decode_overhead_pct",
+    ];
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+
+    // Primitive costs, amortized over 1M recordings per sample.
+    let prim = Obs::fresh();
+    let counter = prim.registry().counter("bench_counter_total");
+    b.bench_throughput("obs/counter_inc", 1_000_000, || {
+        for _ in 0..1_000_000u32 {
+            counter.inc();
+        }
+    });
+    let hist = prim.registry().histogram("bench_hist_seconds", &[1e-5, 1e-4, 1e-3, 1e-2, 1e-1]);
+    b.bench_throughput("obs/histogram_observe", 1_000_000, || {
+        for i in 0..1_000_000u32 {
+            hist.observe(f64::from(i % 7) * 1e-4);
+        }
+    });
+    // Snapshot + render cost on a registry of representative size.
+    if b.enabled("obs/snapshot_prometheus") {
+        let big = Obs::fresh();
+        for i in 0..48u64 {
+            let lane = format!("{i}");
+            big.registry().counter_with("render_total", &[("lane", lane.as_str())]).add(i);
+        }
+        for i in 0..8 {
+            let lane = format!("{i}");
+            big.registry().gauge_with("render_depth", &[("lane", lane.as_str())]).set(1.0);
+            big.registry().histogram(&format!("render_hist_{i}"), &[0.1, 0.2, 0.4]).observe(0.3);
+        }
+        b.bench("obs/snapshot_prometheus", || {
+            std::hint::black_box(big.registry().snapshot().to_prometheus());
+        });
+    }
+
+    // Whole-loop overhead: the continuous serving lane from
+    // `batcher_benches`, with recording on vs off. The block (tiny-model
+    // setup included) is skipped when the filter hides all three lanes.
+    let decode_lanes = ["obs/decode_enabled", "obs/decode_disabled", "obs/decode_overhead_pct"];
+    if !decode_lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_obs", 0x0B5) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping obs decode lanes)");
+            b.set_group(None);
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let dims = manifest.model.clone();
+    let weights: Vec<&Matrix> =
+        manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = coordinator::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let backend = cm.native_backend_mode(&manifest, &model, Mode::Dense, workers).unwrap();
+
+    let n_requests = 12usize;
+    let rows: Vec<Vec<i32>> = (0..n_requests)
+        .map(|i| corpus.src_row(i % corpus.n).to_vec())
+        .collect();
+    let queue_all = |rows: &[Vec<i32>]| {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut receivers = Vec::new();
+        for row in rows {
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(row.clone(), rtx)).unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        (rx, receivers)
+    };
+
+    let cfg = ServeConfig::new(dims.eval_batch);
+    let (rx, _resp) = queue_all(&rows);
+    let tokens =
+        serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap().tokens as u64;
+
+    b.bench_throughput("obs/decode_enabled", tokens, || {
+        let (rx, _resp) = queue_all(&rows);
+        std::hint::black_box(
+            serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap(),
+        );
+    });
+    ObsConfig::disabled().install();
+    b.bench_throughput("obs/decode_disabled", tokens, || {
+        let (rx, _resp) = queue_all(&rows);
+        std::hint::black_box(
+            serve_loop_continuous(&backend, &rx, &dims, n_requests, &cfg).unwrap(),
+        );
+    });
+    ObsConfig::enabled().install();
+
+    let mean = |name: &str| {
+        b.results().iter().find(|r| r.name == name && r.samples > 0).map(|r| r.mean_s)
+    };
+    if let (Some(on), Some(off)) = (mean("obs/decode_enabled"), mean("obs/decode_disabled")) {
+        let pct = (on - off) / off * 100.0;
+        b.gauge("obs/decode_overhead_pct", pct);
+        if pct > 2.0 {
+            eprintln!("[obs] warning: telemetry overhead {pct:.2}% exceeds the 2% target");
+        }
+    }
+    // The enabled lane's accumulated serving counters, into the
+    // trajectory next to the timings.
+    b.export_snapshot("obs/serve", &cfg.obs.registry().snapshot());
 
     b.set_group(None);
     std::fs::remove_dir_all(&dir).ok();

@@ -176,6 +176,20 @@ impl Bench {
         });
     }
 
+    /// Export a telemetry [`Snapshot`](crate::obs::Snapshot)'s counters
+    /// and gauges as gauge entries named `{prefix}/{metric key}`, so the
+    /// registry state a bench lane accumulated lands in the JSON
+    /// trajectory next to its timings. Honors the active filter like any
+    /// other entry.
+    pub fn export_snapshot(&mut self, prefix: &str, snap: &crate::obs::Snapshot) {
+        for (k, v) in &snap.counters {
+            self.gauge(&format!("{prefix}/{k}"), *v as f64);
+        }
+        for (k, v) in &snap.gauges {
+            self.gauge(&format!("{prefix}/{k}"), *v);
+        }
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -331,6 +345,21 @@ mod tests {
         assert_eq!(v.as_f64(), Some(133120.0));
         assert!(j.get("benches").get("suite/dropped").get("value").as_f64().is_none());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_export_lands_as_gauges() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let obs = crate::obs::Obs::fresh();
+        obs.registry().counter("demo_total").add(7);
+        obs.registry().gauge("demo_depth").set(3.0);
+        let mut b = Bench::new().quick();
+        b.filter = None;
+        b.export_snapshot("suite", &obs.registry().snapshot());
+        let by_name: std::collections::BTreeMap<_, _> =
+            b.results().iter().map(|r| (r.name.as_str(), r.value)).collect();
+        assert_eq!(by_name.get("suite/demo_total"), Some(&Some(7.0)));
+        assert_eq!(by_name.get("suite/demo_depth"), Some(&Some(3.0)));
     }
 
     #[test]

@@ -825,7 +825,11 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 /// `--loadgen N`, self-drives: a seeded open-loop load generator fires
 /// `N` requests at `--rate` req/s over `--connections` keep-alive
 /// connections against the server's own port, requests a drain when
-/// done, and both sides' reports are printed (the CI HTTP smoke).
+/// done, and both sides' reports are printed (the CI HTTP smoke). The
+/// self-drive also scrapes `/metrics` + `/v1/stats` while the server is
+/// live and bails if the exported counters don't balance or disagree
+/// with the client's own ledger. `--metrics` prints a one-line
+/// telemetry digest every second.
 fn cmd_serve_http(
     args: &Args,
     listen: &str,
@@ -906,14 +910,39 @@ fn serve_http_native(
         let shutdown = shutdown.clone();
         std::thread::spawn(move || {
             let report = run_loadgen(addr, &cfg);
+            // Scrape telemetry before requesting the drain, so the
+            // check exercises the endpoints on a live server.
+            let scrape = scrape_telemetry(addr);
             shutdown.drain();
-            report
+            (report, scrape)
         })
+    });
+    let digest = args.has("metrics").then(|| {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let obs = serve_cfg.obs.clone();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let flag = std::sync::Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let mut ticks = 0u32;
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                ticks += 1;
+                if ticks % 10 == 0 {
+                    println!("{}", metrics_digest_line(&obs));
+                }
+            }
+            println!("{}", metrics_digest_line(&obs));
+        });
+        (stop, handle)
     });
 
     let mut http_cfg = HttpConfig::new(serve_cfg);
     http_cfg.max_connections = args.flag_usize("max-connections", 256)?;
     let stats = serve_http(&backend, listener, &manifest.model, http_cfg)?;
+    if let Some((stop, handle)) = digest {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().ok();
+    }
 
     println!("== server stats ==");
     println!(
@@ -937,11 +966,93 @@ fn serve_http_native(
         bail!("serve stats do not balance: {stats:?}");
     }
     if let Some(c) = client {
-        let report = c.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))??;
+        let (report, scrape) = c.join().map_err(|_| anyhow::anyhow!("loadgen panicked"))?;
+        let report = report?;
         report.print("self-drive");
         if report.ok == 0 {
             bail!("loadgen saw no successful responses");
         }
+        verify_scrape(&scrape?, &report)?;
     }
     Ok(())
+}
+
+/// Pull `/metrics` (Prometheus text) and `/v1/stats` (JSON) from a
+/// live server in one pass.
+fn scrape_telemetry(addr: std::net::SocketAddr) -> Result<(String, crate::util::json::Json)> {
+    use crate::server::loadgen::http_get;
+    let metrics = http_get(addr, "/metrics")?;
+    if metrics.status != 200 {
+        bail!("GET /metrics returned {}", metrics.status);
+    }
+    let text =
+        String::from_utf8(metrics.body).map_err(|_| anyhow::anyhow!("/metrics is not utf-8"))?;
+    let stats = http_get(addr, "/v1/stats")?;
+    if stats.status != 200 {
+        bail!("GET /v1/stats returned {}", stats.status);
+    }
+    let json = stats.json().map_err(|e| anyhow::anyhow!("/v1/stats json: {e}"))?;
+    Ok((text, json))
+}
+
+/// Cross-check a live telemetry scrape against the loadgen ledger: the
+/// serve accounting identity must hold inside the scrape, every success
+/// the client saw must be in the server's counters, and `/v1/stats`
+/// must agree with `/metrics` (both render the same registry).
+fn verify_scrape(
+    (text, stats_json): &(String, crate::util::json::Json),
+    report: &crate::server::loadgen::LoadReport,
+) -> Result<()> {
+    use crate::obs::{key, parse_text};
+    let m = parse_text(text);
+    let counter = |name: &str| m.get(name).copied().unwrap_or(0.0);
+    let outcome = |o: &str| counter(&key("serve_requests_total", &[("outcome", o)]));
+    let received = counter("serve_received_total");
+    let outcomes: f64 =
+        ["served", "shed", "expired", "cancelled", "faulted"].iter().map(|o| outcome(o)).sum();
+    if received != outcomes {
+        bail!("/metrics does not balance: received {received} vs outcomes {outcomes}");
+    }
+    if (outcome("served") as usize) < report.ok {
+        bail!("/metrics served {} < loadgen ok {}", outcome("served"), report.ok);
+    }
+    if (counter("serve_tokens_total") as usize) < report.tokens {
+        bail!(
+            "/metrics tokens {} < loadgen tokens {}",
+            counter("serve_tokens_total"),
+            report.tokens
+        );
+    }
+    let json_received =
+        stats_json.get("metrics").get("counters").get("serve_received_total").as_f64();
+    if json_received != Some(received) {
+        bail!("/v1/stats disagrees with /metrics: {json_received:?} vs {received}");
+    }
+    println!(
+        "telemetry scrape: balanced ({} received, {} served, {} tokens)",
+        received as u64,
+        outcome("served") as u64,
+        counter("serve_tokens_total") as u64
+    );
+    Ok(())
+}
+
+/// One-line periodic digest printed by `serve --listen --metrics`.
+fn metrics_digest_line(obs: &crate::obs::Obs) -> String {
+    use crate::obs::key;
+    let snap = obs.registry().snapshot();
+    let outcome = |o: &str| snap.counter(&key("serve_requests_total", &[("outcome", o)]));
+    format!(
+        "[metrics] received {} served {} shed {} expired {} cancelled {} faulted {} \
+         queue {} live {} occ {:.2}",
+        snap.counter("serve_received_total"),
+        outcome("served"),
+        outcome("shed"),
+        outcome("expired"),
+        outcome("cancelled"),
+        outcome("faulted"),
+        snap.gauge("batcher_queue_depth") as u64,
+        snap.gauge("batcher_live_slots") as u64,
+        snap.gauge("batcher_occupancy"),
+    )
 }

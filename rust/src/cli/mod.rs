@@ -10,7 +10,7 @@
 //!             [--batcher static|continuous] [--queue-limit 8] [--deadline 200]
 //!             [--max-new-tokens 16] [--burst 12] [--tinymodel]
 //!             [--listen 127.0.0.1:8080 [--loadgen 256] [--connections 16]
-//!              [--rate 100] [--max-connections 256]]
+//!              [--rate 100] [--max-connections 256] [--metrics]]
 //! itera validate [--mode quantized] [--decode cached] [--batcher continuous]
 //!                                    # model-vs-sim / qkernel / decode /
 //!                                    # continuous-batching parity
@@ -105,7 +105,7 @@ USAGE (native runtime, every build):
               [--batcher <static|continuous>] [--tinymodel]
               [--queue-limit N] [--deadline STEPS] [--max-new-tokens N]
               [--burst N] [--listen ADDR] [--loadgen N] [--connections N]
-              [--rate R] [--max-connections N]
+              [--rate R] [--max-connections N] [--metrics]
   itera validate [--mode quantized] [--decode cached] [--batcher continuous]
   itera help
 
@@ -135,7 +135,10 @@ USAGE (native runtime, every build):
   (--connections keep-alive clients at --rate req/s aggregate; rate 0 =
   closed loop), then drains and prints both reports — the HTTP smoke.
   --max-connections bounds concurrent HTTP connections (excess get an
-  immediate 503).
+  immediate 503). GET /metrics (Prometheus text) and GET /v1/stats
+  (JSON) expose live serving telemetry, answerable mid-drain; the
+  self-drive scrapes both and cross-checks them against its own ledger.
+  --metrics prints a one-line telemetry digest every second.
 
 USAGE (PJRT artifact measurement, needs --features pjrt):
   itera fig <1|4|7|8|9|10|11|12|all> [--pair en-de|fr-en] [--fast] [--no-sra]

@@ -48,7 +48,10 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Instant;
 
+use crate::obs::{Counter, Gauge, Histogram, Obs};
 use crate::runtime::SlotEngine;
 
 use super::fault::{panic_message, RequestLimits, ServeError};
@@ -144,6 +147,59 @@ impl BatcherStats {
     }
 }
 
+/// Registry handles mirroring [`BatcherStats`] plus live gauges and
+/// step/admit timing histograms, attached via
+/// [`ContinuousBatcher::with_obs`]. Counter mirrors sit next to every
+/// `stats.*` increment so the exported identity
+/// `batcher_submitted_total == retired + shed + expired + cancelled +
+/// faulted` holds exactly when the batcher's own stats balance.
+struct SchedObs {
+    submitted: Arc<Counter>,
+    retired: Arc<Counter>,
+    shed: Arc<Counter>,
+    expired: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    faulted: Arc<Counter>,
+    admitted: Arc<Counter>,
+    steps: Arc<Counter>,
+    occupied: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    live_slots: Arc<Gauge>,
+    occupancy: Arc<Gauge>,
+    step_seconds: Arc<Histogram>,
+    admit_seconds: Arc<Histogram>,
+}
+
+impl SchedObs {
+    fn new(obs: &Obs, capacity: usize) -> SchedObs {
+        let reg = obs.registry();
+        let outcome = |key| reg.counter_with("batcher_outcomes_total", &[("outcome", key)]);
+        reg.gauge("batcher_capacity").set(capacity as f64);
+        SchedObs {
+            submitted: reg.counter("batcher_submitted_total"),
+            retired: outcome("retired"),
+            shed: outcome("shed"),
+            expired: outcome("expired"),
+            cancelled: outcome("cancelled"),
+            faulted: outcome("faulted"),
+            admitted: reg.counter("batcher_admitted_total"),
+            steps: reg.counter("batcher_decode_steps_total"),
+            occupied: reg.counter("batcher_occupied_slot_steps_total"),
+            queue_depth: reg.gauge("batcher_queue_depth"),
+            live_slots: reg.gauge("batcher_live_slots"),
+            occupancy: reg.gauge("batcher_occupancy"),
+            step_seconds: reg.histogram("batcher_step_seconds", &STEP_BOUNDS),
+            admit_seconds: reg.histogram("batcher_admit_seconds", &STEP_BOUNDS),
+        }
+    }
+}
+
+/// Exponential 10µs..~1.3s bounds for step/admit timing.
+const STEP_BOUNDS: [f64; 18] = [
+    1e-5, 2e-5, 4e-5, 8e-5, 1.6e-4, 3.2e-4, 6.4e-4, 1.28e-3, 2.56e-3, 5.12e-3, 1.024e-2,
+    2.048e-2, 4.096e-2, 8.192e-2, 1.6384e-1, 3.2768e-1, 6.5536e-1, 1.31072,
+];
+
 /// A queued submission waiting for a slot.
 struct Pending {
     id: u64,
@@ -182,6 +238,8 @@ pub struct ContinuousBatcher<'e, E: SlotEngine> {
     draining: bool,
     next_id: u64,
     stats: BatcherStats,
+    /// Registry mirror of `stats` + tick gauges; see [`Self::with_obs`].
+    obs: Option<SchedObs>,
 }
 
 impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
@@ -196,6 +254,7 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             draining: false,
             next_id: 0,
             stats: BatcherStats::default(),
+            obs: None,
         }
     }
 
@@ -203,6 +262,14 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
     /// requests already wait are shed with [`ServeError::Overloaded`].
     pub fn with_queue_limit(mut self, limit: usize) -> ContinuousBatcher<'e, E> {
         self.queue_limit = Some(limit);
+        self
+    }
+
+    /// Mirror every stats increment into `obs` and keep queue-depth /
+    /// live-slot / occupancy gauges plus step/admit timing histograms
+    /// current per tick. Without this the batcher records nothing.
+    pub fn with_obs(mut self, obs: &Obs) -> ContinuousBatcher<'e, E> {
+        self.obs = Some(SchedObs::new(obs, self.capacity));
         self
     }
 
@@ -220,13 +287,22 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         src_row: Vec<i32>,
         limits: RequestLimits,
     ) -> Result<u64, ServeError> {
+        if let Some(o) = &self.obs {
+            o.submitted.inc();
+        }
         if self.draining {
             self.stats.shed += 1;
+            if let Some(o) = &self.obs {
+                o.shed.inc();
+            }
             return Err(ServeError::Overloaded);
         }
         if let Some(limit) = self.queue_limit {
             if self.queue.len() >= limit {
                 self.stats.shed += 1;
+                if let Some(o) = &self.obs {
+                    o.shed.inc();
+                }
                 return Err(ServeError::Overloaded);
             }
         }
@@ -260,12 +336,18 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         if let Some(pos) = self.queue.iter().position(|p| p.id == id) {
             self.queue.remove(pos);
             self.stats.cancelled += 1;
+            if let Some(o) = &self.obs {
+                o.cancelled.inc();
+            }
             return true;
         }
         for entry in self.slots.iter_mut() {
             if entry.as_ref().is_some_and(|l| l.id == id) {
                 *entry = None;
                 self.stats.cancelled += 1;
+                if let Some(o) = &self.obs {
+                    o.cancelled.inc();
+                }
                 return true;
             }
         }
@@ -353,6 +435,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             }
             if let Some(l) = self.slots[si].take() {
                 self.stats.expired += 1;
+                if let Some(o) = &self.obs {
+                    o.expired.inc();
+                }
                 done.push(Completion {
                     id: l.id,
                     slot: Some(si),
@@ -368,6 +453,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         for p in self.queue.drain(..) {
             if Self::deadline_hit(&p.limits, p.submit_step, now) {
                 self.stats.expired += 1;
+                if let Some(o) = &self.obs {
+                    o.expired.inc();
+                }
                 done.push(Completion {
                     id: p.id,
                     slot: None,
@@ -390,6 +478,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             while let Some(p) = self.queue.pop_front() {
                 if p.row.len() != self.engine.slot_seq_len() {
                     self.stats.faulted += 1;
+                    if let Some(o) = &self.obs {
+                        o.faulted.inc();
+                    }
                     done.push(Completion {
                         id: p.id,
                         slot: None,
@@ -403,7 +494,11 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                     continue;
                 }
                 let engine = self.engine;
+                let t_admit = self.obs.is_some().then(Instant::now);
                 let admitted = catch_unwind(AssertUnwindSafe(|| engine.admit(&p.row)));
+                if let (Some(o), Some(t)) = (&self.obs, t_admit) {
+                    o.admit_seconds.observe(t.elapsed().as_secs_f64());
+                }
                 match admitted {
                     Ok(Ok(slot)) => {
                         self.slots[si] = Some(Live {
@@ -414,10 +509,16 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                             new_tokens: 0,
                         });
                         self.stats.admitted += 1;
+                        if let Some(o) = &self.obs {
+                            o.admitted.inc();
+                        }
                         break;
                     }
                     Ok(Err(e)) => {
                         self.stats.faulted += 1;
+                        if let Some(o) = &self.obs {
+                            o.faulted.inc();
+                        }
                         done.push(Completion {
                             id: p.id,
                             slot: None,
@@ -428,6 +529,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                     }
                     Err(payload) => {
                         self.stats.faulted += 1;
+                        if let Some(o) = &self.obs {
+                            o.faulted.inc();
+                        }
                         done.push(Completion {
                             id: p.id,
                             slot: None,
@@ -453,9 +557,11 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         let live_idx: Vec<usize> =
             (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
         if live_idx.is_empty() {
+            self.note_gauges();
             return done;
         }
         let occupied = live_idx.len();
+        let t_step = self.obs.is_some().then(Instant::now);
         let batch_result = {
             let engine = self.engine;
             let mut live: Vec<&mut E::Slot> =
@@ -482,6 +588,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                 };
                 if let Some(l) = self.slots[si].take() {
                     self.stats.faulted += 1;
+                    if let Some(o) = &self.obs {
+                        o.faulted.inc();
+                    }
                     done.push(Completion {
                         id: l.id,
                         slot: Some(si),
@@ -492,13 +601,29 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         }
         self.stats.steps += 1;
         self.stats.occupied_slot_steps += occupied;
+        if let (Some(o), Some(t)) = (&self.obs, t_step) {
+            o.step_seconds.observe(t.elapsed().as_secs_f64());
+            o.steps.inc();
+            o.occupied.add(occupied as u64);
+        }
         for l in self.slots.iter_mut().flatten() {
             l.new_tokens += 1;
         }
 
         // Retire: free completed slots for the next tick's admissions.
         done.extend(self.retire_complete());
+        self.note_gauges();
         done
+    }
+
+    /// Refresh the queue-depth / live-slot / occupancy gauges (called at
+    /// every [`tick`](Self::tick) exit).
+    fn note_gauges(&self) {
+        if let Some(o) = &self.obs {
+            o.queue_depth.set(self.queue.len() as f64);
+            o.live_slots.set(self.slots.iter().filter(|s| s.is_some()).count() as f64);
+            o.occupancy.set(self.stats.occupancy(self.capacity));
+        }
     }
 
     /// Take every complete slot out of the table (freeing it for reuse)
@@ -522,6 +647,9 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             }
             if let Some(l) = self.slots[si].take() {
                 self.stats.retired += 1;
+                if let Some(o) = &self.obs {
+                    o.retired.inc();
+                }
                 if truncated {
                     self.stats.truncated += 1;
                 }
@@ -1014,6 +1142,66 @@ mod tests {
             s.retired + s.shed + s.expired + s.cancelled + s.faulted,
             "stats balance: {s:?}"
         );
+    }
+
+    #[test]
+    fn registry_mirror_matches_batcher_stats() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        use crate::obs::{key, Obs};
+        let obs = Obs::fresh();
+        let e = ScriptEngine { seq: 16 };
+        let mut b = ContinuousBatcher::new(&e, 2).with_queue_limit(2).with_obs(&obs);
+        let mut submitted = 0usize;
+        for i in 0..8 {
+            let limits = if i % 3 == 0 {
+                RequestLimits::none().with_deadline(1)
+            } else {
+                RequestLimits::none()
+            };
+            match b.submit_with(req(3, i, 16), limits) {
+                Ok(id) => {
+                    submitted += 1;
+                    if i == 4 {
+                        b.cancel(id);
+                    }
+                }
+                Err(ServeError::Overloaded) => submitted += 1,
+                Err(e) => panic!("unexpected submit error {e}"),
+            }
+            b.tick();
+        }
+        b.run_until_drained();
+        let s = b.stats().clone();
+        let snap = obs.registry().snapshot();
+        let out = |o: &str| snap.counter(&key("batcher_outcomes_total", &[("outcome", o)]));
+        assert_eq!(snap.counter("batcher_submitted_total"), submitted as u64);
+        assert_eq!(out("retired"), s.retired as u64);
+        assert_eq!(out("shed"), s.shed as u64);
+        assert_eq!(out("expired"), s.expired as u64);
+        assert_eq!(out("cancelled"), s.cancelled as u64);
+        assert_eq!(out("faulted"), s.faulted as u64);
+        assert_eq!(snap.counter("batcher_admitted_total"), s.admitted as u64);
+        assert_eq!(snap.counter("batcher_decode_steps_total"), s.steps as u64);
+        assert_eq!(
+            snap.counter("batcher_occupied_slot_steps_total"),
+            s.occupied_slot_steps as u64
+        );
+        // The exported identity holds exactly.
+        assert_eq!(
+            snap.counter("batcher_submitted_total"),
+            out("retired") + out("shed") + out("expired") + out("cancelled") + out("faulted"),
+            "exported accounting identity"
+        );
+        // Gauges settle at idle: nothing queued, nothing live.
+        assert_eq!(snap.gauge("batcher_queue_depth"), 0.0);
+        assert_eq!(snap.gauge("batcher_live_slots"), 0.0);
+        assert_eq!(snap.gauge("batcher_capacity"), 2.0);
+        assert!((snap.gauge("batcher_occupancy") - b.occupancy()).abs() < 1e-12);
+        // Step timing recorded once per decode step.
+        let steps = snap.histograms.get("batcher_step_seconds").expect("step histogram");
+        assert_eq!(steps.count, s.steps as u64);
+        let admits = snap.histograms.get("batcher_admit_seconds").expect("admit histogram");
+        assert_eq!(admits.count, s.admitted as u64);
     }
 
     #[test]

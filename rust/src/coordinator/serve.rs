@@ -37,12 +37,14 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::eval::{strip_specials, Corpus};
 use crate::model::ModelDims;
+use crate::obs::{key, Counter, Obs, Outcome, Snapshot, SummaryMetric, Trace, TraceReport};
 use crate::runtime::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -120,6 +122,14 @@ pub struct ServeConfig {
     /// and drains (no new admissions, in-flight work finishes) once
     /// flipped.
     pub shutdown: Option<ShutdownSignal>,
+    /// Telemetry sink for this run. Defaults to an isolated
+    /// [`Obs::fresh`] registry so concurrent serve loops (as under
+    /// `cargo test`) never share accounting; hand the same handle to an
+    /// HTTP front end to expose the loop's live metrics on `/metrics`
+    /// and `/v1/stats`. The end-of-run [`ServeStats`] is derived from a
+    /// snapshot of this registry ([`ServeStats::from_snapshot`]), so
+    /// there is exactly one source of accounting truth per run.
+    pub obs: Obs,
 }
 
 impl ServeConfig {
@@ -185,22 +195,108 @@ impl ServeStats {
         self.received == self.served + self.failed()
     }
 
-    fn empty(wall_s: f64) -> ServeStats {
+    /// Derive the end-of-run report from a registry [`Snapshot`] — the
+    /// same source `GET /metrics` and `GET /v1/stats` render from, so
+    /// the report can never drift from the exported metrics. Counters
+    /// are lifetime-of-registry totals; pair one registry with one run.
+    pub fn from_snapshot(snap: &Snapshot, wall_s: f64) -> ServeStats {
+        let outcome =
+            |o: &str| snap.counter(&key("serve_requests_total", &[("outcome", o)])) as usize;
+        let steps = snap.counter("batcher_decode_steps_total") as usize;
+        let occupied = snap.counter("batcher_occupied_slot_steps_total") as f64;
+        let capacity = snap.gauge("batcher_capacity");
         ServeStats {
-            served: 0,
-            received: 0,
-            batches: 0,
+            served: outcome("served"),
+            received: snap.counter("serve_received_total") as usize,
+            batches: steps,
             wall_s,
-            tokens: 0,
-            latency: Summary::new(),
-            queue_wait: Summary::new(),
-            execution: Summary::new(),
-            occupancy: 0.0,
-            shed: 0,
-            expired: 0,
-            cancelled: 0,
-            faulted: 0,
+            tokens: snap.counter("serve_tokens_total") as usize,
+            latency: snap.summary("serve_latency_seconds"),
+            queue_wait: snap.summary("serve_queue_wait_seconds"),
+            execution: snap.summary("serve_execution_seconds"),
+            occupancy: if steps == 0 || capacity <= 0.0 {
+                0.0
+            } else {
+                occupied / (steps as f64 * capacity)
+            },
+            shed: outcome("shed"),
+            expired: outcome("expired"),
+            cancelled: outcome("cancelled"),
+            faulted: outcome("faulted"),
         }
+    }
+}
+
+/// Registry handles for the continuous serve loop's accounting: one
+/// terminal-outcome counter family, received/token counters and the
+/// latency summaries. Created per run against [`ServeConfig::obs`];
+/// every increment lands in the registry and nowhere else, and
+/// [`ServeStats::from_snapshot`] reads the run's report back out — the
+/// single-source fix for the stats double-bookkeeping risk.
+struct ServeMetrics {
+    obs: Obs,
+    received: Arc<Counter>,
+    served: Arc<Counter>,
+    shed: Arc<Counter>,
+    expired: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    faulted: Arc<Counter>,
+    tokens: Arc<Counter>,
+    latency: Arc<SummaryMetric>,
+    queue_wait: Arc<SummaryMetric>,
+    execution: Arc<SummaryMetric>,
+}
+
+impl ServeMetrics {
+    fn new(obs: &Obs) -> ServeMetrics {
+        let reg = obs.registry();
+        let outcome = |o| reg.counter_with("serve_requests_total", &[("outcome", o)]);
+        ServeMetrics {
+            obs: obs.clone(),
+            received: reg.counter("serve_received_total"),
+            served: outcome("served"),
+            shed: outcome("shed"),
+            expired: outcome("expired"),
+            cancelled: outcome("cancelled"),
+            faulted: outcome("faulted"),
+            tokens: reg.counter("serve_tokens_total"),
+            latency: reg.summary("serve_latency_seconds"),
+            queue_wait: reg.summary("serve_queue_wait_seconds"),
+            execution: reg.summary("serve_execution_seconds"),
+        }
+    }
+
+    /// Record one closed trace: the outcome counter, the per-stage
+    /// attribution counter (`serve_outcomes_total{outcome,stage}`), and
+    /// — for every outcome that is not a normal response — a postmortem
+    /// ring event.
+    fn finish(&self, report: &TraceReport, detail: &str) {
+        let counter = match report.outcome {
+            Outcome::Retired => &self.served,
+            Outcome::Shed => &self.shed,
+            Outcome::Expired => &self.expired,
+            Outcome::Cancelled => &self.cancelled,
+            Outcome::Faulted => &self.faulted,
+        };
+        counter.inc();
+        let labels = [("outcome", report.outcome.key()), ("stage", report.stage.key())];
+        self.obs.registry().counter_with("serve_outcomes_total", &labels).inc();
+        if report.outcome != Outcome::Retired {
+            self.obs.ring().push(
+                report.id,
+                report.outcome.key(),
+                report.stage.key(),
+                detail.to_string(),
+            );
+        }
+    }
+
+    /// Record the latency split + token count of a served response.
+    fn served_latency(&self, report: &TraceReport, n_tokens: usize) {
+        self.tokens.add(n_tokens as u64);
+        self.latency.observe(report.total_s);
+        self.queue_wait.observe(report.queue_s);
+        self.execution.observe(report.decode_s);
     }
 }
 
@@ -342,22 +438,16 @@ pub fn serve_loop_continuous<E: SlotEngine>(
 ) -> Result<ServeStats> {
     let s = engine.slot_seq_len();
     let t0 = Instant::now();
-    let mut batcher = ContinuousBatcher::new(engine, cfg.capacity);
+    let metrics = ServeMetrics::new(&cfg.obs);
+    let mut batcher = ContinuousBatcher::new(engine, cfg.capacity).with_obs(&cfg.obs);
     if let Some(limit) = cfg.queue_limit {
         batcher = batcher.with_queue_limit(limit);
     }
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    // `received`/`done` drive loop termination; all exported accounting
+    // lives in `metrics` (the registry), nowhere else.
     let mut received = 0usize;
-    let mut served = 0usize;
-    let mut shed = 0usize;
-    let mut expired = 0usize;
-    let mut cancelled = 0usize;
-    let mut faulted = 0usize;
     let mut done = 0usize;
-    let mut tokens = 0usize;
-    let mut latency = Summary::new();
-    let mut queue_wait = Summary::new();
-    let mut execution = Summary::new();
     let mut disconnected = false;
     loop {
         let draining = cfg.shutdown.as_ref().is_some_and(|sig| sig.is_draining());
@@ -382,7 +472,8 @@ pub fn serve_loop_continuous<E: SlotEngine>(
             match first {
                 Ok(req) => {
                     received += 1;
-                    let _ = admit_or_shed(req, cfg, s, dims.pad_id, &mut batcher, &mut inflight);
+                    metrics.received.inc();
+                    admit_or_shed(req, cfg, &metrics, s, dims.pad_id, &mut batcher, &mut inflight);
                 }
                 Err(()) => {
                     disconnected = true;
@@ -395,7 +486,8 @@ pub fn serve_loop_continuous<E: SlotEngine>(
             match rx.try_recv() {
                 Ok(req) => {
                     received += 1;
-                    let _ = admit_or_shed(req, cfg, s, dims.pad_id, &mut batcher, &mut inflight);
+                    metrics.received.inc();
+                    admit_or_shed(req, cfg, &metrics, s, dims.pad_id, &mut batcher, &mut inflight);
                 }
                 Err(mpsc::TryRecvError::Disconnected) => disconnected = true,
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -410,52 +502,57 @@ pub fn serve_loop_continuous<E: SlotEngine>(
             .map(|(&id, _)| id)
             .collect();
         for id in orphans {
+            let was_live = batcher.is_live(id);
             if batcher.cancel(id) {
-                inflight.remove(&id);
-                cancelled += 1;
+                if let Some(inf) = inflight.remove(&id) {
+                    let report = inf.trace.finish(Outcome::Cancelled, was_live, Instant::now());
+                    metrics.finish(&report, "client disconnected");
+                }
                 done += 1;
             }
         }
         let t_tick = Instant::now();
         for c in batcher.tick() {
-            let Some(inf) = inflight.remove(&c.id) else { continue };
+            let Some(mut inf) = inflight.remove(&c.id) else { continue };
             done += 1;
+            // A request that entered a slot and completed within this
+            // same tick was admitted at the tick boundary.
+            if c.slot.is_some() {
+                inf.trace.admitted(t_tick);
+            }
             match c.result {
                 Ok(buf) => {
                     let toks = strip_specials(&buf, dims.bos_id, dims.eos_id, dims.pad_id);
-                    let now = Instant::now();
-                    let lat = now.duration_since(inf.req.t_arrival).as_secs_f64();
-                    // A request that entered a slot and completed within
-                    // this same tick was admitted at the tick boundary.
-                    let t_admit = inf.t_admit.unwrap_or(t_tick);
-                    tokens += toks.len();
-                    latency.add(lat);
-                    queue_wait.add(t_admit.duration_since(inf.req.t_arrival).as_secs_f64());
-                    execution.add(now.duration_since(t_admit).as_secs_f64());
+                    let report = inf.trace.finish(Outcome::Retired, true, Instant::now());
+                    metrics.finish(&report, "");
+                    metrics.served_latency(&report, toks.len());
+                    let lat = report.total_s;
                     inf.req.respond.send(Ok(Response { tokens: toks, latency_s: lat }));
-                    served += 1;
                 }
                 Err(e) => {
-                    match &e {
-                        ServeError::DeadlineExceeded => expired += 1,
-                        ServeError::EngineFault(_) => faulted += 1,
-                        ServeError::Overloaded => shed += 1,
-                        ServeError::Cancelled => cancelled += 1,
-                    }
+                    let outcome = match &e {
+                        ServeError::DeadlineExceeded => Outcome::Expired,
+                        ServeError::EngineFault(_) => Outcome::Faulted,
+                        ServeError::Overloaded => Outcome::Shed,
+                        ServeError::Cancelled => Outcome::Cancelled,
+                    };
+                    let report = inf.trace.finish(outcome, c.slot.is_some(), Instant::now());
+                    metrics.finish(&report, &e.to_string());
                     inf.req.respond.send(Err(e));
                 }
             }
         }
         // Post-tick bookkeeping over still-inflight requests: timestamp
         // slot entry (admission happens inside the tick, at its start —
-        // the queue-wait/execution split pivots there), and push each
-        // opted-in live request's newly decoded tokens (its partial
-        // output past what was already pushed). Completions this tick
-        // were removed above, so their tail tokens travel with the
-        // terminal Response instead.
+        // the queue-wait/execution split pivots there), count the decode
+        // step each live slot just took, and push each opted-in live
+        // request's newly decoded tokens (its partial output past what
+        // was already pushed). Completions this tick were removed above,
+        // so their tail tokens travel with the terminal Response instead.
         for (id, inf) in inflight.iter_mut() {
-            if inf.t_admit.is_none() && batcher.is_live(*id) {
-                inf.t_admit = Some(t_tick);
+            if batcher.is_live(*id) {
+                inf.trace.admitted(t_tick);
+                inf.trace.step();
             }
             if !inf.req.stream {
                 continue;
@@ -472,57 +569,47 @@ pub fn serve_loop_continuous<E: SlotEngine>(
             break;
         }
     }
-    // Sheds happen at submit time (admit_or_shed responds immediately
-    // and never inserts into `inflight`); fold them in from the batcher,
-    // whose counter is authoritative for admission rejections.
-    shed += batcher.stats().shed;
-    let mut stats = ServeStats::empty(t0.elapsed().as_secs_f64());
-    stats.served = served;
-    stats.received = received;
-    stats.batches = batcher.stats().steps;
-    stats.tokens = tokens;
-    stats.latency = latency;
-    stats.queue_wait = queue_wait;
-    stats.execution = execution;
-    stats.occupancy = batcher.occupancy();
-    stats.shed = shed;
-    stats.expired = expired;
-    stats.cancelled = cancelled;
-    stats.faulted = faulted;
-    Ok(stats)
+    // The end-of-run report IS the registry snapshot — the same data
+    // `/metrics` and `/v1/stats` serve, read back once at the end.
+    let snap = cfg.obs.registry().snapshot();
+    Ok(ServeStats::from_snapshot(&snap, t0.elapsed().as_secs_f64()))
 }
 
-/// One submitted request plus the serve loop's bookkeeping: when it
-/// entered a decode slot (`None` while still queued — the pivot of the
+/// One submitted request plus the serve loop's bookkeeping: its live
+/// [`Trace`] (submit/admit timestamps + step count — the pivot of the
 /// queue-wait/execution latency split) and how many tokens have already
 /// been streamed to its client.
 struct Inflight {
     req: Request,
-    t_admit: Option<Instant>,
+    trace: Trace,
     streamed: usize,
 }
 
 /// Pack, apply server-side default limits, and submit one request; on
-/// [`ServeError::Overloaded`] the client is answered immediately and the
-/// request never enters `inflight`.
+/// [`ServeError::Overloaded`] the client is answered immediately — a
+/// shed trace attributed to the submit stage — and the request never
+/// enters `inflight`.
 fn admit_or_shed<E: SlotEngine>(
     req: Request,
     cfg: &ServeConfig,
+    metrics: &ServeMetrics,
     seq: usize,
     pad: i32,
     batcher: &mut ContinuousBatcher<E>,
     inflight: &mut HashMap<u64, Inflight>,
-) -> Option<u64> {
+) {
     let limits = req.limits.or(cfg.default_limits);
     let row = pack_rows(&[req.tokens.as_slice()], 1, seq, pad);
     match batcher.submit_with(row, limits) {
         Ok(id) => {
-            inflight.insert(id, Inflight { req, t_admit: None, streamed: 0 });
-            Some(id)
+            let trace = Trace::begin(id, req.t_arrival);
+            inflight.insert(id, Inflight { req, trace, streamed: 0 });
         }
         Err(e) => {
+            let report =
+                Trace::begin(0, req.t_arrival).finish(Outcome::Shed, false, Instant::now());
+            metrics.finish(&report, &e.to_string());
             req.respond.send(Err(e));
-            None
         }
     }
 }
@@ -1034,6 +1121,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_serves_and_balances() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         let engine = EchoSlots { seq: 6, need: 1 };
         let d = dims(6, 4);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -1106,6 +1194,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_streams_incremental_tokens() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         use crate::coordinator::fault::StreamEvent;
         let engine = GrowSlots { seq: 6, need: 3 };
         let d = dims(6, 4);
@@ -1129,6 +1218,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_sheds_on_overload() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         let engine = EchoSlots { seq: 6, need: 1 };
         let d = dims(6, 4);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -1158,6 +1248,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_cancels_disconnected_clients() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         // Slow engine (3 steps per request) so cancellation happens
         // before natural completion; receiver 1 is dropped up-front.
         let engine = EchoSlots { seq: 6, need: 3 };
@@ -1178,6 +1269,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_applies_default_deadline() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         // An engine that never completes a slot: without the server-side
         // default deadline this loop would spin forever.
         let engine = EchoSlots { seq: 6, need: usize::MAX };
@@ -1196,6 +1288,7 @@ mod tests {
 
     #[test]
     fn continuous_loop_drains_gracefully_on_shutdown() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         let engine = EchoSlots { seq: 6, need: 2 };
         let d = dims(6, 4);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -1218,6 +1311,68 @@ mod tests {
         assert_eq!(stats.served, 3);
         assert_eq!(stats.received, 3);
         assert!(stats.is_balanced(), "drain exits with balanced books: {stats:?}");
+    }
+
+    /// Regression for the stats double-bookkeeping fix: the returned
+    /// `ServeStats` IS the registry snapshot, so the exported metrics
+    /// must satisfy the accounting identity and re-deriving the report
+    /// from a fresh snapshot must reproduce the returned stats exactly.
+    #[test]
+    fn continuous_loop_stats_derive_from_exported_metrics() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let engine = EchoSlots { seq: 6, need: 3 };
+        let d = dims(6, 4);
+        let (tx, rx) = mpsc::channel::<Request>();
+        // Mixed outcomes: the queue bound of 2 absorbs the first two of
+        // four pre-queued requests and sheds the rest; one absorbed
+        // client walks away before its slot completes.
+        let keep = send_request(&tx, vec![1, 7, 2]);
+        let orphan = send_request(&tx, vec![1, 8, 2]);
+        let shed: Vec<ResponseRx> = (0..2).map(|i| send_request(&tx, vec![1, 9 + i, 2])).collect();
+        drop(orphan);
+        drop(tx);
+        let mut cfg = ServeConfig::new(1);
+        cfg.queue_limit = Some(2);
+        let stats = serve_loop_continuous(&engine, &rx, &d, 4, &cfg).unwrap();
+        assert_eq!(
+            (stats.received, stats.served, stats.shed, stats.cancelled),
+            (4, 1, 2, 1),
+            "{stats:?}"
+        );
+        assert!(stats.is_balanced(), "{stats:?}");
+
+        let snap = cfg.obs.registry().snapshot();
+        // The exported counters satisfy the same identity the report does…
+        let outcome = |o: &str| snap.counter(&key("serve_requests_total", &[("outcome", o)]));
+        let terminal: u64 =
+            ["served", "shed", "expired", "cancelled", "faulted"].into_iter().map(outcome).sum();
+        assert_eq!(snap.counter("serve_received_total"), terminal, "exported serve identity");
+        let batcher_terminal: u64 = ["retired", "shed", "expired", "cancelled", "faulted"]
+            .into_iter()
+            .map(|o| snap.counter(&key("batcher_outcomes_total", &[("outcome", o)])))
+            .sum();
+        assert_eq!(snap.counter("batcher_submitted_total"), batcher_terminal, "batcher identity");
+        // …and re-deriving the report reproduces the returned stats.
+        let again = ServeStats::from_snapshot(&snap, stats.wall_s);
+        assert_eq!(stats.served, again.served);
+        assert_eq!(stats.received, again.received);
+        assert_eq!(stats.shed, again.shed);
+        assert_eq!(stats.cancelled, again.cancelled);
+        assert_eq!(stats.tokens, again.tokens);
+        assert_eq!(stats.latency.count(), again.latency.count());
+        // Stage attribution: sheds terminate at submit, the queued
+        // cancel in queue, the served request in respond.
+        let attributed =
+            |o, s| snap.counter(&key("serve_outcomes_total", &[("outcome", o), ("stage", s)]));
+        assert_eq!(attributed("shed", "submit"), 2);
+        assert_eq!(attributed("cancelled", "queue"), 1);
+        assert_eq!(attributed("retired", "respond"), 1);
+        // Every non-served outcome left a postmortem event in the ring.
+        assert_eq!(cfg.obs.ring().len(), 3);
+        for rrx in shed {
+            assert_eq!(rrx.recv(), Some(Err(ServeError::Overloaded)));
+        }
+        assert_eq!(recv_tokens(&keep), vec![7]);
     }
 
     #[test]

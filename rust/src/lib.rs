@@ -46,7 +46,15 @@
 //!   typed error→status mapping) that feeds the same continuous serve
 //!   loop, so HTTP responses are bit-identical to in-process serving;
 //!   [`server::loadgen`] drives it with seeded Poisson open-loop load
-//!   for the latency/saturation bench lanes.
+//!   for the latency/saturation bench lanes. A cross-cutting telemetry
+//!   layer ([`obs`]) threads through all of it: a dependency-free
+//!   metrics registry (lock-free atomic counters/gauges/histograms,
+//!   snapshot-on-read), per-request traces that attribute every
+//!   terminal outcome to a serving stage (submit → queue → admit →
+//!   decode → respond), and a bounded postmortem ring — exported live
+//!   as Prometheus text on `GET /metrics` and JSON on `GET /v1/stats`,
+//!   with the end-of-run `ServeStats` derived from the same registry
+//!   snapshot so there is exactly one source of accounting truth.
 //! * **Layer 2** — JAX transformer (`python/compile/model.py`), lowered
 //!   once to HLO text under `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing
@@ -64,6 +72,7 @@ pub mod dse;
 pub mod eval;
 pub mod hw;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sra;

@@ -1,0 +1,715 @@
+//! Serving telemetry: a dependency-free metrics registry with live export.
+//!
+//! The hot path records into lock-free primitives — [`Counter`] and
+//! [`Gauge`] are single `AtomicU64`s, [`Histogram`] is a fixed array of
+//! atomic buckets — while readers take a consistent [`Snapshot`] on
+//! demand and render it as Prometheus text exposition
+//! ([`Snapshot::to_prometheus`]) or JSON ([`Snapshot::to_json`]).
+//!
+//! Two registries coexist:
+//! - [`global()`] holds process-lifetime monotone counters (qkernel
+//!   dispatches, runtime step counts) that are safe to share across
+//!   concurrent serve loops and tests.
+//! - [`Obs::fresh()`] hands out an isolated registry + ring for one
+//!   serve loop, so per-run accounting identities hold exactly even
+//!   when many loops run in one process (as `cargo test` does).
+//!
+//! All recording is gated on a process-wide enable flag; see
+//! [`ObsConfig::disabled`] for the escape hatch benchmarked in the
+//! `obs` lane of `benches/hot_paths.rs`.
+
+pub mod ring;
+pub mod trace;
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+pub use ring::{Event, Ring};
+pub use trace::{Outcome, Stage, Trace, TraceReport};
+
+/// Process-wide switch for all telemetry recording.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Telemetry configuration. The only knob today is the global enable
+/// flag; `ObsConfig::disabled()` is the hot-path escape hatch whose
+/// cost delta the `obs` bench lane measures.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    pub enabled: bool,
+}
+
+impl ObsConfig {
+    pub fn enabled() -> Self {
+        ObsConfig { enabled: true }
+    }
+
+    pub fn disabled() -> Self {
+        ObsConfig { enabled: false }
+    }
+
+    /// Install this configuration process-wide.
+    pub fn install(self) {
+        ENABLED.store(self.enabled, Ordering::Relaxed);
+    }
+}
+
+/// True when recording is enabled (the default).
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotone event count. `inc`/`add` are single relaxed `fetch_add`s.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if is_enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value, stored as f64 bits in an
+/// `AtomicU64` so readers never see a torn value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if is_enabled() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. Bucket `i` counts observations in
+/// `(bounds[i-1], bounds[i]]`; one extra overflow bucket catches
+/// everything above the last bound. Observation is two relaxed
+/// `fetch_add`s plus a CAS loop folding the value into the f64 sum.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be strictly increasing and non-empty.
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Default latency buckets: exponential from 100µs to ~10s.
+    pub fn latency() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1e-4;
+        while b < 12.0 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        Histogram::new(&bounds)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if !is_enabled() {
+            return;
+        }
+        let idx = self.bounds.partition_point(|&b| v > b);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bounds: self.bounds.clone(),
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    /// Cumulative counts per bucket (monotone by construction).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc
+            })
+            .collect()
+    }
+
+    /// Estimate the `q`-quantile by linear interpolation inside the
+    /// bucket holding the target rank. Assumes non-negative
+    /// observations (bucket 0 interpolates from zero); the overflow
+    /// bucket saturates at the last bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).max(1.0);
+        let mut below = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let upto = below + c;
+            if (upto as f64) >= target && c > 0 {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = match self.bounds.get(i) {
+                    Some(&b) => b,
+                    None => return *self.bounds.last().unwrap(),
+                };
+                let frac = (target - below as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            below = upto;
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Exact-quantile summary metric: a mutex-wrapped
+/// [`Summary`]. Locked per observation, so reserve it for
+/// request-frequency events (latency per request), not step-frequency.
+#[derive(Debug, Default)]
+pub struct SummaryMetric(Mutex<Summary>);
+
+impl SummaryMetric {
+    pub fn new() -> Self {
+        SummaryMetric(Mutex::new(Summary::new()))
+    }
+
+    pub fn observe(&self, v: f64) {
+        if is_enabled() {
+            self.0.lock().unwrap().add(v);
+        }
+    }
+
+    /// Fold another summary in (exact merge, see `Summary::merge`).
+    pub fn absorb(&self, other: &Summary) {
+        if is_enabled() {
+            self.0.lock().unwrap().merge(other);
+        }
+    }
+
+    pub fn snapshot(&self) -> Summary {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    Summary(Arc<SummaryMetric>),
+}
+
+/// Named metric store. Registration is idempotent per full key
+/// (`name{label="value",...}`): the first caller creates the metric,
+/// later callers get the same `Arc` handle. The registry lock is only
+/// taken at registration and snapshot time — handles record without it.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Render a full metric key from a base name and label set.
+pub fn key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut sorted: Vec<_> = labels.to_vec();
+    sorted.sort_unstable();
+    let body: Vec<String> =
+        sorted.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "'"))).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn entry<T>(
+        &self,
+        key: String,
+        make: impl FnOnce() -> Metric,
+        pick: impl FnOnce(&Metric) -> Option<Arc<T>>,
+    ) -> Arc<T> {
+        let mut map = self.metrics.lock().unwrap();
+        let m = map.entry(key.clone()).or_insert_with(make);
+        pick(m).unwrap_or_else(|| panic!("metric {key} registered with a different type"))
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.entry(
+            key(name, labels),
+            || Metric::Counter(Arc::new(Counter::new())),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.entry(
+            key(name, labels),
+            || Metric::Gauge(Arc::new(Gauge::new())),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.entry(
+            key(name, &[]),
+            || Metric::Histogram(Arc::new(Histogram::new(bounds))),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn summary(&self, name: &str) -> Arc<SummaryMetric> {
+        self.entry(
+            key(name, &[]),
+            || Metric::Summary(Arc::new(SummaryMetric::new())),
+            |m| match m {
+                Metric::Summary(s) => Some(s.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Consistent point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.metrics.lock().unwrap();
+        let mut snap = Snapshot::default();
+        for (k, m) in map.iter() {
+            match m {
+                Metric::Counter(c) => {
+                    snap.counters.insert(k.clone(), c.get());
+                }
+                Metric::Gauge(g) => {
+                    snap.gauges.insert(k.clone(), g.get());
+                }
+                Metric::Histogram(h) => {
+                    snap.histograms.insert(k.clone(), h.snapshot());
+                }
+                Metric::Summary(s) => {
+                    snap.summaries.insert(k.clone(), s.snapshot());
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// Point-in-time copy of a [`Registry`], the single source every
+/// exporter renders from: `/metrics`, `/v1/stats`, the end-of-run
+/// `ServeStats`, and the bench-lane JSON export all read one of these.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistSnapshot>,
+    pub summaries: BTreeMap<String, Summary>,
+}
+
+impl Snapshot {
+    /// Counter value by full key, zero if absent.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Gauge value by full key, zero if absent.
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Summary by name (cloned; empty if absent).
+    pub fn summary(&self, key: &str) -> Summary {
+        self.summaries.get(key).cloned().unwrap_or_default()
+    }
+
+    /// Merge another snapshot in (the other wins on key collisions);
+    /// used to combine a serve-scoped registry with the process-global
+    /// one for `/metrics`.
+    pub fn merged(mut self, other: Snapshot) -> Snapshot {
+        self.counters.extend(other.counters);
+        self.gauges.extend(other.gauges);
+        self.histograms.extend(other.histograms);
+        self.summaries.extend(other.summaries);
+        self
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# TYPE` comments,
+    /// `_bucket{le=...}`/`_sum`/`_count` for histograms, and
+    /// `{quantile="..."}` series for summaries.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        let mut type_line = |out: &mut String, key: &str, kind: &str| {
+            let base = key.split('{').next().unwrap_or(key).to_string();
+            if typed.insert(base.clone()) {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+            }
+        };
+        for (k, v) in &self.counters {
+            type_line(&mut out, k, "counter");
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            type_line(&mut out, k, "gauge");
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            type_line(&mut out, k, "histogram");
+            let mut acc = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                acc += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => format!("{b}"),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{k}_bucket{{le=\"{le}\"}} {acc}\n"));
+            }
+            out.push_str(&format!("{k}_sum {}\n", h.sum));
+            out.push_str(&format!("{k}_count {}\n", h.count));
+        }
+        for (k, s) in &self.summaries {
+            type_line(&mut out, k, "summary");
+            for q in [0.5, 0.95, 0.99] {
+                out.push_str(&format!("{k}{{quantile=\"{q}\"}} {}\n", s.quantile(q)));
+            }
+            out.push_str(&format!("{k}_sum {}\n", s.sum()));
+            out.push_str(&format!("{k}_count {}\n", s.count()));
+        }
+        out
+    }
+
+    /// JSON rendering for `/v1/stats` (via `util::json`): counters,
+    /// gauges, summary quantiles, histogram quantiles.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+        let summaries = Json::Obj(
+            self.summaries
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(s.count() as f64)),
+                            ("sum", Json::Num(s.sum())),
+                            ("p50", Json::Num(s.quantile(0.5))),
+                            ("p95", Json::Num(s.quantile(0.95))),
+                            ("p99", Json::Num(s.quantile(0.99))),
+                            ("max", Json::Num(if s.count() == 0 { 0.0 } else { s.max() })),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum)),
+                            ("p50", Json::Num(h.quantile(0.5))),
+                            ("p95", Json::Num(h.quantile(0.95))),
+                            ("p99", Json::Num(h.quantile(0.99))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("summaries", summaries),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+/// Parse Prometheus text exposition back into `key -> value` (comments
+/// skipped). Used by the CLI self-drive check and the e2e tests to
+/// close the loop on what `/metrics` actually serves.
+pub fn parse_text(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // The key may contain spaces inside label values; the value is
+        // the final whitespace-separated token.
+        if let Some(split) = line.rfind(' ') {
+            let (k, v) = line.split_at(split);
+            if let Ok(num) = v.trim().parse::<f64>() {
+                out.insert(k.trim().to_string(), num);
+            }
+        }
+    }
+    out
+}
+
+/// Cheaply clonable handle bundling a registry with a postmortem ring.
+#[derive(Clone)]
+pub struct Obs {
+    registry: Arc<Registry>,
+    ring: Arc<Ring>,
+}
+
+impl Obs {
+    /// An isolated registry + ring (one per serve loop / test).
+    pub fn fresh() -> Obs {
+        Obs { registry: Arc::new(Registry::new()), ring: Arc::new(Ring::new(256)) }
+    }
+
+    /// The process-global handle (qkernel / runtime counters).
+    pub fn global() -> Obs {
+        static GLOBAL: OnceLock<Obs> = OnceLock::new();
+        GLOBAL.get_or_init(Obs::fresh).clone()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::fresh()
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Obs({} metrics)", self.registry.metrics.lock().unwrap().len())
+    }
+}
+
+/// Bump the process-global qkernel dispatch counter for one kernel
+/// invocation. Handles are cached in a static table so the hot path
+/// pays one `OnceLock` load plus one relaxed `fetch_add`.
+pub fn note_qkernel_dispatch(kernel: usize, wl: u32) {
+    const KERNELS: [&str; 4] = ["qmatmul", "qmatvec", "qmatvec_i32", "packed_matvec"];
+    const WL_LO: u32 = 2;
+    const WL_HI: u32 = 8;
+    static TABLE: OnceLock<Vec<Arc<Counter>>> = OnceLock::new();
+    if !is_enabled() {
+        return;
+    }
+    let table = TABLE.get_or_init(|| {
+        let reg = Obs::global();
+        let mut v = Vec::new();
+        for k in KERNELS {
+            for wl in WL_LO..=WL_HI {
+                let wl_s = wl.to_string();
+                let labels = [("kernel", k), ("wl", wl_s.as_str())];
+                v.push(reg.registry().counter_with("qkernel_dispatch_total", &labels));
+            }
+        }
+        v
+    });
+    let span = (WL_HI - WL_LO + 1) as usize;
+    let wl_idx = (wl.clamp(WL_LO, WL_HI) - WL_LO) as usize;
+    let idx = kernel.min(KERNELS.len() - 1) * span + wl_idx;
+    table[idx].0.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Kernel indices for [`note_qkernel_dispatch`].
+pub mod kernels {
+    pub const QMATMUL: usize = 0;
+    pub const QMATVEC: usize = 1;
+    pub const QMATVEC_I32: usize = 2;
+    pub const PACKED_MATVEC: usize = 3;
+}
+
+/// The [`ObsConfig`] gate is process-global, so a unit test that flips
+/// it could race a concurrently running test that asserts exact
+/// recorded counts. Flippers hold the write side for their disabled
+/// window; exactness tests hold the read side while they record.
+#[cfg(test)]
+pub fn test_gate() -> &'static std::sync::RwLock<()> {
+    static GATE: OnceLock<std::sync::RwLock<()>> = OnceLock::new();
+    GATE.get_or_init(|| std::sync::RwLock::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip_and_idempotent_registration() {
+        let _gate = test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let obs = Obs::fresh();
+        let c1 = obs.registry().counter("requests_total");
+        let c2 = obs.registry().counter("requests_total");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3, "both handles hit the same counter");
+        let g = obs.registry().gauge_with("depth", &[("lane", "a")]);
+        g.set(4.5);
+        let snap = obs.registry().snapshot();
+        assert_eq!(snap.counter("requests_total"), 3);
+        assert_eq!(snap.gauge("depth{lane=\"a\"}"), 4.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let _gate = test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.5, 3.0, 9.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert!((s.sum - 15.5).abs() < 1e-9);
+        assert_eq!(s.counts, vec![1, 2, 1, 1]);
+        assert_eq!(s.cumulative(), vec![1, 3, 4, 5]);
+        // Median rank lands in bucket (1, 2]; estimate interpolates there.
+        let q = s.quantile(0.5);
+        assert!((1.0..=2.0).contains(&q), "median {q} should fall in (1,2]");
+        // Overflow bucket saturates at the top bound.
+        assert_eq!(s.quantile(1.0), 4.0);
+    }
+
+    #[test]
+    fn prometheus_text_parses_back_to_the_same_values() {
+        let _gate = test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let obs = Obs::fresh();
+        obs.registry().counter_with("x_total", &[("k", "v")]).add(7);
+        obs.registry().gauge("depth").set(2.5);
+        obs.registry().histogram("lat_seconds", &[0.1, 1.0]).observe(0.05);
+        obs.registry().summary("sum_seconds").observe(0.3);
+        let text = obs.registry().snapshot().to_prometheus();
+        let parsed = parse_text(&text);
+        assert_eq!(parsed["x_total{k=\"v\"}"], 7.0);
+        assert_eq!(parsed["depth"], 2.5);
+        assert_eq!(parsed["lat_seconds_count"], 1.0);
+        assert_eq!(parsed["lat_seconds_bucket{le=\"0.1\"}"], 1.0);
+        assert_eq!(parsed["lat_seconds_bucket{le=\"+Inf\"}"], 1.0);
+        assert_eq!(parsed["sum_seconds_count"], 1.0);
+        assert_eq!(parsed["sum_seconds{quantile=\"0.5\"}"], 0.3);
+    }
+
+    #[test]
+    fn disabled_config_suppresses_recording() {
+        // Write side: no exactness test records while the gate is down.
+        let _gate = test_gate().write().unwrap_or_else(|e| e.into_inner());
+        let obs = Obs::fresh();
+        let c = obs.registry().counter("muted_total");
+        let h = obs.registry().histogram("muted_seconds", &[1.0]);
+        ObsConfig::disabled().install();
+        c.inc();
+        h.observe(0.5);
+        ObsConfig::enabled().install();
+        assert_eq!(c.get(), 0, "disabled counter must not move");
+        assert_eq!(h.snapshot().count, 0, "disabled histogram must not move");
+        c.inc();
+        assert_eq!(c.get(), 1, "re-enabled counter records again");
+    }
+
+    #[test]
+    fn snapshot_merge_prefers_other_on_collision() {
+        let _gate = test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let a = Obs::fresh();
+        let b = Obs::fresh();
+        a.registry().counter("shared_total").add(1);
+        a.registry().counter("only_a_total").add(2);
+        b.registry().counter("shared_total").add(10);
+        let merged = a.registry().snapshot().merged(b.registry().snapshot());
+        assert_eq!(merged.counter("shared_total"), 10);
+        assert_eq!(merged.counter("only_a_total"), 2);
+    }
+}

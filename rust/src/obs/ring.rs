@@ -1,0 +1,125 @@
+//! Bounded ring-buffer event log for request postmortems.
+//!
+//! Terminal outcomes that did not produce a normal response (shed,
+//! expired, cancelled, faulted) each push one [`Event`]; the newest
+//! `capacity` events survive and are exported on `/v1/stats` so an
+//! operator can see *which* requests died, at what stage, and why —
+//! without any log files or external dependencies.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One logged terminal event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotone sequence number (never resets, survives eviction).
+    pub seq: u64,
+    /// Seconds since the ring was created.
+    pub at_s: f64,
+    /// Request id the event belongs to.
+    pub id: u64,
+    /// Terminal outcome key (`shed`, `expired`, `cancelled`, `faulted`).
+    pub outcome: &'static str,
+    /// Stage the request died in (`submit`, `queue`, `admit`, `decode`).
+    pub stage: &'static str,
+    /// Free-form detail (typically the `ServeError` display).
+    pub detail: String,
+}
+
+struct Inner {
+    seq: u64,
+    buf: VecDeque<Event>,
+}
+
+/// Fixed-capacity, mutex-guarded event ring. Pushes happen at terminal
+/// outcome frequency (not per decode step), so a mutex is fine.
+pub struct Ring {
+    capacity: usize,
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Ring {
+        Ring {
+            capacity: capacity.max(1),
+            t0: Instant::now(),
+            inner: Mutex::new(Inner { seq: 0, buf: VecDeque::new() }),
+        }
+    }
+
+    pub fn push(&self, id: u64, outcome: &'static str, stage: &'static str, detail: String) {
+        if !super::is_enabled() {
+            return;
+        }
+        let at_s = self.t0.elapsed().as_secs_f64();
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.seq;
+        inner.seq += 1;
+        if inner.buf.len() == self.capacity {
+            inner.buf.pop_front();
+        }
+        inner.buf.push_back(Event { seq, at_s, id, outcome, stage, detail });
+    }
+
+    /// Newest `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<Event> {
+        let inner = self.inner.lock().unwrap();
+        inner.buf.iter().skip(inner.buf.len().saturating_sub(n)).cloned().collect()
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever pushed (including evicted ones).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// JSON rendering of the newest `n` events for `/v1/stats`.
+    pub fn to_json(&self, n: usize) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.tail(n)
+                .into_iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("seq", Json::Num(e.seq as f64)),
+                        ("at_s", Json::Num(e.at_s)),
+                        ("id", Json::Num(e.id as f64)),
+                        ("outcome", Json::Str(e.outcome.to_string())),
+                        ("stage", Json::Str(e.stage.to_string())),
+                        ("detail", Json::Str(e.detail)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_events_and_counts_all() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        let r = Ring::new(3);
+        for i in 0..5u64 {
+            r.push(i, "shed", "submit", format!("event {i}"));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total(), 5);
+        let tail = r.tail(10);
+        let seqs: Vec<u64> = tail.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4], "oldest two evicted, order preserved");
+        assert_eq!(r.tail(1)[0].seq, 4);
+    }
+}

@@ -1,0 +1,194 @@
+//! Per-request tracing: one [`Trace`] rides along with each request
+//! from submit to its terminal outcome and attributes that outcome to
+//! a serving stage with per-stage durations.
+//!
+//! Stage model (see EXPERIMENTS.md §Observability for the diagram):
+//!
+//! ```text
+//! submit ──► queue ──► admit ──► decode (N steps) ──► respond
+//! ```
+//!
+//! Every terminal outcome maps to exactly one stage:
+//! - `retired`   → `respond` (a response was produced)
+//! - `shed`      → `submit`  (rejected before entering the queue)
+//! - `expired`   → `queue` if never admitted, else `decode`
+//! - `cancelled` → `queue` if never admitted, else `decode`
+//! - `faulted`   → `admit` if it never reached a slot, else `decode`
+
+use std::time::Instant;
+
+/// Terminal outcome of a request, mirroring the PR 6 accounting
+/// identity `submitted == retired + shed + expired + cancelled + faulted`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Retired,
+    Shed,
+    Expired,
+    Cancelled,
+    Faulted,
+}
+
+impl Outcome {
+    pub fn key(self) -> &'static str {
+        match self {
+            Outcome::Retired => "retired",
+            Outcome::Shed => "shed",
+            Outcome::Expired => "expired",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Faulted => "faulted",
+        }
+    }
+}
+
+/// Serving stage a request can terminate in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Submit,
+    Queue,
+    Admit,
+    Decode,
+    Respond,
+}
+
+impl Stage {
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Queue => "queue",
+            Stage::Admit => "admit",
+            Stage::Decode => "decode",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// Live trace for one in-flight request.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub id: u64,
+    t_submit: Instant,
+    t_admit: Option<Instant>,
+    steps: usize,
+}
+
+impl Trace {
+    /// Start a trace at the request's arrival instant.
+    pub fn begin(id: u64, t_submit: Instant) -> Trace {
+        Trace { id, t_submit, t_admit: None, steps: 0 }
+    }
+
+    /// Mark slot admission (idempotent; first call wins).
+    pub fn admitted(&mut self, at: Instant) {
+        if self.t_admit.is_none() {
+            self.t_admit = Some(at);
+        }
+    }
+
+    pub fn is_admitted(&self) -> bool {
+        self.t_admit.is_some()
+    }
+
+    /// Count one decode step taken while live in a slot.
+    pub fn step(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Queue wait so far (or final, once admitted).
+    pub fn queue_wait(&self, now: Instant) -> f64 {
+        (self.t_admit.unwrap_or(now) - self.t_submit).as_secs_f64()
+    }
+
+    /// Close the trace with a terminal outcome. `reached_slot` is the
+    /// scheduler's word on whether the request ever held a slot
+    /// (`Completion::slot.is_some()`); it distinguishes admission-time
+    /// faults and queued expiries from in-decode ones.
+    pub fn finish(&self, outcome: Outcome, reached_slot: bool, now: Instant) -> TraceReport {
+        let admitted = self.t_admit.is_some() || reached_slot;
+        let stage = match outcome {
+            Outcome::Retired => Stage::Respond,
+            Outcome::Shed => Stage::Submit,
+            Outcome::Expired | Outcome::Cancelled => {
+                if admitted {
+                    Stage::Decode
+                } else {
+                    Stage::Queue
+                }
+            }
+            Outcome::Faulted => {
+                if admitted {
+                    Stage::Decode
+                } else {
+                    Stage::Admit
+                }
+            }
+        };
+        let queue_s = self.queue_wait(now);
+        let decode_s = self.t_admit.map(|t| (now - t).as_secs_f64()).unwrap_or(0.0);
+        TraceReport {
+            id: self.id,
+            outcome,
+            stage,
+            queue_s,
+            decode_s,
+            total_s: (now - self.t_submit).as_secs_f64(),
+            steps: self.steps,
+        }
+    }
+}
+
+/// Closed trace: outcome, attributed stage, and per-stage durations.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub id: u64,
+    pub outcome: Outcome,
+    pub stage: Stage,
+    pub queue_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn every_outcome_maps_to_exactly_one_stage() {
+        let t0 = Instant::now();
+        let now = t0 + Duration::from_millis(10);
+        let queued = Trace::begin(1, t0);
+        let mut live = Trace::begin(2, t0);
+        live.admitted(t0 + Duration::from_millis(2));
+        live.step();
+        live.step();
+
+        assert_eq!(live.finish(Outcome::Retired, true, now).stage, Stage::Respond);
+        assert_eq!(queued.finish(Outcome::Shed, false, now).stage, Stage::Submit);
+        assert_eq!(queued.finish(Outcome::Expired, false, now).stage, Stage::Queue);
+        assert_eq!(live.finish(Outcome::Expired, true, now).stage, Stage::Decode);
+        assert_eq!(queued.finish(Outcome::Cancelled, false, now).stage, Stage::Queue);
+        assert_eq!(live.finish(Outcome::Cancelled, true, now).stage, Stage::Decode);
+        assert_eq!(queued.finish(Outcome::Faulted, false, now).stage, Stage::Admit);
+        assert_eq!(live.finish(Outcome::Faulted, true, now).stage, Stage::Decode);
+    }
+
+    #[test]
+    fn durations_split_between_queue_and_decode() {
+        let t0 = Instant::now();
+        let mut tr = Trace::begin(7, t0);
+        tr.admitted(t0 + Duration::from_millis(4));
+        let r = tr.finish(Outcome::Retired, true, t0 + Duration::from_millis(10));
+        assert!((r.queue_s - 0.004).abs() < 1e-6);
+        assert!((r.decode_s - 0.006).abs() < 1e-6);
+        assert!((r.total_s - 0.010).abs() < 1e-6);
+        // A never-admitted request accrues only queue time.
+        let r = Trace::begin(8, t0).finish(Outcome::Expired, false, t0 + Duration::from_millis(10));
+        assert!((r.queue_s - 0.010).abs() < 1e-6);
+        assert_eq!(r.decode_s, 0.0);
+    }
+}

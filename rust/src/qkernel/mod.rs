@@ -271,6 +271,7 @@ impl QMatrix {
     /// kernel's per-element order (k ascending, zero activations skipped).
     pub fn qmatmul(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.rows, "qmatmul shape mismatch");
+        crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATMUL, self.wl);
         let mut out = Matrix::zeros(x.rows(), self.cols);
         self.qmatmul_rows(x, 0, x.rows(), out.data_mut());
         out
@@ -286,6 +287,7 @@ impl QMatrix {
         if workers == 1 || m * k * n < QK_PAR_MIN_MACS {
             return self.qmatmul(x);
         }
+        crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATMUL, self.wl);
         let mut out = Matrix::zeros(m, n);
         crate::tensor::par_row_chunks(out.data_mut(), m, n, workers, |i0, i1, out_rows| {
             self.qmatmul_rows(x, i0, i1, out_rows)
@@ -299,8 +301,11 @@ impl QMatrix {
     /// ascending-k order and skip zero activations).
     pub fn qmatvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.rows, "qmatvec shape mismatch");
+        crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATVEC, self.wl);
         let xm = Matrix::from_vec(1, x.len(), x.to_vec());
-        self.qmatmul(&xm).into_vec()
+        let mut out = vec![0.0; self.cols];
+        self.qmatmul_rows(&xm, 0, 1, &mut out);
+        out
     }
 
     /// Pure-integer matvec: `out[n] = (sx * scale[n]) * sum_k qx[k] *
@@ -317,6 +322,7 @@ impl QMatrix {
     /// integer dot product.
     pub fn qmatvec_i32(&self, qx: &[i32], sx: f32) -> Vec<f32> {
         assert_eq!(qx.len(), self.rows, "qmatvec_i32 shape mismatch");
+        crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATVEC_I32, self.wl);
         assert!(
             qx.iter().all(|&q| (-127..=127).contains(&q)),
             "qmatvec_i32 expects A8-or-narrower activations (|q| <= 127)"
@@ -464,9 +470,17 @@ impl PackedLinear {
     /// which is what keeps cached decode bit-equal to full-buffer replay
     /// in `Mode::Quantized`.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        // Counted under its own kernel key *and* the inner qmatvec(s) it
+        // dispatches — the ratio is the realized factored fan-out.
         match self {
-            PackedLinear::Dense(w) => w.qmatvec(x),
-            PackedLinear::Factored(w1, w2) => w2.qmatvec(&w1.qmatvec(x)),
+            PackedLinear::Dense(w) => {
+                crate::obs::note_qkernel_dispatch(crate::obs::kernels::PACKED_MATVEC, w.wl);
+                w.qmatvec(x)
+            }
+            PackedLinear::Factored(w1, w2) => {
+                crate::obs::note_qkernel_dispatch(crate::obs::kernels::PACKED_MATVEC, w1.wl);
+                w2.qmatvec(&w1.qmatvec(x))
+            }
         }
     }
 
@@ -531,6 +545,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn kernel_dispatches_land_in_the_global_registry() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        use crate::obs::{key, kernels, Obs};
+        let k = key("qkernel_dispatch_total", &[("kernel", "qmatvec"), ("wl", "4")]);
+        let a = randn(77, 9, 6, 0.4);
+        let qm = QMatrix::quantize_cols(&a, 4);
+        let x = vec![0.5f32; 9];
+        // The global registry is shared across parallel tests, so only
+        // the delta from our own calls is asserted.
+        let before = Obs::global().registry().snapshot().counter(&k);
+        qm.qmatvec(&x);
+        qm.qmatvec(&x);
+        let after = Obs::global().registry().snapshot().counter(&k);
+        assert!(after >= before + 2, "dispatch counter moved: {before} -> {after}");
+        let _ = kernels::QMATVEC; // the public index constants exist
     }
 
     #[test]

@@ -61,16 +61,36 @@
 //! `tests/e2e_native.rs`).
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::CompressedLinear;
 use crate::model::{Manifest, ModelDims, PairModel};
+use crate::obs::{Counter, Obs};
 use crate::qkernel::PackedLinear;
 use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
 use super::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
+
+/// Process-global decode-progress counters, registered once against
+/// [`Obs::global`] and shared by every engine instance: slot admissions
+/// (encoder passes), decode steps executed, and slots advanced per step
+/// (`stepped_slots / steps` is the realized mean decode batch width).
+/// Handles are cached so the per-step hot path never touches the
+/// registry's lock.
+fn runtime_counters() -> &'static (Arc<Counter>, Arc<Counter>, Arc<Counter>) {
+    static CELL: OnceLock<(Arc<Counter>, Arc<Counter>, Arc<Counter>)> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let reg = Obs::global().registry();
+        (
+            reg.counter("runtime_slot_admissions_total"),
+            reg.counter("runtime_decode_steps_total"),
+            reg.counter("runtime_stepped_slots_total"),
+        )
+    })
+}
 
 /// Additive mask value for disallowed attention positions (the JAX graph's
 /// `_NEG`); after the stable softmax shift these underflow to exactly 0.
@@ -870,6 +890,7 @@ impl NativeBackend {
         );
         let (memory, src_ok) = self.encode(src_row, 1)?;
         let cross = self.cross_kv(&memory);
+        runtime_counters().0.inc();
         Ok(self.slot_from_parts(cross, src_ok))
     }
 
@@ -1018,6 +1039,9 @@ impl NativeBackend {
             slot.buf[i + 1] = next;
             slot.len = i + 1;
         }
+        let counters = runtime_counters();
+        counters.1.inc();
+        counters.2.add(b as u64);
         Ok(())
     }
 

@@ -312,6 +312,25 @@ pub fn write_response(w: &mut impl Write, status: u16, body: &Json, close: bool)
     w.flush()
 }
 
+/// Write a complete plain-text response with `Content-Length` framing
+/// (the Prometheus text exposition on `GET /metrics`).
+pub fn write_text_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    close: bool,
+) -> io::Result<()> {
+    let conn = if close { "close" } else { "keep-alive" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        reason(status),
+        body.len(),
+    )?;
+    w.flush()
+}
+
 /// Start a chunked (streaming) response; follow with [`write_chunk`]
 /// calls and one [`finish_chunks`].
 pub fn write_chunked_head(w: &mut impl Write, status: u16) -> io::Result<()> {
@@ -415,6 +434,17 @@ mod tests {
         assert_eq!(resp.status, 200);
         assert_eq!(resp.header("content-type"), Some("application/json"));
         assert_eq!(resp.json().unwrap(), body);
+    }
+
+    #[test]
+    fn text_response_roundtrip() {
+        let mut wire = Vec::new();
+        write_text_response(&mut wire, 200, "a_total 3\n", false).unwrap();
+        let mut conn = HttpConn::new(Cursor::new(wire));
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.header("content-type").unwrap_or("").starts_with("text/plain"));
+        assert_eq!(resp.body, b"a_total 3\n");
     }
 
     #[test]

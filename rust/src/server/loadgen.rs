@@ -115,14 +115,17 @@ impl LoadReport {
     }
 }
 
-/// Per-connection slice of the run (merged by [`run_loadgen`]).
+/// Per-connection slice of the run (merged by [`run_loadgen`]). Each
+/// connection keeps its own latency [`Summary`]; the fleet-wide view
+/// comes from [`Summary::merge`], so aggregation is O(connections)
+/// rather than O(requests).
 #[derive(Default)]
 struct Part {
     sent: usize,
     ok: usize,
     tokens: usize,
     errors: BTreeMap<u16, usize>,
-    lats: Vec<f64>,
+    latency: Summary,
 }
 
 /// Drive the configured load against `addr` and aggregate what came
@@ -161,9 +164,7 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> Result<LoadReport> 
         for (status, n) in part.errors {
             *report.errors.entry(status).or_insert(0) += n;
         }
-        for lat in part.lats {
-            report.latency.add(lat);
-        }
+        report.latency.merge(&part.latency);
     }
     report.wall_s = t0.elapsed().as_secs_f64();
     Ok(report)
@@ -172,6 +173,17 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> Result<LoadReport> 
 fn exchange(conn: &mut HttpConn<TcpStream>, body: &Json) -> Result<HttpResponse, RecvError> {
     write_request(conn.get_mut(), "POST", "/v1/translate", Some(body)).map_err(RecvError::Io)?;
     conn.read_response()
+}
+
+/// One-shot `GET` on a fresh connection — the telemetry scrape used by
+/// the CLI self-drive check and the observability e2e test to pull
+/// `/metrics` and `/v1/stats` while the server is still up.
+pub fn http_get(addr: SocketAddr, target: &str) -> Result<HttpResponse> {
+    let stream = TcpStream::connect(addr).context("scrape connect")?;
+    stream.set_nodelay(true).ok();
+    let mut conn = HttpConn::new(stream);
+    write_request(conn.get_mut(), "GET", target, None).context("scrape send")?;
+    conn.read_response().with_context(|| format!("scrape GET {target}"))
 }
 
 fn run_connection(
@@ -227,7 +239,7 @@ fn run_connection(
                 }
             }
         };
-        part.lats.push(t_send.elapsed().as_secs_f64());
+        part.latency.add(t_send.elapsed().as_secs_f64());
         if resp.status == 200 {
             part.ok += 1;
             if let Ok(j) = resp.json() {

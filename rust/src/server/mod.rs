@@ -18,6 +18,12 @@
 //!   newly decoded tokens per chunk). Unary responses carry
 //!   `{"id", "tokens", "latency_s"}`.
 //! * `GET /healthz` — liveness + drain state.
+//! * `GET /metrics` — Prometheus text exposition of the serve loop's
+//!   registry merged with the process-global one (qkernel/runtime
+//!   counters). Answerable mid-drain — scraping a draining server is
+//!   exactly when the numbers matter.
+//! * `GET /v1/stats` — the same snapshot as JSON, plus the newest
+//!   postmortem ring events (shed/expired/faulted traces).
 //! * `POST /v1/shutdown` — flips the [`ShutdownSignal`]: 202, then the
 //!   loop drains and [`serve_http`] returns its final [`ServeStats`].
 //!
@@ -29,6 +35,7 @@
 //! ([`crate::coordinator::AttributedError`]) so a client log line can
 //! be matched to a server-side event.
 
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -41,6 +48,7 @@ use crate::coordinator::{
     ServeError, ServeStats, ShutdownSignal, StreamEvent, TimedRecv,
 };
 use crate::model::ModelDims;
+use crate::obs::{Counter, Gauge, Obs, Snapshot};
 use crate::runtime::SlotEngine;
 use crate::util::json::Json;
 
@@ -48,13 +56,16 @@ pub mod http;
 pub mod loadgen;
 
 use http::{
-    finish_chunks, write_chunk, write_chunked_head, write_response, HttpConn, HttpRequest,
-    RecvError,
+    finish_chunks, write_chunk, write_chunked_head, write_response, write_text_response, HttpConn,
+    HttpRequest, RecvError,
 };
 
 /// How often the acceptor re-checks the shutdown signal between
 /// non-blocking accept attempts.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Newest postmortem ring events returned by `GET /v1/stats`.
+const RING_TAIL: usize = 32;
 
 /// Knobs for [`serve_http`] beyond the serve loop's own [`ServeConfig`].
 #[derive(Clone)]
@@ -116,7 +127,78 @@ struct Ctx {
     next_id: AtomicU64,
     /// Live handler threads (the `max_connections` bound).
     active: AtomicUsize,
+    http: HttpMetrics,
 }
+
+impl Ctx {
+    fn obs(&self) -> &Obs {
+        &self.cfg.serve.obs
+    }
+
+    /// Count one answered request under `http_requests_total{route,status}`.
+    fn note_http(&self, route: &'static str, status: u16) {
+        let status = status.to_string();
+        let labels = [("route", route), ("status", status.as_str())];
+        self.obs().registry().counter_with("http_requests_total", &labels).inc();
+    }
+
+    /// What `/metrics` and `/v1/stats` render: the serve loop's registry
+    /// merged over the process-global one (qkernel/runtime counters), so
+    /// one scrape sees the whole stack.
+    fn merged_snapshot(&self) -> Snapshot {
+        Obs::global().registry().snapshot().merged(self.obs().registry().snapshot())
+    }
+}
+
+/// Transport-level registry handles for the HTTP front end.
+struct HttpMetrics {
+    connections: Arc<Gauge>,
+    bytes_read: Arc<Counter>,
+    bytes_written: Arc<Counter>,
+}
+
+impl HttpMetrics {
+    fn new(obs: &Obs) -> HttpMetrics {
+        let reg = obs.registry();
+        HttpMetrics {
+            connections: reg.gauge("http_connections"),
+            bytes_read: reg.counter("http_bytes_read_total"),
+            bytes_written: reg.counter("http_bytes_written_total"),
+        }
+    }
+}
+
+/// Byte-counting wrapper around an accepted socket: every read and
+/// write lands in `http_bytes_read_total` / `http_bytes_written_total`.
+struct CountingStream<S> {
+    inner: S,
+    n_read: Arc<Counter>,
+    n_written: Arc<Counter>,
+}
+
+impl<S: Read> Read for CountingStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.n_read.add(n as u64);
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for CountingStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.n_written.add(n as u64);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The server side of one connection: an [`HttpConn`] over the counted
+/// socket.
+type ServerConn = HttpConn<CountingStream<TcpStream>>;
 
 /// Serve HTTP requests over `listener` until a graceful drain
 /// (`POST /v1/shutdown`, or the config's own [`ShutdownSignal`] flipped
@@ -140,11 +222,13 @@ pub fn serve_http<E: SlotEngine>(
     };
     listener.set_nonblocking(true)?;
     let (tx, rx) = mpsc::channel::<Request>();
+    let http = HttpMetrics::new(&cfg.serve.obs);
     let ctx = Arc::new(Ctx {
         cfg: cfg.clone(),
         shutdown,
         next_id: AtomicU64::new(1),
         active: AtomicUsize::new(0),
+        http,
     });
     let acceptor = {
         let ctx = ctx.clone();
@@ -167,7 +251,8 @@ struct ConnGuard(Arc<Ctx>);
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.active.fetch_sub(1, Ordering::SeqCst);
+        let before = self.0.active.fetch_sub(1, Ordering::SeqCst);
+        self.0.http.connections.set(before.saturating_sub(1) as f64);
     }
 }
 
@@ -183,9 +268,11 @@ fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Request>, ctx: Arc<Ctx>) 
                     // pool, so overload never queues unbounded threads.
                     let body = error_json("overloaded", "connection limit reached");
                     let _ = write_response(&mut stream, 503, &body, true);
+                    ctx.note_http("accept", 503);
                     continue;
                 }
-                ctx.active.fetch_add(1, Ordering::SeqCst);
+                let before = ctx.active.fetch_add(1, Ordering::SeqCst);
+                ctx.http.connections.set((before + 1) as f64);
                 let tx = tx.clone();
                 let ctx = ctx.clone();
                 std::thread::spawn(move || {
@@ -203,7 +290,11 @@ fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Request>, ctx: Arc<Ctx>) 
 fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Request>, ctx: &Ctx) {
     let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
     let _ = stream.set_nodelay(true);
-    let mut conn = HttpConn::new(stream);
+    let mut conn = HttpConn::new(CountingStream {
+        inner: stream,
+        n_read: ctx.http.bytes_read.clone(),
+        n_written: ctx.http.bytes_written.clone(),
+    });
     let mut served = 0usize;
     while served < ctx.cfg.keep_alive_requests {
         let req = match conn.read_request(ctx.cfg.max_body_bytes) {
@@ -219,11 +310,13 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Request>, ctx: &Ctx) {
                 let body =
                     error_json("payload_too_large", "request body exceeds the configured cap");
                 let _ = write_response(conn.get_mut(), 413, &body, true);
+                ctx.note_http("other", 413);
                 return;
             }
             Err(RecvError::Bad(msg)) => {
                 let body = error_json("bad_request", &msg);
                 let _ = write_response(conn.get_mut(), 400, &body, true);
+                ctx.note_http("other", 400);
                 return;
             }
         };
@@ -235,10 +328,24 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Request>, ctx: &Ctx) {
     }
 }
 
+/// The `route` label a target is counted under — known routes keep
+/// their path, everything else collapses into `other` so a URL scan
+/// cannot explode the metric's cardinality.
+fn route_key(target: &str) -> &'static str {
+    match target {
+        "/healthz" => "/healthz",
+        "/metrics" => "/metrics",
+        "/v1/stats" => "/v1/stats",
+        "/v1/shutdown" => "/v1/shutdown",
+        "/v1/translate" => "/v1/translate",
+        _ => "other",
+    }
+}
+
 /// Dispatch one request; `false` means the connection is no longer
 /// usable (write failure or a mid-stream error).
 fn route(
-    conn: &mut HttpConn<TcpStream>,
+    conn: &mut ServerConn,
     req: &HttpRequest,
     close: bool,
     tx: &mpsc::Sender<Request>,
@@ -250,28 +357,47 @@ fn route(
                 ("status", Json::Str("ok".to_string())),
                 ("draining", Json::Bool(ctx.shutdown.is_draining())),
             ]);
+            ctx.note_http("/healthz", 200);
+            write_response(conn.get_mut(), 200, &body, close).is_ok()
+        }
+        // Telemetry routes stay answerable mid-drain: scraping a
+        // draining server is exactly when the numbers matter.
+        ("GET", "/metrics") => {
+            ctx.note_http("/metrics", 200);
+            let text = ctx.merged_snapshot().to_prometheus();
+            write_text_response(conn.get_mut(), 200, &text, close).is_ok()
+        }
+        ("GET", "/v1/stats") => {
+            ctx.note_http("/v1/stats", 200);
+            let body = Json::obj(vec![
+                ("metrics", ctx.merged_snapshot().to_json()),
+                ("events", ctx.obs().ring().to_json(RING_TAIL)),
+            ]);
             write_response(conn.get_mut(), 200, &body, close).is_ok()
         }
         ("POST", "/v1/shutdown") => {
             ctx.shutdown.drain();
             let body = Json::obj(vec![("draining", Json::Bool(true))]);
+            ctx.note_http("/v1/shutdown", 202);
             write_response(conn.get_mut(), 202, &body, close).is_ok()
         }
         ("POST", "/v1/translate") => translate(conn, req, close, tx, ctx),
-        (_, "/healthz" | "/v1/shutdown" | "/v1/translate") => {
+        (_, "/healthz" | "/metrics" | "/v1/stats" | "/v1/shutdown" | "/v1/translate") => {
             let msg = format!("{} not supported on {}", req.method, req.target);
             let body = error_json("method_not_allowed", &msg);
+            ctx.note_http(route_key(&req.target), 405);
             write_response(conn.get_mut(), 405, &body, close).is_ok()
         }
         _ => {
             let body = error_json("not_found", &format!("no route for {}", req.target));
+            ctx.note_http("other", 404);
             write_response(conn.get_mut(), 404, &body, close).is_ok()
         }
     }
 }
 
 fn translate(
-    conn: &mut HttpConn<TcpStream>,
+    conn: &mut ServerConn,
     req: &HttpRequest,
     close: bool,
     tx: &mpsc::Sender<Request>,
@@ -282,12 +408,14 @@ fn translate(
         Ok(parts) => parts,
         Err(msg) => {
             let body = error_body(id, "bad_request", &msg);
+            ctx.note_http("/v1/translate", 400);
             return write_response(conn.get_mut(), 400, &body, close).is_ok();
         }
     };
     if ctx.shutdown.is_draining() {
         let e = ServeError::Overloaded;
         let body = error_body(id, e.key(), &e.clone().attributed(id).to_string());
+        ctx.note_http("/v1/translate", 503);
         return write_response(conn.get_mut(), 503, &body, close).is_ok();
     }
     let (rtx, rrx) = response_channel();
@@ -298,6 +426,7 @@ fn translate(
     if tx.send(r).is_err() {
         // The serve loop is gone (drained): nothing will ever answer.
         let body = error_body(id, ServeError::Overloaded.key(), "server is draining");
+        ctx.note_http("/v1/translate", 503);
         return write_response(conn.get_mut(), 503, &body, close).is_ok();
     }
     if stream {
@@ -340,7 +469,7 @@ fn parse_translate(body: &[u8]) -> Result<(Vec<i32>, RequestLimits, bool), Strin
 }
 
 fn unary_response(
-    conn: &mut HttpConn<TcpStream>,
+    conn: &mut ServerConn,
     id: u64,
     close: bool,
     rrx: &ResponseRx,
@@ -353,20 +482,24 @@ fn unary_response(
                 ("tokens", tokens_json(&resp.tokens)),
                 ("latency_s", Json::Num(resp.latency_s)),
             ]);
+            ctx.note_http("/v1/translate", 200);
             write_response(conn.get_mut(), 200, &body, close).is_ok()
         }
         TimedRecv::Ready(Err(e)) => {
             let body = error_body(id, e.key(), &e.clone().attributed(id).to_string());
+            ctx.note_http("/v1/translate", status_for(&e));
             write_response(conn.get_mut(), status_for(&e), &body, close).is_ok()
         }
         TimedRecv::SenderGone => {
             let body = error_body(id, "overloaded", "server dropped the request during drain");
+            ctx.note_http("/v1/translate", 503);
             write_response(conn.get_mut(), 503, &body, close).is_ok()
         }
         TimedRecv::TimedOut => {
             // The caller drops `rrx` right after us, which cancels the
             // server-side slot instead of decoding for nobody.
             let body = error_body(id, "engine_fault", "response timed out; request cancelled");
+            ctx.note_http("/v1/translate", 500);
             write_response(conn.get_mut(), 500, &body, close).is_ok()
         }
     }
@@ -375,7 +508,10 @@ fn unary_response(
 /// Chunked streaming response: one JSON line per progress event, a
 /// terminal line carrying the tail tokens + latency (success) or the
 /// typed error, then the chunked-body terminator.
-fn stream_response(conn: &mut HttpConn<TcpStream>, id: u64, rrx: &ResponseRx, ctx: &Ctx) -> bool {
+fn stream_response(conn: &mut ServerConn, id: u64, rrx: &ResponseRx, ctx: &Ctx) -> bool {
+    // Streaming responses count at head-write time; outcome errors still
+    // travel inside the 200 chunked body (terminal JSON line).
+    ctx.note_http("/v1/translate", 200);
     let w = conn.get_mut();
     if write_chunked_head(w, 200).is_err() {
         return false;
@@ -516,6 +652,7 @@ mod tests {
 
     #[test]
     fn http_smoke_translate_health_errors_shutdown() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
@@ -555,6 +692,37 @@ mod tests {
         assert_eq!(conn.read_response().unwrap().status, 404);
         write_request(conn.get_mut(), "GET", "/v1/translate", None).unwrap();
         assert_eq!(conn.read_response().unwrap().status, 405);
+
+        // Live telemetry: /metrics is Prometheus text the crate's own
+        // parser reads back, and it already accounts this connection's
+        // requests; /v1/stats carries the same snapshot as JSON.
+        write_request(conn.get_mut(), "GET", "/metrics", None).unwrap();
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.header("content-type").unwrap_or("").starts_with("text/plain"));
+        let text = String::from_utf8(resp.body).unwrap();
+        let parsed = crate::obs::parse_text(&text);
+        assert_eq!(
+            parsed.get(&crate::obs::key(
+                "http_requests_total",
+                &[("route", "/v1/translate"), ("status", "200")]
+            )),
+            Some(&1.0),
+            "{text}"
+        );
+        assert_eq!(parsed.get("serve_received_total"), Some(&1.0));
+        assert!(parsed.get("http_bytes_read_total").copied().unwrap_or(0.0) > 0.0);
+
+        write_request(conn.get_mut(), "GET", "/v1/stats", None).unwrap();
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        let stats_json = resp.json().unwrap();
+        let metrics = stats_json.get("metrics");
+        assert_eq!(
+            metrics.get("counters").get("serve_received_total").as_f64(),
+            Some(1.0),
+            "/v1/stats mirrors the registry"
+        );
 
         // Graceful shutdown: 202, then the server thread joins with
         // balanced books.

@@ -6,6 +6,7 @@ pub struct Summary {
     n: usize,
     mean: f64,
     m2: f64,
+    sum: f64,
     min: f64,
     max: f64,
     values: Vec<f64>,
@@ -21,13 +22,41 @@ impl Summary {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
+        self.sum += x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
         self.values.push(x);
     }
 
+    /// Fold another summary into this one. Mean/variance combine via
+    /// the pairwise (Chan et al.) update, so the result matches a
+    /// single summary fed both sample sets.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let d = other.mean - self.mean;
+        self.mean += d * nb / (na + nb);
+        self.m2 += other.m2 + d * d * na * nb / (na + nb);
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.values.extend_from_slice(&other.values);
+    }
+
     pub fn count(&self) -> usize {
         self.n
+    }
+
+    /// Exact running total of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     pub fn mean(&self) -> f64 {
@@ -112,6 +141,45 @@ mod tests {
         assert!((s.quantile(0.5) - 50.0).abs() < 1e-12);
         assert!((s.quantile(1.0) - 100.0).abs() < 1e-12);
         assert!((s.quantile(0.95) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_matches_a_single_combined_summary() {
+        let xs = [0.5, 1.5, 2.25, 8.0, 0.125];
+        let ys = [3.0, 4.5, 0.75, 6.0];
+        let (mut a, mut b, mut both) = (Summary::new(), Summary::new(), Summary::new());
+        for &x in &xs {
+            a.add(x);
+            both.add(x);
+        }
+        for &y in &ys {
+            b.add(y);
+            both.add(y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.sum() - both.sum()).abs() < 1e-12);
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+        assert!((a.var() - both.var()).abs() < 1e-12);
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        assert!((a.quantile(0.5) - both.quantile(0.5)).abs() < 1e-12);
+        assert!((a.quantile(0.95) - both.quantile(0.95)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_handles_empty_sides() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        b.add(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.sum(), 2.0);
+        let empty = Summary::new();
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min(), 2.0);
+        assert_eq!(a.max(), 2.0);
     }
 
     #[test]

@@ -542,6 +542,7 @@ fn serve_continuous_chaos_soak_is_exactly_once_and_bit_identical() {
         queue_limit: None,
         default_limits: RequestLimits::none(),
         shutdown: Some(signal.clone()),
+        ..Default::default()
     };
     // Collector thread: gather every surviving client's terminal
     // outcome, then flip the drain signal; the open-ended server

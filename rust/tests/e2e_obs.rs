@@ -1,0 +1,265 @@
+//! End-to-end tests of the serving telemetry: `/metrics` and
+//! `/v1/stats` scraped from a live `serve_http` instance.
+//!
+//! The load-bearing assertions:
+//!
+//! * under the seeded load generator, the live `/metrics` exposition
+//!   balances (`serve_received_total` equals the sum over the outcome
+//!   counters), agrees with `/v1/stats` (both render the same
+//!   registry), agrees with the client's own ledger (every 200 the
+//!   client saw is in the server's counters, token for token), and the
+//!   end-of-run `ServeStats` is the same snapshot again;
+//! * a mixed-outcome workload (served + shed + expired) attributes
+//!   every terminal outcome to exactly one pipeline stage in
+//!   `serve_outcomes_total{outcome,stage}`, and the non-served outcomes
+//!   surface as postmortem events on `/v1/stats`.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use itera_llm::coordinator::ServeConfig;
+use itera_llm::model::ModelDims;
+use itera_llm::obs::{key, parse_text};
+use itera_llm::runtime::SlotEngine;
+use itera_llm::server::http::{write_request, HttpConn};
+use itera_llm::server::loadgen::{http_get, run_loadgen, LoadGenConfig};
+use itera_llm::server::{serve_http, HttpConfig};
+use itera_llm::util::json::Json;
+
+/// Echo engine: completes after `need` decode steps, each sleeping
+/// `step_ms` — slow variants keep slots live long enough for deadline
+/// expiry and queue overflow to be deterministic over real sockets.
+struct EchoSlots {
+    seq: usize,
+    need: usize,
+    step_ms: u64,
+}
+
+struct EchoSlot {
+    row: Vec<i32>,
+    steps: usize,
+}
+
+impl SlotEngine for EchoSlots {
+    type Slot = EchoSlot;
+    fn slot_seq_len(&self) -> usize {
+        self.seq
+    }
+    fn admit(&self, src_row: &[i32]) -> anyhow::Result<EchoSlot> {
+        Ok(EchoSlot { row: src_row.to_vec(), steps: 0 })
+    }
+    fn step(&self, slots: &mut [&mut EchoSlot]) -> anyhow::Result<()> {
+        if self.step_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.step_ms));
+        }
+        for s in slots.iter_mut() {
+            s.steps += 1;
+        }
+        Ok(())
+    }
+    fn slot_complete(&self, slot: &EchoSlot) -> bool {
+        slot.steps >= self.need
+    }
+    fn slot_output(&self, slot: &EchoSlot) -> Vec<i32> {
+        slot.row.clone()
+    }
+}
+
+fn tiny_dims(seq_len: usize) -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        n_enc: 1,
+        n_dec: 1,
+        seq_len,
+        eval_batch: 4,
+        pad_id: 0,
+        bos_id: 1,
+        eos_id: 2,
+    }
+}
+
+fn shutdown(addr: std::net::SocketAddr) {
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    write_request(conn.get_mut(), "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(conn.read_response().unwrap().status, 202);
+}
+
+/// Scrape `/metrics` (parsed exposition) and `/v1/stats` (JSON) from a
+/// live server.
+fn scrape(addr: std::net::SocketAddr) -> (std::collections::BTreeMap<String, f64>, Json) {
+    let metrics = http_get(addr, "/metrics").expect("GET /metrics");
+    assert_eq!(metrics.status, 200);
+    assert!(
+        metrics.header("content-type").unwrap_or("").starts_with("text/plain"),
+        "Prometheus exposition is text/plain"
+    );
+    let text = String::from_utf8(metrics.body).expect("utf-8 exposition");
+    let stats = http_get(addr, "/v1/stats").expect("GET /v1/stats");
+    assert_eq!(stats.status, 200);
+    (parse_text(&text), stats.json().expect("stats JSON"))
+}
+
+/// THE observability acceptance bar: `/metrics` and `/v1/stats` on a
+/// live loaded server balance, agree with each other, agree with the
+/// load generator's ledger, and the end-of-run `ServeStats` renders
+/// from the same registry.
+#[test]
+fn live_metrics_agree_with_loadgen_ledger_and_final_stats() {
+    const N: usize = 24;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = EchoSlots { seq: 16, need: 1, step_ms: 0 };
+        serve_http(&engine, listener, &tiny_dims(16), HttpConfig::new(ServeConfig::new(4)))
+            .unwrap()
+    });
+
+    let cfg = LoadGenConfig {
+        connections: 4,
+        requests: N,
+        rate: 400.0,
+        len_range: (2, 6),
+        vocab: 16,
+        ..LoadGenConfig::default()
+    };
+    let report = run_loadgen(addr, &cfg).unwrap();
+    assert_eq!(report.ok, N, "unloaded echo server answers everything: {:?}", report.errors);
+
+    // Scrape while the server is still live — this is the whole point.
+    let (m, stats_json) = scrape(addr);
+    let counter = |name: &str| m.get(name).copied().unwrap_or(0.0);
+    let outcome = |o: &str| counter(&key("serve_requests_total", &[("outcome", o)]));
+
+    // The exported accounting identity holds mid-flight.
+    let outcomes: f64 =
+        ["served", "shed", "expired", "cancelled", "faulted"].iter().map(|o| outcome(o)).sum();
+    assert_eq!(counter("serve_received_total"), outcomes, "exported identity must balance");
+
+    // The server's counters agree with the client's ledger.
+    assert_eq!(outcome("served") as usize, report.ok);
+    assert_eq!(counter("serve_received_total") as usize, report.sent);
+    assert_eq!(counter("serve_tokens_total") as usize, report.tokens, "token-for-token");
+    assert_eq!(counter("serve_latency_seconds_count") as usize, N);
+    assert_eq!(counter("serve_queue_wait_seconds_count") as usize, N);
+    let translate_key =
+        key("http_requests_total", &[("route", "/v1/translate"), ("status", "200")]);
+    assert_eq!(counter(&translate_key) as usize, N, "HTTP layer counts every translate");
+    assert!(counter("http_bytes_read_total") > 0.0);
+    assert!(counter("http_bytes_written_total") > 0.0);
+    assert!(counter("batcher_decode_steps_total") >= 1.0);
+
+    // `/v1/stats` renders the same registry the exposition does.
+    let jc = |name: &str| stats_json.get("metrics").get("counters").get(name).as_f64();
+    assert_eq!(jc("serve_received_total"), Some(counter("serve_received_total")));
+    assert_eq!(jc("serve_tokens_total"), Some(counter("serve_tokens_total")));
+    let served_key = key("serve_requests_total", &[("outcome", "served")]);
+    assert_eq!(jc(&served_key), Some(outcome("served")));
+
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+
+    // The end-of-run report is the same snapshot again.
+    assert_eq!(stats.served, N);
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.tokens, report.tokens);
+    assert_eq!(stats.latency.count(), N);
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+}
+
+/// POST one translate body and return (status, parsed body).
+fn post_translate(
+    conn: &mut HttpConn<TcpStream>,
+    tokens: &[i32],
+    extra: Vec<(&str, Json)>,
+) -> (u16, Json) {
+    let mut fields = vec![(
+        "tokens",
+        Json::Arr(tokens.iter().map(|&t| Json::Num(f64::from(t))).collect()),
+    )];
+    fields.extend(extra);
+    let body = Json::obj(fields);
+    write_request(conn.get_mut(), "POST", "/v1/translate", Some(&body)).unwrap();
+    let resp = conn.read_response().unwrap();
+    let j = resp.json().unwrap_or(Json::Null);
+    (resp.status, j)
+}
+
+/// A mixed-outcome workload attributes every terminal outcome to
+/// exactly one pipeline stage, and the dead requests surface as
+/// postmortem events on `/v1/stats`.
+#[test]
+fn traces_attribute_every_outcome_to_a_stage() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = EchoSlots { seq: 8, need: 300, step_ms: 1 };
+        let mut serve_cfg = ServeConfig::new(1);
+        serve_cfg.queue_limit = Some(1);
+        serve_http(&engine, listener, &tiny_dims(8), HttpConfig::new(serve_cfg)).unwrap()
+    });
+
+    // A occupies the single slot and expires at step 100 (decode stage).
+    let a = std::thread::spawn(move || {
+        let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+        post_translate(&mut conn, &[1, 7, 2], vec![("deadline_steps", Json::Num(100.0))])
+    });
+    // C queues behind A and completes once the slot frees (respond).
+    std::thread::sleep(Duration::from_millis(20));
+    let c = std::thread::spawn(move || {
+        let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+        post_translate(&mut conn, &[1, 9, 2], vec![])
+    });
+    // B arrives over capacity + queue bound: shed at submit.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let (status, _) = post_translate(&mut conn, &[1, 5, 2], vec![]);
+    assert_eq!(status, 503);
+    let (status, _) = a.join().expect("client A");
+    assert_eq!(status, 504);
+    let (status, _) = c.join().expect("client C");
+    assert_eq!(status, 200);
+
+    let (m, stats_json) = scrape(addr);
+    let attributed = |o: &str, s: &str| {
+        m.get(&key("serve_outcomes_total", &[("outcome", o), ("stage", s)]))
+            .copied()
+            .unwrap_or(0.0)
+    };
+    assert_eq!(attributed("shed", "submit"), 1.0, "queue overflow dies at submit");
+    assert_eq!(attributed("expired", "decode"), 1.0, "deadline expiry dies in decode");
+    assert_eq!(attributed("retired", "respond"), 1.0, "the survivor reaches respond");
+
+    // Every terminal outcome carries exactly one stage attribution.
+    let attributions: f64 = m
+        .iter()
+        .filter(|(k, _)| k.starts_with("serve_outcomes_total{"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert_eq!(attributions, m.get("serve_received_total").copied().unwrap_or(0.0));
+
+    // The dead requests are on the postmortem ring with outcome, stage
+    // and detail populated; the served request is not an event.
+    let events = stats_json.get("events").as_arr().expect("events array").to_vec();
+    assert_eq!(events.len(), 2, "shed + expired (the served request is not a postmortem)");
+    let kinds: Vec<(String, String)> = events
+        .iter()
+        .map(|e| {
+            assert!(!e.get("detail").as_str().unwrap_or("").is_empty(), "detail populated");
+            (
+                e.get("outcome").as_str().unwrap_or("").to_string(),
+                e.get("stage").as_str().unwrap_or("").to_string(),
+            )
+        })
+        .collect();
+    assert!(kinds.contains(&("shed".to_string(), "submit".to_string())), "{kinds:?}");
+    assert!(kinds.contains(&("expired".to_string(), "decode".to_string())), "{kinds:?}");
+
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+    assert_eq!((stats.served, stats.shed, stats.expired), (1, 1, 1));
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+}

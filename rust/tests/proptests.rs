@@ -1022,3 +1022,81 @@ fn prop_chaos_traces_preserve_fifo_completion() {
         );
     });
 }
+
+// ---------------------------------------------------------------- obs
+
+#[test]
+fn prop_histogram_buckets_account_for_every_observation() {
+    use itera_llm::obs::Histogram;
+    check("hist-buckets", CASES, |g: &mut Gen| {
+        // Random strictly-increasing bounds; draws land mostly in range
+        // with a tail past the last bound (the overflow bucket).
+        let n_bounds = g.size(1, 12);
+        let mut bounds = Vec::with_capacity(n_bounds);
+        let mut b = f64::from(g.f32_in(1e-4, 1e-2));
+        for _ in 0..n_bounds {
+            bounds.push(b);
+            b *= 1.0 + f64::from(g.f32_in(0.5, 3.0));
+        }
+        let h = Histogram::new(&bounds);
+        let n = g.size(1, 200);
+        let mut values = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = f64::from(g.f32_in(0.0, 1.5)) * bounds[bounds.len() - 1];
+            h.observe(v);
+            values.push(v);
+        }
+        let snap = h.snapshot();
+        // Totals match the ledger exactly.
+        assert_eq!(snap.count, n as u64);
+        let sum: f64 = values.iter().sum();
+        assert!((snap.sum - sum).abs() <= 1e-9 * sum.abs().max(1.0));
+        // One bucket per bound plus overflow; their counts sum to the
+        // total, and the cumulative view is monotone up to it.
+        assert_eq!(snap.counts.len(), bounds.len() + 1);
+        assert_eq!(snap.counts.iter().sum::<u64>(), n as u64);
+        let cum = snap.cumulative();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "cumulative counts must be monotone");
+        assert_eq!(*cum.last().unwrap(), n as u64);
+        // Every observation landed in the `(lo, hi]` bucket its value
+        // selects.
+        for (i, &c) in snap.counts.iter().enumerate() {
+            let lo = if i == 0 { f64::NEG_INFINITY } else { bounds[i - 1] };
+            let hi = bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            let expect = values.iter().filter(|&&v| v > lo && v <= hi).count() as u64;
+            assert_eq!(c, expect, "bucket {i} ({lo}, {hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_quantile_brackets_true_quantile() {
+    use itera_llm::obs::Histogram;
+    check("hist-quantile", CASES, |g: &mut Gen| {
+        // Fixed bounds covering the draw range, so every true quantile
+        // has a well-defined bracketing bucket.
+        let bounds = [0.125, 0.25, 0.5, 1.0];
+        let h = Histogram::new(&bounds);
+        let n = g.size(1, 300);
+        let mut values: Vec<f64> = (0..n).map(|_| f64::from(g.f32_in(1e-3, 1.0))).collect();
+        for &v in &values {
+            h.observe(v);
+        }
+        values.sort_by(f64::total_cmp);
+        let snap = h.snapshot();
+        for q in [0.5, 0.9, 0.99] {
+            let est = snap.quantile(q);
+            // The interpolated estimate must stay inside the bucket that
+            // holds the true order-statistic quantile.
+            let rank = ((q * n as f64).max(1.0).ceil() as usize).min(n);
+            let truth = values[rank - 1];
+            let idx = bounds.partition_point(|&bb| truth > bb);
+            let lo = if idx == 0 { 0.0 } else { bounds[idx - 1] };
+            let hi = bounds[idx];
+            assert!(
+                est >= lo - 1e-12 && est <= hi + 1e-12,
+                "q={q}: estimate {est} outside bucket ({lo}, {hi}] of true quantile {truth}"
+            );
+        }
+    });
+}
