@@ -238,6 +238,9 @@ fn main() {
     // ---- serving batchers: static waves vs continuous slot scheduling --
     batcher_benches(&mut b, workers);
 
+    // ---- paged KV memory: byte-bounded admission + preemption ----------
+    kvpool_benches(&mut b, workers);
+
     // ---- HTTP serving: sockets + load generator over the batcher ------
     server_benches(&mut b, workers);
 
@@ -498,6 +501,125 @@ fn batcher_benches(b: &mut Bench, workers: usize) {
         }
         b.gauge("runtime/slot_occupancy", batcher.occupancy());
     }
+    b.set_group(None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Paged-KV serving lanes (`cargo bench --bench hot_paths kvpool`
+/// selects the group): the same seeded ragged arrival trace —
+/// Poisson-distributed arrivals per tick off the deterministic PCG
+/// stream, over the corpus's ragged rows — through a byte-bounded paged
+/// backend and through the unbounded slot-count baseline
+/// (`runtime/native_serve_paged` / `runtime/native_serve_unpaged`), plus
+/// the deterministic memory-pressure gauges: peak
+/// `runtime/kv_resident_bytes` under the tight budget, and
+/// `runtime/preemption_rate` (evictions per request). Outputs are
+/// bit-identical either way (pinned by the paging proptest); these lanes
+/// record what bounded admission and preemption-by-eviction cost.
+/// Hermetic: runs on the testkit tiny model, W8A8 dense.
+fn kvpool_benches(b: &mut Bench, workers: usize) {
+    use itera_llm::coordinator::{self, ContinuousBatcher, Method};
+    use itera_llm::runtime::{Mode, NativeBackend, SlotEngine};
+    use itera_llm::testkit::tinymodel;
+
+    b.set_group(Some("kvpool"));
+    let lanes = [
+        "runtime/native_serve_paged",
+        "runtime/native_serve_unpaged",
+        "runtime/kv_resident_bytes",
+        "runtime/preemption_rate",
+    ];
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_kvpool", 0x4B9) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping kvpool benches)");
+            b.set_group(None);
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let weights: Vec<&Matrix> =
+        manifest.linears.iter().map(|l| model.linear(&l.name)).collect();
+    let cm = coordinator::compress_model_from(
+        &manifest.linears,
+        &weights,
+        &Method::QuantOnly { wl: 8 },
+        None,
+        workers,
+    );
+    let make_backend = || cm.native_backend_mode(&manifest, &model, Mode::Dense, workers).unwrap();
+
+    let n_requests = 24usize;
+    let capacity = 3usize;
+    let rows: Vec<Vec<i32>> =
+        (0..n_requests).map(|i| corpus.src_row(i % corpus.n).to_vec()).collect();
+
+    // One seeded ragged trace: Poisson(0.8) arrivals per tick (Knuth
+    // sampling off the PCG stream), drained to idle. Returns the output
+    // token count, the preemption count and the peak resident bytes.
+    let run_trace = |backend: &NativeBackend| -> (u64, usize, usize) {
+        let mut rng = Pcg64::new(0x9A6ED);
+        let limit = (-0.8f64).exp();
+        let mut batcher = ContinuousBatcher::new(backend, capacity);
+        let mut submitted = 0usize;
+        let mut tokens = 0u64;
+        let mut peak = 0usize;
+        while !(submitted == n_requests && batcher.idle()) {
+            let mut arrivals = 0usize;
+            let mut p = rng.next_f64();
+            while p > limit {
+                arrivals += 1;
+                p *= rng.next_f64();
+            }
+            for _ in 0..arrivals.min(n_requests - submitted) {
+                batcher.submit(rows[submitted].clone()).expect("unbounded queue");
+                submitted += 1;
+            }
+            if batcher.idle() && submitted < n_requests {
+                // Never stall the trace at an empty batcher.
+                batcher.submit(rows[submitted].clone()).expect("unbounded queue");
+                submitted += 1;
+            }
+            for c in batcher.tick() {
+                tokens += c.result.expect("fault-free trace").len() as u64;
+            }
+            peak = peak.max(backend.kv_pool().resident_bytes());
+        }
+        assert_eq!(batcher.stats().retired, n_requests, "every request retires");
+        (tokens, batcher.stats().preempted, peak)
+    };
+
+    // Tight budget: one slot's worst case plus two spare pages, so
+    // concurrent decodes must collide with the budget and preempt.
+    let paged = {
+        let be = make_backend().with_kv_pool(None, 2);
+        let budget = be.slot_worst_bytes() + 2 * be.kv_pool().page_bytes();
+        be.with_kv_pool(Some(budget), 2)
+    };
+    let unpaged = make_backend();
+
+    let (tokens, preempted, peak) = run_trace(&paged);
+    assert_eq!(paged.kv_pool().outstanding_pages(), 0, "kvpool bench trace must not leak pages");
+    b.gauge("runtime/kv_resident_bytes", peak as f64);
+    b.gauge("runtime/preemption_rate", preempted as f64 / n_requests as f64);
+
+    if b.enabled("runtime/native_serve_paged") {
+        b.bench_throughput("runtime/native_serve_paged", tokens, || {
+            std::hint::black_box(run_trace(&paged));
+        });
+    }
+    if b.enabled("runtime/native_serve_unpaged") {
+        b.bench_throughput("runtime/native_serve_unpaged", tokens, || {
+            std::hint::black_box(run_trace(&unpaged));
+        });
+    }
+
     b.set_group(None);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -633,10 +633,18 @@ fn validate_decode(args: &Args) -> Result<()> {
 /// match `translate` of that request alone **bit for bit** — per
 /// execution mode (the packed cascade covers both qkernel scale axes).
 /// Fails (non-zero exit) on any divergence, so CI can gate on it.
+///
+/// With `--kv-budget BYTES` the run additionally swaps in a byte-bounded
+/// paged KV pool, so the same parity contract is checked under
+/// memory-bounded admission and preemption-by-eviction (evicted slots
+/// re-prefill and must still match the sequential reference bit for
+/// bit). `--kv-budget 0` auto-picks a deliberately tight budget (1.5x
+/// one slot's worst-case page demand) so CI needs no model-dependent
+/// byte math; `--page-tokens N` sets the page grain (default 2 rows).
 fn validate_continuous(args: &Args) -> Result<()> {
     use crate::coordinator::report::Table;
     use crate::coordinator::ContinuousBatcher;
-    use crate::runtime::TranslateBackend;
+    use crate::runtime::{SlotEngine, TranslateBackend};
     use crate::testkit::tinymodel;
 
     if batcher_flag(args)? != Batcher::Continuous {
@@ -652,14 +660,17 @@ fn validate_continuous(args: &Args) -> Result<()> {
     let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
     let s = manifest.model.seq_len;
     let capacity = 3usize;
+    let kv_budget = opt_usize(args, "kv-budget")?;
+    let page_tokens = opt_usize(args, "page-tokens")?;
     let cases = validation_cases(&manifest, &model);
 
+    let kv_note = if kv_budget.is_some() { ", byte-bounded KV pool" } else { "" };
     let mut t = Table::new(
         &format!(
             "Continuous batcher vs sequential cached decode (hermetic tiny model, \
-             capacity {capacity}, staggered arrivals)"
+             capacity {capacity}, staggered arrivals{kv_note})"
         ),
-        &["mode", "bank", "requests", "tokens_exact", "decode_steps", "occupancy"],
+        &["mode", "bank", "requests", "tokens_exact", "decode_steps", "preempted", "occupancy"],
     );
     let mut all_ok = true;
     let mut ran = 0usize;
@@ -671,6 +682,27 @@ fn validate_continuous(args: &Args) -> Result<()> {
         }
         ran += 1;
         let backend = NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?;
+        let backend = match (kv_budget, page_tokens) {
+            (None, None) => backend,
+            (budget, pt) => {
+                let pt = pt.unwrap_or(2).clamp(1, s.max(1));
+                let backend = backend.with_kv_pool(None, pt);
+                match budget {
+                    None => backend,
+                    Some(b) => {
+                        let worst = backend.slot_worst_bytes();
+                        let b = if b == 0 { worst + worst / 2 } else { b };
+                        if b < worst {
+                            bail!(
+                                "--kv-budget {b} is below one slot's worst-case page \
+                                 demand ({worst} B); nothing would ever be admitted"
+                            );
+                        }
+                        backend.with_kv_pool(Some(b), pt)
+                    }
+                }
+            }
+        };
 
         // Sequential reference: each corpus row decoded alone through the
         // existing cached path.
@@ -714,6 +746,7 @@ fn validate_continuous(args: &Args) -> Result<()> {
             format!("{}", rows.len()),
             if ok { "yes" } else { "NO" }.to_string(),
             format!("{}", batcher.stats().steps),
+            format!("{}", batcher.stats().preempted),
             format!("{:.2}", batcher.occupancy()),
         ]);
     }
@@ -738,9 +771,12 @@ fn validate_continuous(args: &Args) -> Result<()> {
 /// `--deadline` / `--max-new-tokens` set server-side default limits in
 /// decode steps / generated tokens, and `--burst` drives the demo client
 /// with that many requests in flight (overload needs `burst` past
-/// capacity + queue limit). `--tinymodel` serves the hermetic synthetic
-/// model instead of trained artifacts — the CI overload smoke runs
-/// without any Python-built files.
+/// capacity + queue limit). `--kv-budget BYTES` caps the paged KV pool
+/// (admission becomes memory-bounded; under pressure the youngest slot
+/// is evicted and replayed) and `--page-tokens N` sets the page grain.
+/// `--tinymodel` serves the hermetic synthetic model instead of trained
+/// artifacts — the CI overload smoke runs without any Python-built
+/// files.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     use crate::coordinator::{RequestLimits, ServeTuning};
 
@@ -756,6 +792,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         queue_limit: opt_usize(args, "queue-limit")?,
         limits,
         burst: args.flag_usize("burst", 1)?,
+        kv_budget: opt_usize(args, "kv-budget")?,
+        page_tokens: opt_usize(args, "page-tokens")?,
     };
     if let Some(listen) = args.flag("listen") {
         return cmd_serve_http(args, listen, &tuning);
@@ -883,6 +921,14 @@ fn serve_http_native(
     let backend = cm
         .native_backend_mode(manifest, &model, mode, workers)?
         .with_decode(DecodePolicy::Cached);
+    // `--kv-budget` / `--page-tokens`: swap the unbounded compatibility
+    // pool for a byte-bounded paged one before any slot exists.
+    let backend = if tuning.kv_budget.is_some() || tuning.page_tokens.is_some() {
+        let pt = tuning.page_tokens.unwrap_or(manifest.model.seq_len);
+        backend.with_kv_pool(tuning.kv_budget, pt)
+    } else {
+        backend
+    };
     // The native backend's slot capacity is the model's eval batch.
     let mut serve_cfg = ServeConfig::new(manifest.model.eval_batch);
     serve_cfg.queue_limit = tuning.queue_limit;
@@ -903,6 +949,7 @@ fn serve_http_native(
             len_range: (2, manifest.model.seq_len.saturating_sub(2).max(2)),
             vocab: manifest.model.vocab as i32,
             deadline_steps: tuning.limits.deadline_steps,
+            retry_503: args.flag_usize("retry-503", 0)?,
             ..LoadGenConfig::default()
         }),
     };

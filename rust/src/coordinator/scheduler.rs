@@ -11,12 +11,34 @@
 //! pass and splicing their cross-attention context into the live batch),
 //! and steps the resulting mixed-age batch.
 //!
-//! Scheduling is deterministic and wall-clock-free — admission is FIFO
-//! into the lowest free slot index, slots are never preempted (a long
-//! request keeps its slot until it completes, so nothing starves), and
-//! an idle tick (no live slots, empty queue) is a no-op. That makes the
-//! policy unit-testable with scripted arrival/length traces against a
-//! mock engine, with no model anywhere.
+//! Scheduling is deterministic and wall-clock-free — the queue is kept
+//! in submission-id order so dequeue is longest-waiting-first (plain
+//! FIFO, preserved even across preemption), admission fills the lowest
+//! free slot index, and an idle tick (no live slots, empty queue) is a
+//! no-op. That makes the policy unit-testable with scripted
+//! arrival/length traces against a mock engine, with no model anywhere.
+//!
+//! **Memory-bounded admission and preemption-by-eviction.** When the
+//! engine reports KV pool accounting ([`SlotEngine::kv_stats`] — the
+//! paged allocator in [`crate::runtime::kvpool`]), admission is bounded
+//! by *bytes*, not just slot count: a request is admitted only when its
+//! worst-case page demand ([`SlotEngine::slot_worst_bytes`]) fits the
+//! pool's free bytes net of what live slots need for their next step
+//! and what this tick's earlier admissions may grow into; a request
+//! whose worst case exceeds the whole budget is shed `Overloaded` (it
+//! can never fit), and otherwise the queue simply waits. Live slots
+//! only reserve their *next step's* pages, so concurrency over-commits
+//! optimistically — and when the pool then runs dry mid-decode, the
+//! **youngest-admitted** live slot is evicted back to its id-ordered
+//! queue position (pages freed, [`BatcherStats::preempted`]) and
+//! re-prefilled on re-admission: decode replays deterministically from
+//! the source row, so the final output is **bit-identical** to an
+//! uninterrupted run while deadlines keep counting from the original
+//! submission (graceful degradation, not silent retry). The oldest
+//! live slot is never evicted, so progress is guaranteed; with no
+//! memory pressure (unbounded pool, or an engine with no pool) nothing
+//! is ever preempted — a long request keeps its slot until it
+//! completes, so nothing starves.
 //!
 //! **Faults are per-request outcomes, not batcher failures.** Every
 //! submission ends in exactly one [`Completion`] whose `result` is
@@ -135,6 +157,15 @@ pub struct BatcherStats {
     pub faulted: usize,
     /// Subset of `retired` cut short by their `max_new_tokens` budget.
     pub truncated: usize,
+    /// Live slots evicted back to the queue under memory pressure
+    /// (pages freed, request requeued). **Non-terminal**: a preempted
+    /// request is still in flight, so this is not part of the
+    /// accounting identity.
+    pub preempted: usize,
+    /// Previously-preempted requests admitted again (re-prefill).
+    /// Non-terminal, like `preempted`; `admitted` counts these too
+    /// (every admission runs an encoder pass).
+    pub requeued: usize,
 }
 
 impl BatcherStats {
@@ -163,9 +194,13 @@ struct SchedObs {
     admitted: Arc<Counter>,
     steps: Arc<Counter>,
     occupied: Arc<Counter>,
+    preempted: Arc<Counter>,
+    requeued: Arc<Counter>,
     queue_depth: Arc<Gauge>,
     live_slots: Arc<Gauge>,
     occupancy: Arc<Gauge>,
+    kv_resident_bytes: Arc<Gauge>,
+    kv_pages_free: Arc<Gauge>,
     step_seconds: Arc<Histogram>,
     admit_seconds: Arc<Histogram>,
 }
@@ -185,9 +220,13 @@ impl SchedObs {
             admitted: reg.counter("batcher_admitted_total"),
             steps: reg.counter("batcher_decode_steps_total"),
             occupied: reg.counter("batcher_occupied_slot_steps_total"),
+            preempted: reg.counter("batcher_preempted_total"),
+            requeued: reg.counter("batcher_requeued_total"),
             queue_depth: reg.gauge("batcher_queue_depth"),
             live_slots: reg.gauge("batcher_live_slots"),
             occupancy: reg.gauge("batcher_occupancy"),
+            kv_resident_bytes: reg.gauge("kv_resident_bytes"),
+            kv_pages_free: reg.gauge("kv_pages_free"),
             step_seconds: reg.histogram("batcher_step_seconds", &STEP_BOUNDS),
             admit_seconds: reg.histogram("batcher_admit_seconds", &STEP_BOUNDS),
         }
@@ -205,17 +244,29 @@ struct Pending {
     id: u64,
     row: Vec<i32>,
     limits: RequestLimits,
-    /// `stats.steps` at submission — the deadline epoch.
+    /// `stats.steps` at submission — the deadline epoch. Preserved
+    /// across preemption, so deadlines count total time in the system.
     submit_step: usize,
+    /// Back in the queue after an eviction (counted as `requeued` when
+    /// admitted again).
+    requeued: bool,
 }
 
 struct Live<S> {
     id: u64,
     slot: S,
+    /// The source row, kept so an evicted request can re-prefill from
+    /// scratch (decode is deterministic: the replay is bit-identical).
+    row: Vec<i32>,
     limits: RequestLimits,
     submit_step: usize,
     /// Decode steps this slot has survived (the `max_new_tokens` meter).
+    /// Resets on re-admission — the replayed decode re-earns its budget
+    /// step for step, so the truncation point lands on the same token.
     new_tokens: usize,
+    /// Monotone admission ticket: the eviction policy preempts the
+    /// *youngest* admission (max `admit_seq`), never the oldest.
+    admit_seq: u64,
 }
 
 /// Continuous-batching engine over any [`SlotEngine`].
@@ -237,6 +288,8 @@ pub struct ContinuousBatcher<'e, E: SlotEngine> {
     /// Drain mode: shed all further submissions, finish the backlog.
     draining: bool,
     next_id: u64,
+    /// Admission tickets handed out so far (see [`Live::admit_seq`]).
+    admit_seq: u64,
     stats: BatcherStats,
     /// Registry mirror of `stats` + tick gauges; see [`Self::with_obs`].
     obs: Option<SchedObs>,
@@ -253,6 +306,7 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             queue_limit: None,
             draining: false,
             next_id: 0,
+            admit_seq: 0,
             stats: BatcherStats::default(),
             obs: None,
         }
@@ -313,6 +367,7 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             row: src_row,
             limits,
             submit_step: self.stats.steps,
+            requeued: false,
         });
         Ok(id)
     }
@@ -341,9 +396,12 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             }
             return true;
         }
+        let engine = self.engine;
         for entry in self.slots.iter_mut() {
             if entry.as_ref().is_some_and(|l| l.id == id) {
-                *entry = None;
+                if let Some(mut l) = entry.take() {
+                    engine.release_slot(&mut l.slot);
+                }
                 self.stats.cancelled += 1;
                 if let Some(o) = &self.obs {
                     o.cancelled.inc();
@@ -410,15 +468,17 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
 
     /// One scheduling round: expire deadlined work (live slots in
     /// ascending slot order, then the queue FIFO), admit queued requests
-    /// into free slots (FIFO, lowest free index first — each admission
-    /// runs the request's encoder pass), retire anything already
-    /// complete (a degenerate admission can be born finished — it must
-    /// never reach the step kernel), step the mixed-age batch of live
-    /// slots once, then retire completed slots and return every
-    /// completion. An idle round (nothing live after admission) executes
-    /// no decode step. Engine failures and panics never escape: they
-    /// become [`ServeError::EngineFault`] completions for the requests
-    /// they are attributed to.
+    /// into free slots (id order, lowest free index first, gated by the
+    /// engine's KV budget when it reports one — each admission runs the
+    /// request's encoder pass), retire anything already complete (a
+    /// degenerate admission can be born finished — it must never reach
+    /// the step kernel), evict the youngest live slots back to the
+    /// queue while the pool cannot back the next step, step the
+    /// mixed-age batch of live slots once, then retire completed slots
+    /// and return every completion. An idle round (nothing live after
+    /// admission) executes no decode step. Engine failures and panics
+    /// never escape: they become [`ServeError::EngineFault`]
+    /// completions for the requests they are attributed to.
     pub fn tick(&mut self) -> Vec<Completion> {
         let mut done = Vec::new();
         let now = self.stats.steps;
@@ -433,7 +493,8 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             if !hit {
                 continue;
             }
-            if let Some(l) = self.slots[si].take() {
+            if let Some(mut l) = self.slots[si].take() {
+                self.engine.release_slot(&mut l.slot);
                 self.stats.expired += 1;
                 if let Some(o) = &self.obs {
                     o.expired.inc();
@@ -467,15 +528,53 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         }
         self.queue = keep;
 
-        // Admit: fill every free slot while the queue has work. A
-        // misframed or faulting admission consumes its request (an
-        // `EngineFault` completion), not the slot — keep trying the
-        // queue until the slot is filled or the queue is empty.
-        for si in 0..self.slots.len() {
+        // Memory-aware admission. When the engine reports KV pool
+        // accounting, a request is admitted only if its worst-case page
+        // demand fits the pool's free bytes net of (a) the pages live
+        // slots need for their next step and (b) the worst case of
+        // admissions already made this tick (`planned` — without it a
+        // tick could admit work it would immediately have to evict). A
+        // request that cannot fit even an empty pool is shed: waiting
+        // can never help it. Engines without a pool (`kv_stats() ==
+        // None`) skip the gate — admission is slot-count-bounded only.
+        let worst = self.engine.slot_worst_bytes();
+        let kv = self.engine.kv_stats();
+        if kv.and_then(|s| s.budget_bytes).is_some_and(|total| worst > total) {
+            while let Some(p) = self.queue.pop_front() {
+                self.stats.shed += 1;
+                if let Some(o) = &self.obs {
+                    o.shed.inc();
+                }
+                done.push(Completion {
+                    id: p.id,
+                    slot: None,
+                    result: Err(ServeError::Overloaded),
+                });
+            }
+        }
+        let kv_free = kv.and_then(|s| s.free_bytes);
+        let need_live: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|l| self.engine.slot_next_step_bytes(&l.slot))
+            .sum();
+        let mut planned = 0usize;
+
+        // Admit: fill every free slot while the queue has work and the
+        // memory gate passes. A misframed or faulting admission consumes
+        // its request (an `EngineFault` completion), not the slot — keep
+        // trying the queue until the slot is filled or the queue is
+        // empty.
+        'admit: for si in 0..self.slots.len() {
             if self.slots[si].is_some() {
                 continue;
             }
-            while let Some(p) = self.queue.pop_front() {
+            while !self.queue.is_empty() {
+                if kv_free.is_some_and(|free| worst + need_live + planned > free) {
+                    break 'admit;
+                }
+                let Some(p) = self.queue.pop_front() else { break };
                 if p.row.len() != self.engine.slot_seq_len() {
                     self.stats.faulted += 1;
                     if let Some(o) = &self.obs {
@@ -501,16 +600,28 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                 }
                 match admitted {
                     Ok(Ok(slot)) => {
+                        let ticket = self.admit_seq;
+                        self.admit_seq += 1;
+                        let requeued = p.requeued;
                         self.slots[si] = Some(Live {
                             id: p.id,
                             slot,
+                            row: p.row,
                             limits: p.limits,
                             submit_step: p.submit_step,
                             new_tokens: 0,
+                            admit_seq: ticket,
                         });
                         self.stats.admitted += 1;
+                        planned += worst;
                         if let Some(o) = &self.obs {
                             o.admitted.inc();
+                        }
+                        if requeued {
+                            self.stats.requeued += 1;
+                            if let Some(o) = &self.obs {
+                                o.requeued.inc();
+                            }
                         }
                         break;
                     }
@@ -550,6 +661,50 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
         // finished by a step were retired at the end of that tick.
         done.extend(self.retire_complete());
 
+        // Preemption-by-eviction: live slots reserve only their next
+        // step's pages, so the pool can run dry mid-decode once several
+        // slots cross page boundaries together. Recover by evicting the
+        // youngest-admitted live slot back to the queue: its pages
+        // return to the pool and the request re-prefills on
+        // re-admission (deterministic decode makes the replay
+        // bit-identical). The oldest slot always keeps its pages — a
+        // lone slot's worst case fits the budget (anything bigger was
+        // shed above), so the batcher can always make progress.
+        while let Some(free) = self.engine.kv_stats().and_then(|s| s.free_bytes) {
+            let need: usize = self
+                .slots
+                .iter()
+                .flatten()
+                .map(|l| self.engine.slot_next_step_bytes(&l.slot))
+                .sum();
+            if need <= free || self.slots.iter().flatten().count() <= 1 {
+                break;
+            }
+            let victim = (0..self.slots.len())
+                .filter(|&i| self.slots[i].is_some())
+                .max_by_key(|&i| self.slots[i].as_ref().map(|l| l.admit_seq));
+            let Some(mut l) = victim.and_then(|vi| self.slots[vi].take()) else { break };
+            self.engine.release_slot(&mut l.slot);
+            self.stats.preempted += 1;
+            if let Some(o) = &self.obs {
+                o.preempted.inc();
+            }
+            // Requeue at the id-sorted position: the queue stays in
+            // submission order, so the victim re-admits before anything
+            // that arrived after it (longest waiting first).
+            let pos = self.queue.iter().position(|q| q.id > l.id).unwrap_or(self.queue.len());
+            self.queue.insert(
+                pos,
+                Pending {
+                    id: l.id,
+                    row: l.row,
+                    limits: l.limits,
+                    submit_step: l.submit_step,
+                    requeued: true,
+                },
+            );
+        }
+
         // Step whatever is live, in ascending slot order (slot
         // independence makes the order bit-irrelevant; fixing it keeps
         // traces reproducible). The whole batch steps under
@@ -586,7 +741,8 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                     Ok(Err(e)) => format!("step failed: {e:#}"),
                     Err(payload) => format!("step panicked: {}", panic_message(payload.as_ref())),
                 };
-                if let Some(l) = self.slots[si].take() {
+                if let Some(mut l) = self.slots[si].take() {
+                    self.engine.release_slot(&mut l.slot);
                     self.stats.faulted += 1;
                     if let Some(o) = &self.obs {
                         o.faulted.inc();
@@ -623,6 +779,12 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             o.queue_depth.set(self.queue.len() as f64);
             o.live_slots.set(self.slots.iter().filter(|s| s.is_some()).count() as f64);
             o.occupancy.set(self.stats.occupancy(self.capacity));
+            if let Some(kv) = self.engine.kv_stats() {
+                o.kv_resident_bytes.set(kv.resident_bytes as f64);
+                if let Some(fp) = kv.free_pages {
+                    o.kv_pages_free.set(fp as f64);
+                }
+            }
         }
     }
 
@@ -645,7 +807,7 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
             if !complete {
                 continue;
             }
-            if let Some(l) = self.slots[si].take() {
+            if let Some(mut l) = self.slots[si].take() {
                 self.stats.retired += 1;
                 if let Some(o) = &self.obs {
                     o.retired.inc();
@@ -653,11 +815,11 @@ impl<'e, E: SlotEngine> ContinuousBatcher<'e, E> {
                 if truncated {
                     self.stats.truncated += 1;
                 }
-                done.push(Completion {
-                    id: l.id,
-                    slot: Some(si),
-                    result: Ok(self.engine.slot_output(&l.slot)),
-                });
+                let out = self.engine.slot_output(&l.slot);
+                // Output first, then pages back to the pool (retirement
+                // is where the engine's leak check runs).
+                self.engine.release_slot(&mut l.slot);
+                done.push(Completion { id: l.id, slot: Some(si), result: Ok(out) });
             }
         }
         done
@@ -1202,6 +1364,183 @@ mod tests {
         assert_eq!(steps.count, s.steps as u64);
         let admits = snap.histograms.get("batcher_admit_seconds").expect("admit histogram");
         assert_eq!(admits.count, s.admitted as u64);
+    }
+
+    /// Mock engine with a byte-accounted page pool: every live slot
+    /// consumes `page` bytes per decode step (allocated inside the step,
+    /// like the native backend's lazy page-ensure pre-pass), so memory
+    /// pressure builds deterministically with no model anywhere.
+    struct MemEngine {
+        seq: usize,
+        /// Bytes one slot allocates per step.
+        page: usize,
+        budget: usize,
+        /// Reported worst-case demand per slot.
+        worst: usize,
+        used: std::cell::Cell<usize>,
+    }
+
+    struct MemSlot {
+        need: usize,
+        len: usize,
+        tag: i32,
+        held: usize,
+    }
+
+    impl SlotEngine for MemEngine {
+        type Slot = MemSlot;
+
+        fn slot_seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn admit(&self, src_row: &[i32]) -> anyhow::Result<MemSlot> {
+            anyhow::ensure!(src_row.len() == self.seq, "framing");
+            Ok(MemSlot { need: src_row[0] as usize, len: 0, tag: src_row[1], held: 0 })
+        }
+
+        fn step(&self, slots: &mut [&mut MemSlot]) -> anyhow::Result<()> {
+            // Check the whole batch before mutating anything: a failed
+            // batch stays re-steppable (the SlotEngine contract).
+            let want = slots.len() * self.page;
+            anyhow::ensure!(
+                self.used.get() + want <= self.budget,
+                "mock pool exhausted: {} used + {want} wanted > {} budget",
+                self.used.get(),
+                self.budget
+            );
+            for s in slots.iter_mut() {
+                self.used.set(self.used.get() + self.page);
+                s.held += self.page;
+                s.len += 1;
+            }
+            Ok(())
+        }
+
+        fn slot_complete(&self, s: &MemSlot) -> bool {
+            s.len >= s.need || s.len + 1 >= self.seq
+        }
+
+        fn slot_output(&self, s: &MemSlot) -> Vec<i32> {
+            vec![s.tag, s.len as i32]
+        }
+
+        fn kv_stats(&self) -> Option<crate::runtime::KvMemStats> {
+            let free = self.budget - self.used.get();
+            Some(crate::runtime::KvMemStats {
+                budget_bytes: Some(self.budget),
+                free_bytes: Some(free),
+                free_pages: Some(free / self.page.max(1)),
+                resident_bytes: self.used.get(),
+            })
+        }
+
+        fn slot_worst_bytes(&self) -> usize {
+            self.worst
+        }
+
+        fn slot_next_step_bytes(&self, s: &MemSlot) -> usize {
+            if self.slot_complete(s) {
+                0
+            } else {
+                self.page
+            }
+        }
+
+        fn release_slot(&self, s: &mut MemSlot) {
+            self.used.set(self.used.get() - s.held);
+            s.held = 0;
+        }
+    }
+
+    #[test]
+    fn memory_pressure_preempts_youngest_and_replays_bit_identically() {
+        // Budget fits ~1.5 worst cases: three 4-step requests cannot all
+        // run concurrently, so the batcher must evict under pressure and
+        // re-prefill — and every output must still equal the
+        // no-pressure run's `[tag, 4]`.
+        let e = MemEngine { seq: 16, page: 1, budget: 6, worst: 4, used: std::cell::Cell::new(0) };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        for i in 0..3 {
+            b.submit(req(4, i, 16)).unwrap();
+        }
+        let out = b.run_until_drained();
+        assert_eq!(out.len(), 3, "every request completes exactly once");
+        let ids: Vec<u64> = out.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "requeue preserves submission order");
+        for (i, c) in out.iter().enumerate() {
+            assert_eq!(ok_tokens(c), vec![i as i32, 4], "replayed decode is bit-identical");
+        }
+        let s = b.stats();
+        assert!(s.preempted >= 1, "the tight budget must force eviction: {s:?}");
+        assert_eq!(s.requeued, s.preempted, "every victim was re-admitted");
+        assert_eq!(s.admitted, 3 + s.requeued, "re-admissions run a fresh encoder pass");
+        assert_eq!(s.retired, 3);
+        assert_eq!(3, s.retired + s.shed + s.expired + s.cancelled + s.faulted, "identity: {s:?}");
+        assert_eq!(e.used.get(), 0, "zero bytes leaked after the trace");
+    }
+
+    #[test]
+    fn admission_is_bounded_by_bytes_not_slot_count() {
+        // Free slots exist, but only two worst cases fit the budget: the
+        // third request waits in the queue, unshed.
+        let e = MemEngine { seq: 16, page: 1, budget: 8, worst: 4, used: std::cell::Cell::new(0) };
+        let mut b = ContinuousBatcher::new(&e, 3);
+        for i in 0..3 {
+            b.submit(req(2, i, 16)).unwrap();
+        }
+        b.tick();
+        assert_eq!(b.live(), 2, "byte budget admits two despite three free slots");
+        assert_eq!(b.pending(), 1, "the third queues instead of shedding");
+        assert_eq!(b.stats().shed, 0);
+        let out = b.run_until_drained();
+        assert_eq!(out.len(), 3, "the queued request is served once pages free up");
+        assert!(out.iter().all(|c| c.result.is_ok()));
+        assert_eq!(e.used.get(), 0);
+    }
+
+    #[test]
+    fn oversized_requests_are_shed_not_queued_forever() {
+        // worst > budget: no amount of waiting can ever admit these.
+        let e = MemEngine { seq: 16, page: 1, budget: 3, worst: 4, used: std::cell::Cell::new(0) };
+        let mut b = ContinuousBatcher::new(&e, 2);
+        b.submit(req(2, 0, 16)).unwrap();
+        b.submit(req(2, 1, 16)).unwrap();
+        let out = b.tick();
+        assert_eq!(out.len(), 2);
+        assert!(
+            out.iter().all(|c| c.result == Err(ServeError::Overloaded)),
+            "never-fits requests shed Overloaded: {out:?}"
+        );
+        assert_eq!(b.stats().shed, 2);
+        assert_eq!(b.stats().preempted, 0);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn kv_gauges_and_preemption_counters_export() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        use crate::obs::{key, Obs};
+        let obs = Obs::fresh();
+        let e = MemEngine { seq: 16, page: 1, budget: 6, worst: 4, used: std::cell::Cell::new(0) };
+        let mut b = ContinuousBatcher::new(&e, 3).with_obs(&obs);
+        for i in 0..3 {
+            b.submit(req(4, i, 16)).unwrap();
+        }
+        b.run_until_drained();
+        let s = b.stats().clone();
+        assert!(s.preempted >= 1, "trace must preempt: {s:?}");
+        let snap = obs.registry().snapshot();
+        assert_eq!(snap.counter("batcher_preempted_total"), s.preempted as u64);
+        assert_eq!(snap.counter("batcher_requeued_total"), s.requeued as u64);
+        assert_eq!(snap.gauge("kv_resident_bytes"), 0.0, "idle pool holds nothing");
+        assert_eq!(snap.gauge("kv_pages_free"), 6.0, "whole budget free at idle");
+        // Preemption is non-terminal: the exported identity still holds.
+        let out = |o: &str| snap.counter(&key("batcher_outcomes_total", &[("outcome", o)]));
+        assert_eq!(
+            snap.counter("batcher_submitted_total"),
+            out("retired") + out("shed") + out("expired") + out("cancelled") + out("faulted"),
+        );
     }
 
     #[test]

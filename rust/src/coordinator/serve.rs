@@ -177,6 +177,11 @@ pub struct ServeStats {
     pub cancelled: usize,
     /// Requests retired with [`ServeError::EngineFault`].
     pub faulted: usize,
+    /// Live slots evicted under KV memory pressure and requeued
+    /// (continuous loop with a byte budget only). **Non-terminal** —
+    /// preempted requests still end in exactly one of the outcomes
+    /// above, so this is not part of [`Self::is_balanced`].
+    pub preempted: usize,
 }
 
 impl ServeStats {
@@ -223,6 +228,7 @@ impl ServeStats {
             expired: outcome("expired"),
             cancelled: outcome("cancelled"),
             faulted: outcome("faulted"),
+            preempted: snap.counter("batcher_preempted_total") as usize,
         }
     }
 }
@@ -416,6 +422,7 @@ pub fn serve_loop(
         expired: 0,
         cancelled,
         faulted,
+        preempted: 0,
     })
 }
 
@@ -695,6 +702,12 @@ fn print_demo_stats(
             stats.shed, stats.expired, stats.cancelled, stats.faulted
         );
     }
+    if stats.preempted > 0 {
+        println!(
+            "kv pressure   : {} preemptions (evict + re-prefill; outputs unaffected)",
+            stats.preempted
+        );
+    }
     println!(
         "latency (s)   : p50 {:.3}  p95 {:.3}  max {:.3} (client-observed)",
         latencies.quantile(0.5),
@@ -790,6 +803,13 @@ pub struct ServeTuning {
     /// Demo-client burst size (requests in flight per wave; 0/1 =
     /// closed loop).
     pub burst: usize,
+    /// Global KV pool byte budget (`serve --kv-budget`). `None` keeps
+    /// the unbounded compatibility pool: exact residency accounting,
+    /// no memory-bounded admission, no preemption.
+    pub kv_budget: Option<usize>,
+    /// Rows per KV page (`serve --page-tokens`); defaults to the
+    /// model's `seq_len` (one page per table, the coarsest grain).
+    pub page_tokens: Option<usize>,
 }
 
 /// Serving demo on the native runtime: W8A8-quantized model (the
@@ -847,6 +867,15 @@ pub fn serve_demo_native(
                 "the continuous batcher schedules KV slots; it requires --decode cached \
                  (replay has no slot lifecycle to interleave)"
             );
+            // Install a bounded/paged KV pool only when asked: the
+            // scheduler then admits by bytes and preempts under
+            // pressure instead of treating capacity as a slot count.
+            let backend = if tuning.kv_budget.is_some() || tuning.page_tokens.is_some() {
+                let pt = tuning.page_tokens.unwrap_or(manifest.model.seq_len);
+                backend.with_kv_pool(tuning.kv_budget, pt)
+            } else {
+                backend
+            };
             let mut cfg = ServeConfig::new(backend.batch());
             cfg.queue_limit = tuning.queue_limit;
             cfg.default_limits = tuning.limits;

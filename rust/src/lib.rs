@@ -16,9 +16,20 @@
 //!   admitted, stepped in mixed-age batches and retired independently
 //!   ([`runtime::SlotEngine`]), a `seq_len`-factor fewer decoder MACs
 //!   per translate — with the AOT graph's full-buffer replay kept as the
-//!   bit-identical reference. Slot independence feeds the serving layer:
-//!   `coordinator::scheduler::ContinuousBatcher` retires/admits between
-//!   decode steps (continuous batching) with bit-identical output.
+//!   bit-identical reference. Slot KV lives in **paged memory**
+//!   ([`runtime::kvpool`]): fixed-size pages from a byte-budgeted free
+//!   list, per-slot page tables growing one page ahead of the decode
+//!   cursor, exact `resident_bytes` accounting and leak checks at slot
+//!   retirement — reads are layout-transparent ([`runtime::RowRead`]),
+//!   so paging never changes a value. Slot independence feeds the
+//!   serving layer: `coordinator::scheduler::ContinuousBatcher`
+//!   retires/admits between decode steps (continuous batching) with
+//!   bit-identical output, and on a budgeted pool it admits by *bytes*
+//!   (worst-case page demand against the free list), evicts the
+//!   youngest admission when a decode outgrows the budget, and replays
+//!   it later bit-identically (preemption-by-eviction + re-prefill),
+//!   surfaced as `kv_resident_bytes`/`kv_pages_free` gauges and
+//!   `batcher_preempted_total` on `/metrics`.
 //! * **Layer 4 ([`qkernel`])** — sub-8-bit execution kernels: bit-packed
 //!   [`qkernel::QMatrix`] storage (2..=8-bit grids in `u32` words,
 //!   per-vector dequant scales, an `i8` fast path at W8) plus the

@@ -1,0 +1,463 @@
+//! Paged KV memory: a fixed-size-page allocator with a global byte
+//! budget, plus the page-backed row store `SeqSlot`'s self-attention
+//! K/V slabs live in.
+//!
+//! The contiguous-slab design ([`crate::runtime::SeqSlot`] before this
+//! module) sized every slot's K/V at admission: `2 * n_dec` matrices of
+//! `[seq_len x d_model]` f32, resident for the whole lifecycle even
+//! though a slot that EOSes after 3 steps only ever wrote 3 rows.
+//! Capacity was therefore a *slot count*, and ragged traffic either
+//! under-used the budget (short sequences pinned full slabs) or had no
+//! budget at all.
+//!
+//! [`KvPool`] replaces that with the paged discipline the serving
+//! literature converged on (vLLM's PagedAttention, the block allocator
+//! in the inference-optimization survey): KV memory is a pool of
+//! fixed-size **pages** of `page_tokens` rows × `width` floats, handed
+//! out from a free list under a global byte budget. Each per-layer K or
+//! V slab is a [`PagedRows`] — a page table of non-contiguous pages
+//! presenting a growable `[rows x width]` view — and pages are
+//! allocated **lazily**, one step ahead of the decode cursor, so a
+//! slot's resident bytes track what it actually decoded:
+//!
+//! ```text
+//!   logical rows      page table           pool (budget = 6 pages)
+//!   ┌───────────┐     ┌───────┐            ┌────┬────┬────┬────┐
+//!   │ row 0..3  │ ──▶ │ page A│            │ A  │ B  │ C  │free│ ...
+//!   │ row 4..7  │ ──▶ │ page C│            └────┴────┴────┴────┘
+//!   │ row 8..   │ ──▶ │ (lazy)│            resident_bytes() == 3 pages
+//!   └───────────┘     └───────┘            (A, B, C across all tables)
+//! ```
+//!
+//! Accounting is exact and checked: `resident_bytes()` is
+//! `outstanding_pages * page_bytes`, releases `debug_assert` against
+//! double-free/underflow, and every [`PagedRows`] returns its pages on
+//! [`PagedRows::release`] (explicit, at slot retirement) *and* on drop
+//! (the leak-proof safety net), so the pool's outstanding count must
+//! return to zero when no slot is live — the invariant the allocator
+//! proptest drives with random alloc/grow/free/evict traces.
+//!
+//! Reads are bit-transparent: a row lives contiguously inside exactly
+//! one page (`width` floats at `(row % page_tokens) * width`), so the
+//! attention kernels consume the same `&[f32]` rows they read from a
+//! contiguous [`Matrix`] slab — paging changes *where* a row lives,
+//! never its values or the accumulation order over it. [`RowRead`]
+//! abstracts the two layouts so one kernel serves both.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::tensor::Matrix;
+
+/// Read-only row access shared by contiguous [`Matrix`] slabs and
+/// page-backed [`PagedRows`]: the attention kernels are written against
+/// this, so cross-attention (constant, contiguous) and self-attention
+/// (growing, paged) K/V go through one bit-identical code path.
+pub trait RowRead {
+    /// Row `i` as a contiguous `[width]` slice.
+    fn row(&self, i: usize) -> &[f32];
+}
+
+impl RowRead for Matrix {
+    fn row(&self, i: usize) -> &[f32] {
+        Matrix::row(self, i)
+    }
+}
+
+impl RowRead for PagedRows {
+    fn row(&self, i: usize) -> &[f32] {
+        PagedRows::row(self, i)
+    }
+}
+
+/// Point-in-time pool accounting, surfaced to the scheduler through
+/// [`crate::runtime::SlotEngine::kv_stats`] and onto `/metrics` as the
+/// `kv_resident_bytes` / `kv_pages_free` gauges. `None` fields mean the
+/// pool is unbounded (the compatibility default): resident bytes are
+/// still tracked exactly, but there is no budget to admit against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvMemStats {
+    /// Usable budget in bytes (`capacity_pages * page_bytes`, i.e. the
+    /// configured budget rounded down to whole pages); `None` when
+    /// unbounded.
+    pub budget_bytes: Option<usize>,
+    /// Bytes still allocatable; `None` when unbounded.
+    pub free_bytes: Option<usize>,
+    /// Pages still allocatable; `None` when unbounded.
+    pub free_pages: Option<usize>,
+    /// Bytes currently held by live page tables (exact).
+    pub resident_bytes: usize,
+}
+
+/// Free list + outstanding count behind the pool's mutex.
+#[derive(Default)]
+struct PoolInner {
+    /// Released pages, retained for reuse (they count against the
+    /// budget only while outstanding).
+    free: Vec<Box<[f32]>>,
+    /// Pages currently held by page tables.
+    outstanding: usize,
+}
+
+/// Fixed-size-page KV allocator with a global byte budget.
+///
+/// Pages are `page_tokens * width` f32 buffers. [`KvPool::try_alloc`]
+/// hands out a zeroed page (from the free list, else freshly allocated
+/// while under budget) or `None` when the budget is exhausted —
+/// allocation failure is a *scheduling* signal (evict or queue), never
+/// a panic. The pool is internally synchronized; clones of the same
+/// `Arc<KvPool>` share one budget.
+pub struct KvPool {
+    page_tokens: usize,
+    width: usize,
+    /// Floats per page (`page_tokens * width`).
+    page_floats: usize,
+    /// Page budget (`budget_bytes / page_bytes`, floored); `None` is
+    /// unbounded.
+    budget_pages: Option<usize>,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    /// A pool of `page_tokens`-row pages, `width` floats per row, bounded
+    /// by `budget_bytes` (rounded *down* to whole pages; a budget smaller
+    /// than one page can never allocate). `None` is unbounded.
+    pub fn new(page_tokens: usize, width: usize, budget_bytes: Option<usize>) -> KvPool {
+        assert!(page_tokens >= 1 && width >= 1, "pages need at least one row and one column");
+        let page_floats = page_tokens * width;
+        KvPool {
+            page_tokens,
+            width,
+            page_floats,
+            budget_pages: budget_bytes.map(|b| b / (page_floats * 4)),
+            inner: Mutex::new(PoolInner::default()),
+        }
+    }
+
+    /// Unbounded pool (exact accounting, no admission bound) — the
+    /// compatibility default every backend starts with.
+    pub fn unbounded(page_tokens: usize, width: usize) -> KvPool {
+        KvPool::new(page_tokens, width, None)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        // A panicking holder (the batcher steps under catch_unwind)
+        // must not wedge the pool: the inner state is a free list and a
+        // counter, both valid at every await-free point.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Rows per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Floats per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Bytes per page.
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats * 4
+    }
+
+    /// Pages needed to back `rows` rows.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_tokens)
+    }
+
+    /// Total allocatable pages; `None` when unbounded.
+    pub fn capacity_pages(&self) -> Option<usize> {
+        self.budget_pages
+    }
+
+    /// Pages currently held by page tables.
+    pub fn outstanding_pages(&self) -> usize {
+        self.lock().outstanding
+    }
+
+    /// Exact bytes held by live page tables.
+    pub fn resident_bytes(&self) -> usize {
+        self.outstanding_pages() * self.page_bytes()
+    }
+
+    /// Pages still allocatable; `None` when unbounded.
+    pub fn free_pages(&self) -> Option<usize> {
+        self.budget_pages.map(|c| c.saturating_sub(self.lock().outstanding))
+    }
+
+    /// Bytes still allocatable; `None` when unbounded.
+    pub fn free_bytes(&self) -> Option<usize> {
+        self.free_pages().map(|p| p * self.page_bytes())
+    }
+
+    /// Usable budget in bytes (whole pages); `None` when unbounded.
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget_pages.map(|c| c * self.page_bytes())
+    }
+
+    /// The pool's point-in-time accounting snapshot.
+    pub fn stats(&self) -> KvMemStats {
+        let outstanding = self.lock().outstanding;
+        let pb = self.page_bytes();
+        KvMemStats {
+            budget_bytes: self.budget_pages.map(|c| c * pb),
+            free_bytes: self.budget_pages.map(|c| c.saturating_sub(outstanding) * pb),
+            free_pages: self.budget_pages.map(|c| c.saturating_sub(outstanding)),
+            resident_bytes: outstanding * pb,
+        }
+    }
+
+    /// Allocate one zeroed page, or `None` when the budget is spent.
+    /// Released pages are reused (re-zeroed, so a recycled page is
+    /// bit-identical to a fresh one).
+    pub fn try_alloc(&self) -> Option<Box<[f32]>> {
+        let mut inner = self.lock();
+        let page = match inner.free.pop() {
+            Some(mut p) => {
+                p.fill(0.0);
+                p
+            }
+            None => {
+                if self.budget_pages.is_some_and(|c| inner.outstanding >= c) {
+                    return None;
+                }
+                vec![0.0f32; self.page_floats].into_boxed_slice()
+            }
+        };
+        inner.outstanding += 1;
+        Some(page)
+    }
+
+    /// Return a page to the free list. Double-frees and foreign pages
+    /// are programming errors, caught by debug asserts.
+    pub fn release(&self, page: Box<[f32]>) {
+        debug_assert_eq!(page.len(), self.page_floats, "page from a different pool geometry");
+        let mut inner = self.lock();
+        debug_assert!(inner.outstanding > 0, "release without a matching alloc (double free?)");
+        inner.outstanding = inner.outstanding.saturating_sub(1);
+        inner.free.push(page);
+    }
+}
+
+/// A growable `[rows x width]` row store over non-contiguous pool
+/// pages: the page table one K or V slab owns.
+///
+/// Rows are appended in decode order, so backing is monotone: row `i`
+/// is readable iff some [`Self::ensure_row`] covered it. Reads index
+/// `page = i / page_tokens`, `offset = i % page_tokens` — each row is
+/// contiguous within its page, so kernels consume the same `&[f32]`
+/// slices a flat slab would give them.
+///
+/// Pages return to the pool on [`Self::release`] (explicit, so slot
+/// retirement can leak-check) and on drop (the safety net that makes
+/// leaks unrepresentable).
+pub struct PagedRows {
+    pool: Arc<KvPool>,
+    pages: Vec<Box<[f32]>>,
+}
+
+impl PagedRows {
+    /// An empty row store drawing from `pool` (no pages until
+    /// [`Self::ensure_row`]).
+    pub fn new(pool: &Arc<KvPool>) -> PagedRows {
+        PagedRows { pool: Arc::clone(pool), pages: Vec::new() }
+    }
+
+    /// Pages currently held.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Bytes currently held.
+    pub fn resident_bytes(&self) -> usize {
+        self.pages.len() * self.pool.page_bytes()
+    }
+
+    /// Rows currently backed by pages (readable/writable without
+    /// allocating).
+    pub fn backed_rows(&self) -> usize {
+        self.pages.len() * self.pool.page_tokens()
+    }
+
+    /// Whether writing row `i` needs a new page first.
+    pub fn needs_page_for(&self, i: usize) -> bool {
+        i >= self.backed_rows()
+    }
+
+    /// Grow the page table until row `i` is backed. `false` when the
+    /// pool's budget is exhausted (the table keeps whatever it already
+    /// acquired — re-ensuring after an eviction freed pages is safe and
+    /// idempotent).
+    pub fn ensure_row(&mut self, i: usize) -> bool {
+        while self.needs_page_for(i) {
+            match self.pool.try_alloc() {
+                Some(p) => self.pages.push(p),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Row `i` as a contiguous `[width]` slice. Panics when `i` is not
+    /// backed — decode only reads rows it has written.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.pool.width();
+        let pt = self.pool.page_tokens();
+        let off = (i % pt) * w;
+        &self.pages[i / pt][off..off + w]
+    }
+
+    /// Mutable row `i`; same backing requirement as [`Self::row`].
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.pool.width();
+        let pt = self.pool.page_tokens();
+        let off = (i % pt) * w;
+        &mut self.pages[i / pt][off..off + w]
+    }
+
+    /// Return every page to the pool. Idempotent; called explicitly at
+    /// slot retirement (so the leak check runs at a known point) and
+    /// again from drop as a safety net.
+    pub fn release(&mut self) {
+        for p in self.pages.drain(..) {
+            self.pool.release(p);
+        }
+    }
+}
+
+impl Drop for PagedRows {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_accounts_allocs_and_releases_exactly() {
+        let pool = KvPool::new(4, 8, Some(3 * 4 * 8 * 4)); // exactly 3 pages
+        assert_eq!(pool.capacity_pages(), Some(3));
+        assert_eq!(pool.page_bytes(), 4 * 8 * 4);
+        assert_eq!(pool.resident_bytes(), 0);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(pool.outstanding_pages(), 3);
+        assert_eq!(pool.free_pages(), Some(0));
+        assert!(pool.try_alloc().is_none(), "budget spent: allocation must fail, not grow");
+        pool.release(b);
+        assert_eq!(pool.free_pages(), Some(1));
+        assert_eq!(pool.resident_bytes(), 2 * pool.page_bytes());
+        let b2 = pool.try_alloc().expect("freed page is reusable");
+        assert!(b2.iter().all(|&v| v == 0.0), "recycled pages are re-zeroed");
+        pool.release(a);
+        pool.release(b2);
+        pool.release(c);
+        assert_eq!(pool.outstanding_pages(), 0, "all pages returned: zero leaks");
+        assert_eq!(pool.free_bytes(), Some(3 * pool.page_bytes()));
+    }
+
+    #[test]
+    fn budget_rounds_down_to_whole_pages() {
+        // 2.5 pages of budget -> 2 allocatable pages.
+        let pool = KvPool::new(2, 4, Some(2 * 2 * 4 * 4 + 16));
+        assert_eq!(pool.capacity_pages(), Some(2));
+        assert_eq!(pool.budget_bytes(), Some(2 * pool.page_bytes()));
+        // Sub-page budget: nothing ever fits.
+        let tiny = KvPool::new(2, 4, Some(1));
+        assert_eq!(tiny.capacity_pages(), Some(0));
+        assert!(tiny.try_alloc().is_none());
+    }
+
+    #[test]
+    fn unbounded_pool_tracks_residency_without_a_bound() {
+        let pool = KvPool::unbounded(2, 2);
+        assert_eq!(pool.capacity_pages(), None);
+        assert_eq!(pool.free_bytes(), None);
+        let pages: Vec<_> = (0..10).map(|_| pool.try_alloc().unwrap()).collect();
+        assert_eq!(pool.resident_bytes(), 10 * pool.page_bytes());
+        let stats = pool.stats();
+        assert_eq!(stats.budget_bytes, None);
+        assert_eq!(stats.resident_bytes, 10 * pool.page_bytes());
+        for p in pages {
+            pool.release(p);
+        }
+        assert_eq!(pool.outstanding_pages(), 0);
+    }
+
+    #[test]
+    fn paged_rows_grow_read_back_and_release() {
+        let pool = Arc::new(KvPool::new(3, 4, Some(4 * 3 * 4 * 4))); // 4 pages
+        let mut rows = PagedRows::new(&pool);
+        assert_eq!(rows.backed_rows(), 0);
+        assert!(rows.needs_page_for(0));
+        assert!(rows.ensure_row(0));
+        assert_eq!(rows.n_pages(), 1);
+        assert!(!rows.needs_page_for(2), "page covers page_tokens rows");
+        assert!(rows.needs_page_for(3));
+        // Write a recognizable pattern across a page boundary, read it back.
+        for i in 0..7 {
+            assert!(rows.ensure_row(i));
+            let r = rows.row_mut(i);
+            for (c, v) in r.iter_mut().enumerate() {
+                *v = (i * 10 + c) as f32;
+            }
+        }
+        assert_eq!(rows.n_pages(), 3);
+        for i in 0..7 {
+            let r = rows.row(i);
+            assert_eq!(r.len(), 4);
+            for (c, &v) in r.iter().enumerate() {
+                assert_eq!(v, (i * 10 + c) as f32, "row {i} col {c}");
+            }
+        }
+        assert_eq!(pool.outstanding_pages(), 3);
+        rows.release();
+        assert_eq!(rows.n_pages(), 0);
+        assert_eq!(pool.outstanding_pages(), 0, "explicit release returns every page");
+        // Re-ensuring after release works (the re-prefill path).
+        assert!(rows.ensure_row(5));
+        assert_eq!(rows.n_pages(), 2);
+        drop(rows);
+        assert_eq!(pool.outstanding_pages(), 0, "drop is the leak-proof safety net");
+    }
+
+    #[test]
+    fn exhaustion_is_a_clean_false_and_eviction_recovers() {
+        let pool = Arc::new(KvPool::new(2, 2, Some(2 * 2 * 2 * 4))); // 2 pages
+        let mut a = PagedRows::new(&pool);
+        let mut b = PagedRows::new(&pool);
+        assert!(a.ensure_row(3), "both pages fit one table");
+        assert!(!b.ensure_row(0), "pool exhausted: ensure fails without panicking");
+        assert_eq!(b.n_pages(), 0);
+        // Evicting `a` frees its pages; `b` can now grow.
+        a.release();
+        assert!(b.ensure_row(1));
+        assert_eq!(pool.outstanding_pages(), 1);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.outstanding_pages(), 0);
+    }
+
+    #[test]
+    fn row_read_is_layout_transparent() {
+        // The same logical rows through Matrix and PagedRows give the
+        // same slices — the bit-parity argument for paging the slabs.
+        let m = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let pool = Arc::new(KvPool::unbounded(2, 2));
+        let mut p = PagedRows::new(&pool);
+        for i in 0..3 {
+            assert!(p.ensure_row(i));
+            p.row_mut(i).copy_from_slice(Matrix::row(&m, i));
+        }
+        fn read<R: RowRead>(r: &R, i: usize) -> Vec<f32> {
+            r.row(i).to_vec()
+        }
+        for i in 0..3 {
+            assert_eq!(read(&m, i), read(&p, i));
+        }
+    }
+}

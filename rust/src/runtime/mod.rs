@@ -40,12 +40,14 @@
 
 #[cfg(feature = "pjrt")]
 mod engine;
+pub mod kvpool;
 pub mod native;
 #[cfg(feature = "pjrt")]
 mod session;
 
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
+pub use kvpool::{KvMemStats, KvPool, PagedRows, RowRead};
 pub use native::{NativeBackend, SeqSlot};
 #[cfg(feature = "pjrt")]
 pub use session::{ArgBank, PjrtBackend, TranslateSession};
@@ -225,6 +227,39 @@ pub trait SlotEngine {
 
     /// The slot's `slot_seq_len()`-token output buffer.
     fn slot_output(&self, slot: &Self::Slot) -> Vec<i32>;
+
+    /// KV-memory accounting, for engines whose slots draw pages from a
+    /// [`kvpool::KvPool`]. `None` (the default) means the engine does
+    /// not account KV memory and the scheduler must fall back to pure
+    /// slot-count admission — existing mock engines change nothing.
+    fn kv_stats(&self) -> Option<KvMemStats> {
+        None
+    }
+
+    /// Worst-case KV bytes one slot can ever demand (a full-length
+    /// decode's page tables). The scheduler's admission gate: a request
+    /// whose worst case exceeds the whole budget can never run and is
+    /// shed; one that exceeds the currently free bytes waits in the
+    /// queue. `0` (the default) disables the gate.
+    fn slot_worst_bytes(&self) -> usize {
+        0
+    }
+
+    /// KV bytes the *next* [`SlotEngine::step`] must newly allocate for
+    /// this slot (`0` while the decode cursor stays inside already-backed
+    /// pages). The scheduler sums this over the live set to detect
+    /// memory pressure *before* stepping, and evicts until the step is
+    /// guaranteed to fit.
+    fn slot_next_step_bytes(&self, _slot: &Self::Slot) -> usize {
+        0
+    }
+
+    /// Return the slot's KV pages to the pool. Called by the scheduler
+    /// at every slot retirement — completion, expiry, cancellation, and
+    /// preemption-by-eviction — so pool accounting is exact at each
+    /// scheduling boundary (engines should leak-check here; dropping
+    /// the slot must also release, as a safety net).
+    fn release_slot(&self, _slot: &mut Self::Slot) {}
 }
 
 #[cfg(test)]

@@ -72,6 +72,7 @@ use crate::qkernel::PackedLinear;
 use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
+use super::kvpool::{KvMemStats, KvPool, PagedRows, RowRead};
 use super::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
 
 /// Process-global decode-progress counters, registered once against
@@ -160,8 +161,12 @@ struct DecLayer {
 ///
 /// A slot owns everything a single decode lifecycle needs:
 ///
-/// * per-decoder-layer self-attention K and V slabs (`[seq_len x D]`,
-///   rows `0..len` valid — appended one row per step);
+/// * per-decoder-layer self-attention K and V row stores, **page-backed**
+///   ([`PagedRows`] over the backend's [`KvPool`]): rows `0..len` valid,
+///   appended one row per step, with pages allocated lazily just ahead
+///   of the decode cursor — so a slot's resident KV bytes track what it
+///   actually decoded, and admission can be bounded by *bytes* instead
+///   of slot count;
 /// * the cross-attention K/V of *this sequence's* encoder memory (also
 ///   per decoder layer, constant from admission on) plus the source-key
 ///   PAD mask — spliced in at [`NativeBackend::admit_slot`] so a freshly
@@ -179,10 +184,11 @@ struct DecLayer {
 /// mixed-age batch is bit-identical to stepping it alone — the invariant
 /// the continuous batcher's parity tests pin.
 pub struct SeqSlot {
-    /// Per-decoder-layer self-attention key slab `[seq_len x D]`.
-    self_k: Vec<Matrix>,
-    /// Per-decoder-layer self-attention value slab `[seq_len x D]`.
-    self_v: Vec<Matrix>,
+    /// Per-decoder-layer self-attention key rows (page-backed, grows
+    /// with the decode cursor).
+    self_k: Vec<PagedRows>,
+    /// Per-decoder-layer self-attention value rows (page-backed).
+    self_v: Vec<PagedRows>,
     /// Per-decoder-layer cross-attention (K, V) of the encoder memory.
     cross: Vec<(Matrix, Matrix)>,
     /// Source-key validity (`token != PAD`) of the encoder memory.
@@ -223,6 +229,26 @@ impl SeqSlot {
     /// The decoded token buffer (BOS-framed, PAD-padded, `seq_len` long).
     pub fn buffer(&self) -> &[i32] {
         &self.buf
+    }
+
+    /// Exact KV bytes this slot's page tables currently hold.
+    pub fn resident_bytes(&self) -> usize {
+        self.self_k.iter().chain(self.self_v.iter()).map(PagedRows::resident_bytes).sum()
+    }
+
+    /// Pages this slot's tables currently hold.
+    pub fn resident_pages(&self) -> usize {
+        self.self_k.iter().chain(self.self_v.iter()).map(PagedRows::n_pages).sum()
+    }
+
+    /// Return every KV page to the pool (retirement/eviction). Dropping
+    /// the slot also releases; this explicit form lets the scheduler
+    /// leak-check at the retirement boundary.
+    fn release_pages(&mut self) {
+        for rows in self.self_k.iter_mut().chain(self.self_v.iter_mut()) {
+            rows.release();
+        }
+        debug_assert_eq!(self.resident_pages(), 0, "retired slot leaked KV pages");
     }
 }
 
@@ -293,6 +319,11 @@ pub struct NativeBackend {
     workers: usize,
     /// How `translate` runs its greedy decode loop (cached by default).
     decode: DecodePolicy,
+    /// Page pool every slot's self-attention K/V rows draw from.
+    /// Defaults to unbounded with `seq_len`-row pages (exact residency
+    /// accounting, no admission bound); [`Self::with_kv_pool`] installs
+    /// a byte budget and page geometry.
+    kv_pool: Arc<KvPool>,
 }
 
 impl NativeBackend {
@@ -490,6 +521,7 @@ impl NativeBackend {
 
         let enc_ln = ln("enc_ln")?;
         let dec_ln = ln("dec_ln")?;
+        let kv_pool = Arc::new(KvPool::unbounded(dims.seq_len.max(1), dims.d_model.max(1)));
         Ok(NativeBackend {
             dims,
             head_dim,
@@ -505,6 +537,7 @@ impl NativeBackend {
             act_levels,
             workers: workers.max(1),
             decode: DecodePolicy::default(),
+            kv_pool,
         })
     }
 
@@ -513,6 +546,27 @@ impl NativeBackend {
     pub fn with_decode(mut self, policy: DecodePolicy) -> NativeBackend {
         self.decode = policy;
         self
+    }
+
+    /// Install a budgeted KV page pool: pages of `page_tokens` rows per
+    /// K/V table, `budget_bytes` across all live slots (`None` keeps
+    /// the budget unbounded but changes the page geometry). Paging is
+    /// bit-transparent — rows keep their values and accumulation order
+    /// wherever they live — so any budget/geometry produces identical
+    /// tokens; a too-small budget surfaces as scheduling (queueing,
+    /// preemption) or a typed step error, never as different bits.
+    ///
+    /// Call before creating slots: existing slots keep drawing from the
+    /// pool they were admitted under.
+    pub fn with_kv_pool(mut self, budget_bytes: Option<usize>, page_tokens: usize) -> NativeBackend {
+        let pt = page_tokens.clamp(1, self.dims.seq_len.max(1));
+        self.kv_pool = Arc::new(KvPool::new(pt, self.dims.d_model.max(1), budget_bytes));
+        self
+    }
+
+    /// The backend's KV page pool (accounting reads).
+    pub fn kv_pool(&self) -> &Arc<KvPool> {
+        &self.kv_pool
     }
 
     /// The active greedy-decode policy.
@@ -731,11 +785,15 @@ impl NativeBackend {
     }
 
     /// Single-query attention of one batch row over the first `n_keys`
-    /// rows of a per-sequence K/V slab: the step-wise, slot-addressed
-    /// counterpart of [`Self::attend`] (`tq = 1`, keys truncated to the
-    /// filled prefix). `q_row`/`out` are one `[D]` row; `k`/`v` are a
-    /// slot's `[seq_len x D]` slabs. Each row carrying its own `n_keys`
-    /// is what lets sequences of different ages share one step batch.
+    /// rows of a per-sequence K/V row store: the step-wise,
+    /// slot-addressed counterpart of [`Self::attend`] (`tq = 1`, keys
+    /// truncated to the filled prefix). `q_row`/`out` are one `[D]` row;
+    /// `k`/`v` are any [`RowRead`] row store — the contiguous cross K/V
+    /// [`Matrix`] or the page-backed self-attention [`PagedRows`]
+    /// (paging moves rows, never their values or per-element order, so
+    /// the two layouts are bit-identical through this kernel). Each row
+    /// carrying its own `n_keys` is what lets sequences of different
+    /// ages share one step batch.
     ///
     /// Bit-identical to [`Self::attend`] over a full score row whose keys
     /// `>= n_keys` are masked: masked scores underflow to exactly 0 after
@@ -747,11 +805,11 @@ impl NativeBackend {
     /// reallocated, once warm) to `n_keys` and fully overwritten before
     /// use — one allocation per step batch instead of one per row.
     #[allow(clippy::too_many_arguments)] // mirrors attend's one call-site geometry
-    fn attend_slot_row(
+    fn attend_slot_row<M: RowRead>(
         &self,
         q_row: &[f32],
-        k: &Matrix,
-        v: &Matrix,
+        k: &M,
+        v: &M,
         n_keys: usize,
         allowed: impl Fn(usize) -> bool,
         scratch: &mut Vec<f32>,
@@ -898,13 +956,15 @@ impl NativeBackend {
     /// cross K/V (`[seq_len x D]` each) and source-key mask.
     fn slot_from_parts(&self, cross: Vec<(Matrix, Matrix)>, src_ok: Vec<bool>) -> SeqSlot {
         let s = self.dims.seq_len;
-        let d = self.dims.d_model;
         let n_dec = self.dec.len();
         let mut buf = vec![self.dims.pad_id; s];
         buf[0] = self.dims.bos_id;
         SeqSlot {
-            self_k: (0..n_dec).map(|_| Matrix::zeros(s, d)).collect(),
-            self_v: (0..n_dec).map(|_| Matrix::zeros(s, d)).collect(),
+            // Page tables start empty: pages are allocated lazily by
+            // step_slots, one step ahead of the decode cursor, so
+            // admission itself never draws from the budget.
+            self_k: (0..n_dec).map(|_| PagedRows::new(&self.kv_pool)).collect(),
+            self_v: (0..n_dec).map(|_| PagedRows::new(&self.kv_pool)).collect(),
             cross,
             src_ok,
             tgt_ok: vec![false; s],
@@ -958,6 +1018,27 @@ impl NativeBackend {
                 "token {t} in slot {r} outside vocab 0..{}",
                 self.dims.vocab
             );
+        }
+
+        // Page-ensure pre-pass: back row `len` of every K/V table before
+        // any decode state changes. Page allocation is idempotent
+        // bookkeeping (already-backed tables are a no-op and acquired
+        // pages survive an Err), so a failed batch remains re-steppable
+        // — the memory-aware scheduler prevents this Err by evicting
+        // under pressure; hitting it means the pool is over-committed
+        // beyond what eviction can recover (e.g. a lone slot larger
+        // than the whole budget).
+        for (r, slot) in slots.iter_mut().enumerate() {
+            let i = slot.len;
+            for rows in slot.self_k.iter_mut().chain(slot.self_v.iter_mut()) {
+                ensure!(
+                    rows.ensure_row(i),
+                    "kv pool exhausted backing row {i} of slot {r} \
+                     (resident {} bytes, budget {:?})",
+                    self.kv_pool.resident_bytes(),
+                    self.kv_pool.budget_bytes()
+                );
+            }
         }
 
         // Embed each slot's current token at its own position.
@@ -1132,6 +1213,37 @@ impl SlotEngine for NativeBackend {
     fn slot_output(&self, slot: &SeqSlot) -> Vec<i32> {
         slot.buffer().to_vec()
     }
+
+    fn kv_stats(&self) -> Option<KvMemStats> {
+        Some(self.kv_pool.stats())
+    }
+
+    /// Worst case = a full-length decode: rows `0..seq_len-1` across
+    /// `2 * n_dec` K/V tables, rounded up to whole pages.
+    fn slot_worst_bytes(&self) -> usize {
+        let rows = self.dims.seq_len.saturating_sub(1);
+        2 * self.dec.len() * self.kv_pool.pages_for(rows) * self.kv_pool.page_bytes()
+    }
+
+    /// Bytes the next step must allocate: one page per K/V table whose
+    /// cursor row crosses into unbacked territory (0 mid-page).
+    fn slot_next_step_bytes(&self, slot: &SeqSlot) -> usize {
+        if slot.complete() {
+            return 0;
+        }
+        let i = slot.len;
+        let tables = slot
+            .self_k
+            .iter()
+            .chain(slot.self_v.iter())
+            .filter(|rows| rows.needs_page_for(i))
+            .count();
+        tables * self.kv_pool.page_bytes()
+    }
+
+    fn release_slot(&self, slot: &mut SeqSlot) {
+        slot.release_pages();
+    }
 }
 
 impl NativeBackend {
@@ -1291,11 +1403,13 @@ mod tests {
         assert_eq!(argmax(&[2.0, 1.0]), 0);
     }
 
-    /// A hand-built slot (no model needed): 2 decoder layers, seq 5, D 4.
-    fn test_slot(s: usize, d: usize) -> SeqSlot {
+    /// A hand-built slot (no model needed): 2 decoder layers, seq 5, D 4,
+    /// drawing KV pages from `pool`.
+    fn test_slot(s: usize, d: usize, pool: &Arc<KvPool>) -> SeqSlot {
+        assert_eq!(pool.width(), d, "pool geometry matches the slot");
         SeqSlot {
-            self_k: (0..2).map(|_| Matrix::zeros(s, d)).collect(),
-            self_v: (0..2).map(|_| Matrix::zeros(s, d)).collect(),
+            self_k: (0..2).map(|_| PagedRows::new(pool)).collect(),
+            self_v: (0..2).map(|_| PagedRows::new(pool)).collect(),
             cross: (0..2).map(|_| (Matrix::zeros(s, d), Matrix::zeros(s, d))).collect(),
             src_ok: vec![true; s],
             tgt_ok: vec![false; s],
@@ -1307,21 +1421,40 @@ mod tests {
 
     #[test]
     fn seq_slot_lifecycle_bookkeeping() {
-        let mut slot = test_slot(5, 4);
+        let pool = Arc::new(KvPool::unbounded(5, 4));
+        let mut slot = test_slot(5, 4, &pool);
         assert!(slot.is_empty());
         assert_eq!(slot.len(), 0);
         assert!(!slot.is_done() && !slot.complete());
         assert_eq!(slot.self_k.len(), 2);
-        assert_eq!(slot.self_k[0].shape(), (5, 4));
+        assert_eq!(slot.resident_bytes(), 0, "pages are lazy: a fresh slot holds none");
         assert_eq!(slot.buffer().len(), 5);
         // Each slot ages independently of any batch it shares a step with.
         slot.len = 3;
         assert!(!slot.complete(), "positions remain in the buffer");
         slot.len = 4;
         assert!(slot.complete(), "len + 1 == seq_len: buffer full");
-        let mut eos = test_slot(5, 4);
+        let mut eos = test_slot(5, 4, &pool);
         eos.done = true;
         assert!(eos.complete(), "EOS retires a slot regardless of age");
+    }
+
+    #[test]
+    fn slot_pages_account_and_release_at_retirement() {
+        let pool = Arc::new(KvPool::new(2, 4, Some(64 * 1024)));
+        let mut slot = test_slot(5, 4, &pool);
+        // Back rows 0..3 across all four tables (2 layers x K/V), the way
+        // step_slots' page-ensure pre-pass does.
+        for i in 0..3 {
+            for t in slot.self_k.iter_mut().chain(slot.self_v.iter_mut()) {
+                assert!(t.ensure_row(i));
+            }
+        }
+        assert_eq!(slot.resident_pages(), 4 * 2, "rows 0..3 need 2 pages per table");
+        assert_eq!(slot.resident_bytes(), pool.resident_bytes(), "slot view == pool view");
+        slot.release_pages();
+        assert_eq!(slot.resident_pages(), 0);
+        assert_eq!(pool.outstanding_pages(), 0, "retirement returns every page");
     }
 
     #[test]

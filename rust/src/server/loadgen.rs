@@ -47,6 +47,11 @@ pub struct LoadGenConfig {
     pub vocab: i32,
     /// Per-request decode-step deadline forwarded to the server.
     pub deadline_steps: Option<usize>,
+    /// Retry budget for 503 `Overloaded` responses, per request. Each
+    /// retry backs off exponentially (5ms doubling, capped) with seeded
+    /// jitter so a shed burst does not re-arrive in lockstep. `0` (the
+    /// default) keeps the historical fire-once behaviour.
+    pub retry_503: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -59,6 +64,7 @@ impl Default for LoadGenConfig {
             len_range: (2, 8),
             vocab: 16,
             deadline_steps: None,
+            retry_503: 0,
         }
     }
 }
@@ -74,6 +80,12 @@ pub struct LoadReport {
     pub errors: BTreeMap<u16, usize>,
     /// Generated tokens across successful responses.
     pub tokens: usize,
+    /// 503 retries that went back on the wire. Kept out of `sent` so
+    /// the ledger cross-check stays exact: the server's `received`
+    /// counter equals client `sent + retries` (every retry is a fresh
+    /// HTTP request server-side), while `sent == ok + failed()` still
+    /// accounts one outcome per *scheduled* request.
+    pub retries: usize,
     pub wall_s: f64,
     /// Client-observed request latency (send to full response), seconds.
     pub latency: Summary,
@@ -99,6 +111,9 @@ impl LoadReport {
     pub fn print(&self, label: &str) {
         println!("== loadgen ({label}) ==");
         println!("sent          : {} ({} ok, {} failed)", self.sent, self.ok, self.failed());
+        if self.retries > 0 {
+            println!("retries (503) : {}", self.retries);
+        }
         println!("wall time     : {:.2}s", self.wall_s);
         println!("throughput    : {:.1} req/s", self.throughput_rps());
         println!("tokens/sec    : {:.1} ({} generated tokens)", self.tokens_per_s(), self.tokens);
@@ -124,6 +139,7 @@ struct Part {
     sent: usize,
     ok: usize,
     tokens: usize,
+    retries: usize,
     errors: BTreeMap<u16, usize>,
     latency: Summary,
 }
@@ -150,9 +166,14 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> Result<LoadReport> 
     let t0 = Instant::now();
     let workers: Vec<_> = plans
         .into_iter()
-        .map(|plan| {
+        .enumerate()
+        .map(|(i, plan)| {
             let deadline_steps = cfg.deadline_steps;
-            std::thread::spawn(move || run_connection(addr, t0, plan, deadline_steps))
+            let retry_503 = cfg.retry_503;
+            // Per-connection backoff jitter stream, derived from the run
+            // seed so retry timing is as reproducible as the schedule.
+            let rng = Pcg64::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+            std::thread::spawn(move || run_connection(addr, t0, plan, deadline_steps, retry_503, rng))
         })
         .collect();
     let mut report = LoadReport::default();
@@ -161,6 +182,7 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> Result<LoadReport> 
         report.sent += part.sent;
         report.ok += part.ok;
         report.tokens += part.tokens;
+        report.retries += part.retries;
         for (status, n) in part.errors {
             *report.errors.entry(status).or_insert(0) += n;
         }
@@ -186,11 +208,31 @@ pub fn http_get(addr: SocketAddr, target: &str) -> Result<HttpResponse> {
     conn.read_response().with_context(|| format!("scrape GET {target}"))
 }
 
+/// One request attempt. A transport failure reconnects once (the server
+/// sheds whole connections at the accept level under overload); a second
+/// failure yields `None` and the attempt counts as a transport miss.
+fn send_once(conn: &mut HttpConn<TcpStream>, addr: SocketAddr, body: &Json) -> Option<HttpResponse> {
+    match exchange(conn, body) {
+        Ok(resp) => Some(resp),
+        Err(_) => {
+            let s = TcpStream::connect(addr).ok()?;
+            s.set_nodelay(true).ok();
+            *conn = HttpConn::new(s);
+            exchange(conn, body).ok()
+        }
+    }
+}
+
+/// Longest pause between 503 retries (the exponential backoff cap).
+const BACKOFF_CAP: Duration = Duration::from_millis(160);
+
 fn run_connection(
     addr: SocketAddr,
     t0: Instant,
     plan: Vec<(Duration, Vec<i32>)>,
     deadline_steps: Option<usize>,
+    retry_503: usize,
+    mut rng: Pcg64,
 ) -> Result<Part> {
     let mut part = Part::default();
     if plan.is_empty() {
@@ -215,29 +257,28 @@ fn run_connection(
         let body = Json::obj(fields);
         let t_send = Instant::now();
         part.sent += 1;
-        let resp = match exchange(&mut conn, &body) {
-            Ok(resp) => resp,
-            Err(_) => {
-                // The server sheds whole connections at the accept level
-                // under overload; reconnect once, else count the miss.
-                match TcpStream::connect(addr) {
-                    Ok(s) => {
-                        s.set_nodelay(true).ok();
-                        conn = HttpConn::new(s);
-                        match exchange(&mut conn, &body) {
-                            Ok(resp) => resp,
-                            Err(_) => {
-                                *part.errors.entry(0).or_insert(0) += 1;
-                                continue;
-                            }
-                        }
-                    }
-                    Err(_) => {
-                        *part.errors.entry(0).or_insert(0) += 1;
-                        continue;
-                    }
+        // Shed responses are retryable by construction (the request never
+        // reached a slot), so back off and re-offer up to the budget.
+        let mut left = retry_503;
+        let mut backoff = Duration::from_millis(5);
+        let resp = loop {
+            match send_once(&mut conn, addr, &body) {
+                None => break None,
+                Some(resp) if resp.status == 503 && left > 0 => {
+                    left -= 1;
+                    part.retries += 1;
+                    // Jitter in [0.5, 1.5)x keeps a shed burst from
+                    // re-arriving in lockstep; the stream is seeded, so
+                    // timing is reproducible run to run.
+                    std::thread::sleep(backoff.mul_f64(0.5 + rng.next_f64()));
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
                 }
+                Some(resp) => break Some(resp),
             }
+        };
+        let Some(resp) = resp else {
+            *part.errors.entry(0).or_insert(0) += 1;
+            continue;
         };
         part.latency.add(t_send.elapsed().as_secs_f64());
         if resp.status == 200 {
@@ -307,11 +348,16 @@ mod tests {
         r.ok = 8;
         r.errors.insert(503, 2);
         r.tokens = 40;
+        r.retries = 3;
         r.wall_s = 2.0;
         for i in 0..8 {
             r.latency.add(0.01 * (i + 1) as f64);
         }
         assert_eq!(r.failed(), 2);
+        // The ledger identity the cross-checks rely on: every scheduled
+        // request has exactly one outcome, retries ride on top.
+        assert_eq!(r.sent, r.ok + r.failed());
+        assert_eq!(r.sent + r.retries, 13, "wire-level requests = sent + retries");
         assert!((r.throughput_rps() - 4.0).abs() < 1e-12);
         assert!((r.tokens_per_s() - 20.0).abs() < 1e-12);
         assert_eq!(r.latency.count(), 8);

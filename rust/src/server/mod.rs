@@ -85,6 +85,13 @@ pub struct HttpConfig {
     /// Socket read timeout: the granularity at which idle handler
     /// threads notice a drain.
     pub read_timeout: Duration,
+    /// Socket write timeout: bounds how long a stalled reader (a client
+    /// that stops draining its socket mid-response) can pin a handler
+    /// thread. A timed-out write surfaces as an `io::Error`, the
+    /// handler returns, and dropping the response receiver cancels any
+    /// in-flight request server-side — a slow reader costs one clean
+    /// disconnect, never a wedged handler.
+    pub write_timeout: Duration,
     /// Upper bound a handler waits for the serve loop's outcome before
     /// answering 500 and cancelling the request (dropping the response
     /// receiver retires the slot server-side).
@@ -99,6 +106,7 @@ impl Default for HttpConfig {
             max_body_bytes: 1 << 20,
             keep_alive_requests: 1024,
             read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
             response_timeout: Duration::from_secs(30),
         }
     }
@@ -289,6 +297,11 @@ fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Request>, ctx: Arc<Ctx>) 
 
 fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Request>, ctx: &Ctx) {
     let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    // Without a write timeout a stalled reader wedges this handler
+    // forever once the socket's send buffer fills; with one, the write
+    // errors out, `route` reports the connection unusable, and the
+    // request (if any) is cancelled by dropping its response receiver.
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
     let _ = stream.set_nodelay(true);
     let mut conn = HttpConn::new(CountingStream {
         inner: stream,

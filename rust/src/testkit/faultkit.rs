@@ -235,6 +235,29 @@ impl<'a, E: SlotEngine> SlotEngine for FaultyEngine<'a, E> {
             None => Vec::new(),
         }
     }
+
+    // KV memory accounting passes straight through: chaos runs see the
+    // inner engine's real pool, so memory-pressure soaks can combine
+    // scripted faults with a tight byte budget.
+
+    fn kv_stats(&self) -> Option<crate::runtime::KvMemStats> {
+        self.inner.kv_stats()
+    }
+
+    fn slot_worst_bytes(&self) -> usize {
+        self.inner.slot_worst_bytes()
+    }
+
+    fn slot_next_step_bytes(&self, slot: &FaultySlot<E::Slot>) -> usize {
+        // A stalled slot holds no inner state, so it demands no pages.
+        slot.inner.as_ref().map(|s| self.inner.slot_next_step_bytes(s)).unwrap_or(0)
+    }
+
+    fn release_slot(&self, slot: &mut FaultySlot<E::Slot>) {
+        if let Some(s) = slot.inner.as_mut() {
+            self.inner.release_slot(s);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,11 +15,15 @@
 //!   the same input, with at least one genuine progress chunk ahead of
 //!   the terminal line;
 //! * the open-loop load generator drives the server end to end and its
-//!   client-side accounting agrees with the server's `ServeStats`.
+//!   client-side accounting agrees with the server's `ServeStats`;
+//! * a stalled reader — a client that requests a multi-megabyte body
+//!   and then never reads its socket — costs one clean disconnect via
+//!   the write timeout, never a wedged handler: other clients stay
+//!   served and the drain completes promptly with balanced books.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use itera_llm::coordinator::{
     response_channel, serve_loop_continuous, Request, ResponseRx, ServeConfig,
@@ -426,4 +430,123 @@ fn loadgen_drives_the_server_and_accounts_cleanly() {
     assert_eq!(stats.served, N, "server books agree with the client");
     assert_eq!(stats.received, N);
     assert!(stats.is_balanced(), "{stats:?}");
+}
+
+/// Echo engine with a request-selected payload: a row whose first
+/// content token is `7` completes into a full-`seq` run of content
+/// tokens — a multi-megabyte unary body — while anything else echoes
+/// its row. Big responses let a test overfill the kernel's socket
+/// buffers and stall a handler mid-write.
+struct BigSlots {
+    seq: usize,
+}
+
+struct BigSlot {
+    row: Vec<i32>,
+    steps: usize,
+}
+
+impl SlotEngine for BigSlots {
+    type Slot = BigSlot;
+    fn slot_seq_len(&self) -> usize {
+        self.seq
+    }
+    fn admit(&self, src_row: &[i32]) -> anyhow::Result<BigSlot> {
+        Ok(BigSlot { row: src_row.to_vec(), steps: 0 })
+    }
+    fn step(&self, slots: &mut [&mut BigSlot]) -> anyhow::Result<()> {
+        for s in slots.iter_mut() {
+            s.steps += 1;
+        }
+        Ok(())
+    }
+    fn slot_complete(&self, slot: &BigSlot) -> bool {
+        slot.steps >= 1
+    }
+    fn slot_output(&self, slot: &BigSlot) -> Vec<i32> {
+        if slot.row.get(1) == Some(&7) {
+            // BOS + (seq - 2) content tokens + EOS: de-frames to a
+            // response body of roughly 3 bytes per content token.
+            let mut out = vec![1];
+            out.resize(self.seq - 1, 10);
+            out.push(2);
+            out
+        } else {
+            slot.row.clone()
+        }
+    }
+}
+
+/// The slow-reader regression bar: a client that requests a ~3 MB body
+/// and then never reads a byte fills the loopback socket's buffers
+/// (~hundreds of KB unread capacity) and stalls the handler's write.
+/// With the write timeout configured, the write errors out, the handler
+/// thread is freed, and the connection is closed with the body
+/// undelivered — meanwhile a second client is served normally and the
+/// post-shutdown drain completes well inside the 2 s handler grace a
+/// wedged writer would otherwise exhaust.
+#[test]
+fn http_write_timeout_unwedges_a_stalled_reader_and_books_balance() {
+    // ~3 MB of `10,` body bytes: ~5x the worst unread capacity of a
+    // loopback connection under default kernel buffer sizing, so the
+    // server's write reliably blocks once the client stops reading.
+    const BIG_SEQ: usize = 1_000_000;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let engine = BigSlots { seq: BIG_SEQ };
+        let mut cfg = HttpConfig::new(ServeConfig::new(2));
+        cfg.write_timeout = Duration::from_millis(200);
+        serve_http(&engine, listener, &tiny_dims(BIG_SEQ), cfg).unwrap()
+    });
+
+    // The stalled reader: request the big body, then never touch the
+    // socket again until after the server has drained.
+    let mut stalled = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let body = Json::obj(vec![("tokens", Json::arr_f64(&[7.0]))]);
+    write_request(stalled.get_mut(), "POST", "/v1/translate", Some(&body)).unwrap();
+
+    // While the stalled handler is blocked in its write, a second
+    // client must be served normally: handlers are isolated and the
+    // serve loop never wedges.
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = Instant::now();
+    let mut conn = HttpConn::new(TcpStream::connect(addr).unwrap());
+    let (status, j) = post_translate(&mut conn, &[9], vec![]);
+    assert_eq!(status, 200, "a healthy client is served during the stall: {j:?}");
+    assert_eq!(tokens_of(&j), vec![9], "echo de-frames the healthy row");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "the healthy request must not queue behind the stalled write"
+    );
+
+    // Give the write timeout time to fire and free the handler, then
+    // drain. A wedged handler would pin `active` and cost the full 2 s
+    // join grace; a freed one drains promptly.
+    std::thread::sleep(Duration::from_millis(600));
+    let t0 = Instant::now();
+    shutdown(addr);
+    let stats = server.join().expect("server thread");
+    let drain = t0.elapsed();
+    assert!(
+        drain < Duration::from_millis(1500),
+        "drain took {drain:?}: the stalled handler was not freed by the write timeout"
+    );
+
+    // The stalled client got a clean disconnect, not the full body:
+    // whatever the kernel buffered is a strict prefix, so reassembling
+    // the response fails.
+    assert!(
+        stalled.read_response().is_err(),
+        "the stalled reader must not receive the complete multi-megabyte response"
+    );
+
+    // Server-side the request was served into the void — the outcome
+    // was delivered to the handler before the write stalled — so the
+    // books still balance.
+    assert_eq!(stats.received, 2, "both translate requests reached the loop");
+    assert_eq!(stats.served, 2, "the stalled request was served before its write failed");
+    assert_eq!(stats.failed(), 0);
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
 }

@@ -18,7 +18,10 @@
 //! * BLEU evaluation and the request-batching serve loop run end-to-end —
 //!   and the continuous (slot-scheduled) serve loop answers every request
 //!   with exactly the static batcher's tokens while balancing its
-//!   request/response/latency accounting (the soak test).
+//!   request/response/latency accounting (the soak test);
+//! * under a byte-bounded paged KV pool, preemption-by-eviction and
+//!   re-prefill keep survivor outputs bit-identical to an unbounded run
+//!   and leak zero pages (the memory-pressure soak).
 
 use std::collections::BTreeMap;
 
@@ -644,6 +647,141 @@ fn serve_continuous_overload_sheds_and_balances() {
         }
     }
     assert_eq!((ok, over), (3, N - 3), "every burst request answered exactly once");
+}
+
+/// THE memory-pressure chaos soak: the native engine on a page-backed
+/// KV pool with a deliberately tight byte budget (one slot's worst case
+/// plus four one-token pages), wrapped in the fault-injection harness —
+/// one scripted step fault and one poisoned admission ride on top of
+/// continuous eviction pressure. The workload is N copies of the
+/// longest-decoding corpus row, so two live slots are guaranteed to
+/// outgrow the budget mid-decode and the younger one is evicted back to
+/// the queue and re-prefilled. The bars: survivors are **bit-identical**
+/// to a fault-free run on an unbounded pool (eviction + replay changes
+/// nothing), the accounting identity balances with the two scripted
+/// faults, and **zero KV pages leak** across every retirement path
+/// (retire, fault, evict). This is the e2e the CI memory leg runs.
+#[test]
+fn serve_continuous_memory_pressure_soak_is_bit_identical_and_leak_free() {
+    use std::sync::mpsc;
+
+    use itera_llm::coordinator::{
+        response_channel, serve_loop_continuous, Request, ResponseRx, ServeConfig, ServeError,
+    };
+    use itera_llm::runtime::SlotEngine;
+    use itera_llm::testkit::faultkit::{FaultScript, FaultyEngine};
+
+    let f = fixture("mempress");
+    let dims = &f.manifest.model;
+    let s = dims.seq_len;
+    let unbounded = NativeBackend::fp32(&f.manifest, &f.model, 2).unwrap();
+
+    // Probe for the corpus row with the longest greedy decode:
+    // long-lived slots are what make two live sequences outgrow a tight
+    // budget at the same time.
+    let probe: Vec<Vec<i32>> = (0..f.corpus.n).map(|i| f.corpus.src_row(i).to_vec()).collect();
+    let outs = unbounded.translate_stream(&probe).unwrap();
+    let steps_of = |out: &[i32]| {
+        out[1..s].iter().position(|&t| t == dims.eos_id).map(|p| p + 1).unwrap_or(s - 1)
+    };
+    let longest = (0..probe.len()).max_by_key(|&i| steps_of(&outs[i])).unwrap();
+    let long_steps = steps_of(&outs[longest]);
+
+    const N: usize = 10;
+    let rows: Vec<Vec<i32>> = (0..N).map(|_| probe[longest].clone()).collect();
+
+    // Fault-free reference on the unbounded pool: the bit-identity bar.
+    let reference: Vec<Vec<i32>> = {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let receivers: Vec<ResponseRx> = rows
+            .iter()
+            .map(|row| {
+                let (rtx, rrx) = response_channel();
+                tx.send(Request::new(row.clone(), rtx)).unwrap();
+                rrx
+            })
+            .collect();
+        drop(tx);
+        let stats =
+            serve_loop_continuous(&unbounded, &rx, dims, N, &ServeConfig::new(3)).unwrap();
+        assert_eq!(stats.served, N, "reference run is fault-free");
+        assert_eq!(stats.preempted, 0, "unbounded pool never preempts");
+        receivers
+            .iter()
+            .map(|r| r.recv().expect("answered").expect("fault-free").tokens)
+            .collect()
+    };
+
+    // One-token pages, budget = worst case + 4 pages: a second slot is
+    // admitted as soon as the gate sees room, but two long decodes can
+    // never both reach full length.
+    let paged = NativeBackend::fp32(&f.manifest, &f.model, 2).unwrap().with_kv_pool(None, 1);
+    let worst = paged.slot_worst_bytes();
+    let page = paged.kv_pool().page_bytes();
+    let budget = worst + 4 * page;
+    let paged = paged.with_kv_pool(Some(budget), 1);
+
+    // Chaos rider: admission #0 (request 0, admitted alone on the first
+    // tick) faults at its first decode step; admission #1 (request 1) is
+    // born poisoned. Every later admission — including preemption
+    // re-admissions — falls past the script list and is clean.
+    let scripts = vec![
+        FaultScript { fault_at_step: Some(0), ..FaultScript::clean() },
+        FaultScript { born_poisoned: true, ..FaultScript::clean() },
+    ];
+    let engine = FaultyEngine::scripted(&paged, scripts);
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let receivers: Vec<ResponseRx> = rows
+        .iter()
+        .map(|row| {
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(row.clone(), rtx)).unwrap();
+            rrx
+        })
+        .collect();
+    drop(tx);
+    let stats = serve_loop_continuous(&engine, &rx, dims, N, &ServeConfig::new(3)).unwrap();
+
+    // The two scripted victims fault; every survivor must be
+    // bit-identical to the fault-free unbounded run — eviction plus
+    // re-prefill may not change a single token.
+    for (i, rrx) in receivers.iter().enumerate() {
+        let out = rrx.recv().expect("server answers every request");
+        if i < 2 {
+            assert!(
+                matches!(out, Err(ServeError::EngineFault(_))),
+                "request {i}: scripted fault must surface as EngineFault, got {out:?}"
+            );
+        } else {
+            let resp = out.unwrap_or_else(|e| panic!("survivor {i} must be served, got {e}"));
+            assert_eq!(
+                resp.tokens, reference[i],
+                "request {i}: survivor diverged after preemption/re-prefill"
+            );
+        }
+    }
+
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.served, N - 2);
+    assert_eq!(stats.faulted, 2, "one step fault + one poisoned admission");
+    assert_eq!((stats.shed, stats.expired, stats.cancelled), (0, 0, 0), "{stats:?}");
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
+
+    // Guaranteed preemption whenever the longest decode actually runs
+    // long (a random tiny model decodes most rows to the buffer end;
+    // guarded so the bar never hinges on incidental corpus content).
+    if long_steps >= 8 {
+        assert!(
+            stats.preempted >= 1,
+            "two {long_steps}-step decodes under a {}-page budget must collide",
+            budget / page
+        );
+    }
+
+    // Zero page leaks: every retirement path released its slot's pages.
+    assert_eq!(paged.kv_pool().outstanding_pages(), 0, "leaked KV pages after drain");
+    assert_eq!(paged.kv_pool().resident_bytes(), 0, "resident bytes after drain");
 }
 
 /// Backend over `layers` at A8 with the given execution mode.
