@@ -100,10 +100,10 @@ fn main() {
         });
         let (qx, sx) = quant::quantize_vec_parts(&x, 8);
         b.bench("qkernel/qmatvec_i32_512_w4", || {
-            std::hint::black_box(qm4.qmatvec_i32(&qx, sx));
+            std::hint::black_box(qm4.qmatvec_i32(&qx, sx).unwrap());
         });
         b.bench("qkernel/qmatvec_i32_512_w8", || {
-            std::hint::black_box(qm8.qmatvec_i32(&qx, sx));
+            std::hint::black_box(qm8.qmatvec_i32(&qx, sx).unwrap());
         });
         // Dequantized f32 baseline for the same matvec (what the dense
         // fake-quant path pays per token).
@@ -235,6 +235,9 @@ fn main() {
     // ---- decode policies: full-buffer replay vs KV-cached steps --------
     decode_benches(&mut b, workers);
 
+    // ---- kernel tiers: pure-i32 GEMV + fast-vs-exact cached decode -----
+    kernel_benches(&mut b, workers);
+
     // ---- serving batchers: static waves vs continuous slot scheduling --
     batcher_benches(&mut b, workers);
 
@@ -347,6 +350,113 @@ fn decode_benches(b: &mut Bench, workers: usize) {
                 / be.linear_macs_for(rows, DecodePolicy::Cached) as f64,
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Integer-kernel lanes (`cargo bench --bench hot_paths kernel` selects
+/// the group): the pure-i32 GEMV on the Fig. 10 512x512 shape at
+/// W2/W4/W8, benched with a FLOP denominator so `items_per_s` reads as
+/// FLOP/s (`qkernel/gemv_i32_w{2,4,8}`), the whole fast-tier linear with
+/// its runtime A8 activation quantization included
+/// (`qkernel/matvec_fast_512_w4`), and the end-to-end KV-cached greedy
+/// decode under both kernel tiers on the W4 quantized tiny model
+/// (`runtime/native_decode_{exact,fast}_quantized` tokens/sec, plus the
+/// low-rank integer cascade as `runtime/native_decode_fast_cascade`).
+/// The fast tier's >= 1.3x throughput bar at W4 is read off the two
+/// `*_quantized` lanes in BENCH_hot_paths.json; its (non-bit-exact)
+/// numerics are fenced separately by `validate --kernel fast`.
+fn kernel_benches(b: &mut Bench, workers: usize) {
+    use std::collections::BTreeMap;
+
+    use itera_llm::compress::CompressedLinear;
+    use itera_llm::qkernel::PackedLinear;
+    use itera_llm::runtime::{KernelTier, Mode, NativeBackend, TranslateBackend};
+    use itera_llm::testkit::tinymodel;
+
+    b.set_group(Some("kernel"));
+    let lanes = [
+        "qkernel/gemv_i32_w2",
+        "qkernel/gemv_i32_w4",
+        "qkernel/gemv_i32_w8",
+        "qkernel/matvec_fast_512_w4",
+        "runtime/native_decode_exact_quantized",
+        "runtime/native_decode_fast_quantized",
+        "runtime/native_decode_fast_cascade",
+    ];
+    if !lanes.iter().any(|n| b.enabled(n)) {
+        b.set_group(None);
+        return;
+    }
+
+    // One i8 activation vector against the packed 512x512 grid: the
+    // decode hot loop's per-output-row work, 2*K*N FLOPs per call.
+    let mut rng = Pcg64::new(0x6E4F);
+    let w = Matrix::randn(512, 512, &mut rng).scale(0.1);
+    let x: Vec<f32> = (0..512).map(|i| ((i * 53) % 97) as f32 * 0.01 - 0.4).collect();
+    let (qx, sx) = quant::quantize_vec_parts(&x, 8);
+    let flops = 2u64 * 512 * 512;
+    for wl in [2u32, 4, 8] {
+        let name = format!("qkernel/gemv_i32_w{wl}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let (q, s) = quant::quantize_cols(&w, wl);
+        let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
+        b.bench_throughput(&name, flops, || {
+            std::hint::black_box(qm.qmatvec_i32(&qx, sx).unwrap());
+        });
+    }
+    if b.enabled("qkernel/matvec_fast_512_w4") {
+        let p = PackedLinear::from_compressed(&quant_only(&w, 4)).unwrap();
+        b.bench_throughput("qkernel/matvec_fast_512_w4", flops, || {
+            std::hint::black_box(p.matvec_fast(&x).unwrap());
+        });
+    }
+
+    // End-to-end KV-cached greedy decode under each tier, W4 quantized.
+    let (dir, manifest) = match tinymodel::generate_in_temp("bench_kernel", 0x6E1) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("(tiny-model generation failed: {e}; skipping kernel decode lanes)");
+            b.set_group(None);
+            return;
+        }
+    };
+    let model = itera_llm::model::PairModel::load(&manifest, tinymodel::PAIR).unwrap();
+    let corpus = itera_llm::eval::Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus).unwrap();
+    let rows = manifest.model.eval_batch;
+    let src = corpus.src_batch(0, rows, manifest.model.pad_id);
+    // One call decides rows * (seq_len - 1) output tokens.
+    let tokens = (rows * (manifest.model.seq_len - 1)) as u64;
+    let dense_bank: BTreeMap<String, CompressedLinear> = manifest
+        .linears
+        .iter()
+        .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), 4)))
+        .collect();
+    let cascade_bank: BTreeMap<String, CompressedLinear> = manifest
+        .linears
+        .iter()
+        .map(|l| {
+            let r = (l.r_max / 2).max(1);
+            (l.name.clone(), itera(model.linear(&l.name), r, 4).0)
+        })
+        .collect();
+    for (name, bank, tier) in [
+        ("runtime/native_decode_exact_quantized", &dense_bank, KernelTier::Exact),
+        ("runtime/native_decode_fast_quantized", &dense_bank, KernelTier::Fast),
+        ("runtime/native_decode_fast_cascade", &cascade_bank, KernelTier::Fast),
+    ] {
+        if !b.enabled(name) {
+            continue;
+        }
+        let backend = NativeBackend::new(&manifest, &model, bank, Some(8), Mode::Quantized, workers)
+            .unwrap()
+            .with_kernel(tier);
+        b.bench_throughput(name, tokens, || {
+            std::hint::black_box(backend.translate(&src).unwrap());
+        });
+    }
+    b.set_group(None);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -14,7 +14,7 @@ use crate::hw::Platform;
 use crate::hw::{sim, TileConfig, Workload};
 use crate::model::{Manifest, PairModel};
 use crate::qkernel;
-use crate::runtime::{DecodePolicy, Mode, NativeBackend};
+use crate::runtime::{DecodePolicy, KernelTier, Mode, NativeBackend};
 use crate::tensor::Matrix;
 use crate::util::pool::default_workers;
 use crate::util::timed;
@@ -46,6 +46,15 @@ fn decode_flag(args: &Args) -> Result<DecodePolicy> {
         None => Ok(DecodePolicy::default()),
         Some(d) => DecodePolicy::parse(d)
             .ok_or_else(|| anyhow::anyhow!("--decode expects replay|cached, got {d}")),
+    }
+}
+
+/// Parse the `--kernel` flag (decode kernel tier; exact by default).
+fn kernel_flag(args: &Args) -> Result<KernelTier> {
+    match args.flag("kernel") {
+        None => Ok(KernelTier::default()),
+        Some(k) => KernelTier::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("--kernel expects exact|fast, got {k}")),
     }
 }
 
@@ -197,13 +206,14 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
         (backend, format!("{} [{} exec]", method.label(), mode.key()))
     };
 
-    let backend = backend.with_decode(decode_flag(args)?);
+    let backend = backend.with_decode(decode_flag(args)?).with_kernel(kernel_flag(args)?);
     let (d, dt) = timed(|| evaluate_bleu(&backend, &corpus, &manifest.model, limit));
     let d = d?;
     println!("method      : {label}");
     println!("pair        : {pair}");
     println!("backend     : native");
     println!("decode      : {}", backend.decode_policy().key());
+    println!("kernel      : {}", backend.kernel_tier().key());
     println!("resident    : {} weight bytes", backend.weight_bytes());
     println!("sentences   : {}", if limit == 0 { corpus.n } else { limit.min(corpus.n) });
     println!("BLEU        : {:.2}", d.score);
@@ -431,9 +441,15 @@ pub fn cmd_sra(_args: &Args) -> Result<()> {
 /// reference instead (optionally restricted to one `--mode`). With
 /// `--batcher continuous`, the slot-scheduled continuous decode is
 /// cross-validated against per-request sequential decode (again
-/// optionally restricted to one `--mode`).
+/// optionally restricted to one `--mode`). With `--kernel fast`, the
+/// non-bit-exact integer decode tier is gated against the exact step
+/// reference under a parity-tolerance table (`--kernel exact` asserts
+/// bit-identity instead).
 pub fn cmd_validate(args: &Args) -> Result<()> {
     use crate::coordinator::report::Table;
+    if args.has("kernel") {
+        return validate_kernel_tier(args);
+    }
     if args.has("batcher") {
         return validate_continuous(args);
     }
@@ -761,6 +777,134 @@ fn validate_continuous(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `validate --kernel <tier> [--mode quantized] [--decode cached]`: the
+/// kernel-tier parity gate on the hermetic tiny model. The packed
+/// validation banks (dense packed + low-rank cascade, covering both
+/// qkernel scale axes) decode under the requested tier and are compared
+/// against the exact step reference on three surfaces: teacher-forced
+/// step logits (max |Δlogit| over every step of every corpus row),
+/// greedy decode tokens, and corpus BLEU.
+///
+/// `--kernel exact` must be **bit-identical** on all three (the tier
+/// threaded through is the same fake-quant step path that has always
+/// run — this leg pins that the tier plumbing itself changes nothing).
+/// `--kernel fast` is non-bit-exact by contract: it passes while
+/// max |Δlogit| stays inside a scale-aware tolerance and the BLEU delta
+/// stays inside `MAX_BLEU_DELTA`. Any breach fails the command
+/// (non-zero exit), so CI gates merging on fast-tier parity.
+fn validate_kernel_tier(args: &Args) -> Result<()> {
+    use crate::coordinator::report::Table;
+    use crate::runtime::TranslateBackend;
+    use crate::testkit::tinymodel;
+
+    /// Fast-tier floor for the |Δlogit| tolerance: runtime A8 activation
+    /// quantization perturbs each packed linear by ~0.4% relative, so
+    /// tiny-model logits land well inside this; a broken kernel (wrong
+    /// scale axis, wrapped accumulator, dropped rescale) lands orders of
+    /// magnitude outside it.
+    const MIN_DLOGIT_TOL: f32 = 1.5;
+    /// Fast-tier |Δlogit| tolerance as a fraction of the largest exact
+    /// logit magnitude (keeps the gate meaningful if the tiny model's
+    /// logit scale drifts).
+    const REL_DLOGIT_TOL: f32 = 0.05;
+    /// Fast-tier BLEU-delta ceiling (points): near-tie argmax flips may
+    /// move a few sentences, a garbage decode collapses BLEU entirely.
+    const MAX_BLEU_DELTA: f64 = 15.0;
+
+    let tier = kernel_flag(args)?;
+    if decode_flag(args)? != DecodePolicy::Cached {
+        bail!("kernel tiers dispatch inside the KV-cached step path; pass --decode cached");
+    }
+    if let Some(m) = only_mode_flag(args)? {
+        if m != Mode::Quantized {
+            bail!("kernel tiers dispatch inside packed linears; pass --mode quantized");
+        }
+    }
+
+    let (dir, manifest) = tinymodel::generate_in_temp("validate_kernel", 0xFA57)?;
+    let model = PairModel::load(&manifest, tinymodel::PAIR)?;
+    let corpus = Corpus::load(&manifest.pairs[tinymodel::PAIR].corpus)?;
+    let s = manifest.model.seq_len;
+    let cases = validation_cases(&manifest, &model);
+
+    let mut t = Table::new(
+        &format!(
+            "{} kernel tier vs exact step reference (hermetic tiny model, {} rows)",
+            tier.key(),
+            corpus.n
+        ),
+        &["bank", "max_dlogit", "dlogit_tol", "tokens_equal", "bleu_exact", "bleu_tier", "pass"],
+    );
+    let mut all_ok = true;
+    for (bank, mode, layers) in &cases {
+        // Only the packed banks dispatch through the tiered kernels.
+        if *mode != Mode::Quantized {
+            continue;
+        }
+        let exact = NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?;
+        let tiered =
+            NativeBackend::new(&manifest, &model, layers, Some(8), *mode, 2)?.with_kernel(tier);
+
+        let rows: Vec<Vec<i32>> = (0..corpus.n).map(|i| corpus.src_row(i).to_vec()).collect();
+        let want = exact.translate_stream(&rows)?;
+        let got = tiered.translate_stream(&rows)?;
+        let tokens_equal = want == got;
+
+        // Teacher-force the exact tier's own decodes through both tiers'
+        // step kernels; every logit of every step is compared, so the
+        // bound covers positions greedy decode never argmaxes.
+        let mut dmax = 0.0f32;
+        let mut lmax = 0.0f32;
+        for (src, tgt) in rows.iter().zip(&want) {
+            let a = exact.step_logits(src, &tgt[..s])?;
+            let b = tiered.step_logits(src, &tgt[..s])?;
+            for (&x, &y) in a.data().iter().zip(b.data()) {
+                let d = (x - y).abs();
+                // `!(<=)` keeps NaN sticky: a poisoned logit can never
+                // slip under the tolerance.
+                if !(d <= dmax) {
+                    dmax = d;
+                }
+                if !(x.abs() <= lmax) {
+                    lmax = x.abs();
+                }
+            }
+        }
+
+        let bleu_exact = evaluate_bleu(&exact, &corpus, &manifest.model, 0)?.score;
+        let bleu_tier = evaluate_bleu(&tiered, &corpus, &manifest.model, 0)?.score;
+        let bleu_delta = (bleu_exact - bleu_tier).abs();
+
+        let tol = match tier {
+            KernelTier::Exact => 0.0,
+            KernelTier::Fast => MIN_DLOGIT_TOL.max(REL_DLOGIT_TOL * lmax),
+        };
+        let ok = match tier {
+            KernelTier::Exact => dmax == 0.0 && tokens_equal && bleu_delta == 0.0,
+            KernelTier::Fast => dmax <= tol && bleu_delta <= MAX_BLEU_DELTA,
+        };
+        all_ok &= ok;
+        t.row(vec![
+            bank.to_string(),
+            format!("{dmax:.6}"),
+            format!("{tol:.3}"),
+            if tokens_equal { "yes" } else { "no" }.to_string(),
+            format!("{bleu_exact:.2}"),
+            format!("{bleu_tier:.2}"),
+            if ok { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    std::fs::remove_dir_all(&dir).ok();
+    if !all_ok {
+        bail!(
+            "{} kernel tier BREACHED its parity tolerance — see table above",
+            tier.key()
+        );
+    }
+    Ok(())
+}
+
 /// Batched serving demo: random test sentences through a compressed
 /// model, reporting latency/throughput percentiles. Native by default;
 /// `--backend pjrt` uses the AOT artifacts (pjrt builds only). For the
@@ -794,6 +938,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         burst: args.flag_usize("burst", 1)?,
         kv_budget: opt_usize(args, "kv-budget")?,
         page_tokens: opt_usize(args, "page-tokens")?,
+        kernel: kernel_flag(args)?,
     };
     if let Some(listen) = args.flag("listen") {
         return cmd_serve_http(args, listen, &tuning);
@@ -920,7 +1065,8 @@ fn serve_http_native(
     );
     let backend = cm
         .native_backend_mode(manifest, &model, mode, workers)?
-        .with_decode(DecodePolicy::Cached);
+        .with_decode(DecodePolicy::Cached)
+        .with_kernel(tuning.kernel);
     // `--kv-budget` / `--page-tokens`: swap the unbounded compatibility
     // pool for a byte-bounded paged one before any slot exists.
     let backend = if tuning.kv_budget.is_some() || tuning.page_tokens.is_some() {
@@ -938,7 +1084,11 @@ fn serve_http_native(
 
     let listener = std::net::TcpListener::bind(listen)?;
     let addr = listener.local_addr()?;
-    println!("itera http server on {addr} (pair {pair}, W8A8, {} exec)", mode.key());
+    println!(
+        "itera http server on {addr} (pair {pair}, W8A8, {} exec, {} kernel)",
+        mode.key(),
+        tuning.kernel.key()
+    );
 
     let load_cfg = match opt_usize(args, "loadgen")? {
         None => None,

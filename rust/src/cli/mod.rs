@@ -6,14 +6,17 @@
 //! itera info [--wl 4]                # runtime summary + packed-bytes accounting
 //! itera eval [--method fp32|quant|svd|itera] [--wl 8] [--rank-frac 0.5]
 //!            [--mode dense|svd|quantized] [--decode replay|cached]
+//!            [--kernel exact|fast]
 //! itera serve [--requests 64] [--mode quantized] [--decode replay|cached]
+//!             [--kernel exact|fast]
 //!             [--batcher static|continuous] [--queue-limit 8] [--deadline 200]
 //!             [--max-new-tokens 16] [--burst 12] [--tinymodel]
 //!             [--listen 127.0.0.1:8080 [--loadgen 256] [--connections 16]
 //!              [--rate 100] [--max-connections 256] [--metrics]]
 //! itera validate [--mode quantized] [--decode cached] [--batcher continuous]
+//!                [--kernel exact|fast]
 //!                                    # model-vs-sim / qkernel / decode /
-//!                                    # continuous-batching parity
+//!                                    # continuous-batching / kernel-tier parity
 //! ```
 //!
 //! PJRT-artifact measurement (needs `--features pjrt`):
@@ -99,14 +102,16 @@ USAGE (native runtime, every build):
   itera info [--wl <2..8>]
   itera eval [--method <fp32|quant|svd|itera>] [--wl <2..8>] [--rank-frac F]
              [--pair P] [--limit N] [--mode <dense|svd|quantized>]
-             [--decode <replay|cached>]
+             [--decode <replay|cached>] [--kernel <exact|fast>]
   itera serve [--requests N] [--pair P] [--backend <native|pjrt>]
               [--mode <dense|quantized>] [--decode <replay|cached>]
+              [--kernel <exact|fast>]
               [--batcher <static|continuous>] [--tinymodel]
               [--queue-limit N] [--deadline STEPS] [--max-new-tokens N]
               [--burst N] [--listen ADDR] [--loadgen N] [--connections N]
               [--rate R] [--max-connections N] [--metrics]
   itera validate [--mode quantized] [--decode cached] [--batcher continuous]
+                 [--kernel <exact|fast>]
   itera help
 
   --mode quantized executes the compressed model from bit-packed sub-8-bit
@@ -115,6 +120,12 @@ USAGE (native runtime, every build):
   or the AOT graph's full-buffer replay — bit-identical tokens, a
   seq_len-factor fewer decoder MACs cached. `validate --decode cached`
   cross-checks the parity on a hermetic tiny model.
+  --kernel picks the cached-decode kernel tier for packed (quantized)
+  linears: exact (default) keeps the bit-identical fake-quant kernels;
+  fast quantizes activations to int8 at runtime and runs a pure-integer
+  GEMV with i32 accumulation — non-bit-exact by contract, gated by the
+  `validate --kernel fast` parity table (max |Δlogit| + BLEU delta,
+  non-zero exit on breach).
   --batcher picks the serving discipline: static group-decode-respond
   waves (default) or the continuous slot scheduler, which retires and
   admits sequences between decode steps so the KV-cached engine stays

@@ -45,7 +45,7 @@ use anyhow::Result;
 use crate::eval::{strip_specials, Corpus};
 use crate::model::ModelDims;
 use crate::obs::{key, Counter, Obs, Outcome, Snapshot, SummaryMetric, Trace, TraceReport};
-use crate::runtime::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
+use crate::runtime::{DecodePolicy, KernelTier, Mode, SlotEngine, TranslateBackend};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
@@ -810,6 +810,11 @@ pub struct ServeTuning {
     /// Rows per KV page (`serve --page-tokens`); defaults to the
     /// model's `seq_len` (one page per table, the coarsest grain).
     pub page_tokens: Option<usize>,
+    /// Decode kernel tier (`serve --kernel`): `Exact` (default) keeps
+    /// the bit-identical fake-quant kernels; `Fast` serves packed
+    /// linears through the integer A8 GEMV path (non-bit-exact, gated
+    /// by `validate --kernel fast`).
+    pub kernel: KernelTier,
 }
 
 /// Serving demo on the native runtime: W8A8-quantized model (the
@@ -852,12 +857,16 @@ pub fn serve_demo_native(
         None,
         workers,
     );
-    let backend = cm.native_backend_mode(manifest, &model, mode, workers)?.with_decode(decode);
+    let backend = cm
+        .native_backend_mode(manifest, &model, mode, workers)?
+        .with_decode(decode)
+        .with_kernel(tuning.kernel);
     let label = format!(
-        "{pair}, W8A8, {} exec, {} decode, {} batcher",
+        "{pair}, W8A8, {} exec, {} decode, {} batcher, {} kernel",
         mode.key(),
         decode.key(),
-        batcher.key()
+        batcher.key(),
+        tuning.kernel.key()
     );
     match batcher {
         Batcher::Static => run_demo(&backend, corpus, &manifest.model, n_requests, &label),

@@ -34,9 +34,21 @@
 //!   [`qkernel::QMatrix`] storage (2..=8-bit grids in `u32` words,
 //!   per-vector dequant scales, an `i8` fast path at W8) plus the
 //!   integer GEMM/GEMV the native engine's `Mode::Quantized` runs on.
-//!   Packed execution is bit-exact against the fake-quant f32 reference,
-//!   so the runtime's sub-8-bit memory footprint comes at zero numerical
-//!   cost — the paper's bandwidth story made real (and testable).
+//!   The cached decode hot loop is **two-tier**
+//!   ([`runtime::KernelTier`], `--kernel exact|fast`): the default
+//!   `Exact` tier dequantizes on the fly and accumulates in f32 —
+//!   bit-exact against the fake-quant reference, so the sub-8-bit
+//!   memory footprint comes at zero numerical cost (the paper's
+//!   bandwidth story made real, and testable) — while the opt-in `Fast`
+//!   tier quantizes activations to `i8` at runtime and runs the whole
+//!   linear as int8×int-grid GEMV with `i32` accumulation and one
+//!   rescale per output (`QMatrix::qmatvec_i32`, plus the
+//!   `qmatvec_i32_rows` row-scaled twin for the low-rank integer
+//!   cascade). `Fast` is non-bit-exact by contract and fenced by the
+//!   `validate --kernel fast` parity gate; its envelope violations
+//!   (range, accumulator cap, scale axis, non-finite activations) are
+//!   typed [`qkernel::QKernelError`]s that fault one request, never the
+//!   batch.
 //! * **Layer 3 (the rest of this crate)** — the software/hardware
 //!   co-design framework: compression engine ([`compress`], Algorithm 1),
 //!   sensitivity-based rank allocation ([`sra`]), FPGA analytical models

@@ -582,7 +582,8 @@ impl std::fmt::Debug for Obs {
 /// invocation. Handles are cached in a static table so the hot path
 /// pays one `OnceLock` load plus one relaxed `fetch_add`.
 pub fn note_qkernel_dispatch(kernel: usize, wl: u32) {
-    const KERNELS: [&str; 4] = ["qmatmul", "qmatvec", "qmatvec_i32", "packed_matvec"];
+    const KERNELS: [&str; 5] =
+        ["qmatmul", "qmatvec", "qmatvec_i32", "packed_matvec", "packed_matvec_fast"];
     const WL_LO: u32 = 2;
     const WL_HI: u32 = 8;
     static TABLE: OnceLock<Vec<Arc<Counter>>> = OnceLock::new();
@@ -613,6 +614,11 @@ pub mod kernels {
     pub const QMATVEC: usize = 1;
     pub const QMATVEC_I32: usize = 2;
     pub const PACKED_MATVEC: usize = 3;
+    /// The fast integer tier's per-linear entry point
+    /// (`PackedLinear::matvec_fast`) — counted separately from
+    /// `packed_matvec` so `/metrics` shows the realized per-tier
+    /// dispatch mix.
+    pub const PACKED_MATVEC_FAST: usize = 4;
 }
 
 /// The [`ObsConfig`] gate is process-global, so a unit test that flips

@@ -20,12 +20,16 @@
 //!   `x.matmul(&self.to_matrix())` bit for bit — which is what makes the
 //!   whole quantized runtime verifiable against the PR 2 deterministic
 //!   e2e harness;
-//! * [`QMatrix::qmatvec_i32`] — the pure-integer path: an already
-//!   integer-quantized activation vector against the packed weights with
-//!   **i32 accumulation** and a single `(s_x * s_w[n]) * acc` dequant-
-//!   rescale per output, the arithmetic shape the paper's fixed-point
-//!   MatMul engines implement (per-vector scales live in the dequant
-//!   stage, exactly like the hardware's per-rank tables);
+//! * [`QMatrix::qmatvec_i32`] / [`QMatrix::qmatvec_i32_rows`] — the
+//!   pure-integer paths: an already integer-quantized activation vector
+//!   against the packed weights with **i32 accumulation** and a single
+//!   `(s_x * s_w[n]) * acc` dequant-rescale per output (column-scaled
+//!   dense/`W1`), or the per-rank-rescaled cascade hop for row-scaled
+//!   `W2` factors — the arithmetic shapes the paper's fixed-point
+//!   MatMul engines implement. Envelope violations (shape, A8 range,
+//!   the per-grid `K` cap, scale axis, non-finite activations) return a
+//!   typed [`QKernelError`] instead of panicking, so the serving hot
+//!   path can fault one request rather than the whole batched step;
 //! * [`PackedLinear`] — a compressed layer ([`CompressedLinear`])
 //!   re-gridded into packed form, possible losslessly because the
 //!   compression engine carries every vector's true dequant scale.
@@ -49,6 +53,65 @@ pub enum ScaleAxis {
     Col,
     /// One scale per row (`W2 [r x N]` factors — one scale per rank).
     Row,
+}
+
+/// Envelope violation of the integer kernels, returned as a value
+/// instead of panicking: the fast tier runs these kernels inside
+/// `step_slots`, where a panic on one poisoned activation would abort
+/// the whole batched step (and cost every co-batched slot a solo
+/// re-step through the fault path). A typed error lets the runtime
+/// fault exactly the offending request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QKernelError {
+    /// Activation length does not match the weight matrix's `K`.
+    ShapeMismatch { expect: usize, got: usize },
+    /// An activation grid point outside the A8 envelope (`|q| > 127`).
+    ActivationOutOfRange { index: usize, value: i32 },
+    /// `K` exceeds the exact-i32-accumulation bound for this weight
+    /// grid (see [`QMatrix::i32_k_cap`]).
+    KTooLarge { rows: usize, cap: usize, wl: WordLen },
+    /// The matrix's scale axis does not fit the kernel called.
+    WrongScaleAxis { expect: ScaleAxis, got: ScaleAxis },
+    /// A non-finite activation lane caught at runtime quantization.
+    NonFinite(quant::NonFiniteError),
+}
+
+impl std::fmt::Display for QKernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QKernelError::ShapeMismatch { expect, got } => {
+                write!(f, "integer matvec shape mismatch: weights expect K={expect}, got {got}")
+            }
+            QKernelError::ActivationOutOfRange { index, value } => write!(
+                f,
+                "activation grid point {value} at lane {index} outside the A8 envelope \
+                 (|q| <= 127)"
+            ),
+            QKernelError::KTooLarge { rows, cap, wl } => write!(
+                f,
+                "K={rows} exceeds the exact i32-accumulation bound {cap} for W{wl} at A8"
+            ),
+            QKernelError::WrongScaleAxis { expect, got } => {
+                write!(f, "integer matvec needs {expect:?}-axis scales, matrix is {got:?}-scaled")
+            }
+            QKernelError::NonFinite(e) => write!(f, "activation quantization failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for QKernelError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            QKernelError::NonFinite(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<quant::NonFiniteError> for QKernelError {
+    fn from(e: quant::NonFiniteError) -> Self {
+        QKernelError::NonFinite(e)
+    }
 }
 
 /// Integer payload of a [`QMatrix`].
@@ -82,6 +145,77 @@ const QK_BJ: usize = 128;
 /// Below this many MACs a thread handoff costs more than it saves
 /// (mirrors the f32 kernel's threshold).
 const QK_PAR_MIN_MACS: usize = 1 << 22;
+/// Fixed inner-loop width of the integer GEMV rows: the main loop runs
+/// over exact `QK_CHUNK`-element blocks whose indices are provably in
+/// range, so the compiler drops the bounds checks and vectorizes the
+/// MAC body; a scalar tail covers the remainder.
+const QK_CHUNK: usize = 16;
+
+/// `acc[j] += xq * row[j]` over one i8 weight row, chunked (see
+/// [`QK_CHUNK`]).
+#[inline]
+fn mac_row_i8(acc: &mut [i32], row: &[i8], xq: i32) {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut ai = acc.chunks_exact_mut(QK_CHUNK);
+    let mut wi = row.chunks_exact(QK_CHUNK);
+    for (a, w) in ai.by_ref().zip(wi.by_ref()) {
+        for i in 0..QK_CHUNK {
+            a[i] += xq * w[i] as i32;
+        }
+    }
+    for (a, &w) in ai.into_remainder().iter_mut().zip(wi.remainder()) {
+        *a += xq * w as i32;
+    }
+}
+
+/// `acc[j] += xq * row[j]` over one unpacked weight row, chunked.
+#[inline]
+fn mac_row_i32(acc: &mut [i32], row: &[i32], xq: i32) {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut ai = acc.chunks_exact_mut(QK_CHUNK);
+    let mut wi = row.chunks_exact(QK_CHUNK);
+    for (a, w) in ai.by_ref().zip(wi.by_ref()) {
+        for i in 0..QK_CHUNK {
+            a[i] += xq * w[i];
+        }
+    }
+    for (a, &w) in ai.into_remainder().iter_mut().zip(wi.remainder()) {
+        *a += xq * w;
+    }
+}
+
+/// `out[j] += c * row[j]` over one i8 weight row (the per-rank-rescaled
+/// cascade hop), chunked.
+#[inline]
+fn axpy_row_i8(out: &mut [f32], row: &[i8], c: f32) {
+    debug_assert_eq!(out.len(), row.len());
+    let mut oi = out.chunks_exact_mut(QK_CHUNK);
+    let mut wi = row.chunks_exact(QK_CHUNK);
+    for (o, w) in oi.by_ref().zip(wi.by_ref()) {
+        for i in 0..QK_CHUNK {
+            o[i] += c * w[i] as f32;
+        }
+    }
+    for (o, &w) in oi.into_remainder().iter_mut().zip(wi.remainder()) {
+        *o += c * w as f32;
+    }
+}
+
+/// `out[j] += c * row[j]` over one unpacked weight row, chunked.
+#[inline]
+fn axpy_row_i32(out: &mut [f32], row: &[i32], c: f32) {
+    debug_assert_eq!(out.len(), row.len());
+    let mut oi = out.chunks_exact_mut(QK_CHUNK);
+    let mut wi = row.chunks_exact(QK_CHUNK);
+    for (o, w) in oi.by_ref().zip(wi.by_ref()) {
+        for i in 0..QK_CHUNK {
+            o[i] += c * w[i] as f32;
+        }
+    }
+    for (o, &w) in oi.into_remainder().iter_mut().zip(wi.remainder()) {
+        *o += c * w as f32;
+    }
+}
 
 impl QMatrix {
     /// Quantize FP32 weights onto the per-column `wl`-bit grid (the
@@ -308,36 +442,56 @@ impl QMatrix {
         out
     }
 
+    /// Largest `K` for which the i32 accumulator of
+    /// [`Self::qmatvec_i32`] stays exact with A8 activations against
+    /// *this matrix's* weight grid: `i32::MAX / (127 * levels(wl))`.
+    /// W8: 133,144 rows; W4: ~2.4M; W2: ~16.9M — the bound scales with
+    /// the weight grid, so narrow-grid matrices are not over-rejected
+    /// by the W8 worst case.
+    pub fn i32_k_cap(&self) -> usize {
+        (i32::MAX / (127 * quant::levels(self.wl) as i32)) as usize
+    }
+
+    /// Shared input envelope of the integer matvec kernels: activation
+    /// length matches `K` and every grid point fits A8.
+    fn check_i32_activation(&self, qx: &[i32]) -> Result<(), QKernelError> {
+        if qx.len() != self.rows {
+            return Err(QKernelError::ShapeMismatch { expect: self.rows, got: qx.len() });
+        }
+        if let Some((index, &value)) =
+            qx.iter().enumerate().find(|(_, q)| !(-127..=127).contains(*q))
+        {
+            return Err(QKernelError::ActivationOutOfRange { index, value });
+        }
+        Ok(())
+    }
+
     /// Pure-integer matvec: `out[n] = (sx * scale[n]) * sum_k qx[k] *
     /// q[k][n]` with **i32 accumulation** and one dequant-rescale per
     /// output — the fixed-point arithmetic the paper's hardware engines
     /// run, fed by an integer-quantized activation vector
-    /// (`quant::quantize_vec_parts` at A8 or narrower; asserted, since
-    /// wider activation grids could wrap the i32 accumulator). Both
-    /// bounds that keep the accumulator exact are enforced: `|qx| <= 127`
-    /// and `K <= i32::MAX / 127^2` (133,144 rows — far above any layer
-    /// here; the checks make an out-of-envelope call fail loudly instead
-    /// of wrapping in release builds). Column-scaled matrices only: a
-    /// row-scaled factor needs a per-k rescale, which is no longer an
-    /// integer dot product.
-    pub fn qmatvec_i32(&self, qx: &[i32], sx: f32) -> Vec<f32> {
-        assert_eq!(qx.len(), self.rows, "qmatvec_i32 shape mismatch");
+    /// (`quant::quantize_vec_parts` at A8 or narrower, since wider
+    /// activation grids could wrap the i32 accumulator). The envelope
+    /// is *checked, not asserted* — `|qx| <= 127`, `K <=`
+    /// [`Self::i32_k_cap`] (exact per weight grid), column-scale axis —
+    /// and violations come back as a typed [`QKernelError`] so a
+    /// poisoned activation mid-decode faults one request instead of
+    /// aborting the batched step. Column-scaled matrices only: a
+    /// row-scaled factor needs a per-k rescale, which
+    /// [`Self::qmatvec_i32_rows`] provides.
+    pub fn qmatvec_i32(&self, qx: &[i32], sx: f32) -> Result<Vec<f32>, QKernelError> {
+        self.check_i32_activation(qx)?;
+        let cap = self.i32_k_cap();
+        if self.rows > cap {
+            return Err(QKernelError::KTooLarge { rows: self.rows, cap, wl: self.wl });
+        }
+        if self.axis != ScaleAxis::Col {
+            return Err(QKernelError::WrongScaleAxis {
+                expect: ScaleAxis::Col,
+                got: self.axis,
+            });
+        }
         crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATVEC_I32, self.wl);
-        assert!(
-            qx.iter().all(|&q| (-127..=127).contains(&q)),
-            "qmatvec_i32 expects A8-or-narrower activations (|q| <= 127)"
-        );
-        assert!(
-            self.rows <= (i32::MAX / (127 * 127)) as usize,
-            "qmatvec_i32 i32 accumulator is exact only up to K = {} at A8/W8",
-            i32::MAX / (127 * 127)
-        );
-        assert_eq!(
-            self.axis,
-            ScaleAxis::Col,
-            "integer matvec needs per-column scales (row-scaled factors \
-             dequantize per rank instead)"
-        );
         let mut acc = vec![0i32; self.cols];
         match &self.payload {
             Payload::I8(v) => {
@@ -345,10 +499,7 @@ impl QMatrix {
                     if xq == 0 {
                         continue;
                     }
-                    let row = &v[k * self.cols..(k + 1) * self.cols];
-                    for (a, &w) in acc.iter_mut().zip(row) {
-                        *a += xq * w as i32;
-                    }
+                    mac_row_i8(&mut acc, &v[k * self.cols..(k + 1) * self.cols], xq);
                 }
             }
             Payload::Packed { words, words_per_row } => {
@@ -359,13 +510,56 @@ impl QMatrix {
                     }
                     let row = &words[k * words_per_row..(k + 1) * words_per_row];
                     pack::unpack_range_into(row, 0, self.cols, self.wl, &mut ibuf);
-                    for (a, &w) in acc.iter_mut().zip(&ibuf) {
-                        *a += xq * w;
-                    }
+                    mac_row_i32(&mut acc, &ibuf, xq);
                 }
             }
         }
-        acc.iter().zip(&self.scales).map(|(&a, &s)| (sx * s) * a as f32).collect()
+        Ok(acc.iter().zip(&self.scales).map(|(&a, &s)| (sx * s) * a as f32).collect())
+    }
+
+    /// Row-scaled integer matvec — the cascade's second hop `h · W2`
+    /// where `W2 [r x N]` carries one scale per rank. A per-k rescale
+    /// breaks the single-i32-dot-product shape, so instead the per-rank
+    /// dequant coefficient `c_k = (sx * s[k]) * qx[k]` is hoisted out
+    /// of the inner loop and the hot body stays a chunked scan of the
+    /// integer weight row (`out[n] += c_k * q[k][n]`, f32 accumulation
+    /// — each addend is already rescaled, so no i32 wraparound exists
+    /// and no K cap applies). Ranks whose activation quantized to zero
+    /// are skipped entirely.
+    pub fn qmatvec_i32_rows(&self, qx: &[i32], sx: f32) -> Result<Vec<f32>, QKernelError> {
+        self.check_i32_activation(qx)?;
+        if self.axis != ScaleAxis::Row {
+            return Err(QKernelError::WrongScaleAxis {
+                expect: ScaleAxis::Row,
+                got: self.axis,
+            });
+        }
+        crate::obs::note_qkernel_dispatch(crate::obs::kernels::QMATVEC_I32, self.wl);
+        let mut out = vec![0.0f32; self.cols];
+        match &self.payload {
+            Payload::I8(v) => {
+                for (k, &xq) in qx.iter().enumerate() {
+                    if xq == 0 {
+                        continue;
+                    }
+                    let c = (sx * self.scales[k]) * xq as f32;
+                    axpy_row_i8(&mut out, &v[k * self.cols..(k + 1) * self.cols], c);
+                }
+            }
+            Payload::Packed { words, words_per_row } => {
+                let mut ibuf = vec![0i32; self.cols];
+                for (k, &xq) in qx.iter().enumerate() {
+                    if xq == 0 {
+                        continue;
+                    }
+                    let row = &words[k * words_per_row..(k + 1) * words_per_row];
+                    pack::unpack_range_into(row, 0, self.cols, self.wl, &mut ibuf);
+                    let c = (sx * self.scales[k]) * xq as f32;
+                    axpy_row_i32(&mut out, &ibuf, c);
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Product of rows `i0..i1` of `x` with the packed weights, written
@@ -480,6 +674,36 @@ impl PackedLinear {
             PackedLinear::Factored(w1, w2) => {
                 crate::obs::note_qkernel_dispatch(crate::obs::kernels::PACKED_MATVEC, w1.wl);
                 w2.qmatvec(&w1.qmatvec(x))
+            }
+        }
+    }
+
+    /// The fast integer tier of [`Self::matvec`]
+    /// (`runtime::KernelTier::Fast`): quantize the f32 activation onto
+    /// the A8 grid *at runtime*, then run the whole linear as
+    /// int8×int-grid GEMV — dense layers as one [`QMatrix::qmatvec_i32`]
+    /// (i32 accumulation, one rescale per output), factored layers as
+    /// the integer cascade with a per-rank A8 requantization between
+    /// the two skinny matvecs ([`QMatrix::qmatvec_i32`] then
+    /// [`QMatrix::qmatvec_i32_rows`]). **Not** bit-identical to
+    /// [`Self::matvec`]: the runtime activation requantization perturbs
+    /// each lane by up to half an A8 grid step, which is why the tier
+    /// is opt-in and fenced by `validate --kernel fast`'s parity table.
+    /// A non-finite activation lane surfaces as a typed
+    /// [`QKernelError::NonFinite`] naming the lane.
+    pub fn matvec_fast(&self, x: &[f32]) -> Result<Vec<f32>, QKernelError> {
+        match self {
+            PackedLinear::Dense(w) => {
+                crate::obs::note_qkernel_dispatch(crate::obs::kernels::PACKED_MATVEC_FAST, w.wl);
+                let (qx, sx) = quant::try_quantize_vec_parts(x, 8)?;
+                w.qmatvec_i32(&qx, sx)
+            }
+            PackedLinear::Factored(w1, w2) => {
+                crate::obs::note_qkernel_dispatch(crate::obs::kernels::PACKED_MATVEC_FAST, w1.wl);
+                let (qx, sx) = quant::try_quantize_vec_parts(x, 8)?;
+                let h = w1.qmatvec_i32(&qx, sx)?;
+                let (qh, sh) = quant::try_quantize_vec_parts(&h, 8)?;
+                w2.qmatvec_i32_rows(&qh, sh)
             }
         }
     }
@@ -705,7 +929,7 @@ mod tests {
             let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
             let x: Vec<f32> = (0..48).map(|i| ((i * 7) as f32 * 0.11).cos()).collect();
             let (qx, sx) = quant::quantize_vec_parts(&x, 8);
-            let got = qm.qmatvec_i32(&qx, sx);
+            let got = qm.qmatvec_i32(&qx, sx).unwrap();
             // Exact reference from the unpacked grid points.
             for (n, &g) in got.iter().enumerate() {
                 let mut acc = 0i64;
@@ -727,6 +951,170 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn qmatvec_i32_rows_matches_per_rank_reference() {
+        // The cascade's second hop: per-rank coefficient axpy over the
+        // integer rows, bit-exact against the same-order scalar
+        // reference and close to the f32 path.
+        let w = randn(61, 9, 23, 0.3);
+        for wl in [2u32, 4, 8] {
+            let (q, s) = quant::quantize_rows(&w, wl);
+            let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Row).unwrap();
+            let h: Vec<f32> = (0..9).map(|i| ((i * 11) as f32 * 0.13).sin()).collect();
+            let (qh, sh) = quant::quantize_vec_parts(&h, 8);
+            let got = qm.qmatvec_i32_rows(&qh, sh).unwrap();
+            let mut want = vec![0.0f32; 23];
+            for (k, &xq) in qh.iter().enumerate() {
+                if xq == 0 {
+                    continue;
+                }
+                let c = (sh * qm.scales()[k]) * xq as f32;
+                for (n, o) in want.iter_mut().enumerate() {
+                    *o += c * qm.get_int(k, n) as f32;
+                }
+            }
+            for (n, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "W{wl} col {n}");
+            }
+            // Same math as the f32 row-scaled matvec up to association.
+            let hq: Vec<f32> = qh.iter().map(|&v| quant::dequantize_val(v, sh)).collect();
+            for (a, b) in got.iter().zip(&q.tr_matvec(&hq)) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "W{wl}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_envelope_errors_are_typed_not_panics() {
+        let w = randn(200, 8, 6, 0.3);
+        let (q, s) = quant::quantize_cols(&w, 4);
+        let qm = QMatrix::from_fake_quant(&q, &s, 4, ScaleAxis::Col).unwrap();
+        assert!(matches!(
+            qm.qmatvec_i32(&[0i32; 7], 1.0),
+            Err(QKernelError::ShapeMismatch { expect: 8, got: 7 })
+        ));
+        let mut qx = vec![1i32; 8];
+        qx[3] = 128;
+        assert!(matches!(
+            qm.qmatvec_i32(&qx, 1.0),
+            Err(QKernelError::ActivationOutOfRange { index: 3, value: 128 })
+        ));
+        let (qr, sr) = quant::quantize_rows(&w, 4);
+        let qmr = QMatrix::from_fake_quant(&qr, &sr, 4, ScaleAxis::Row).unwrap();
+        assert!(matches!(
+            qmr.qmatvec_i32(&[0i32; 8], 1.0),
+            Err(QKernelError::WrongScaleAxis { expect: ScaleAxis::Col, got: ScaleAxis::Row })
+        ));
+        assert!(matches!(
+            qm.qmatvec_i32_rows(&[0i32; 8], 1.0),
+            Err(QKernelError::WrongScaleAxis { expect: ScaleAxis::Row, got: ScaleAxis::Col })
+        ));
+        // A poisoned f32 activation surfaces as NonFinite naming the
+        // lane, and the chain formats through std::error::Error.
+        let p = PackedLinear::Dense(qm);
+        let mut x = vec![0.5f32; 8];
+        x[5] = f32::NAN;
+        let e = p.matvec_fast(&x).unwrap_err();
+        assert!(matches!(e, QKernelError::NonFinite(inner) if inner.index == 5), "{e}");
+        let boxed: Box<dyn std::error::Error> = Box::new(e);
+        assert!(boxed.source().is_some(), "NonFinite carries its cause");
+        assert!(boxed.to_string().contains("lane 5"), "{boxed}");
+    }
+
+    #[test]
+    fn i32_k_cap_tracks_the_weight_grid() {
+        // The bugfix: the exactness bound derives from the actual wl,
+        // not a hard-pinned A8/W8 worst case.
+        let grid = Matrix::zeros(4, 2);
+        let caps: Vec<usize> = [2u32, 4, 8]
+            .iter()
+            .map(|&wl| {
+                QMatrix::from_fake_quant(&grid, &[0.0, 0.0], wl, ScaleAxis::Col)
+                    .unwrap()
+                    .i32_k_cap()
+            })
+            .collect();
+        assert_eq!(caps[2], (i32::MAX / (127 * 127)) as usize, "W8 keeps the old bound");
+        assert_eq!(caps[2], 133_144);
+        assert_eq!(caps[1], (i32::MAX / (127 * 7)) as usize, "W4 bound is 127/7x wider");
+        assert_eq!(caps[0], (i32::MAX / 127) as usize, "W2 bound is 127x wider");
+        assert!(caps[0] > caps[1] && caps[1] > caps[2]);
+    }
+
+    #[test]
+    fn k_cap_boundary_per_wordlength() {
+        // 133,145 rows is one past the A8/W8 exact-accumulation bound.
+        // The old hard-pinned cap rejected this K at *every* width; the
+        // wl-exact bound accepts it on the narrow grids (whose products
+        // cannot wrap) and still rejects it at W8 — as a typed error.
+        let rows = 133_145;
+        let w = Matrix::zeros(rows, 1);
+        let qx = vec![0i32; rows];
+        let w8 = QMatrix::from_fake_quant(&w, &[0.0], 8, ScaleAxis::Col).unwrap();
+        match w8.qmatvec_i32(&qx, 1.0) {
+            Err(QKernelError::KTooLarge { rows: r, cap, wl }) => {
+                assert_eq!((r, cap, wl), (rows, 133_144, 8));
+            }
+            other => panic!("W8 past-cap call must fail typed, got {other:?}"),
+        }
+        for wl in [2u32, 4] {
+            let q = QMatrix::from_fake_quant(&w, &[0.0], wl, ScaleAxis::Col).unwrap();
+            assert_eq!(q.qmatvec_i32(&qx, 1.0).unwrap(), vec![0.0], "W{wl} within its cap");
+        }
+    }
+
+    #[test]
+    fn matvec_fast_is_the_composed_integer_path() {
+        let w = randn(96, 26, 33, 0.3);
+        let x: Vec<f32> = (0..26).map(|i| ((i * 3) as f32 * 0.23).cos()).collect();
+        for wl in [2u32, 4, 8] {
+            // Dense: exactly qmatvec_i32 on the A8-requantized activation.
+            let p = PackedLinear::from_compressed(&quant_only(&w, wl)).unwrap();
+            let fast = p.matvec_fast(&x).unwrap();
+            let (qx, sx) = quant::quantize_vec_parts(&x, 8);
+            let PackedLinear::Dense(qm) = &p else { unreachable!() };
+            assert_eq!(fast, qm.qmatvec_i32(&qx, sx).unwrap(), "W{wl} dense");
+            // ...and within the A8 perturbation envelope of the exact
+            // tier: |Δout[n]| <= Σ_k |Δx_k| |w[k][n]|, |Δx_k| <= sx/2.
+            let exact = p.matvec(&x);
+            for n in 0..33 {
+                let mut bound = 0.0f32;
+                for k in 0..26 {
+                    bound += qm.get(k, n).abs();
+                }
+                bound = 0.5 * sx * bound * 1.01 + 1e-5;
+                let d = (fast[n] - exact[n]).abs();
+                assert!(d <= bound, "W{wl} dense col {n}: |Δ|={d} > {bound}");
+            }
+
+            // Factored: the two-hop integer cascade with a mid A8
+            // requantization, pinned by composing the public kernels.
+            let (low, _) = itera(&w, 7, wl);
+            let p = PackedLinear::from_compressed(&low).unwrap();
+            let fast = p.matvec_fast(&x).unwrap();
+            let PackedLinear::Factored(q1, q2) = &p else { unreachable!() };
+            let h = q1.qmatvec_i32(&qx, sx).unwrap();
+            let (qh, sh) = quant::quantize_vec_parts(&h, 8);
+            assert_eq!(fast, q2.qmatvec_i32_rows(&qh, sh).unwrap(), "W{wl} cascade");
+        }
+    }
+
+    #[test]
+    fn fast_dispatches_count_under_their_own_kernel_key() {
+        let _gate = crate::obs::test_gate().read().unwrap_or_else(|e| e.into_inner());
+        use crate::obs::{key, Obs};
+        let k = key("qkernel_dispatch_total", &[("kernel", "packed_matvec_fast"), ("wl", "4")]);
+        let w = randn(78, 9, 6, 0.4);
+        let p = PackedLinear::from_compressed(&quant_only(&w, 4)).unwrap();
+        let x = vec![0.5f32; 9];
+        let before = Obs::global().registry().snapshot().counter(&k);
+        p.matvec_fast(&x).unwrap();
+        p.matvec_fast(&x).unwrap();
+        let after = Obs::global().registry().snapshot().counter(&k);
+        assert!(after >= before + 2, "fast dispatch counter moved: {before} -> {after}");
+        let _ = crate::obs::kernels::PACKED_MATVEC_FAST;
     }
 
     #[test]

@@ -95,6 +95,43 @@ pub fn scale_for(max_abs: f32, lv: f32) -> f32 {
     }
 }
 
+/// NaN-sticky max-abs accumulator for the per-vector scale folds.
+///
+/// `f32::max(m, NaN)` returns `m`, so the naive fold silently drops a
+/// NaN lane and produces a clean-looking scale for a poisoned vector —
+/// the NaN then quantizes to 0 (release builds) among otherwise-sane
+/// values. This fold propagates the NaN into the accumulated max so the
+/// scale goes through [`scale_for`]'s explicit non-finite hardening
+/// (debug assert in debug builds, zero scale in release) instead.
+#[inline]
+fn max_abs_fold(m: f32, x: f32) -> f32 {
+    let a = x.abs();
+    if a > m || a.is_nan() {
+        a
+    } else {
+        m
+    }
+}
+
+/// A non-finite lane caught during vector quantization: the offending
+/// index and value, for error messages that point at the poisoned
+/// activation instead of a generic "bad scale".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NonFiniteError {
+    /// Index of the first non-finite lane.
+    pub index: usize,
+    /// The offending value (NaN or ±inf).
+    pub value: f32,
+}
+
+impl std::fmt::Display for NonFiniteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-finite activation {} at lane {}", self.value, self.index)
+    }
+}
+
+impl std::error::Error for NonFiniteError {}
+
 /// Per-tensor fake-quant; returns the quantized matrix and the scale used.
 pub fn quantize_tensor(a: &Matrix, wl: WordLen) -> (Matrix, f32) {
     let lv = levels(wl);
@@ -115,7 +152,7 @@ pub fn quantize_rows(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
     let mut scales = Vec::with_capacity(a.rows());
     for i in 0..a.rows() {
         let row = a.row(i);
-        let s = scale_for(row.iter().fold(0.0f32, |m, x| m.max(x.abs())), lv);
+        let s = scale_for(row.iter().fold(0.0f32, |m, &x| max_abs_fold(m, x)), lv);
         scales.push(s);
         let orow = out.row_mut(i);
         for (o, &x) in orow.iter_mut().zip(row) {
@@ -141,10 +178,7 @@ pub fn quantize_cols(a: &Matrix, wl: WordLen) -> (Matrix, Vec<f32>) {
     let mut scales = vec![0.0f32; a.cols()];
     for i in 0..a.rows() {
         for (mx, &x) in scales.iter_mut().zip(a.row(i)) {
-            let ax = x.abs();
-            if ax > *mx {
-                *mx = ax;
-            }
+            *mx = max_abs_fold(*mx, x);
         }
     }
     for s in scales.iter_mut() {
@@ -172,8 +206,25 @@ pub fn quantize_vec(v: &[f32], wl: WordLen) -> (Vec<f32>, f32) {
 /// alpha-rescale in Algorithm 1) use this form.
 pub fn quantize_vec_parts(v: &[f32], wl: WordLen) -> (Vec<i32>, f32) {
     let lv = levels(wl);
-    let s = scale_for(v.iter().fold(0.0f32, |m, x| m.max(x.abs())), lv);
+    let s = scale_for(v.iter().fold(0.0f32, |m, &x| max_abs_fold(m, x)), lv);
     (v.iter().map(|&x| quantize_int(x, s, lv)).collect(), s)
+}
+
+/// Fallible [`quantize_vec_parts`] for *runtime* activations: scans for
+/// non-finite lanes first and reports the offender as a typed error
+/// instead of riding the max-abs fold into a zero scale (release) or a
+/// `debug_assert` (debug). The fast integer decode tier quantizes every
+/// step activation through this, so one poisoned lane becomes a loud,
+/// attributable error on exactly that request's step — never a silent
+/// all-zeros row.
+pub fn try_quantize_vec_parts(
+    v: &[f32],
+    wl: WordLen,
+) -> Result<(Vec<i32>, f32), NonFiniteError> {
+    if let Some((index, &value)) = v.iter().enumerate().find(|(_, x)| !x.is_finite()) {
+        return Err(NonFiniteError { index, value });
+    }
+    Ok(quantize_vec_parts(v, wl))
 }
 
 /// Mean-squared quantization error.
@@ -347,6 +398,60 @@ mod tests {
         // 0-scale convention.
         assert_eq!(quantize_int(5.0, 0.0, 127.0), 0);
         assert_eq!(quantize_val(5.0, 0.0, 127.0), 0.0);
+    }
+
+    #[test]
+    fn nan_lane_no_longer_silently_zero_quantizes() {
+        // The bugfix: `f32::max` drops NaN, so the old fold produced a
+        // clean scale for a poisoned vector and the NaN lane quantized
+        // to 0 among otherwise-valid values. The NaN-sticky fold routes
+        // it through scale_for's hardening instead: debug builds trip
+        // the assert, release builds 0-scale the whole vector.
+        let v = vec![0.5f32, f32::NAN, -0.25];
+        let r = std::panic::catch_unwind(|| quantize_vec_parts(&v, 8));
+        if cfg!(debug_assertions) {
+            assert!(r.is_err(), "debug build must flag the NaN lane");
+        } else {
+            let (q, s) = r.unwrap();
+            assert_eq!(s, 0.0, "release build must 0-scale the poisoned vector");
+            assert!(q.iter().all(|&qi| qi == 0));
+        }
+    }
+
+    #[test]
+    fn nan_sticky_fold_covers_row_and_col_quant() {
+        // quantize_rows / quantize_cols share the hardened fold; only
+        // the poisoned vector loses its scale, neighbours keep theirs.
+        let a = Matrix::from_vec(2, 2, vec![1.0, f32::NAN, 0.5, -0.5]);
+        let rows = std::panic::catch_unwind(|| quantize_rows(&a, 8));
+        let cols = std::panic::catch_unwind(|| quantize_cols(&a, 8));
+        if cfg!(debug_assertions) {
+            assert!(rows.is_err() && cols.is_err(), "debug builds must flag the NaN");
+        } else {
+            let (q, s) = rows.unwrap();
+            assert_eq!(s[0], 0.0, "poisoned row 0-scales");
+            assert!(s[1] > 0.0, "clean row keeps its scale");
+            assert!(q.row(0).iter().all(|&x| x == 0.0));
+            let (qc, sc) = cols.unwrap();
+            assert!(sc[0] > 0.0, "clean column keeps its scale");
+            assert_eq!(sc[1], 0.0, "poisoned column 0-scales");
+            assert_eq!(qc.get(1, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn try_quantize_vec_parts_reports_the_offending_lane() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let v = vec![0.5f32, -0.1, bad, 0.9];
+            let e = try_quantize_vec_parts(&v, 8).unwrap_err();
+            assert_eq!(e.index, 2);
+            assert_eq!(e.value.to_bits(), bad.to_bits());
+            assert!(e.to_string().contains("lane 2"), "{e}");
+        }
+        // Finite vectors take the exact same integer path as the
+        // infallible form.
+        let v = vec![0.31f32, -0.9, 0.44, 0.0];
+        assert_eq!(try_quantize_vec_parts(&v, 8).unwrap(), quantize_vec_parts(&v, 8));
     }
 
     #[test]

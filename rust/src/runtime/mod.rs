@@ -140,6 +140,53 @@ impl DecodePolicy {
     }
 }
 
+/// Which numerical tier the native engine's per-row decode kernels run
+/// on under `Mode::Quantized`.
+///
+/// The tiers trade bit-exactness for integer arithmetic:
+///
+/// * [`Exact`](KernelTier::Exact) — the default: packed linears execute
+///   via the dequantizing `PackedLinear::matvec`, bit-identical to the
+///   fake-quant f32 reference (the property every replay/cached/batched
+///   parity suite pins).
+/// * [`Fast`](KernelTier::Fast) — the paper's integer engines: each
+///   step activation is quantized onto the A8 grid *at runtime*
+///   (`quant::try_quantize_vec_parts`) and every packed linear runs as
+///   int8×int-grid GEMV with i32 accumulation and one rescale per
+///   output (`PackedLinear::matvec_fast`); factored layers requantize
+///   once between the two skinny matvecs. **Not bit-identical** — the
+///   runtime requantization perturbs activations by up to half an A8
+///   step — so the tier is fenced by `validate --kernel fast`'s parity
+///   table (max |Δlogit| + BLEU delta on the tiny model) instead of the
+///   bit-parity suites. Dense/Svd modes have no packed linears; the
+///   tier is a no-op there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelTier {
+    /// Dequantize-then-f32 per-row kernels (bit-exact reference).
+    #[default]
+    Exact,
+    /// Runtime A8 activation quantization + pure-integer GEMV.
+    Fast,
+}
+
+impl KernelTier {
+    pub fn key(self) -> &'static str {
+        match self {
+            KernelTier::Exact => "exact",
+            KernelTier::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI `--kernel` value.
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s {
+            "exact" => Some(KernelTier::Exact),
+            "fast" => Some(KernelTier::Fast),
+            _ => None,
+        }
+    }
+}
+
 /// A model execution backend that can greedy-translate token batches.
 ///
 /// `src_tokens` is a row-major `[rows * seq_len()]` buffer of BOS-framed,
@@ -273,6 +320,15 @@ mod tests {
             assert_eq!(DecodePolicy::parse(p.key()), Some(p));
         }
         assert_eq!(DecodePolicy::parse("kv"), None);
+    }
+
+    #[test]
+    fn kernel_tier_keys_and_default() {
+        assert_eq!(KernelTier::default(), KernelTier::Exact, "exact is the default");
+        for t in [KernelTier::Exact, KernelTier::Fast] {
+            assert_eq!(KernelTier::parse(t.key()), Some(t));
+        }
+        assert_eq!(KernelTier::parse("int8"), None);
     }
 
     #[test]

@@ -73,7 +73,7 @@ use crate::quant::{self, WordLen};
 use crate::tensor::{dot, Matrix};
 
 use super::kvpool::{KvMemStats, KvPool, PagedRows, RowRead};
-use super::{DecodePolicy, Mode, SlotEngine, TranslateBackend};
+use super::{DecodePolicy, KernelTier, Mode, SlotEngine, TranslateBackend};
 
 /// Process-global decode-progress counters, registered once against
 /// [`Obs::global`] and shared by every engine instance: slot admissions
@@ -319,6 +319,11 @@ pub struct NativeBackend {
     workers: usize,
     /// How `translate` runs its greedy decode loop (cached by default).
     decode: DecodePolicy,
+    /// Which numerical tier the per-row decode kernels run on
+    /// ([`KernelTier::Exact`] by default — bit-identical to the batched
+    /// reference; [`KernelTier::Fast`] runs packed linears as runtime-
+    /// quantized integer GEMV, non-bit-exact but parity-gated).
+    kernel: KernelTier,
     /// Page pool every slot's self-attention K/V rows draw from.
     /// Defaults to unbounded with `seq_len`-row pages (exact residency
     /// accounting, no admission bound); [`Self::with_kv_pool`] installs
@@ -537,6 +542,7 @@ impl NativeBackend {
             act_levels,
             workers: workers.max(1),
             decode: DecodePolicy::default(),
+            kernel: KernelTier::default(),
             kv_pool,
         })
     }
@@ -572,6 +578,22 @@ impl NativeBackend {
     /// The active greedy-decode policy.
     pub fn decode_policy(&self) -> DecodePolicy {
         self.decode
+    }
+
+    /// Select the kernel tier of the per-row decode path (exact by
+    /// default). Only `Mode::Quantized` holds packed linears for the
+    /// fast tier to run as integer GEMV; under Dense/Svd the tier
+    /// changes nothing. `KernelTier::Fast` output is **not**
+    /// bit-identical to exact — it is fenced by `validate --kernel
+    /// fast`'s parity table instead.
+    pub fn with_kernel(mut self, tier: KernelTier) -> NativeBackend {
+        self.kernel = tier;
+        self
+    }
+
+    /// The active per-row kernel tier.
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.kernel
     }
 
     /// FP32 reference backend: original weights, no quantization.
@@ -677,11 +699,18 @@ impl NativeBackend {
     /// Single-step linear: the same fake-quant + compressed product as
     /// [`Self::linear`], executed row by row through the single-row
     /// kernels ([`Matrix::vecmat_par`], [`PackedLinear::matvec`]).
-    /// Bit-identical to [`Self::linear`] on the same rows — every kernel
-    /// accumulates each output element in the batched kernel's
-    /// ascending-`k` order, which is what makes the cached decode path
-    /// reproduce the full-buffer replay exactly.
-    fn linear_step(&self, idx: usize, x: &Matrix) -> Matrix {
+    /// Under [`KernelTier::Exact`] (the default) it is bit-identical to
+    /// [`Self::linear`] on the same rows — every kernel accumulates each
+    /// output element in the batched kernel's ascending-`k` order, which
+    /// is what makes the cached decode path reproduce the full-buffer
+    /// replay exactly. Under [`KernelTier::Fast`], packed linears run
+    /// [`PackedLinear::matvec_fast`] instead: runtime A8 activation
+    /// quantization + pure-integer GEMV, non-bit-exact by contract. The
+    /// fast kernel's typed envelope errors (e.g. a NaN activation lane)
+    /// surface as `Err` naming the linear and batch row, which the
+    /// batcher's fault attribution turns into exactly one request's
+    /// `EngineFault`.
+    fn linear_step(&self, idx: usize, x: &Matrix) -> Result<Matrix> {
         let xq = self.fake_quant(idx, x);
         let xq = xq.as_ref().unwrap_or(x);
         let op = &self.ops[idx];
@@ -692,11 +721,16 @@ impl NativeBackend {
                 LinearOp::Factored(w1, w2) => {
                     w2.vecmat_par(&w1.vecmat_par(xq.row(r), self.workers), self.workers)
                 }
-                LinearOp::Packed(p) => p.matvec(xq.row(r)),
+                LinearOp::Packed(p) => match self.kernel {
+                    KernelTier::Exact => p.matvec(xq.row(r)),
+                    KernelTier::Fast => p.matvec_fast(xq.row(r)).with_context(|| {
+                        format!("fast integer kernel on linear {idx}, step batch row {r}")
+                    })?,
+                },
             };
             out.row_mut(r).copy_from_slice(&y);
         }
-        out
+        Ok(out)
     }
 
     /// `clip(round(x/s), -lv, lv) * s` with the reference's safe-scale
@@ -726,9 +760,10 @@ impl NativeBackend {
         self.linear(ff2, &h)
     }
 
-    /// [`Self::ffn`] through the single-row kernels (bit-identical).
-    fn ffn_step(&self, ff1: usize, ff2: usize, x: &Matrix) -> Matrix {
-        let mut h = self.linear_step(ff1, x);
+    /// [`Self::ffn`] through the single-row kernels (bit-identical under
+    /// the exact tier; fast-tier errors propagate).
+    fn ffn_step(&self, ff1: usize, ff2: usize, x: &Matrix) -> Result<Matrix> {
+        let mut h = self.linear_step(ff1, x)?;
         for v in h.data_mut() {
             if *v < 0.0 {
                 *v = 0.0;
@@ -994,16 +1029,56 @@ impl NativeBackend {
     /// the architectural unlock for continuous batching: admitting or
     /// retiring a slot never perturbs another slot's bits.
     ///
-    /// Failure atomicity: every `Err` return is raised by the validation
-    /// pre-pass below, **before** any slot state is touched, so a failed
-    /// step leaves all slots exactly as they were — the batcher's
-    /// per-slot fault attribution can re-step the survivors safely (the
+    /// Failure atomicity: validation errors are raised by the pre-pass
+    /// below, **before** any slot state is touched. Fast-tier kernel
+    /// errors (a poisoned activation reaching
+    /// [`PackedLinear::matvec_fast`]) can surface mid-layer, after some
+    /// slot state was written — but every such write is idempotent at a
+    /// fixed `len` (K/V row `len` and `tgt_ok[len]` are overwritten
+    /// whole; `buf[len + 1]` and the counter advance only in the final
+    /// commit below), so a failed step leaves all slots **idempotently
+    /// re-steppable**: the batcher's per-slot fault attribution re-steps
+    /// survivors and reproduces the same bits (the
     /// [`crate::runtime::SlotEngine::step`] contract).
     pub fn step_slots(&self, slots: &mut [&mut SeqSlot]) -> Result<()> {
         let b = slots.len();
         if b == 0 {
             return Ok(());
         }
+        let hidden = self.step_hidden(slots)?;
+
+        // Greedy pick + append: a finished slot emits PAD without paying
+        // for its logits (same order as the batched reference — the done
+        // flag is consulted before this step's EOS can set it).
+        for (r, slot) in slots.iter_mut().enumerate() {
+            let i = slot.len;
+            let next = if slot.done {
+                self.dims.pad_id
+            } else {
+                let logits = self.tgt_emb.matvec(hidden.row(r));
+                argmax(&logits) as i32
+            };
+            if next == self.dims.eos_id {
+                slot.done = true;
+            }
+            slot.buf[i + 1] = next;
+            slot.len = i + 1;
+        }
+        let counters = runtime_counters();
+        counters.1.inc();
+        counters.2.add(b as u64);
+        Ok(())
+    }
+
+    /// Everything of one decode step except the token commit: validate,
+    /// back the cursor row with KV pages, embed each slot's current
+    /// token, run the decoder blocks on the `[b x D]` activation
+    /// (appending each slot's new self-attention K/V row), and return
+    /// the final-layer-norm hidden states `[b x D]`. Split out of
+    /// [`Self::step_slots`] so diagnostics ([`Self::step_logits`]) can
+    /// read the step's full logits instead of only the greedy argmax.
+    fn step_hidden(&self, slots: &mut [&mut SeqSlot]) -> Result<Matrix> {
+        let b = slots.len();
         let s = self.dims.seq_len;
         let d = self.dims.d_model;
 
@@ -1057,9 +1132,9 @@ impl NativeBackend {
         let mut scores = Vec::with_capacity(s);
         for (li, layer) in self.dec.iter().enumerate() {
             let h = layer_norm(&x, &layer.ln1);
-            let q = self.linear_step(layer.self_q, &h);
-            let k_new = self.linear_step(layer.self_k, &h);
-            let v_new = self.linear_step(layer.self_v, &h);
+            let q = self.linear_step(layer.self_q, &h)?;
+            let k_new = self.linear_step(layer.self_k, &h)?;
+            let v_new = self.linear_step(layer.self_v, &h)?;
             for (r, slot) in slots.iter_mut().enumerate() {
                 let i = slot.len;
                 slot.self_k[li].row_mut(i).copy_from_slice(k_new.row(r));
@@ -1078,10 +1153,10 @@ impl NativeBackend {
                     ctx.row_mut(r),
                 );
             }
-            x = x.add(&self.linear_step(layer.self_o, &ctx));
+            x = x.add(&self.linear_step(layer.self_o, &ctx)?);
 
             let h = layer_norm(&x, &layer.ln2);
-            let q = self.linear_step(layer.cross_q, &h);
+            let q = self.linear_step(layer.cross_q, &h)?;
             let mut ctx = Matrix::zeros(b, d);
             for (r, slot) in slots.iter().enumerate() {
                 let sl: &SeqSlot = slot;
@@ -1096,39 +1171,53 @@ impl NativeBackend {
                     ctx.row_mut(r),
                 );
             }
-            x = x.add(&self.linear_step(layer.cross_o, &ctx));
+            x = x.add(&self.linear_step(layer.cross_o, &ctx)?);
 
             let h = layer_norm(&x, &layer.ln3);
-            x = x.add(&self.ffn_step(layer.ff1, layer.ff2, &h));
+            x = x.add(&self.ffn_step(layer.ff1, layer.ff2, &h)?);
         }
-        let hidden = layer_norm(&x, &self.dec_ln);
+        Ok(layer_norm(&x, &self.dec_ln))
+    }
 
-        // Greedy pick + append: a finished slot emits PAD without paying
-        // for its logits (same order as the batched reference — the done
-        // flag is consulted before this step's EOS can set it).
-        for (r, slot) in slots.iter_mut().enumerate() {
-            let i = slot.len;
-            let next = if slot.done {
-                self.dims.pad_id
-            } else {
-                let logits = self.tgt_emb.matvec(hidden.row(r));
-                argmax(&logits) as i32
+    /// Teacher-forced per-step logits through the **step kernels** — the
+    /// tier-sensitive diagnostic surface. [`Self::forward_logits`] runs
+    /// the batched replay kernels, which both kernel tiers share; this
+    /// drives the same teacher-forced positions through the single-row
+    /// cached-decode path (`linear_step`/`ffn_step`/`attend_slot_row`),
+    /// so it is the surface where [`KernelTier::Fast`]'s integer
+    /// arithmetic is visible — `validate --kernel fast` computes its
+    /// max |Δlogit| here. Returns `[(seq_len - 1) x vocab]`: row `i` is
+    /// the logits of the step taken at position `i` (predicting
+    /// position `i + 1`) given the forced prefix `tgt_in[..=i]`.
+    pub fn step_logits(&self, src_row: &[i32], tgt_in: &[i32]) -> Result<Matrix> {
+        let s = self.dims.seq_len;
+        ensure!(
+            tgt_in.len() == s,
+            "step_logits expects one seq_len={s} target row, got {} tokens",
+            tgt_in.len()
+        );
+        let mut slot = self.admit_slot(src_row)?;
+        slot.buf[0] = tgt_in[0];
+        let mut out = Matrix::zeros(s - 1, self.dims.vocab);
+        for i in 0..s - 1 {
+            let hidden = {
+                let mut refs = [&mut slot];
+                self.step_hidden(&mut refs)?
             };
-            if next == self.dims.eos_id {
-                slot.done = true;
-            }
-            slot.buf[i + 1] = next;
+            out.row_mut(i).copy_from_slice(&self.tgt_emb.matvec(hidden.row(0)));
+            // Teacher-force the next position instead of the greedy pick.
+            slot.buf[i + 1] = tgt_in[i + 1];
             slot.len = i + 1;
         }
-        let counters = runtime_counters();
-        counters.1.inc();
-        counters.2.add(b as u64);
-        Ok(())
+        Ok(out)
     }
 
     /// Teacher-forced logits `[b*s x vocab]` for `tgt_in` given `src` —
     /// the parity/diagnostic surface (greedy decode uses only one row per
-    /// step, but tolerance comparisons want the full tensor).
+    /// step, but tolerance comparisons want the full tensor). Runs the
+    /// batched kernels, which are tier-insensitive; see
+    /// [`Self::step_logits`] for the per-step surface the kernel-tier
+    /// parity gate measures.
     pub fn forward_logits(&self, src: &[i32], tgt_in: &[i32]) -> Result<Matrix> {
         let b = self.rows_of(src)?;
         ensure!(
@@ -1462,8 +1551,9 @@ mod tests {
         let mut st = DecodeState::new();
         assert!(st.is_empty());
         assert!(st.all_complete(), "no slots: vacuously complete");
+        let pool = Arc::new(KvPool::unbounded(5, 4));
         for _ in 0..3 {
-            st.push(test_slot(5, 4));
+            st.push(test_slot(5, 4, &pool));
         }
         assert_eq!(st.len(), 3);
         assert!(!st.all_complete());

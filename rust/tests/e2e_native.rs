@@ -29,7 +29,7 @@ use itera_llm::compress::{itera, quant_only, CompressedLinear};
 use itera_llm::coordinator::{Batcher, ServeTuning};
 use itera_llm::eval::{evaluate_bleu, translate_corpus, Corpus};
 use itera_llm::model::{Manifest, PairModel};
-use itera_llm::runtime::{DecodePolicy, Mode, NativeBackend, TranslateBackend};
+use itera_llm::runtime::{DecodePolicy, KernelTier, Mode, NativeBackend, TranslateBackend};
 use itera_llm::testkit::tinymodel;
 
 struct Fixture {
@@ -1019,4 +1019,166 @@ fn compressed_model_native_backend_bridge() {
     let dq = evaluate_bleu(&qbackend, &f.corpus, &f.manifest.model, 4).unwrap();
     assert_eq!(d.score, dq.score, "quantized bridge must score identically");
     assert!(qbackend.weight_bytes() < backend.weight_bytes());
+}
+
+/// Kernel-tier contract end-to-end on both packed shapes: the `Exact`
+/// tier is **bit-identical** to the pre-tier default construction
+/// (tokens and teacher-forced step logits — the tier is pure dispatch,
+/// zero numerics), and the `Fast` tier's step logits stay inside the
+/// same scale-aware |Δlogit| bound the `validate --kernel fast` gate
+/// enforces — which itself must pass on a hermetic tiny model, both
+/// tiers (a breach is a non-zero CLI exit, surfaced here as `Err`).
+#[test]
+fn kernel_tier_exact_bit_identical_and_fast_within_parity_gate() {
+    let f = fixture("ktier");
+    let dims = &f.manifest.model;
+    let s = dims.seq_len;
+    let src = f.corpus.src_batch(0, dims.eval_batch, dims.pad_id);
+
+    for (tag, layers) in [("W4 dense", quant_all(&f, 4)), ("W4 cascade", factor_all(&f, 0.5, 4))] {
+        let base = backend(&f, &layers, Mode::Quantized, 2);
+        let exact = backend(&f, &layers, Mode::Quantized, 2).with_kernel(KernelTier::Exact);
+        let fast = backend(&f, &layers, Mode::Quantized, 2).with_kernel(KernelTier::Fast);
+        assert_eq!(
+            base.translate(&src).unwrap(),
+            exact.translate(&src).unwrap(),
+            "{tag}: exact tier must decode today's exact tokens"
+        );
+
+        let mut dmax = 0.0f32;
+        let mut lmax = 0.0f32;
+        for r in 0..dims.eval_batch {
+            let row = &src[r * s..(r + 1) * s];
+            let tgt = base.translate(row).unwrap();
+            let want = base.step_logits(row, &tgt[..s]).unwrap();
+            let got = exact.step_logits(row, &tgt[..s]).unwrap();
+            assert_eq!(want.data(), got.data(), "{tag}, row {r}: exact tier step logits");
+            let tiered = fast.step_logits(row, &tgt[..s]).unwrap();
+            // NaN-sticky max: a poisoned logit can never slip under tol.
+            for (&x, &y) in want.data().iter().zip(tiered.data()) {
+                let d = (x - y).abs();
+                if !(d <= dmax) {
+                    dmax = d;
+                }
+                if !(x.abs() <= lmax) {
+                    lmax = x.abs();
+                }
+            }
+        }
+        let tol = 1.5f32.max(0.05 * lmax);
+        assert!(dmax <= tol, "{tag}: fast tier drifted, max |dlogit| {dmax} > {tol}");
+    }
+
+    // The CLI parity gate holds on its own hermetic tiny model.
+    for tier in ["exact", "fast"] {
+        itera_llm::cli::main_with_args(&[
+            "validate".into(),
+            "--kernel".into(),
+            tier.into(),
+            "--mode".into(),
+            "quantized".into(),
+            "--decode".into(),
+            "cached".into(),
+        ])
+        .unwrap_or_else(|e| panic!("validate --kernel {tier} breached its parity gate: {e:#}"));
+    }
+}
+
+/// THE fast-tier fault-isolation regression (the envelope-bugfix bar):
+/// a NaN smuggled into one request's activations — here through a
+/// poisoned `src_emb` row only that request references — must fault
+/// **exactly that request** with a typed `EngineFault` naming the
+/// non-finite lane, while its batchmates decode to completion
+/// bit-identical to a sequential run and the serve books balance.
+/// Before the typed [`itera_llm::qkernel::QKernelError`] path, the
+/// envelope `assert!`s inside `qmatvec_i32` would have panicked the
+/// whole batched step instead.
+#[test]
+fn fast_tier_poisoned_activation_faults_one_request_and_books_balance() {
+    use std::collections::BTreeSet;
+    use std::sync::mpsc;
+
+    use itera_llm::coordinator::{
+        response_channel, serve_loop_continuous, Request, ResponseRx, ServeConfig, ServeError,
+    };
+
+    let f = fixture("poison");
+    let dims = &f.manifest.model;
+
+    // A vocabulary row no corpus sentence references: poisoning its
+    // embedding corrupts exactly the request we hand it to.
+    let used: BTreeSet<i32> =
+        (0..f.corpus.n).flat_map(|i| f.corpus.src_row(i).iter().copied()).collect();
+    let poison_tok = (0..dims.vocab as i32)
+        .find(|t| !used.contains(t) && *t != dims.pad_id && *t != dims.bos_id && *t != dims.eos_id)
+        .expect("tiny vocab has unused tokens");
+
+    // NaN one lane of that row, the way a corrupted weight shard would.
+    // Model-load finiteness checks ran clean at load time; this is the
+    // post-load corruption class only the runtime can catch.
+    let mut model = PairModel::load(&f.manifest, tinymodel::PAIR).unwrap();
+    let mut emb = model.weights.get("src_emb").unwrap().clone();
+    emb.row_mut(poison_tok as usize)[0] = f32::NAN;
+    model.weights.insert("src_emb", emb);
+
+    let layers = quant_all(&f, 4);
+    let engine = NativeBackend::new(&f.manifest, &model, &layers, Some(8), Mode::Quantized, 2)
+        .unwrap()
+        .with_kernel(KernelTier::Fast);
+
+    const N: usize = 6;
+    const VICTIM: usize = 2;
+    let mut rows: Vec<Vec<i32>> =
+        (0..N).map(|i| f.corpus.src_row(i % f.corpus.n).to_vec()).collect();
+    rows[VICTIM][1] = poison_tok; // swapped into a content position
+
+    // Sequential fast-tier decode of the clean rows: the bit-identity
+    // bar — the victim must not perturb its batchmates.
+    let want: Vec<Vec<i32>> = rows
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != VICTIM)
+        .map(|(_, row)| engine.translate(row).unwrap())
+        .collect();
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let receivers: Vec<ResponseRx> = rows
+        .iter()
+        .map(|row| {
+            let (rtx, rrx) = response_channel();
+            tx.send(Request::new(row.clone(), rtx)).unwrap();
+            rrx
+        })
+        .collect();
+    drop(tx);
+    let stats = serve_loop_continuous(&engine, &rx, dims, N, &ServeConfig::new(3)).unwrap();
+
+    let mut clean = want.iter();
+    for (i, rrx) in receivers.iter().enumerate() {
+        let out = rrx.recv().expect("every request gets exactly one terminal outcome");
+        match out {
+            Err(ServeError::EngineFault(msg)) => {
+                assert_eq!(i, VICTIM, "clean request {i} faulted: {msg}");
+                assert!(
+                    msg.contains("non-finite"),
+                    "fault must name the poisoned activation, got: {msg}"
+                );
+            }
+            Err(other) => panic!("request {i}: unexpected terminal outcome {other:?}"),
+            Ok(resp) => {
+                assert_ne!(i, VICTIM, "the poisoned request must fault, not decode");
+                assert_eq!(
+                    resp.tokens,
+                    *clean.next().unwrap(),
+                    "request {i}: survivor diverged from the sequential run"
+                );
+            }
+        }
+    }
+
+    assert_eq!(stats.received, N);
+    assert_eq!(stats.served, N - 1, "everyone but the victim answered");
+    assert_eq!(stats.faulted, 1, "exactly the poisoned request faults");
+    assert_eq!((stats.shed, stats.expired, stats.cancelled), (0, 0, 0), "{stats:?}");
+    assert!(stats.is_balanced(), "accounting identity violated: {stats:?}");
 }

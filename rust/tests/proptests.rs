@@ -458,7 +458,7 @@ fn prop_qmatvec_i32_exact_and_close_to_f32() {
         let qm = QMatrix::from_fake_quant(&q, &s, wl, ScaleAxis::Col).unwrap();
         let x: Vec<f32> = (0..k).map(|_| g.normal()).collect();
         let (qx, sx) = quant::quantize_vec_parts(&x, 8);
-        let got = qm.qmatvec_i32(&qx, sx);
+        let got = qm.qmatvec_i32(&qx, sx).expect("in-envelope activation");
         for (col, &gv) in got.iter().enumerate() {
             let mut acc = 0i64;
             for (row, &xq) in qx.iter().enumerate() {
@@ -473,6 +473,34 @@ fn prop_qmatvec_i32_exact_and_close_to_f32() {
         for (a, b) in got.iter().zip(&f32_path) {
             assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
         }
+    });
+}
+
+#[test]
+fn prop_non_finite_activations_error_instead_of_quantizing() {
+    // `try_quantize_vec_parts` reports the first non-finite lane wherever
+    // it hides (the max-abs fold must not let `f32::max`'s NaN-dropping
+    // semantics swallow it); finite vectors quantize exactly like the
+    // infallible path.
+    check("quant-nonfinite", CASES, |g: &mut Gen| {
+        let k = g.size(1, 48);
+        let x: Vec<f32> = (0..k).map(|_| g.normal()).collect();
+        let wl = g.usize_in(2, 8) as u32;
+
+        let (qx, sx) = quant::try_quantize_vec_parts(&x, wl).expect("finite input quantizes");
+        let (qx2, sx2) = quant::quantize_vec_parts(&x, wl);
+        assert_eq!(qx, qx2, "fallible path must quantize identically");
+        assert_eq!(sx.to_bits(), sx2.to_bits());
+
+        let mut bad = x.clone();
+        let at = g.usize_in(0, k - 1);
+        bad[at] = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+        let err = quant::try_quantize_vec_parts(&bad, wl)
+            .expect_err("a poisoned lane must be rejected, not folded away");
+        // The first non-finite lane is named (every earlier lane is
+        // finite by construction).
+        assert_eq!(err.index, at, "reported lane");
+        assert_eq!(err.value.to_bits(), bad[at].to_bits(), "reported value");
     });
 }
 
@@ -562,6 +590,119 @@ fn prop_cached_decode_bit_identical_to_replay() {
             replay.translate(&src).unwrap(),
             cached.translate(&src).unwrap(),
             "mode {mode:?} W{wl} workers={workers} b={b}"
+        );
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fast integer decode tier stays within parity tolerance of the
+/// exact tier: across word lengths {2, 4, 8}, dense-packed and low-rank
+/// cascade banks, ragged batches and worker counts {1, 4}, the
+/// teacher-forced step logits of `KernelTier::Fast` (runtime A8
+/// activation quantization + pure-i32 GEMV) stay within a scale-aware
+/// |Δlogit| bound of `KernelTier::Exact` — and the exact tier itself is
+/// bit-identical to the default (tier-less) construction. Greedy tokens
+/// under the fast tier may differ (that is the tier's contract) but must
+/// stay well-formed.
+#[test]
+fn prop_fast_kernel_tier_within_parity_tolerance_of_exact() {
+    use std::collections::BTreeMap;
+
+    use itera_llm::model::PairModel;
+    use itera_llm::runtime::{KernelTier, Mode, NativeBackend, TranslateBackend};
+    use itera_llm::testkit::tinymodel;
+
+    let (dir, manifest) =
+        tinymodel::generate_in_temp("prop_ktier", 0xFA57A).expect("generate tiny model");
+    let model = PairModel::load(&manifest, tinymodel::PAIR).expect("load tiny model");
+    let dims = manifest.model.clone();
+    let s = dims.seq_len;
+
+    // One packed bank per (word length, family), built once.
+    let wls = [2u32, 4, 8];
+    let mut dense_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    let mut cascade_banks: Vec<BTreeMap<String, CompressedLinear>> = Vec::new();
+    for &wl in &wls {
+        dense_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| (l.name.clone(), quant_only(model.linear(&l.name), wl)))
+                .collect(),
+        );
+        cascade_banks.push(
+            manifest
+                .linears
+                .iter()
+                .map(|l| {
+                    let r = (l.r_max / 2).max(1);
+                    (l.name.clone(), itera(model.linear(&l.name), r, wl).0)
+                })
+                .collect(),
+        );
+    }
+
+    check("fast-tier-parity", 10, |g: &mut Gen| {
+        let wi = g.usize_in(0, wls.len() - 1);
+        let wl = wls[wi];
+        let workers = *g.pick(&[1usize, 4]);
+        let cascade = g.bool();
+        let layers = if cascade { &cascade_banks[wi] } else { &dense_banks[wi] };
+
+        let exact = NativeBackend::new(&manifest, &model, layers, Some(8), Mode::Quantized, workers)
+            .expect("exact backend");
+        assert_eq!(exact.kernel_tier(), KernelTier::Exact, "exact is the default tier");
+        let fast = NativeBackend::new(&manifest, &model, layers, Some(8), Mode::Quantized, workers)
+            .expect("fast backend")
+            .with_kernel(KernelTier::Fast);
+
+        // Ragged batch: 1..=4 BOS-framed, EOS-terminated, PAD-padded rows.
+        let b = g.usize_in(1, 4);
+        let rows: Vec<Vec<i32>> = (0..b)
+            .map(|_| {
+                let len = g.usize_in(1, s - 3);
+                let mut row = vec![dims.pad_id; s];
+                row[0] = dims.bos_id;
+                let toks = g.tokens(len, dims.vocab as i32);
+                row[1..1 + len].copy_from_slice(&toks);
+                row[1 + len] = dims.eos_id;
+                row
+            })
+            .collect();
+
+        // Fast-tier greedy decode must run and stay well-formed.
+        let outs = fast.translate_stream(&rows).expect("fast decode");
+        for out in &outs {
+            assert_eq!(out[0], dims.bos_id, "fast decode keeps the BOS framing");
+            for &t in out {
+                assert!(t >= 0 && (t as usize) < dims.vocab, "fast decode token {t} in vocab");
+            }
+        }
+
+        // Teacher-force the exact tier's decodes through both tiers' step
+        // kernels; the fast tier's |Δlogit| stays inside a scale-aware
+        // bound (NaN-sticky comparisons: a poisoned logit can't pass).
+        let want = exact.translate_stream(&rows).expect("exact decode");
+        let mut dmax = 0.0f32;
+        let mut lmax = 0.0f32;
+        for (src, tgt) in rows.iter().zip(&want) {
+            let a = exact.step_logits(src, &tgt[..s]).expect("exact step logits");
+            let b = fast.step_logits(src, &tgt[..s]).expect("fast step logits");
+            for (&x, &y) in a.data().iter().zip(b.data()) {
+                let d = (x - y).abs();
+                if !(d <= dmax) {
+                    dmax = d;
+                }
+                if !(x.abs() <= lmax) {
+                    lmax = x.abs();
+                }
+            }
+        }
+        let tol = 1.5f32.max(0.05 * lmax);
+        assert!(
+            dmax <= tol,
+            "fast tier drifted past parity tolerance: max |dlogit| {dmax} > {tol} \
+             (W{wl}, cascade={cascade}, workers={workers}, b={b})"
         );
     });
     std::fs::remove_dir_all(&dir).ok();
